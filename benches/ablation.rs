@@ -1,0 +1,13 @@
+//! Ablation bench: DuoServe full vs without-learned-predictor vs
+//! without-dual-stream-overlap (DESIGN.md §4 ablation row).
+//!
+//!     cargo bench --bench ablation
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("ablation", || {
+        duoserve::figures::run(&harness::artifacts(), "ablation",
+                               harness::requests(), harness::seed())
+    })
+}

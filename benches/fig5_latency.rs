@@ -1,0 +1,15 @@
+//! Fig. 5 bench: average TTFT + E2E across the four paper models, both
+//! datasets, both devices, all four policies — regenerates the paper's
+//! bar-chart rows (virtual-time) and reports serving-loop wall-clock.
+//!
+//!     cargo bench --bench fig5_latency
+//!     DUOSERVE_BENCH_REQUESTS=16 cargo bench --bench fig5_latency
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("fig5", || {
+        duoserve::figures::run(&harness::artifacts(), "fig5",
+                               harness::requests(), harness::seed())
+    })
+}

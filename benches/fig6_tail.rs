@@ -1,0 +1,13 @@
+//! Fig. 6 bench: P50/P95 end-to-end tail latency for Mixtral-8x7B and
+//! Qwen3-30B-A3B on A5000 + SQuAD, all four policies.
+//!
+//!     cargo bench --bench fig6_tail
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("fig6", || {
+        duoserve::figures::run(&harness::artifacts(), "fig6",
+                               harness::requests().max(12), harness::seed())
+    })
+}

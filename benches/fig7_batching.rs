@@ -1,0 +1,13 @@
+//! Fig. 7 bench: total throughput (tokens/s) under batch sizes 1..12
+//! for all four models on A5000 + SQuAD.
+//!
+//!     cargo bench --bench fig7_batching
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("fig7", || {
+        duoserve::figures::run(&harness::artifacts(), "fig7", 0,
+                               harness::seed())
+    })
+}

@@ -1,0 +1,39 @@
+//! Shared mini-bench harness for the figure benches (no criterion in
+//! the offline image). Measures wall-clock of the serving loop around
+//! the virtual-time experiment, reports both, and regenerates the
+//! paper table/figure rows.
+//!
+//! Env knobs: DUOSERVE_BENCH_REQUESTS (default 4),
+//!            DUOSERVE_BENCH_SEED (default 42),
+//!            DUOSERVE_ARTIFACTS (default "artifacts").
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub fn artifacts() -> PathBuf {
+    PathBuf::from(std::env::var("DUOSERVE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into()))
+}
+
+pub fn requests() -> usize {
+    std::env::var("DUOSERVE_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
+
+pub fn seed() -> u64 {
+    std::env::var("DUOSERVE_BENCH_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(42)
+}
+
+/// Run a named section, print wall-clock around it.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> anyhow::Result<T>)
+                -> anyhow::Result<T> {
+    let t0 = Instant::now();
+    let out = f()?;
+    eprintln!("[bench] {name}: wall {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(out)
+}

@@ -1,0 +1,86 @@
+//! Hot-path micro-benchmarks (no criterion in the offline image; same
+//! methodology — warmup, N timed iterations, mean/min reported):
+//!
+//! * predictor end-to-end call (state build + MLP executable) — the
+//!   paper claims ~0.6 ms hidden by the predict stream (§VI-D);
+//! * expert executable invocation at each token bucket — the L3->PJRT
+//!   dispatch cost the engine pays per expert group;
+//! * device-cache ops and top-k — the per-layer scheduling overhead;
+//! * one full decode step through the engine (functional path).
+//!
+//!     cargo bench --bench hotpath_micro
+
+mod harness;
+
+use std::time::Instant;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::memory::{DeviceExpertCache, ExpertKey};
+use duoserve::predictor::{top_k, StateConstructor};
+use duoserve::runtime::Tensor;
+use duoserve::workload::generate_requests;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("{name:<38} mean {:>9.1}us  min {:>9.1}us  ({iters} iters)",
+             mean * 1e6, min * 1e6);
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(&harness::artifacts(), "mixtral-tiny")?;
+    let man = engine.man.clone();
+
+    // --- predictor call (paper §VI-D: ~0.6ms on their GPU) -----------
+    let mut sc = StateConstructor::new(&man);
+    sc.record(0, &[0, 1]);
+    bench("predictor: build_state + MLP exec", 200, || {
+        let _ = engine.predict_layer(&sc, 1).unwrap();
+    });
+
+    // --- expert executable per bucket ---------------------------------
+    let host = &engine.host;
+    let w = host.expert_tensors(ExpertKey::routed(0, 0)).unwrap();
+    let rt = engine.runtime();
+    for &b in &man.expert_buckets {
+        let exe = rt.load(&man.component_path(&format!("expert_t{b}"))?)?;
+        let x = Tensor::zeros(&[b, man.sim.d_model]);
+        bench(&format!("expert exec bucket={b}"), 100, || {
+            let _ = exe.run_mixed(&[duoserve::runtime::ArgRef::T(&x), w.w1.arg(), w.w3.arg(), w.w2.arg()]).unwrap();
+        });
+    }
+
+    // --- cache + top-k host ops ---------------------------------------
+    let mut cache = DeviceExpertCache::new(2, 2);
+    let mut i = 0usize;
+    bench("device-cache insert+touch", 10_000, || {
+        let key = ExpertKey::routed(i % 4, i % 8);
+        cache.insert(key, i as f64);
+        let _ = cache.touch(key, i as f64);
+        i += 1;
+    });
+
+    let scores: Vec<f32> = (0..128).map(|j| (j as f32 * 0.7).sin()).collect();
+    bench("top-k (E=128, k=8)", 10_000, || {
+        let _ = top_k(&scores, 8);
+    });
+
+    // --- full engine steps --------------------------------------------
+    let reqs = generate_requests(&man, "squad", 1, 5);
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    bench("engine: full request (prefill+decode)", 10, || {
+        let _ = engine.serve(&reqs, &opts).unwrap();
+    });
+
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Table II bench: peak simulated GPU memory per model x policy, plus
+//! the GPU-only reference row (full weights resident).
+//!
+//!     cargo bench --bench table2_memory
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("table2", || {
+        duoserve::figures::run(&harness::artifacts(), "table2",
+                               harness::requests().min(4), harness::seed())
+    })
+}

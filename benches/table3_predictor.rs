@@ -1,0 +1,14 @@
+//! Table III bench: predictor accuracy (top-k exact / at-least-half)
+//! of DuoServe's learned ExpertMLP vs MIF's trace heuristic, replayed
+//! over the held-out eval traces written by the offline preprocess.
+//!
+//!     cargo bench --bench table3_predictor
+
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    harness::timed("table3", || {
+        duoserve::figures::run(&harness::artifacts(), "table3", 0,
+                               harness::seed())
+    })
+}

@@ -1,0 +1,62 @@
+//! Quickstart: load a model's AOT artifacts, serve one request with
+//! DuoServe-MoE scheduling, print the generated tokens and QoS metrics.
+//!
+//!     make artifacts            # once (python, build-time only)
+//!     cargo run --release --example quickstart
+//!
+//! Optional args: [model] [device], e.g.
+//!     cargo run --release --example quickstart -- mixtral8x7b-sim a6000
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::metrics::{fmt_gb, fmt_secs};
+use duoserve::workload::generate_requests;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("mixtral-tiny");
+    let device = args
+        .get(1)
+        .and_then(|d| DeviceProfile::by_name(d))
+        .unwrap_or_else(DeviceProfile::a5000);
+
+    // 1. Load the engine: compiles every AOT-lowered component (HLO
+    //    text -> PJRT executable) and maps the host expert pool.
+    let engine = Engine::load(Path::new("artifacts"), model)?;
+    println!("loaded {model}: {} layers, {} experts (top-{}), \
+              serving on simulated {}",
+             engine.man.sim.n_layers, engine.man.sim.n_experts,
+             engine.man.sim.top_k, device.name);
+
+    // 2. One SQuAD-shaped request.
+    let request = &generate_requests(&engine.man, "squad", 1, 1234)[0];
+    println!("prompt: {} tokens, want {} output tokens",
+             request.prompt.len(), request.n_decode);
+
+    // 3. Serve under the paper's dual-phase scheduling.
+    let opts = ServeOptions::new(PolicyKind::DuoServe, device);
+    let out = engine.serve(std::slice::from_ref(request), &opts)?;
+    if let Some(oom) = out.oom {
+        println!("OOM: {oom}");
+        return Ok(());
+    }
+
+    // 4. Results.
+    let m = &out.metrics[0];
+    println!("\ntokens: {:?}", out.tokens[0]);
+    println!("TTFT            {}", fmt_secs(m.ttft));
+    println!("E2E latency     {}", fmt_secs(m.e2e));
+    println!("mean step       {}", fmt_secs(
+        m.step_latencies.iter().sum::<f64>()
+            / m.step_latencies.len().max(1) as f64));
+    println!("cache hit rate  {:.1}%", out.hit_rate * 100.0);
+    println!("predictor acc   {:.1}% exact / {:.1}% at-least-half",
+             out.accuracy.exact_rate() * 100.0,
+             out.accuracy.half_rate() * 100.0);
+    println!("peak GPU memory {}", fmt_gb(out.peak_bytes));
+    Ok(())
+}

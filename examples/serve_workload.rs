@@ -1,0 +1,74 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! load a real (scaled) MoE model from AOT artifacts and serve batched
+//! request workloads through the full stack — admission queue, batch
+//! composer, dual-phase engine — reporting latency and throughput at
+//! several batch sizes. This is the run recorded in EXPERIMENTS.md
+//! §End-to-end.
+//!
+//!     cargo run --release --example serve_workload -- \
+//!         [model] [device] [requests-per-batch-sweep]
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{BatchComposer, Engine, RequestQueue, ServeOptions};
+use duoserve::metrics::{fmt_gb, fmt_secs, summarize, Table};
+use duoserve::workload::generate_requests;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("mixtral8x7b-sim");
+    let device = args
+        .get(1)
+        .and_then(|d| DeviceProfile::by_name(d))
+        .unwrap_or_else(DeviceProfile::a5000);
+    let n_requests: usize =
+        args.get(2).and_then(|v| v.parse().ok()).unwrap_or(8);
+
+    let engine = Engine::load(Path::new("artifacts"), model)?;
+    println!("serving {model} on simulated {} — {} requests per batch size\n",
+             device.name, n_requests);
+
+    let mut table = Table::new(&[
+        "batch", "mean TTFT", "mean E2E", "P95 E2E", "tokens/s", "peak mem",
+    ]);
+    for batch_size in [1usize, 2, 4, 8] {
+        // Admission: requests arrive, the queue applies backpressure,
+        // the composer forms serving batches.
+        let mut queue = RequestQueue::new(256);
+        for r in generate_requests(&engine.man, "squad", n_requests, 99) {
+            queue.push(r);
+        }
+        let batches = BatchComposer::new(batch_size).compose(&mut queue);
+
+        let opts = ServeOptions::new(PolicyKind::DuoServe, device.clone());
+        let mut all_metrics = Vec::new();
+        let mut makespan = 0.0;
+        let mut peak = 0u64;
+        for batch in &batches {
+            let out = engine.serve(batch, &opts)?;
+            if let Some(oom) = out.oom {
+                println!("batch={batch_size}: {oom}");
+                break;
+            }
+            makespan += out.summary.makespan;
+            peak = peak.max(out.peak_bytes);
+            all_metrics.extend(out.metrics);
+        }
+        let s = summarize(&all_metrics, makespan);
+        table.row(vec![
+            batch_size.to_string(),
+            fmt_secs(s.mean_ttft),
+            fmt_secs(s.mean_e2e),
+            fmt_secs(s.p95_e2e),
+            format!("{:.1}", s.total_tokens as f64 / makespan),
+            fmt_gb(peak),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(E2E at batch > 1 includes lockstep queueing — the Fig. 7 \
+              throughput/latency trade-off)");
+    Ok(())
+}

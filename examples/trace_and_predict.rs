@@ -1,0 +1,95 @@
+//! Offline-preprocess walkthrough from the rust side (paper Fig. 3,
+//! left box): run the Experts Tracer over live serving, rebuild the
+//! popularity / affinity matrices (Eq. 2–3), and pit the deployed
+//! ExpertMLP against the popularity x affinity heuristic on the traces
+//! just collected — the Challenge-#1 ablation ("a heuristic based
+//! solely on these patterns would not achieve high accuracy").
+//!
+//!     cargo run --release --example trace_and_predict -- [model]
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::metrics::{PredictorAccuracy, Table};
+use duoserve::predictor::{HeuristicKind, HeuristicPredictor,
+                          StateConstructor, Tracer};
+use duoserve::workload::generate_requests;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("mixtral8x7b-sim");
+    let engine = Engine::load(Path::new("artifacts"), model)?;
+    let (l, e, k) = (engine.man.sim.n_layers, engine.man.sim.n_experts,
+                     engine.man.sim.top_k);
+
+    // ---- 1. trace collection alongside real serving -----------------
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a5000());
+    let mut tracer = Tracer::new();
+    for r in &generate_requests(&engine.man, "orca", 6, 2024) {
+        let out = engine.serve(std::slice::from_ref(r), &opts)?;
+        for ep in out.episodes {
+            tracer.begin_episode(&ep.dataset);
+            for step in ep.steps {
+                tracer.record_step(step);
+            }
+            tracer.end_episode();
+        }
+    }
+    println!("collected {} episodes", tracer.episodes().len());
+
+    // ---- 2. Fig. 2 statistics ---------------------------------------
+    let pop = tracer.popularity(l, e);
+    println!("\npopularity (layer 0): {:?}",
+             pop[0].iter().map(|p| (p * 100.0).round() / 100.0)
+                 .collect::<Vec<_>>());
+    let aff = tracer.affinity(l, e);
+    let row_max: f64 = aff[0]
+        .iter()
+        .map(|row| row.iter().cloned().fold(0.0, f64::max))
+        .sum::<f64>() / e as f64;
+    println!("affinity layer0->1 mean row-max: {row_max:.3} \
+              (uniform would be {:.3})", 1.0 / e as f64);
+
+    // ---- 3. predictor vs heuristics on the fresh traces -------------
+    let mlp_label = "ExpertMLP (DuoServe)";
+    let mut accs: Vec<(&str, PredictorAccuracy)> = vec![
+        (mlp_label, PredictorAccuracy::default()),
+        ("popularity-only", PredictorAccuracy::default()),
+        ("popularity x affinity", PredictorAccuracy::default()),
+    ];
+    let hp = HeuristicPredictor::new(HeuristicKind::Popularity, k);
+    let ha = HeuristicPredictor::new(HeuristicKind::PopularityAffinity, k);
+
+    for ep in tracer.episodes() {
+        for step in &ep.steps {
+            let mut sc = StateConstructor::new(&engine.man);
+            for (layer, sel) in step.iter().enumerate() {
+                if layer >= 1 {
+                    let pm = engine.predict_layer(&sc, layer)?;
+                    accs[0].1.observe(&pm, sel);
+                    accs[1].1.observe(
+                        &hp.predict(&engine.mats, layer, &step[layer - 1]), sel);
+                    accs[2].1.observe(
+                        &ha.predict(&engine.mats, layer, &step[layer - 1]), sel);
+                }
+                sc.record(layer, sel);
+            }
+        }
+    }
+
+    let mut t = Table::new(&["predictor", "top-k exact", "at-least-half"]);
+    for (name, acc) in &accs {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}%", acc.exact_rate() * 100.0),
+            format!("{:.2}%", acc.half_rate() * 100.0),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!("(the learned predictor must beat both heuristics — \
+              paper §II-A Challenge #1)");
+    Ok(())
+}

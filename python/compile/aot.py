@@ -1,0 +1,247 @@
+"""AOT pipeline: lower every model component to HLO text, materialise
+weights, run the offline preprocess (tracer + predictor training), and
+emit the artifact tree the rust runtime consumes.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifact tree, per config:
+
+    artifacts/<cfg>/
+      manifest.json              # everything rust needs to find the rest
+      hlo/<component>.hlo.txt    # one per (component, token-bucket)
+      weights/*.bin              # raw little-endian f32 blobs
+      predictor/popularity.bin   # (L, E) f32
+      predictor/affinity.bin     # (L-1, E, E) f32
+      traces/eval.json           # held-out routing traces (Table III bench)
+      goldens.json               # prompts + expected tokens + routing for
+                                 # rust integration tests
+
+Python runs ONCE, at build time; after this the rust binary is
+self-contained.
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, predictor as pred_mod, train_predictor
+from .weights import make_weights
+from .workload import generate_requests, DATASETS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the predictor's trained weights are baked
+    # into its HLO as constants; the default printer elides them as
+    # `constant({...})`, which round-trips to GARBAGE on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def write_bin(path: Path, arr: np.ndarray):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.ascontiguousarray(arr, dtype=np.float32).tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Per-config emission
+# ---------------------------------------------------------------------------
+
+def emit_components(cfg, out: Path, log) -> dict:
+    """Lower every (component, bucket) to HLO text. Returns manifest map."""
+    hlo_dir = out / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    sim = cfg.sim
+
+    jobs = {}
+    for t in (1, sim.max_seq):
+        jobs[f"embed_t{t}"] = model.make_embed(cfg, t)
+        jobs[f"gate_t{t}"] = model.make_gate(cfg, t)
+    for t in cfg.expert_buckets:
+        jobs[f"expert_t{t}"] = model.make_expert(cfg, t)
+    jobs["attn_prefill"] = model.make_attn_prefill(cfg)
+    jobs["attn_decode"] = model.make_attn_decode(cfg)
+    jobs["lm_head"] = model.make_lm_head(cfg)
+
+    components = {}
+    for name, (fn, example) in jobs.items():
+        t0 = time.time()
+        text = lower(fn, example)
+        path = hlo_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        components[name] = f"hlo/{name}.hlo.txt"
+        log(f"  lowered {name:>16} ({len(text)//1024} KiB, "
+            f"{time.time()-t0:.1f}s)")
+    return components
+
+
+def emit_weights(cfg, w: model.ModelWeights, out: Path) -> dict:
+    """Write weight blobs. Expert weights are one blob per expert
+    (w1|w3|w2 concatenated) — the unit the Expert Dispatcher transfers."""
+    sim = cfg.sim
+    entries = {}
+
+    def put(name, arr):
+        write_bin(out / "weights" / f"{name}.bin", arr)
+        entries[name] = {"path": f"weights/{name}.bin",
+                         "shape": list(np.asarray(arr).shape)}
+
+    put("emb", w.emb)
+    put("pos_emb", w.pos_emb)
+    put("ln_final", w.ln_final)
+    put("w_out", w.w_out)
+    for l, lw in enumerate(w.layers):
+        put(f"layer{l}.ln_attn", lw.ln_attn)
+        put(f"layer{l}.wq", lw.wq)
+        put(f"layer{l}.wk", lw.wk)
+        put(f"layer{l}.wv", lw.wv)
+        put(f"layer{l}.wo", lw.wo)
+        put(f"layer{l}.ln_moe", lw.ln_moe)
+        put(f"layer{l}.wg", lw.wg)
+        for e in range(sim.n_experts):
+            blob = np.concatenate([np.asarray(lw.w1[e]).ravel(),
+                                   np.asarray(lw.w3[e]).ravel(),
+                                   np.asarray(lw.w2[e]).ravel()])
+            write_bin(out / "weights" / f"layer{l}.expert{e}.bin", blob)
+            entries[f"layer{l}.expert{e}"] = {
+                "path": f"weights/layer{l}.expert{e}.bin",
+                "shape": [int(blob.size)]}
+        for s in range(sim.n_shared):
+            blob = np.concatenate([np.asarray(lw.sw1[s]).ravel(),
+                                   np.asarray(lw.sw3[s]).ravel(),
+                                   np.asarray(lw.sw2[s]).ravel()])
+            write_bin(out / "weights" / f"layer{l}.shared{s}.bin", blob)
+            entries[f"layer{l}.shared{s}"] = {
+                "path": f"weights/layer{l}.shared{s}.bin",
+                "shape": [int(blob.size)]}
+    return entries
+
+
+def emit_goldens(cfg, ref: model.ReferenceModel, out: Path, log) -> str:
+    """Reference-model generations the rust engine must reproduce
+    token-for-token (and route-for-route)."""
+    goldens = []
+    for ds in DATASETS:
+        for req in generate_requests(cfg, ds, 2, seed=7_000 + cfg.seed):
+            tokens, routing = ref.generate(req.prompt, req.n_decode)
+            valid = len(req.prompt)
+            # prefill routing for real tokens only
+            prefill_routes = routing[0][:, :valid, :].tolist()
+            decode_routes = [r[:, 0, :].tolist() for r in routing[1:]]
+            goldens.append({
+                "dataset": ds,
+                "prompt": req.prompt.tolist(),
+                "n_decode": req.n_decode,
+                "tokens": tokens,
+                "prefill_routing": prefill_routes,
+                "decode_routing": decode_routes,
+            })
+    path = out / "goldens.json"
+    path.write_text(json.dumps(goldens))
+    log(f"  goldens: {len(goldens)} episodes")
+    return "goldens.json"
+
+
+def emit_predictor(cfg, pp: dict, out: Path, log) -> dict:
+    """Predictor HLO (weights baked), matrices, eval traces."""
+    (out / "predictor").mkdir(parents=True, exist_ok=True)
+    (out / "traces").mkdir(parents=True, exist_ok=True)
+
+    fn = pred_mod.make_predictor_fn(pp["folded"])
+    dim = pred_mod.input_dim(cfg)
+    example = (jax.ShapeDtypeStruct((1, dim), jnp.float32),)
+    text = lower(fn, example)
+    (out / "hlo" / "predictor.hlo.txt").write_text(text)
+    log(f"  lowered predictor ({len(text)//1024} KiB, input dim {dim})")
+
+    write_bin(out / "predictor" / "popularity.bin", pp["popularity"])
+    write_bin(out / "predictor" / "affinity.bin", pp["affinity"])
+
+    eval_json = [{
+        "dataset": ep.dataset,
+        "steps": ep.steps,
+    } for ep in pp["eval_episodes"]]
+    (out / "traces" / "eval.json").write_text(json.dumps(eval_json))
+
+    return {
+        "hlo": "hlo/predictor.hlo.txt",
+        "input_dim": dim,
+        "history_window": pred_mod.HISTORY_WINDOW,
+        "hidden_dims": list(pred_mod.hidden_dims(cfg)),
+        "popularity": "predictor/popularity.bin",
+        "affinity": "predictor/affinity.bin",
+        "eval_traces": "traces/eval.json",
+        "accuracy": pp["accuracy"],
+        "train_episodes": pp["train_episodes_count"],
+    }
+
+
+def emit_config(cfg: configs.ModelConfig, root: Path, *,
+                train_requests: int, eval_requests: int, epochs: int, log):
+    out = root / cfg.name
+    out.mkdir(parents=True, exist_ok=True)
+    log(f"[{cfg.name}] weights ...")
+    w = make_weights(cfg)
+    weight_entries = emit_weights(cfg, w, out)
+
+    log(f"[{cfg.name}] lowering components ...")
+    components = emit_components(cfg, out, log)
+
+    ref = model.ReferenceModel(cfg, w)
+    goldens = emit_goldens(cfg, ref, out, log)
+
+    log(f"[{cfg.name}] preprocess (trace + train predictor) ...")
+    pp = train_predictor.preprocess(
+        cfg, n_train_requests=train_requests, n_eval_requests=eval_requests,
+        epochs=epochs, log=log)
+    predictor_manifest = emit_predictor(cfg, pp, out, log)
+
+    manifest = cfg.to_manifest()
+    manifest["components"] = components
+    manifest["weights"] = weight_entries
+    manifest["predictor"] = predictor_manifest
+    manifest["goldens"] = goldens
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    log(f"[{cfg.name}] done -> {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=list(configs.ZOO),
+                    help="config names (default: whole zoo)")
+    ap.add_argument("--train-requests", type=int, default=24,
+                    help="trace requests per dataset for predictor training")
+    ap.add_argument("--eval-requests", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=4)
+    args = ap.parse_args()
+
+    root = Path(args.out_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    for name in args.configs:
+        emit_config(configs.get(name), root,
+                    train_requests=args.train_requests,
+                    eval_requests=args.eval_requests,
+                    epochs=args.epochs, log=print)
+    (root / ".stamp").write_text(str(time.time()))
+    print(f"all artifacts written in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Model zoo for the DuoServe-MoE reproduction.
+
+Each entry has two faces:
+
+* **sim dims** — the dimensions the functional model is actually built
+  and lowered with (small enough to run on CPU PJRT in seconds).
+* **paper dims** — the byte/FLOP-relevant quantities of the *real*
+  backbone (Table I of the paper) that feed the rust cost model
+  (PCIe transfer time, expert compute time, Table II memory rows).
+
+Scheduling behaviour depends on (n_layers, n_experts, top_k,
+shared_experts, per-expert bytes, link bandwidth) — the sim dims keep
+routing topology faithful (same expert pool size and k as the paper's
+models), while the paper dims carry the true sizes so latency/memory
+numbers have the paper's *shape*.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class PaperDims:
+    """Real-backbone quantities used only by the rust cost model."""
+
+    n_layers: int
+    d_model: int
+    d_ff: int          # per-expert FFN hidden dim
+    n_experts: int
+    top_k: int
+    n_shared: int      # shared experts (DeepSeek-style), always active
+    bytes_per_param: float  # quantised width (AWQ-4bit=0.5, FP8=1, FP16=2)
+    total_params_b: float   # Table I "Tot." params, in billions
+    active_params_b: float  # Table I "Act." params, in billions
+
+    @property
+    def expert_params(self) -> int:
+        """Params of one routed expert: gated FFN = 3 * d_model * d_ff."""
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def expert_bytes(self) -> int:
+        return int(self.expert_params * self.bytes_per_param)
+
+    @property
+    def total_expert_bytes(self) -> int:
+        return self.expert_bytes * self.n_experts * self.n_layers
+
+    @property
+    def nonmoe_bytes(self) -> int:
+        """Everything that is not a routed expert (attention, embeddings,
+        norms, gates, shared experts). Paper: ~10% of total weights."""
+        total = int(self.total_params_b * 1e9 * self.bytes_per_param)
+        return max(total - self.total_expert_bytes, int(0.05 * total))
+
+
+@dataclass(frozen=True)
+class SimDims:
+    """Dimensions of the functional scaled-down model we lower to HLO."""
+
+    n_layers: int
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    n_shared: int
+    n_heads: int
+    vocab: int
+    max_seq: int        # fixed prefill length (prompts are padded/masked)
+    max_decode: int     # max decode steps the KV cache allows beyond max_seq
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_len(self) -> int:
+        return self.max_seq + self.max_decode
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    sim: SimDims
+    paper: PaperDims
+    # token-group sizes the expert FFN executable is lowered at; prefill
+    # groups pad up to the nearest bucket, decode always uses bucket 1.
+    expert_buckets: List[int] = field(default_factory=lambda: [1, 4, 16, 64, 128])
+    # routing-structure knobs (see weights.py): inter-layer gate
+    # correlation and popularity skew, tuned to reproduce Fig 2's shape.
+    gate_affinity_rho: float = 0.85
+    gate_popularity_scale: float = 0.7
+    seed: int = 0
+
+    def to_manifest(self) -> dict:
+        d = asdict(self)
+        d["sim"]["head_dim"] = self.sim.head_dim
+        d["sim"]["kv_len"] = self.sim.kv_len
+        d["paper"]["expert_bytes"] = self.paper.expert_bytes
+        d["paper"]["nonmoe_bytes"] = self.paper.nonmoe_bytes
+        d["paper"]["total_expert_bytes"] = self.paper.total_expert_bytes
+        return d
+
+
+def _mk(name, sim, paper, **kw) -> ModelConfig:
+    return ModelConfig(name=name, sim=sim, paper=paper, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The zoo. Expert pool sizes and top-k are faithful to Table I; layer
+# counts and hidden dims are scaled so the functional path stays fast.
+# ---------------------------------------------------------------------------
+
+MIXTRAL_TINY = _mk(
+    "mixtral-tiny",
+    SimDims(n_layers=4, d_model=64, d_ff=128, n_experts=8, top_k=2,
+            n_shared=0, n_heads=4, vocab=256, max_seq=32, max_decode=32),
+    # cost-model dims of Mixtral-8x7B so even the tiny config exercises
+    # realistic transfer/compute ratios in rust tests.
+    PaperDims(n_layers=32, d_model=4096, d_ff=14336, n_experts=8, top_k=2,
+              n_shared=0, bytes_per_param=0.5, total_params_b=46.7,
+              active_params_b=12.9),
+    expert_buckets=[1, 4, 16, 32],
+)
+
+MIXTRAL_8X7B = _mk(
+    "mixtral8x7b-sim",
+    SimDims(n_layers=8, d_model=128, d_ff=256, n_experts=8, top_k=2,
+            n_shared=0, n_heads=4, vocab=512, max_seq=128, max_decode=64),
+    PaperDims(n_layers=32, d_model=4096, d_ff=14336, n_experts=8, top_k=2,
+              n_shared=0, bytes_per_param=0.5, total_params_b=46.7,
+              active_params_b=12.9),
+)
+
+MIXTRAL_8X22B = _mk(
+    "mixtral8x22b-sim",
+    SimDims(n_layers=14, d_model=160, d_ff=320, n_experts=8, top_k=2,
+            n_shared=0, n_heads=4, vocab=512, max_seq=128, max_decode=64),
+    PaperDims(n_layers=56, d_model=6144, d_ff=16384, n_experts=8, top_k=2,
+              n_shared=0, bytes_per_param=0.5, total_params_b=141.0,
+              active_params_b=39.0),
+)
+
+QWEN3_30B_A3B = _mk(
+    "qwen3-30b-a3b-sim",
+    SimDims(n_layers=12, d_model=64, d_ff=48, n_experts=128, top_k=8,
+            n_shared=0, n_heads=4, vocab=512, max_seq=128, max_decode=64),
+    PaperDims(n_layers=48, d_model=2048, d_ff=768, n_experts=128, top_k=8,
+              n_shared=0, bytes_per_param=1.0, total_params_b=30.5,
+              active_params_b=3.3),
+    gate_affinity_rho=0.9,
+)
+
+DEEPSEEK_16B = _mk(
+    "deepseek16b-sim",
+    SimDims(n_layers=7, d_model=64, d_ff=48, n_experts=64, top_k=6,
+            n_shared=2, n_heads=4, vocab=512, max_seq=128, max_decode=64),
+    # DeepSeekMoE-16B: 64 routed + 2 shared = 66 total, 6 routed + 2
+    # shared = 8 activated per token; deployed FP16 (full weights).
+    PaperDims(n_layers=28, d_model=2048, d_ff=1408, n_experts=64, top_k=6,
+              n_shared=2, bytes_per_param=2.0, total_params_b=16.4,
+              active_params_b=2.8),
+    gate_affinity_rho=0.9,
+)
+
+ZOO = {c.name: c for c in
+       [MIXTRAL_TINY, MIXTRAL_8X7B, MIXTRAL_8X22B, QWEN3_30B_A3B, DEEPSEEK_16B]}
+
+# The four evaluation models of the paper (Table I), in paper order.
+PAPER_MODELS = ["mixtral8x7b-sim", "mixtral8x22b-sim",
+                "qwen3-30b-a3b-sim", "deepseek16b-sim"]
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return ZOO[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(ZOO)}")

@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: fused gated expert FFN (SwiGLU), the MoE hot spot.
+
+    y = (silu(x @ W1) * (x @ W3)) @ W2
+
+This is the per-expert computation DuoServe-MoE schedules: during prefill
+each expert runs it once over its token group; during decode it runs for a
+single token per activated expert.
+
+Hardware adaptation (paper targets CUDA, we target a TPU-shaped substrate):
+the CUDA implementation the paper inherits from vLLM tiles the fused-MoE
+GEMMs over threadblocks with staging through shared memory. Here the same
+schedule is expressed with Pallas ``BlockSpec``s over a (token, d_ff) grid:
+
+* grid = (T/bt, F/bf); each step holds one (bt x D) activation tile and
+  one (D x bf) slice of W1 and W3 in VMEM (the TPU analogue of shared
+  memory), computes the fused silu-gate product in registers, and
+  accumulates the (bt x D) partial down-projection into the output tile.
+* the F-dimension loop is the innermost grid axis so the output tile stays
+  resident across the accumulation (revisiting output blocks is the Pallas
+  idiom for K-loop accumulation; the ``@pl.when(j == 0)`` zero-init plays
+  the role of the CUDA epilogue's accumulator init).
+* block sizes are chosen MXU-friendly (multiples of the 128-lane register
+  tile) when the problem is big enough, and clamped to the problem size
+  for the scaled-down sim configs.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and our AOT path (HLO text -> rust) requires plain HLO ops.
+VMEM-footprint and MXU-utilisation estimates for the real-TPU blocking
+live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One grid step: fused partial SwiGLU over an (bt, bf) tile.
+
+    x_ref:  (bt, D)   activation tile (same tile for every j step)
+    w1_ref: (D, bf)   up-projection slice
+    w3_ref: (D, bf)   gate-projection slice
+    w2_ref: (bf, D)   down-projection slice
+    o_ref:  (bt, D)   output tile, accumulated across j
+    """
+    j = pl.program_id(1)
+
+    x = x_ref[...]
+    # Both up-projections and the gate fused in-register.
+    h = _silu(jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    partial = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target, preferring MXU-aligned
+    sizes. For the scaled-down sim configs this usually returns `dim`."""
+    if dim <= target:
+        return dim
+    for cand in (target, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f"))
+def expert_ffn(x, w1, w3, w2, *, block_t: int = 128, block_f: int = 128):
+    """Fused gated FFN via Pallas. Shapes: x (T, D), w1/w3 (D, F), w2 (F, D)."""
+    t, d = x.shape
+    d1, f = w1.shape
+    assert d1 == d and w3.shape == (d, f) and w2.shape == (f, d), (
+        f"shape mismatch: x{x.shape} w1{w1.shape} w3{w3.shape} w2{w2.shape}")
+
+    bt = _pick_block(t, block_t)
+    bf = _pick_block(f, block_f)
+    grid = (t // bt, f // bf)
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w1, w3, w2)
+
+
+def vmem_bytes(bt: int, bf: int, d: int, dtype_bytes: int = 2) -> int:
+    """Estimated VMEM residency of one grid step of the real-TPU blocking
+    (used by DESIGN.md §Perf; interpret-mode wallclock is NOT a TPU proxy).
+
+    x tile + w1 + w3 + w2 slices + fp32 accumulator tile.
+    """
+    return (bt * d + 2 * d * bf + bf * d) * dtype_bytes + bt * d * 4
+
+
+def mxu_utilization(bt: int, bf: int, d: int) -> float:
+    """Fraction of 128x128 MXU tiles that are full for the three GEMMs of
+    one grid step — a structural utilisation estimate for DESIGN.md §Perf."""
+    def eff(m, k, n):
+        import math
+        full = (m / 128) * (k / 128) * (n / 128)
+        padded = math.ceil(m / 128) * math.ceil(k / 128) * math.ceil(n / 128)
+        return full / padded
+
+    # x@w1 and x@w3: (bt x d) @ (d x bf); h@w2: (bt x bf) @ (bf x d)
+    flops = [(bt, d, bf), (bt, d, bf), (bt, bf, d)]
+    num = sum(m * k * n * eff(m, k, n) for m, k, n in flops)
+    den = sum(m * k * n for m, k, n in flops)
+    return num / den

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels and the model components.
+
+Everything here is the "obviously correct" unfused formulation; pytest
+asserts the Pallas kernels and the lowered model components match these
+to float tolerance. No pallas, no tricks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w3, w2):
+    """y = (silu(x@W1) * (x@W3)) @ W2, unfused."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gate_probs_ref(x, wg):
+    """softmax(x @ Wg) over the expert axis."""
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def top_k_ref(probs, k):
+    """Indices of the k largest gate probs per token, descending.
+
+    Ties broken by lower expert index first (matches the rust
+    coordinator's deterministic top-k)."""
+    order = jnp.argsort(-probs, axis=-1, stable=True)
+    return order[:, :k]
+
+
+def rms_norm_ref(x, w, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def attention_ref(h, wq, wk, wv, wo, n_heads, mask):
+    """Plain causal MHA over a full sequence. h (T, D)."""
+    t, d = h.shape
+    hd = d // n_heads
+    q = (h @ wq).reshape(t, n_heads, hd)
+    k = (h @ wk).reshape(t, n_heads, hd)
+    v = (h @ wv).reshape(t, n_heads, hd)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(hd)
+    scores = jnp.where(mask[None, :, :], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, d)
+    return out @ wo
+
+
+def moe_layer_ref(h, wg, experts_w1, experts_w3, experts_w2, k,
+                  shared_w1=None, shared_w3=None, shared_w2=None):
+    """Full dense-math MoE layer: route each token to its top-k experts,
+    weight by renormalised gate probs, add shared experts if present.
+
+    experts_w* have a leading expert axis (E, ...). Computes ALL experts
+    densely and masks — the oracle trades FLOPs for obviousness.
+    """
+    t, d = h.shape
+    e = wg.shape[1]
+    probs = gate_probs_ref(h, wg)                      # (T, E)
+    idx = top_k_ref(probs, k)                          # (T, k)
+    sel = jax.nn.one_hot(idx, e).sum(axis=1)           # (T, E) 0/1
+    w = probs * sel
+    w = w / jnp.sum(w, axis=-1, keepdims=True)         # renormalise over top-k
+
+    # dense evaluation of every expert on every token
+    all_out = jnp.stack(
+        [expert_ffn_ref(h, experts_w1[i], experts_w3[i], experts_w2[i])
+         for i in range(e)], axis=1)                   # (T, E, D)
+    out = jnp.einsum("te,ted->td", w, all_out)
+    if shared_w1 is not None:
+        for i in range(shared_w1.shape[0]):
+            out = out + expert_ffn_ref(h, shared_w1[i], shared_w3[i],
+                                       shared_w2[i])
+    return out, idx, probs

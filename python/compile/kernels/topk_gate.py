@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: MoE gate — router logits -> softmax probabilities.
+
+The gate is tiny compared to the expert FFNs, but it sits on the critical
+path of every layer (DuoServe's decode sync point #1 compares the gate's
+selection against the prefetched cache), so we keep it as a fused Pallas
+kernel: one grid step per token tile computes logits and a numerically
+stable softmax without materialising logits in HBM.
+
+Top-k extraction happens on the rust side (the coordinator needs the
+indices for token grouping / cache lookup anyway, and k varies per model);
+the kernel returns the full probability row per token.
+
+interpret=True for the same reason as expert_ffn.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(x_ref, wg_ref, o_ref):
+    """x_ref (bt, D), wg_ref (D, E) -> o_ref (bt, E) softmax probs."""
+    logits = jnp.dot(x_ref[...], wg_ref[...],
+                     preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    if dim <= target:
+        return dim
+    for cand in (target, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def gate_probs(x, wg, *, block_t: int = 128):
+    """Softmax gate probabilities. x (T, D), wg (D, E) -> (T, E)."""
+    t, d = x.shape
+    d1, e = wg.shape
+    assert d1 == d, f"shape mismatch: x{x.shape} wg{wg.shape}"
+
+    bt = _pick_block(t, block_t)
+
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), jnp.float32),
+        interpret=True,
+    )(x, wg)

@@ -1,0 +1,334 @@
+"""L2: the MoE decoder, written as separately-lowered JAX components.
+
+DuoServe-MoE's whole point is that the *coordinator* (rust, L3) owns
+expert scheduling — which expert weights exist on the device, when they
+are fetched, and in what order experts execute. The model therefore is
+NOT lowered as one monolithic forward; it is lowered as components whose
+weights are explicit arguments, so the rust Expert Dispatcher can feed an
+expert executable exactly the weights its cache decided to transfer:
+
+  embed         (tok_ids, pos0, emb, pos_emb)              -> h
+  attn_prefill  (h, valid_len, ln, wq,wk,wv,wo, kc, vc)    -> h', kc', vc'
+  attn_decode   (h, pos,      ln, wq,wk,wv,wo, kc, vc)     -> h', kc', vc'
+  gate          (h, ln, wg)                                -> probs, h_norm
+  expert_t<B>   (x, w1, w3, w2)                            -> y   [Pallas]
+  lm_head       (h_last, ln, w_out)                        -> logits
+
+The residual add and the top-k weighted combine are plain f32 host math
+done by the rust coordinator (they are O(T*D) and keeping them in rust
+lets the combine run as expert results arrive, stream-style).
+
+All components are shared across layers/experts — weights are arguments,
+so one compiled executable per (component, bucket) serves every layer.
+
+This module also provides `ReferenceModel`, a vectorised pure-jnp
+whole-model oracle used by the tracer (train_predictor.py), the pytest
+integration tests, and — via goldens written by aot.py — the rust
+integration tests.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.expert_ffn import expert_ffn
+from .kernels.topk_gate import gate_probs
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Components (these get lowered to HLO by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_embed(cfg: ModelConfig, t: int):
+    """Token + learned positional embedding for t tokens starting at pos0."""
+
+    def embed(tok_ids, pos0, emb, pos_emb):
+        h = jnp.take(emb, tok_ids, axis=0)
+        pos = pos0 + jnp.arange(t, dtype=jnp.int32)
+        return (h + jnp.take(pos_emb, pos, axis=0),)
+
+    sim = cfg.sim
+    example = (
+        jax.ShapeDtypeStruct((t,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((sim.vocab, sim.d_model), jnp.float32),
+        jax.ShapeDtypeStruct((sim.kv_len, sim.d_model), jnp.float32),
+    )
+    return embed, example
+
+
+def _attn_core(h_norm, wq, wk, wv, wo, n_heads, kc, vc, q_positions,
+               valid_len):
+    """Shared attention math: project, update caches at q_positions,
+    attend over cache rows < valid bound. h_norm (T, D)."""
+    t, d = h_norm.shape
+    kv_len = kc.shape[0]
+    hd = d // n_heads
+    q = (h_norm @ wq).reshape(t, n_heads, hd)
+    k_new = (h_norm @ wk).reshape(t, n_heads, hd)
+    v_new = (h_norm @ wv).reshape(t, n_heads, hd)
+
+    kc = jax.lax.dynamic_update_slice(kc, k_new, (q_positions[0], 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new, (q_positions[0], 0, 0))
+
+    scale = jnp.float32(1.0 / np.sqrt(hd))
+    scores = jnp.einsum("qhd,khd->hqk", q, kc) * scale
+    key_pos = jnp.arange(kv_len, dtype=jnp.int32)
+    # causal: key position must be <= the query's absolute position, and
+    # within the valid region (padded prompt tail is masked out).
+    causal = key_pos[None, :] <= q_positions[:, None]
+    valid = key_pos[None, :] < valid_len
+    mask = causal & valid
+    scores = jnp.where(mask[None, :, :], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", att, vc).reshape(t, d)
+    return out @ wo, kc, vc
+
+
+def make_attn_prefill(cfg: ModelConfig):
+    """Pre-norm causal MHA over the padded prompt (S = max_seq tokens,
+    `valid_len` of them real), writing KV rows [0, S)."""
+    sim = cfg.sim
+    s, d, nh = sim.max_seq, sim.d_model, sim.n_heads
+
+    def attn_prefill(h, valid_len, ln_w, wq, wk, wv, wo, kc, vc):
+        hn = ref.rms_norm_ref(h, ln_w)
+        q_pos = jnp.arange(s, dtype=jnp.int32)
+        # padded queries attend only within their causal window; their
+        # outputs land on padded rows nobody reads.
+        out, kc, vc = _attn_core(hn, wq, wk, wv, wo, nh, kc, vc, q_pos,
+                                 valid_len)
+        return h + out, kc, vc
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((s, d), f32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((sim.kv_len, nh, sim.head_dim), f32),
+        jax.ShapeDtypeStruct((sim.kv_len, nh, sim.head_dim), f32),
+    )
+    return attn_prefill, example
+
+
+def make_attn_decode(cfg: ModelConfig):
+    """Single-token attention step at absolute position `pos` (attends
+    rows [0, pos], writes row pos)."""
+    sim = cfg.sim
+    d, nh = sim.d_model, sim.n_heads
+
+    def attn_decode(h, pos, ln_w, wq, wk, wv, wo, kc, vc):
+        hn = ref.rms_norm_ref(h, ln_w)
+        q_pos = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        out, kc, vc = _attn_core(hn, wq, wk, wv, wo, nh, kc, vc, q_pos,
+                                 pos + 1)
+        return h + out, kc, vc
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((1, d), f32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+        jax.ShapeDtypeStruct((sim.kv_len, nh, sim.head_dim), f32),
+        jax.ShapeDtypeStruct((sim.kv_len, nh, sim.head_dim), f32),
+    )
+    return attn_decode, example
+
+
+def make_gate(cfg: ModelConfig, t: int):
+    """Pre-MoE RMSNorm + Pallas softmax gate. Returns (probs, h_norm);
+    rust extracts top-k (it needs the indices for grouping anyway) and
+    feeds h_norm to the expert executables."""
+    sim = cfg.sim
+
+    def gate(h, ln_w, wg):
+        hn = ref.rms_norm_ref(h, ln_w)
+        return gate_probs(hn, wg), hn
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((t, sim.d_model), f32),
+        jax.ShapeDtypeStruct((sim.d_model,), f32),
+        jax.ShapeDtypeStruct((sim.d_model, sim.n_experts), f32),
+    )
+    return gate, example
+
+
+def make_expert(cfg: ModelConfig, t: int):
+    """The Pallas fused expert FFN at token-bucket size t."""
+    sim = cfg.sim
+
+    def expert(x, w1, w3, w2):
+        return (expert_ffn(x, w1, w3, w2),)
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((t, sim.d_model), f32),
+        jax.ShapeDtypeStruct((sim.d_model, sim.d_ff), f32),
+        jax.ShapeDtypeStruct((sim.d_model, sim.d_ff), f32),
+        jax.ShapeDtypeStruct((sim.d_ff, sim.d_model), f32),
+    )
+    return expert, example
+
+
+def make_lm_head(cfg: ModelConfig):
+    """Final RMSNorm + vocabulary projection for one token row."""
+    sim = cfg.sim
+
+    def lm_head(h, ln_w, w_out):
+        hn = ref.rms_norm_ref(h, ln_w)
+        return (hn @ w_out,)
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((1, sim.d_model), f32),
+        jax.ShapeDtypeStruct((sim.d_model,), f32),
+        jax.ShapeDtypeStruct((sim.d_model, sim.vocab), f32),
+    )
+    return lm_head, example
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (tracer + tests; never lowered, never shipped)
+# ---------------------------------------------------------------------------
+
+class LayerWeights(NamedTuple):
+    ln_attn: jnp.ndarray
+    wq: jnp.ndarray
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray
+    ln_moe: jnp.ndarray
+    wg: jnp.ndarray          # (D, E)
+    w1: jnp.ndarray          # (E, D, F) routed experts
+    w3: jnp.ndarray
+    w2: jnp.ndarray          # (E, F, D)
+    sw1: jnp.ndarray         # (n_shared, D, F) — may be size 0
+    sw3: jnp.ndarray
+    sw2: jnp.ndarray
+
+
+class ModelWeights(NamedTuple):
+    emb: jnp.ndarray
+    pos_emb: jnp.ndarray
+    layers: list              # [LayerWeights]
+    ln_final: jnp.ndarray
+    w_out: jnp.ndarray
+
+
+class ReferenceModel:
+    """Vectorised pure-jnp full model: the oracle the rust system must
+    agree with, and the model the Experts Tracer runs during preprocess."""
+
+    def __init__(self, cfg: ModelConfig, weights: ModelWeights):
+        self.cfg = cfg
+        self.w = weights
+        self._decode_step = jax.jit(self._decode_step_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def _moe(self, h, lw: LayerWeights):
+        """Dense-math MoE over (T, D); returns (out, top-k idx)."""
+        k = self.cfg.sim.top_k
+        hn = ref.rms_norm_ref(h, lw.ln_moe)
+        probs = ref.gate_probs_ref(hn, lw.wg)
+        idx = ref.top_k_ref(probs, k)
+        e = lw.wg.shape[1]
+        sel = jax.nn.one_hot(idx, e).sum(axis=1)
+        wts = probs * sel
+        wts = wts / jnp.sum(wts, axis=-1, keepdims=True)
+        up = jax.nn.silu(jnp.einsum("td,edf->tef", hn, lw.w1))
+        up = up * jnp.einsum("td,edf->tef", hn, lw.w3)
+        all_out = jnp.einsum("tef,efd->ted", up, lw.w2)
+        out = jnp.einsum("te,ted->td", wts, all_out)
+        for i in range(self.cfg.sim.n_shared):
+            out = out + ref.expert_ffn_ref(hn, lw.sw1[i], lw.sw3[i], lw.sw2[i])
+        return out, idx
+
+    def _layer(self, h, lw, kc, vc, q_pos, valid_len):
+        hn = ref.rms_norm_ref(h, lw.ln_attn)
+        att, kc, vc = _attn_core(hn, lw.wq, lw.wk, lw.wv, lw.wo,
+                                 self.cfg.sim.n_heads, kc, vc, q_pos,
+                                 valid_len)
+        h = h + att
+        moe, idx = self._moe(h, lw)
+        return h + moe, kc, vc, idx
+
+    def _prefill_impl(self, tok_ids, valid_len, kcs, vcs):
+        sim = self.cfg.sim
+        h = jnp.take(self.w.emb, tok_ids, axis=0)
+        h = h + self.w.pos_emb[:sim.max_seq]
+        q_pos = jnp.arange(sim.max_seq, dtype=jnp.int32)
+        idxs, new_kcs, new_vcs = [], [], []
+        for l, lw in enumerate(self.w.layers):
+            h, kc, vc, idx = self._layer(h, lw, kcs[l], vcs[l], q_pos,
+                                         valid_len)
+            new_kcs.append(kc)
+            new_vcs.append(vc)
+            idxs.append(idx)
+        h_last = jax.lax.dynamic_slice(h, (valid_len - 1, 0),
+                                       (1, sim.d_model))
+        logits = ref.rms_norm_ref(h_last, self.w.ln_final) @ self.w.w_out
+        return logits, new_kcs, new_vcs, jnp.stack(idxs)
+
+    def _decode_step_impl(self, tok, pos, kcs, vcs):
+        sim = self.cfg.sim
+        h = jnp.take(self.w.emb, tok[None], axis=0)
+        h = h + jax.lax.dynamic_slice(self.w.pos_emb, (pos, 0),
+                                      (1, sim.d_model))
+        q_pos = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        idxs, new_kcs, new_vcs = [], [], []
+        for l, lw in enumerate(self.w.layers):
+            h, kc, vc, idx = self._layer(h, lw, kcs[l], vcs[l], q_pos,
+                                         pos + 1)
+            new_kcs.append(kc)
+            new_vcs.append(vc)
+            idxs.append(idx)
+        logits = ref.rms_norm_ref(h, self.w.ln_final) @ self.w.w_out
+        return logits, new_kcs, new_vcs, jnp.stack(idxs)
+
+    def fresh_caches(self):
+        sim = self.cfg.sim
+        shape = (sim.kv_len, sim.n_heads, sim.head_dim)
+        kcs = [jnp.zeros(shape, jnp.float32) for _ in self.w.layers]
+        vcs = [jnp.zeros(shape, jnp.float32) for _ in self.w.layers]
+        return kcs, vcs
+
+    def generate(self, prompt_ids, n_decode: int):
+        """Greedy generation. Returns (tokens, routing): routing[0] is the
+        prefill's (L, max_seq, k) index array (padded rows included —
+        consumers must slice [:valid_len]); routing[i>0] are (L, 1, k)
+        decode-step selections."""
+        sim = self.cfg.sim
+        assert len(prompt_ids) <= sim.max_seq
+        valid_len = len(prompt_ids)
+        padded = np.zeros(sim.max_seq, np.int32)
+        padded[:valid_len] = prompt_ids
+        kcs, vcs = self.fresh_caches()
+
+        logits, kcs, vcs, idx = self._prefill(
+            jnp.asarray(padded), jnp.int32(valid_len), kcs, vcs)
+        routing = [np.asarray(idx)]
+        tokens = [int(jnp.argmax(logits[0]))]
+
+        pos = valid_len
+        for _ in range(n_decode - 1):
+            if pos >= sim.kv_len:
+                break
+            logits, kcs, vcs, idx = self._decode_step(
+                jnp.int32(tokens[-1]), jnp.int32(pos), kcs, vcs)
+            routing.append(np.asarray(idx))
+            tokens.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        return tokens, routing

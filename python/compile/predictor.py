@@ -1,0 +1,179 @@
+"""ExpertMLP — the paper's lightweight layer-level expert predictor.
+
+Seven fully-connected layers, hidden dims tapering 2048 -> 64 (paper
+§IV-B), each followed by BatchNorm + ReLU + Dropout(0.1), then a linear
+head with one logit per expert; trained with multi-label BCE (Eq. 6).
+
+Input construction (paper Eq. 4–5, with the paper's own simplification):
+    s_l = [ h_l , p_l , a_{l-1,l} ]
+* ``h_l`` — activation history: multi-hot of the experts selected in the
+  last H layers (zero-padded when fewer exist). The paper flattens the
+  full path and pads; we keep a fixed window H which is the same
+  abstraction ("a single expert's influence on the next layer") it
+  describes.
+* ``p_l`` — popularity vector of the *target* layer (Eq. 2).
+* ``a_{l-1,l}`` — affinity rows of the experts just selected, aggregated
+  (mean) into one E-vector (the paper's "abstracted the combination of
+  multiple experts per layer into a single expert's influence").
+* plus a one-hot layer index so a single predictor serves all layers.
+
+BatchNorm is trained with batch statistics and folded into the linear
+weights at export, so the lowered HLO is a pure MLP — the rust predict
+stream feeds it one state vector and gets E probabilities back.
+
+Pure JAX, hand-rolled Adam — the image has no optax/flax/torch.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+HISTORY_WINDOW = 4
+PAPER_HIDDEN = (2048, 1024, 512, 256, 128, 64)
+DROPOUT = 0.1
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+def input_dim(cfg: ModelConfig) -> int:
+    e, L = cfg.sim.n_experts, cfg.sim.n_layers
+    return HISTORY_WINDOW * e + e + e + L
+
+
+def hidden_dims(cfg: ModelConfig):
+    """Paper dims for the zoo models; the tiny test config shrinks them
+    8x so pytest stays fast."""
+    if cfg.name == "mixtral-tiny":
+        return tuple(max(h // 8, 64) for h in PAPER_HIDDEN)
+    return PAPER_HIDDEN
+
+
+class Layer(NamedTuple):
+    w: jnp.ndarray
+    b: jnp.ndarray
+    gamma: jnp.ndarray
+    beta: jnp.ndarray
+    mu: jnp.ndarray       # BN running mean
+    var: jnp.ndarray      # BN running variance
+
+
+class Params(NamedTuple):
+    layers: list          # [Layer] hidden layers (BN+ReLU)
+    w_out: jnp.ndarray
+    b_out: jnp.ndarray
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dims = (input_dim(cfg),) + tuple(hidden_dims(cfg))
+    layers = []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        fan_in = dims[i]
+        w = jax.random.normal(k1, (dims[i], dims[i + 1])) * np.sqrt(2 / fan_in)
+        layers.append(Layer(
+            w=w.astype(jnp.float32),
+            b=jnp.zeros(dims[i + 1]),
+            gamma=jnp.ones(dims[i + 1]),
+            beta=jnp.zeros(dims[i + 1]),
+            mu=jnp.zeros(dims[i + 1]),
+            var=jnp.ones(dims[i + 1]),
+        ))
+    key, k2 = jax.random.split(key)
+    e = cfg.sim.n_experts
+    w_out = jax.random.normal(k2, (dims[-1], e)) * np.sqrt(2 / dims[-1])
+    return Params(layers=layers, w_out=w_out.astype(jnp.float32),
+                  b_out=jnp.zeros(e))
+
+
+def forward_train(params: Params, x, dropout_key):
+    """Training-mode forward: batch-stat BN + dropout. Returns (logits,
+    new_running_stats [(mu, var)])."""
+    new_stats = []
+    h = x
+    for i, lyr in enumerate(params.layers):
+        h = h @ lyr.w + lyr.b
+        mu = jnp.mean(h, axis=0)
+        var = jnp.var(h, axis=0)
+        new_stats.append((BN_MOMENTUM * lyr.mu + (1 - BN_MOMENTUM) * mu,
+                          BN_MOMENTUM * lyr.var + (1 - BN_MOMENTUM) * var))
+        h = (h - mu) / jnp.sqrt(var + BN_EPS) * lyr.gamma + lyr.beta
+        h = jax.nn.relu(h)
+        dropout_key, dk = jax.random.split(dropout_key)
+        keep = jax.random.bernoulli(dk, 1 - DROPOUT, h.shape)
+        h = jnp.where(keep, h / (1 - DROPOUT), 0.0)
+    return h @ params.w_out + params.b_out, new_stats
+
+
+def forward_eval(params: Params, x):
+    """Eval-mode forward: running-stat BN, no dropout."""
+    h = x
+    for lyr in params.layers:
+        h = h @ lyr.w + lyr.b
+        h = (h - lyr.mu) / jnp.sqrt(lyr.var + BN_EPS) * lyr.gamma + lyr.beta
+        h = jax.nn.relu(h)
+    return h @ params.w_out + params.b_out
+
+
+def fold_bn(params: Params):
+    """Fold BN running stats into the linear layers. Returns
+    [(W', b')] + final (w_out, b_out): a plain ReLU MLP."""
+    folded = []
+    for lyr in params.layers:
+        scale = lyr.gamma / jnp.sqrt(lyr.var + BN_EPS)
+        w = lyr.w * scale[None, :]
+        b = (lyr.b - lyr.mu) * scale + lyr.beta
+        folded.append((np.asarray(w, np.float32), np.asarray(b, np.float32)))
+    folded.append((np.asarray(params.w_out, np.float32),
+                   np.asarray(params.b_out, np.float32)))
+    return folded
+
+
+def make_predictor_fn(folded):
+    """Build the deployable predictor forward from folded weights: the
+    function aot.py lowers to predictor.hlo.txt (weights baked as
+    constants — they never change at runtime)."""
+    consts = [(jnp.asarray(w), jnp.asarray(b)) for w, b in folded]
+
+    def predictor(s):
+        h = s
+        for w, b in consts[:-1]:
+            h = jax.nn.relu(h @ w + b)
+        w, b = consts[-1]
+        return (jax.nn.sigmoid(h @ w + b),)
+
+    return predictor
+
+
+# ---------------------------------------------------------------------------
+# Feature construction — mirrored EXACTLY by rust/src/coordinator/state.rs
+# (rust builds the same s_l vector at runtime; tests cross-check goldens).
+# ---------------------------------------------------------------------------
+
+def build_state(cfg: ModelConfig, history, target_layer, popularity,
+                affinity) -> np.ndarray:
+    """s_l for predicting layer `target_layer` (>= 1).
+
+    history: list over layers 0..target_layer-1 of expert index lists.
+    popularity: (L, E); affinity: (L-1, E, E) row-normalised.
+    """
+    e, L = cfg.sim.n_experts, cfg.sim.n_layers
+    h = np.zeros(HISTORY_WINDOW * e, np.float32)
+    recent = history[max(0, target_layer - HISTORY_WINDOW):target_layer]
+    # most recent layer occupies slot 0, older layers later slots;
+    # missing slots stay zero (the paper's zero-padding).
+    for slot, sel in enumerate(reversed(recent)):
+        for ei in sel:
+            h[slot * e + int(ei)] = 1.0
+    p = popularity[target_layer].astype(np.float32)
+    prev_sel = history[target_layer - 1]
+    if len(prev_sel) > 0:
+        a = affinity[target_layer - 1][np.asarray(prev_sel, int)].mean(axis=0)
+    else:
+        a = np.zeros(e)
+    onehot = np.zeros(L, np.float32)
+    onehot[target_layer] = 1.0
+    return np.concatenate([h, p, a.astype(np.float32), onehot])

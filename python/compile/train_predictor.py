@@ -1,0 +1,241 @@
+"""Offline preprocess (paper §IV): trace -> matrices -> train ExpertMLP.
+
+Pipeline (all on one device, as the paper requires):
+  1. **Experts Tracer** — run the ReferenceModel over a small workload
+     sample (the paper uses 2.5 % of the dataset) and record the expert
+     activation path E = {E_l} of every decode step (Eq. 1). Prefill
+     routing is dense and needs no predictor, so traces are decode-only.
+  2. **Matrices** — popularity P_l(i) (Eq. 2) and inter-layer affinity
+     A_{l,l+1}(i,j) (Eq. 3), both row-normalised, from the *training*
+     split only.
+  3. **Dataset** — for every decode step and every layer l >= 1, build
+     s_l (predictor.build_state) and the multi-hot label E_l.
+  4. **Train** — BCE (Eq. 6), hand-rolled Adam, BatchNorm + Dropout.
+  5. **Eval** — held-out episodes: Top-k exact-set accuracy and
+     "at least half" accuracy (Table III's two metrics).
+
+Returns everything aot.py needs to emit artifacts: folded predictor
+weights, matrices, eval traces (for the rust Table III bench) and the
+accuracy numbers (recorded in EXPERIMENTS.md).
+"""
+
+import time
+from dataclasses import dataclass
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import predictor as P
+from .configs import ModelConfig
+from .model import ReferenceModel
+from .weights import make_weights
+from .workload import generate_requests, DATASETS
+
+
+@dataclass
+class Episode:
+    """One request's decode-phase activation path:
+    steps[t][l] = sorted expert indices chosen at layer l, step t."""
+    dataset: str
+    steps: List[List[List[int]]]
+
+
+def collect_traces(cfg: ModelConfig, model: ReferenceModel, dataset: str,
+                   n_requests: int, seed: int) -> List[Episode]:
+    """Experts Tracer: decode-phase routing paths over a workload sample."""
+    episodes = []
+    for req in generate_requests(cfg, dataset, n_requests, seed):
+        _, routing = model.generate(req.prompt, req.n_decode)
+        steps = []
+        for step_idx in routing[1:]:           # decode steps only
+            # step_idx shape (L, 1, k)
+            steps.append([sorted(int(e) for e in step_idx[l, 0])
+                          for l in range(cfg.sim.n_layers)])
+        if steps:
+            episodes.append(Episode(dataset=dataset, steps=steps))
+    return episodes
+
+
+def build_matrices(cfg: ModelConfig, episodes: List[Episode]):
+    """Popularity (Eq. 2) and affinity (Eq. 3) from traced paths."""
+    L, E = cfg.sim.n_layers, cfg.sim.n_experts
+    pop = np.zeros((L, E), np.float64)
+    aff = np.zeros((L - 1, E, E), np.float64)
+    for ep in episodes:
+        for step in ep.steps:
+            for l in range(L):
+                for e in step[l]:
+                    pop[l, e] += 1
+            for l in range(L - 1):
+                for ei in step[l]:
+                    for ej in step[l + 1]:
+                        aff[l, ei, ej] += 1
+    pop /= np.maximum(pop.sum(axis=1, keepdims=True), 1)
+    aff /= np.maximum(aff.sum(axis=2, keepdims=True), 1)
+    return pop.astype(np.float32), aff.astype(np.float32)
+
+
+def build_dataset(cfg: ModelConfig, episodes: List[Episode], pop, aff):
+    xs, ys = [], []
+    E = cfg.sim.n_experts
+    for ep in episodes:
+        for step in ep.steps:
+            for l in range(1, cfg.sim.n_layers):
+                xs.append(P.build_state(cfg, step[:l], l, pop, aff))
+                y = np.zeros(E, np.float32)
+                y[step[l]] = 1.0
+                ys.append(y)
+    return np.stack(xs), np.stack(ys)
+
+
+# ---------------------------------------------------------------------------
+# Training (hand-rolled Adam; no optax in the image)
+# ---------------------------------------------------------------------------
+
+def _bce_loss(params, x, y, key):
+    logits, stats = P.forward_train(params, x, key)
+    # Eq. 6, numerically stable form.
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, stats
+
+
+def train(cfg: ModelConfig, x: np.ndarray, y: np.ndarray, *,
+          epochs: int = 8, batch: int = 128, lr: float = 1e-3,
+          seed: int = 0, log=print):
+    key = jax.random.PRNGKey(seed)
+    key, init_key = jax.random.split(key)
+    params = P.init_params(cfg, init_key)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(_bce_loss, has_aux=True))
+
+    @jax.jit
+    def adam(flat, m, v, g, t):
+        new_flat, new_m, new_v = [], [], []
+        for p, mi, vi, gi in zip(flat, m, v, g):
+            mi = b1 * mi + (1 - b1) * gi
+            vi = b2 * vi + (1 - b2) * gi * gi
+            mhat = mi / (1 - b1 ** t)
+            vhat = vi / (1 - b2 ** t)
+            new_flat.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return new_flat, new_m, new_v
+
+    n = x.shape[0]
+    batch = max(2, min(batch, n))  # small trace sets still train
+    rng = np.random.default_rng(seed)
+    t = 0
+    t0 = time.time()
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for s in range(0, n - batch + 1, batch):
+            idx = order[s:s + batch]
+            key, dk = jax.random.split(key)
+            (loss, stats), grads = grad_fn(params, x[idx], y[idx], dk)
+            gflat, _ = jax.tree_util.tree_flatten(grads)
+            t += 1
+            flat, m, v = adam(jax.tree_util.tree_flatten(params)[0],
+                              m, v, gflat, t)
+            params = jax.tree_util.tree_unflatten(treedef, flat)
+            # BN running stats are carried outside the gradient step
+            params = Params_with_stats(params, stats)
+            losses.append(float(loss))
+        log(f"  epoch {epoch}: bce={np.mean(losses):.4f} "
+            f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def Params_with_stats(params: P.Params, stats) -> P.Params:
+    layers = [lyr._replace(mu=mu, var=var)
+              for lyr, (mu, var) in zip(params.layers, stats)]
+    return P.Params(layers=layers, w_out=params.w_out, b_out=params.b_out)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation — Table III's two metrics
+# ---------------------------------------------------------------------------
+
+def predict_topk(cfg: ModelConfig, probs: np.ndarray) -> np.ndarray:
+    """Deterministic top-k: highest prob, ties to lower index (matches
+    ref.top_k_ref and the rust coordinator)."""
+    k = cfg.sim.top_k
+    order = np.lexsort((np.arange(probs.shape[-1]), -probs))
+    return np.sort(order[:k])
+
+
+def evaluate(cfg: ModelConfig, params_or_folded, episodes, pop, aff,
+             folded: bool = False):
+    """Returns (topk_exact, at_least_half) accuracies over decode steps."""
+    if folded:
+        fn = P.make_predictor_fn(params_or_folded)
+        fwd = jax.jit(lambda s: fn(s)[0])
+    else:
+        fwd = jax.jit(lambda s: jax.nn.sigmoid(
+            P.forward_eval(params_or_folded, s)))
+
+    k = cfg.sim.top_k
+    need = (k + 1) // 2
+    exact = half = total = 0
+    for ep in episodes:
+        for step in ep.steps:
+            for l in range(1, cfg.sim.n_layers):
+                s = P.build_state(cfg, step[:l], l, pop, aff)
+                probs = np.asarray(fwd(s[None, :]))[0]
+                pred = set(predict_topk(cfg, probs).tolist())
+                actual = set(step[l])
+                total += 1
+                if pred == actual:
+                    exact += 1
+                if len(pred & actual) >= need:
+                    half += 1
+    return exact / max(total, 1), half / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end preprocess for one config
+# ---------------------------------------------------------------------------
+
+def preprocess(cfg: ModelConfig, *, n_train_requests: int = 48,
+               n_eval_requests: int = 12, epochs: int = 4, log=print):
+    """Full offline stage. Returns a dict of everything aot.py persists."""
+    model = ReferenceModel(cfg, make_weights(cfg))
+
+    train_eps, eval_eps = [], []
+    for ds in DATASETS:
+        log(f"[{cfg.name}] tracing {ds} ...")
+        train_eps += collect_traces(cfg, model, ds, n_train_requests,
+                                    seed=100 + cfg.seed)
+        eval_eps += collect_traces(cfg, model, ds, n_eval_requests,
+                                   seed=900 + cfg.seed)
+
+    pop, aff = build_matrices(cfg, train_eps)
+    x, y = build_dataset(cfg, train_eps, pop, aff)
+    log(f"[{cfg.name}] dataset: {x.shape[0]} samples, dim {x.shape[1]}")
+
+    params = train(cfg, x, y, epochs=epochs, seed=cfg.seed, log=log)
+    folded = P.fold_bn(params)
+
+    acc = {}
+    for ds in DATASETS:
+        eps = [e for e in eval_eps if e.dataset == ds]
+        topk, half = evaluate(cfg, folded, eps, pop, aff, folded=True)
+        acc[ds] = {"topk_exact": topk, "at_least_half": half}
+        log(f"[{cfg.name}] {ds}: top-k={topk:.2%} at-least-half={half:.2%}")
+
+    return {
+        "folded": folded,
+        "popularity": pop,
+        "affinity": aff,
+        "accuracy": acc,
+        "eval_episodes": eval_eps,
+        "train_episodes_count": len(train_eps),
+    }

@@ -1,0 +1,125 @@
+"""Synthetic weight generation with *structured routing*.
+
+The paper's predictor (Table III) only works because real MoE routing is
+not uniform: experts have popularity skew (Fig 2a) and inter-layer
+affinity (Fig 2b). Random gates route uniformly, which would make the
+predictor unlearnable and the reproduction vacuous. We therefore
+construct gate weights that induce both statistics:
+
+* **Topic-carrying hidden states.** Token embeddings are a mixture of C
+  cluster centres plus noise; the residual stream preserves the cluster
+  direction across layers, so routing decisions at different layers see
+  correlated inputs.
+
+* **Inter-layer-correlated gate columns.** The gate column (routing
+  direction) of expert e at layer l+1 is a rotation-free blend
+  ``rho * col(parent(e), l) + sqrt(1-rho^2) * noise``, where `parent` is a
+  fixed permutation. A token aligned with expert e's direction at layer l
+  is then likely aligned with `child(e)`'s direction at layer l+1 — that
+  *is* the affinity pattern of Yao et al. [23] that the paper cites.
+
+* **Popularity skew.** Each expert's gate column is scaled by
+  ``1 + scale * z_e`` with z_e ~ Zipf-ish positive weights, making a few
+  experts systematically win top-k more often (Fig 2a's dark columns).
+
+The statistics are verified empirically by `python/tests/test_routing_
+structure.py` (affinity rows concentrated, popularity non-uniform,
+predictor beats the popularity baseline) — not assumed.
+
+All other weights are plain scaled-gaussian; everything is keyed by the
+config seed so artifacts are reproducible byte-for-byte.
+"""
+
+import numpy as np
+
+from .configs import ModelConfig
+from .model import LayerWeights, ModelWeights
+
+N_CLUSTERS = 8
+
+
+def _rng(cfg: ModelConfig, salt: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([cfg.seed, salt]))
+
+
+def make_embedding(cfg: ModelConfig) -> np.ndarray:
+    """Cluster-structured token embeddings: token t belongs to cluster
+    t % N_CLUSTERS; its embedding is centre + noise."""
+    sim = cfg.sim
+    r = _rng(cfg, 1)
+    centres = r.normal(0, 1.0, (N_CLUSTERS, sim.d_model))
+    centres /= np.linalg.norm(centres, axis=1, keepdims=True)
+    emb = np.empty((sim.vocab, sim.d_model), np.float32)
+    for t in range(sim.vocab):
+        c = centres[t % N_CLUSTERS]
+        emb[t] = 0.8 * c + 0.35 * r.normal(0, 1.0 / np.sqrt(sim.d_model),
+                                           sim.d_model)
+    return emb.astype(np.float32)
+
+
+def make_gates(cfg: ModelConfig) -> np.ndarray:
+    """(L, D, E) gate weights with inter-layer affinity + popularity skew."""
+    sim = cfg.sim
+    r = _rng(cfg, 2)
+    rho = cfg.gate_affinity_rho
+    d, e, L = sim.d_model, sim.n_experts, sim.n_layers
+
+    # popularity: Zipf-ish positive scale per expert, resampled per layer
+    # but correlated across layers through the shared ranks.
+    ranks = r.permutation(e)
+    zipf = 1.0 / (1.0 + ranks)          # in (0, 1]
+    pop_scale = 1.0 + cfg.gate_popularity_scale * (
+        zipf / zipf.max() - zipf.mean())
+
+    parent = r.permutation(e)           # affinity structure: child <- parent
+    gates = np.empty((L, d, e), np.float32)
+    cols = r.normal(0, 1, (d, e))
+    cols /= np.linalg.norm(cols, axis=0, keepdims=True)
+    gates[0] = cols * pop_scale
+    for l in range(1, L):
+        noise = r.normal(0, 1, (d, e))
+        noise /= np.linalg.norm(noise, axis=0, keepdims=True)
+        prev = gates[l - 1] / np.linalg.norm(gates[l - 1], axis=0,
+                                             keepdims=True)
+        cols = rho * prev[:, parent] + np.sqrt(1 - rho ** 2) * noise
+        cols /= np.linalg.norm(cols, axis=0, keepdims=True)
+        gates[l] = cols * pop_scale
+    # gate logit scale: sharp enough that top-k is decisive but not
+    # saturated (keeps routing input-dependent, not popularity-only).
+    return (gates * 4.0).astype(np.float32)
+
+
+def make_weights(cfg: ModelConfig) -> ModelWeights:
+    """Full synthetic model weights for `cfg`, deterministic in cfg.seed."""
+    sim = cfg.sim
+    r = _rng(cfg, 3)
+    d, f, v = sim.d_model, sim.d_ff, sim.vocab
+    sd = 1.0 / np.sqrt(d)
+    sf = 1.0 / np.sqrt(f)
+
+    def mat(*shape, scale):
+        return r.normal(0, scale, shape).astype(np.float32)
+
+    gates = make_gates(cfg)
+    layers = []
+    for l in range(sim.n_layers):
+        layers.append(LayerWeights(
+            ln_attn=np.ones(d, np.float32),
+            wq=mat(d, d, scale=sd), wk=mat(d, d, scale=sd),
+            wv=mat(d, d, scale=sd), wo=mat(d, d, scale=sd),
+            ln_moe=np.ones(d, np.float32),
+            wg=gates[l],
+            w1=mat(sim.n_experts, d, f, scale=sd),
+            w3=mat(sim.n_experts, d, f, scale=sd),
+            w2=mat(sim.n_experts, f, d, scale=sf),
+            sw1=mat(sim.n_shared, d, f, scale=sd),
+            sw3=mat(sim.n_shared, d, f, scale=sd),
+            sw2=mat(sim.n_shared, f, d, scale=sf),
+        ))
+    return ModelWeights(
+        emb=make_embedding(cfg),
+        pos_emb=mat(sim.kv_len, d, scale=0.02),
+        layers=layers,
+        ln_final=np.ones(d, np.float32),
+        w_out=mat(d, v, scale=sd),
+    )

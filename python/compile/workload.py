@@ -1,0 +1,80 @@
+"""Synthetic workload generator (python side — mirrored by
+rust/src/workload/ for the serving benches; both sides are seeded and the
+pytest/rust tests pin the same distributions).
+
+Two request classes stand in for the paper's datasets:
+
+* ``squad``  — short-ish extractive-QA shape: longer prompts, short
+  answers (prompt 50–90 % of max_seq, ~16 output tokens).
+* ``orca``   — grade-school-math reasoning shape: mid prompts, longer
+  chain-of-thought outputs (prompt 30–60 %, ~32 output tokens).
+
+Token streams are *topical*: each request picks a cluster c and draws
+most tokens from the congruence class {t : t % N_CLUSTERS == c}, matching
+the cluster-structured embeddings in weights.py. This is what makes
+routing (and hence the predictor) structured per request, standing in for
+the semantic coherence of real prompts.
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from .configs import ModelConfig
+from .weights import N_CLUSTERS
+
+TOPIC_PURITY = 0.8
+DATASETS = ("squad", "orca")
+
+
+@dataclass(frozen=True)
+class Request:
+    req_id: int
+    dataset: str
+    cluster: int
+    prompt: np.ndarray        # int32 token ids, len <= max_seq
+    n_decode: int             # output tokens to generate (incl. first)
+
+
+def _prompt_range(dataset: str, max_seq: int):
+    if dataset == "squad":
+        return max(4, int(0.5 * max_seq)), int(0.9 * max_seq)
+    if dataset == "orca":
+        return max(4, int(0.3 * max_seq)), int(0.6 * max_seq)
+    raise ValueError(f"unknown dataset {dataset!r}")
+
+
+def _decode_len(dataset: str, max_decode: int, r: np.random.Generator) -> int:
+    base = 16 if dataset == "squad" else 32
+    lo = max(2, base // 2)
+    return int(min(max_decode, r.integers(lo, base + 1)))
+
+
+def sample_tokens(cfg: ModelConfig, cluster: int, n: int,
+                  r: np.random.Generator) -> np.ndarray:
+    vocab = cfg.sim.vocab
+    per_class = vocab // N_CLUSTERS
+    toks = np.empty(n, np.int64)
+    topical = r.random(n) < TOPIC_PURITY
+    # topical tokens: random member of the cluster's congruence class
+    toks[topical] = (r.integers(0, per_class, topical.sum()) * N_CLUSTERS
+                     + cluster)
+    toks[~topical] = r.integers(0, vocab, (~topical).sum())
+    return np.clip(toks, 0, vocab - 1).astype(np.int32)
+
+
+def generate_requests(cfg: ModelConfig, dataset: str, n_requests: int,
+                      seed: int) -> List[Request]:
+    r = np.random.default_rng(np.random.SeedSequence([seed, hash(dataset) & 0xFFFF]))
+    lo, hi = _prompt_range(dataset, cfg.sim.max_seq)
+    out = []
+    for i in range(n_requests):
+        cluster = int(r.integers(0, N_CLUSTERS))
+        plen = int(r.integers(lo, hi + 1))
+        out.append(Request(
+            req_id=i, dataset=dataset, cluster=cluster,
+            prompt=sample_tokens(cfg, cluster, plen, r),
+            n_decode=_decode_len(dataset, cfg.sim.max_decode, r),
+        ))
+    return out

@@ -1,0 +1,89 @@
+"""AOT emission: the artifact tree must be complete, parseable, and
+self-consistent — this is the rust runtime's entire world."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot, configs
+
+CFG = configs.get("mixtral-tiny")
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    aot.emit_config(CFG, root, train_requests=6, eval_requests=3,
+                    epochs=2, log=lambda m: None)
+    return root / CFG.name
+
+
+def test_manifest_complete(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert man["name"] == CFG.name
+    assert man["sim"]["n_experts"] == CFG.sim.n_experts
+    assert man["paper"]["expert_bytes"] == CFG.paper.expert_bytes
+    for rel in man["components"].values():
+        assert (artifacts / rel).exists(), rel
+    for entry in man["weights"].values():
+        assert (artifacts / entry["path"]).exists(), entry
+
+
+def test_hlo_text_is_parseable_shape(artifacts):
+    for f in (artifacts / "hlo").glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "ENTRY" in text and "HloModule" in text, f.name
+
+
+def test_weight_blob_sizes(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    sim = CFG.sim
+    expert_floats = 3 * sim.d_model * sim.d_ff
+    for l in range(sim.n_layers):
+        for e in range(sim.n_experts):
+            p = artifacts / man["weights"][f"layer{l}.expert{e}"]["path"]
+            assert p.stat().st_size == expert_floats * 4
+
+
+def test_popularity_affinity_blobs(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    sim = CFG.sim
+    pop = np.fromfile(artifacts / man["predictor"]["popularity"],
+                      np.float32)
+    assert pop.size == sim.n_layers * sim.n_experts
+    aff = np.fromfile(artifacts / man["predictor"]["affinity"], np.float32)
+    assert aff.size == (sim.n_layers - 1) * sim.n_experts ** 2
+    np.testing.assert_allclose(
+        pop.reshape(sim.n_layers, sim.n_experts).sum(1), 1.0, rtol=1e-3)
+
+
+def test_goldens_consistent(artifacts):
+    goldens = json.loads((artifacts / "goldens.json").read_text())
+    assert len(goldens) >= 2
+    for g in goldens:
+        assert len(g["tokens"]) <= g["n_decode"]
+        assert len(g["decode_routing"]) == len(g["tokens"]) - 1
+        L, k = CFG.sim.n_layers, CFG.sim.top_k
+        assert len(g["prefill_routing"]) == L
+        assert len(g["prefill_routing"][0]) == len(g["prompt"])
+        assert len(g["prefill_routing"][0][0]) == k
+
+
+def test_eval_traces_readable(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    eps = json.loads((artifacts / man["predictor"]["eval_traces"]).read_text())
+    assert eps and all(ep["steps"] for ep in eps)
+    step = eps[0]["steps"][0]
+    assert len(step) == CFG.sim.n_layers
+    assert len(step[0]) == CFG.sim.top_k
+
+
+def test_predictor_hlo_exists_and_manifest_accuracy(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert (artifacts / man["predictor"]["hlo"]).exists()
+    for ds in ("squad", "orca"):
+        acc = man["predictor"]["accuracy"][ds]
+        assert 0.0 <= acc["topk_exact"] <= 1.0
+        assert acc["topk_exact"] <= acc["at_least_half"] <= 1.0

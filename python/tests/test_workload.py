@@ -1,0 +1,60 @@
+"""Workload generator contracts (mirrored by rust/src/workload/)."""
+
+import numpy as np
+import pytest
+
+from compile import configs
+from compile.workload import (DATASETS, TOPIC_PURITY, generate_requests,
+                              sample_tokens)
+from compile.weights import N_CLUSTERS
+
+CFG = configs.get("mixtral-tiny")
+
+
+def test_deterministic_per_seed():
+    a = generate_requests(CFG, "squad", 8, seed=42)
+    b = generate_requests(CFG, "squad", 8, seed=42)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+        assert x.n_decode == y.n_decode and x.cluster == y.cluster
+
+
+def test_different_seeds_differ():
+    a = generate_requests(CFG, "squad", 8, seed=1)
+    b = generate_requests(CFG, "squad", 8, seed=2)
+    assert any(not np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+
+
+@pytest.mark.parametrize("ds", DATASETS)
+def test_lengths_in_bounds(ds):
+    for req in generate_requests(CFG, ds, 32, seed=0):
+        assert 1 <= len(req.prompt) <= CFG.sim.max_seq
+        assert 1 <= req.n_decode <= CFG.sim.max_decode
+        assert req.prompt.min() >= 0
+        assert req.prompt.max() < CFG.sim.vocab
+
+
+def test_squad_prompts_longer_than_orca():
+    squad = generate_requests(CFG, "squad", 64, seed=0)
+    orca = generate_requests(CFG, "orca", 64, seed=0)
+    assert (np.mean([len(r.prompt) for r in squad])
+            > np.mean([len(r.prompt) for r in orca]))
+
+
+def test_orca_outputs_longer_than_squad():
+    squad = generate_requests(CFG, "squad", 64, seed=0)
+    orca = generate_requests(CFG, "orca", 64, seed=0)
+    assert (np.mean([r.n_decode for r in orca])
+            > np.mean([r.n_decode for r in squad]))
+
+
+def test_tokens_are_topical():
+    r = np.random.default_rng(0)
+    toks = sample_tokens(CFG, 3, 4000, r)
+    frac = np.mean(toks % N_CLUSTERS == 3)
+    assert frac > TOPIC_PURITY - 0.1
+
+
+def test_unknown_dataset_raises():
+    with pytest.raises(ValueError):
+        generate_requests(CFG, "imagenet", 1, seed=0)

@@ -1,0 +1,67 @@
+//! Layer-wise Full Prefetch (LFP, MoESys style): every expert of a
+//! layer is transferred to the GPU before that layer's expert
+//! computation begins. Pinned transfers and maximal cross-layer
+//! pipelining (the comm stream is busy continuously), but the
+//! *full-layer* transfer volume makes it communication-bound: k/E of
+//! the moved bytes are ever used in decode, and its per-layer
+//! residency is the whole pool (Table II's higher LFP memory).
+
+use crate::config::{LinkKind, PolicyKind};
+use crate::coordinator::policy::{Groups, Policy, SimCtx};
+use crate::memory::{ExpertKey, OomError};
+use crate::simx::StreamId;
+
+#[derive(Debug, Default)]
+pub struct LfpPolicy;
+
+impl LfpPolicy {
+    pub fn new() -> Self {
+        LfpPolicy
+    }
+
+    /// Transfer ALL experts of `layer` (comm stream, pinned), then run
+    /// the activated ones once everything has landed ("before expert
+    /// computation") and the gate has grouped tokens.
+    fn full_layer(&self, cx: &mut SimCtx<'_>, layer: usize, groups: &Groups,
+                  t_layer_start: f64, t_gate: f64) -> Result<f64, OomError> {
+        let mut t_all_fetched = t_layer_start;
+        for e in 0..cx.n_experts {
+            let key = ExpertKey::routed(layer, e);
+            let done = match cx.cache.touch(key, t_layer_start) {
+                Some(r) => r,
+                None => cx.fetch(key, t_layer_start, LinkKind::Pinned),
+            };
+            t_all_fetched = t_all_fetched.max(done);
+        }
+        let mut t = t_all_fetched.max(t_gate);
+        for &(_e, tokens) in groups {
+            t = cx.streams.run(StreamId::Compute, t,
+                               cx.cost.expert_compute(tokens), "lfp-expert");
+        }
+        cx.sync_expert_gauge(0)?;
+        Ok(t)
+    }
+}
+
+impl Policy for LfpPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Lfp
+    }
+
+    fn begin_request(&mut self, _cx: &mut SimCtx<'_>) -> Result<(), OomError> {
+        Ok(())
+    }
+
+    fn prefill_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                   groups: &Groups, t_layer_start: f64, t_gate: f64)
+                   -> Result<f64, OomError> {
+        self.full_layer(cx, layer, groups, t_layer_start, t_gate)
+    }
+
+    fn decode_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                  groups: &Groups, t_layer_start: f64, t_gate: f64,
+                  _predict: &mut dyn FnMut(usize) -> Vec<usize>)
+                  -> Result<f64, OomError> {
+        self.full_layer(cx, layer, groups, t_layer_start, t_gate)
+    }
+}

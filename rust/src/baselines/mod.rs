@@ -1,0 +1,15 @@
+//! The paper's three comparison baselines, reimplemented as scheduling
+//! policies over the same engine/cache/stream substrate (the paper
+//! compares *policies*, not codebases — DESIGN.md §1):
+//!
+//! * [`OdfPolicy`] — On-Demand Fetch (HuggingFace Accelerate style).
+//! * [`LfpPolicy`] — Layer-wise Full Prefetch (MoESys style).
+//! * [`MifPolicy`] — MoE-Infinity-style activation-aware caching.
+
+mod lfp;
+mod mif;
+mod odf;
+
+pub use lfp::LfpPolicy;
+pub use mif::MifPolicy;
+pub use odf::OdfPolicy;

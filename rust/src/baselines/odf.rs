@@ -1,0 +1,51 @@
+//! On-Demand Fetch (ODF): experts are loaded onto the GPU only after
+//! the gate selects them, synchronously, on the critical path —
+//! the paper implements this baseline with HuggingFace Accelerate,
+//! whose offload path moves **pageable** host memory (a fraction of
+//! pinned PCIe bandwidth). No prefetch, no cross-layer reuse: each
+//! layer's slots are recycled immediately (layer window 1).
+
+use crate::config::{LinkKind, PolicyKind};
+use crate::memory::OomError;
+
+use crate::coordinator::policy::{serial_fetch_compute, Groups, Policy, SimCtx};
+
+#[derive(Debug, Default)]
+pub struct OdfPolicy;
+
+impl OdfPolicy {
+    pub fn new() -> Self {
+        OdfPolicy
+    }
+}
+
+impl Policy for OdfPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Odf
+    }
+
+    fn begin_request(&mut self, _cx: &mut SimCtx<'_>) -> Result<(), OomError> {
+        Ok(())
+    }
+
+    fn prefill_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                   groups: &Groups, _t_layer_start: f64, t_gate: f64)
+                   -> Result<f64, OomError> {
+        // Fetch-then-compute for each activated expert, serialised
+        // after the gate: transfers sit fully on the critical path.
+        let t = serial_fetch_compute(cx, layer, groups, t_gate,
+                                     LinkKind::Pageable);
+        cx.sync_expert_gauge(0)?;
+        Ok(t)
+    }
+
+    fn decode_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                  groups: &Groups, _t_layer_start: f64, t_gate: f64,
+                  _predict: &mut dyn FnMut(usize) -> Vec<usize>)
+                  -> Result<f64, OomError> {
+        let t = serial_fetch_compute(cx, layer, groups, t_gate,
+                                     LinkKind::Pageable);
+        cx.sync_expert_gauge(0)?;
+        Ok(t)
+    }
+}

@@ -1,0 +1,84 @@
+//! Device profiles — the paper's two testbeds, expressed as the
+//! quantities the cost model needs. Absolute numbers are public-spec
+//! derived; what matters for reproduction is their *ratios* (PCIe vs
+//! compute, A5000 vs A6000, pinned vs pageable).
+
+/// How expert weights travel host->device. The paper's DuoServe/LFP/MIF
+/// use CUDA **pinned** staging buffers (~full PCIe bandwidth); the
+/// ODF baseline (HuggingFace Accelerate) moves **pageable** memory,
+/// which historically sustains only a fraction of link bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    Pinned,
+    Pageable,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// GPU memory capacity in bytes (Table II's OOM threshold).
+    pub vram_bytes: u64,
+    /// Effective (achieved, not peak) dense f16/int4-dequant TFLOPs.
+    pub eff_tflops: f64,
+    /// HBM bandwidth, bytes/s (roofline floor for memory-bound ops).
+    pub hbm_bw: f64,
+    /// PCIe effective bandwidth for pinned transfers, bytes/s.
+    pub pcie_pinned_bw: f64,
+    /// PCIe effective bandwidth for pageable transfers, bytes/s.
+    pub pcie_pageable_bw: f64,
+    /// Fixed per-transfer latency (driver + DMA setup), seconds.
+    pub pcie_latency_s: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA RTX A5000 24 GB on PCIe 4.0 x16 (paper testbed #1).
+    pub fn a5000() -> Self {
+        DeviceProfile {
+            name: "A5000".into(),
+            vram_bytes: 24 * (1 << 30),
+            eff_tflops: 16.0,          // ~60% of 27.8 peak f16
+            hbm_bw: 768.0e9,
+            pcie_pinned_bw: 22.0e9,    // PCIe4 x16 achievable w/ pinned
+            pcie_pageable_bw: 8.0e9,   // pageable staging penalty
+            pcie_latency_s: 20e-6,
+        }
+    }
+
+    /// NVIDIA RTX A6000 48 GB on PCIe 4.0 x16 (paper testbed #2).
+    pub fn a6000() -> Self {
+        DeviceProfile {
+            name: "A6000".into(),
+            vram_bytes: 48 * (1 << 30),
+            eff_tflops: 23.0,          // ~60% of 38.7 peak f16
+            hbm_bw: 768.0e9,
+            pcie_pinned_bw: 22.0e9,
+            pcie_pageable_bw: 8.0e9,
+            pcie_latency_s: 20e-6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a5000" => Some(Self::a5000()),
+            "a6000" => Some(Self::a6000()),
+            _ => None,
+        }
+    }
+
+    /// Transfer time for `bytes` over the host-device link.
+    pub fn transfer_time(&self, bytes: u64, kind: LinkKind) -> f64 {
+        let bw = match kind {
+            LinkKind::Pinned => self.pcie_pinned_bw,
+            LinkKind::Pageable => self.pcie_pageable_bw,
+        };
+        self.pcie_latency_s + bytes as f64 / bw
+    }
+
+    /// Roofline time for a compute op: max of FLOP-bound and
+    /// memory-bound estimates.
+    pub fn compute_time(&self, flops: f64, hbm_bytes: f64) -> f64 {
+        let t_flop = flops / (self.eff_tflops * 1e12);
+        let t_mem = hbm_bytes / self.hbm_bw;
+        t_flop.max(t_mem).max(2e-6) // floor: kernel-launch overhead
+    }
+}

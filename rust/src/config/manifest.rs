@@ -1,0 +1,227 @@
+//! Deserialised `manifest.json` — the contract between the python AOT
+//! pipeline and the rust runtime. Field names mirror
+//! `python/compile/configs.py::ModelConfig.to_manifest`. Parsed with
+//! the in-tree JSON parser (`util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct SimDims {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub max_decode: usize,
+    pub head_dim: usize,
+    pub kv_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PaperDims {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub bytes_per_param: f64,
+    pub total_params_b: f64,
+    pub active_params_b: f64,
+    /// Bytes of one routed expert at the deployed quantisation — the
+    /// unit the transfer engine moves.
+    pub expert_bytes: u64,
+    /// Bytes of everything that is not a routed expert (resident on GPU
+    /// from engine start, per the paper's ~10% observation).
+    pub nonmoe_bytes: u64,
+    pub total_expert_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyEntry {
+    pub topk_exact: f64,
+    pub at_least_half: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PredictorManifest {
+    pub hlo: String,
+    pub input_dim: usize,
+    pub history_window: usize,
+    pub hidden_dims: Vec<usize>,
+    pub popularity: String,
+    pub affinity: String,
+    pub eval_traces: String,
+    pub accuracy: HashMap<String, AccuracyEntry>,
+    pub train_episodes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub sim: SimDims,
+    pub paper: PaperDims,
+    pub expert_buckets: Vec<usize>,
+    pub gate_affinity_rho: f64,
+    pub gate_popularity_scale: f64,
+    pub seed: u64,
+    pub components: HashMap<String, String>,
+    pub weights: HashMap<String, WeightEntry>,
+    pub predictor: PredictorManifest,
+    pub goldens: String,
+    /// Directory the manifest was loaded from; all artifact paths are
+    /// relative to it.
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<artifacts>/<model>/manifest.json`.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let root = artifacts_dir.join(model);
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j, root)
+    }
+
+    fn from_json(j: &Json, root: PathBuf) -> Result<Self> {
+        let sim_j = j.get("sim")?;
+        let sim = SimDims {
+            n_layers: sim_j.get("n_layers")?.as_usize()?,
+            d_model: sim_j.get("d_model")?.as_usize()?,
+            d_ff: sim_j.get("d_ff")?.as_usize()?,
+            n_experts: sim_j.get("n_experts")?.as_usize()?,
+            top_k: sim_j.get("top_k")?.as_usize()?,
+            n_shared: sim_j.get("n_shared")?.as_usize()?,
+            n_heads: sim_j.get("n_heads")?.as_usize()?,
+            vocab: sim_j.get("vocab")?.as_usize()?,
+            max_seq: sim_j.get("max_seq")?.as_usize()?,
+            max_decode: sim_j.get("max_decode")?.as_usize()?,
+            head_dim: sim_j.get("head_dim")?.as_usize()?,
+            kv_len: sim_j.get("kv_len")?.as_usize()?,
+        };
+        let p = j.get("paper")?;
+        let paper = PaperDims {
+            n_layers: p.get("n_layers")?.as_usize()?,
+            d_model: p.get("d_model")?.as_usize()?,
+            d_ff: p.get("d_ff")?.as_usize()?,
+            n_experts: p.get("n_experts")?.as_usize()?,
+            top_k: p.get("top_k")?.as_usize()?,
+            n_shared: p.get("n_shared")?.as_usize()?,
+            bytes_per_param: p.get("bytes_per_param")?.as_f64()?,
+            total_params_b: p.get("total_params_b")?.as_f64()?,
+            active_params_b: p.get("active_params_b")?.as_f64()?,
+            expert_bytes: p.get("expert_bytes")?.as_u64()?,
+            nonmoe_bytes: p.get("nonmoe_bytes")?.as_u64()?,
+            total_expert_bytes: p.get("total_expert_bytes")?.as_u64()?,
+        };
+        let components = j
+            .get("components")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<_>>()?;
+        let weights = j
+            .get("weights")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| {
+                Ok((k.clone(), WeightEntry {
+                    path: v.get("path")?.as_str()?.to_string(),
+                    shape: v.get("shape")?.usize_vec()?,
+                }))
+            })
+            .collect::<Result<_>>()?;
+        let pj = j.get("predictor")?;
+        let accuracy = pj
+            .get("accuracy")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| {
+                Ok((k.clone(), AccuracyEntry {
+                    topk_exact: v.get("topk_exact")?.as_f64()?,
+                    at_least_half: v.get("at_least_half")?.as_f64()?,
+                }))
+            })
+            .collect::<Result<_>>()?;
+        let predictor = PredictorManifest {
+            hlo: pj.get("hlo")?.as_str()?.to_string(),
+            input_dim: pj.get("input_dim")?.as_usize()?,
+            history_window: pj.get("history_window")?.as_usize()?,
+            hidden_dims: pj.get("hidden_dims")?.usize_vec()?,
+            popularity: pj.get("popularity")?.as_str()?.to_string(),
+            affinity: pj.get("affinity")?.as_str()?.to_string(),
+            eval_traces: pj.get("eval_traces")?.as_str()?.to_string(),
+            accuracy,
+            train_episodes: pj.get("train_episodes")?.as_usize()?,
+        };
+        Ok(Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            sim,
+            paper,
+            expert_buckets: j.get("expert_buckets")?.usize_vec()?,
+            gate_affinity_rho: j.get("gate_affinity_rho")?.as_f64()?,
+            gate_popularity_scale: j.get("gate_popularity_scale")?.as_f64()?,
+            seed: j.get("seed")?.as_u64()?,
+            components,
+            weights,
+            predictor,
+            goldens: j.get("goldens")?.as_str()?.to_string(),
+            root,
+        })
+    }
+
+    /// Absolute path of a manifest-relative artifact path.
+    pub fn resolve(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn component_path(&self, name: &str) -> Result<PathBuf> {
+        let rel = self
+            .components
+            .get(name)
+            .with_context(|| format!("manifest has no component {name:?}"))?;
+        Ok(self.resolve(rel))
+    }
+
+    pub fn weight_entry(&self, name: &str) -> Result<&WeightEntry> {
+        self.weights
+            .get(name)
+            .with_context(|| format!("manifest has no weight {name:?}"))
+    }
+
+    /// Smallest lowered expert bucket that fits `n` tokens (the largest
+    /// bucket if none do; callers then split the group).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.expert_buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.expert_buckets.last().expect("no expert buckets")
+    }
+
+    /// FLOPs of one *paper-scale* expert applied to `tokens` tokens
+    /// (three GEMMs of the gated FFN) — cost-model input.
+    pub fn paper_expert_flops(&self, tokens: usize) -> f64 {
+        let p = &self.paper;
+        2.0 * 3.0 * (p.d_model as f64) * (p.d_ff as f64) * tokens as f64
+    }
+}

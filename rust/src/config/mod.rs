@@ -1,0 +1,21 @@
+//! Configuration: artifact manifests (written by `python -m compile.aot`),
+//! device profiles (the paper's two testbeds), and system-level knobs.
+
+mod device;
+mod manifest;
+mod system;
+
+pub use device::{DeviceProfile, LinkKind};
+pub use manifest::{Manifest, PaperDims, PredictorManifest, SimDims, WeightEntry};
+pub use system::{PolicyKind, SystemConfig};
+
+/// The four evaluation models of the paper (Table I), in paper order.
+pub const PAPER_MODELS: [&str; 4] = [
+    "mixtral8x7b-sim",
+    "mixtral8x22b-sim",
+    "qwen3-30b-a3b-sim",
+    "deepseek16b-sim",
+];
+
+/// The two datasets of the paper's evaluation.
+pub const DATASETS: [&str; 2] = ["squad", "orca"];

@@ -1,0 +1,136 @@
+//! System-level configuration: which scheduling policy runs, and the
+//! knobs that differentiate the paper's four compared methods.
+
+use std::str::FromStr;
+
+use super::LinkKind;
+
+/// The four compared expert-scheduling policies of the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// DuoServe-MoE: phase-specialised dual-stream scheduling with the
+    /// learned decode predictor (the paper's system).
+    DuoServe,
+    /// On-Demand Fetch: load activated experts only after gate
+    /// selection (HuggingFace Accelerate style, pageable transfers).
+    Odf,
+    /// Layer-wise Full Prefetch: prefetch every expert of each layer
+    /// before expert computation (MoESys style).
+    Lfp,
+    /// MoE-Infinity: request-level activation tracing guiding
+    /// activation-aware prefetch into a large expert cache.
+    Mif,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::Odf,
+        PolicyKind::Lfp,
+        PolicyKind::Mif,
+        PolicyKind::DuoServe,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::DuoServe => "DuoServe",
+            PolicyKind::Odf => "ODF",
+            PolicyKind::Lfp => "LFP",
+            PolicyKind::Mif => "MIF",
+        }
+    }
+
+    /// Host->device transfer mode (see `LinkKind`).
+    pub fn link_kind(&self) -> LinkKind {
+        match self {
+            PolicyKind::Odf => LinkKind::Pageable,
+            _ => LinkKind::Pinned,
+        }
+    }
+}
+
+impl FromStr for PolicyKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "duoserve" | "duoserve-moe" | "duo" => Ok(PolicyKind::DuoServe),
+            "odf" | "on-demand" => Ok(PolicyKind::Odf),
+            "lfp" | "full-prefetch" => Ok(PolicyKind::Lfp),
+            "mif" | "moe-infinity" => Ok(PolicyKind::Mif),
+            other => Err(format!("unknown policy {other:?}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub policy: PolicyKind,
+    /// MIF's expert-cache capacity per layer, as a fraction of the
+    /// expert pool for small pools; see `baselines::mif`.
+    pub mif_cache_fraction: f64,
+    /// MIF cache capacity for large pools: multiple of top-k.
+    pub mif_cache_topk_multiple: usize,
+    /// DuoServe predictor GPU residency (paper §VI-D: ~300 MB).
+    pub predictor_bytes: u64,
+    /// DuoServe predictor latency when NOT hidden by the predict
+    /// stream (paper §VI-D: ~0.6 ms).
+    pub predictor_latency_s: f64,
+    /// Activation workspace accounted against GPU memory.
+    pub activation_bytes: u64,
+    /// Simulated-time floor for host-side scheduling per layer.
+    pub scheduler_overhead_s: f64,
+}
+
+impl SystemConfig {
+    pub fn for_policy(policy: PolicyKind) -> Self {
+        SystemConfig {
+            policy,
+            mif_cache_fraction: 0.65,
+            mif_cache_topk_multiple: 2,
+            predictor_bytes: if policy == PolicyKind::DuoServe {
+                300 << 20
+            } else {
+                0
+            },
+            predictor_latency_s: 0.6e-3,
+            activation_bytes: 512 << 20,
+            scheduler_overhead_s: 30e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing_accepts_aliases() {
+        assert_eq!("duoserve".parse::<PolicyKind>(), Ok(PolicyKind::DuoServe));
+        assert_eq!("DUO".parse::<PolicyKind>(), Ok(PolicyKind::DuoServe));
+        assert_eq!("moe-infinity".parse::<PolicyKind>(), Ok(PolicyKind::Mif));
+        assert!("vllm".parse::<PolicyKind>().is_err());
+    }
+
+    #[test]
+    fn only_odf_is_pageable() {
+        for p in PolicyKind::ALL {
+            let expect = if p == PolicyKind::Odf {
+                LinkKind::Pageable
+            } else {
+                LinkKind::Pinned
+            };
+            assert_eq!(p.link_kind(), expect, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn only_duoserve_reserves_predictor_memory() {
+        for p in PolicyKind::ALL {
+            let sys = SystemConfig::for_policy(p);
+            if p == PolicyKind::DuoServe {
+                assert_eq!(sys.predictor_bytes, 300 << 20);
+            } else {
+                assert_eq!(sys.predictor_bytes, 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! The DuoServe-MoE scheduling policy — the paper's contribution.
+//!
+//! **Prefill (Fig. 4a):** a two-stream pipeline over the activated
+//! experts of each layer. The comm stream prefetches expert weights
+//! into the k-slot GPU expert cache while the compute stream runs
+//! non-MoE work and already-fetched experts; a sync point after each
+//! fetch guarantees no expert computes on stale weights. The k-slot
+//! cache bounds how far the comm stream can run ahead (one slot is
+//! computing while the others fetch), which is exactly the paper's
+//! "one being used for computation and the other being fetched"
+//! steady state.
+//!
+//! **Decode (Fig. 4b):** the trained ExpertMLP predicts the next
+//! layer's expert set on a dedicated predict stream while the current
+//! layer computes; the comm stream prefetches the predicted experts.
+//! Two synchronisation points:
+//!   1. before expert-1 compute: prefetch finished + gate-vs-cache
+//!      mismatch check (wrong predictions are re-fetched on the
+//!      critical path);
+//!   2. after expert-1 compute *and* predictor completion: the comm
+//!      stream may begin prefetching the next layer.
+
+use std::collections::VecDeque;
+
+use crate::config::{LinkKind, PolicyKind, SystemConfig};
+use crate::memory::{ExpertKey, OomError};
+use crate::simx::StreamId;
+
+use super::policy::{Groups, Policy, SimCtx};
+
+pub struct DuoServePolicy {
+    sys: SystemConfig,
+    /// Ablation: serialise transfers behind compute (single-stream).
+    no_overlap: bool,
+    /// Completion time of the predictor-issued prefetch per (layer,
+    /// expert) is tracked in the shared cache; this records which
+    /// experts were predicted for the next layer (for mismatch checks).
+    predicted_next: Vec<usize>,
+    predicted_layer: Option<usize>,
+}
+
+impl DuoServePolicy {
+    pub fn new(sys: SystemConfig) -> Self {
+        DuoServePolicy {
+            sys,
+            no_overlap: false,
+            predicted_next: Vec::new(),
+            predicted_layer: None,
+        }
+    }
+
+    /// Single-stream ablation: every transfer completes before the
+    /// dependent compute is issued and nothing is prefetched early.
+    pub fn without_overlap(sys: SystemConfig) -> Self {
+        DuoServePolicy { no_overlap: true, ..Self::new(sys) }
+    }
+}
+
+impl Policy for DuoServePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::DuoServe
+    }
+
+    fn begin_request(&mut self, cx: &mut SimCtx<'_>) -> Result<(), OomError> {
+        // The predictor is resident on GPU for the whole run (§VI-D).
+        cx.meter.set_predictor(self.sys.predictor_bytes)?;
+        self.predicted_next.clear();
+        self.predicted_layer = None;
+        Ok(())
+    }
+
+    fn prefill_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                   groups: &Groups, t_layer_start: f64, t_gate: f64)
+                   -> Result<f64, OomError> {
+        let k = cx.cache.per_layer_capacity();
+        // Ring of expert-compute completion times: the fetch of expert
+        // i must wait for slot (i - k) to be released by its compute.
+        let mut completions: VecDeque<f64> = VecDeque::with_capacity(k);
+        let mut t_moe_end = t_gate;
+
+        for (i, &(e, tokens)) in groups.iter().enumerate() {
+            let slot_free = if self.no_overlap {
+                // ablation: no pipelining — fetch i starts only after
+                // compute i-1 finished.
+                t_moe_end
+            } else if i >= k {
+                completions[i - k]
+            } else {
+                t_layer_start
+            };
+            // Prefetch may overlap the layer's attention (dense prefill
+            // activation needs no gate decision to start fetching).
+            let key = ExpertKey::routed(layer, e);
+            let t_fetch = match cx.cache.touch(key, slot_free) {
+                Some(ready) => ready,
+                None => cx.fetch(key, slot_free.max(t_layer_start), LinkKind::Pinned),
+            };
+            // Sync point: expert compute needs its weights AND the
+            // gate's token grouping.
+            let start = t_fetch.max(t_gate);
+            let done = cx.streams.run(StreamId::Compute, start,
+                                      cx.cost.expert_compute(tokens),
+                                      "prefill-expert");
+            completions.push_back(done);
+            t_moe_end = done;
+        }
+        cx.sync_expert_gauge(1)?;
+        Ok(t_moe_end)
+    }
+
+    fn decode_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                  groups: &Groups, _t_layer_start: f64, t_gate: f64,
+                  predict: &mut dyn FnMut(usize) -> Vec<usize>)
+                  -> Result<f64, OomError> {
+        // --- Sync point 1: gate-vs-cache mismatch check. -------------
+        // Experts the predictor prefetched are (or will be) in the
+        // cache; wrong or missing ones are re-fetched on the critical
+        // path ("the correct experts are re-fetched from the CPU
+        // expert cache").
+        let mut ready: Vec<(usize, usize, f64)> = Vec::with_capacity(groups.len());
+        for &(e, tokens) in groups {
+            let key = ExpertKey::routed(layer, e);
+            let t_ready = match cx.cache.touch(key, t_gate) {
+                Some(r) => r,
+                None => cx.fetch(key, t_gate, LinkKind::Pinned),
+            };
+            ready.push((e, tokens, t_ready));
+        }
+
+        // --- Expert computations (compute stream, in cache order). ---
+        let mut first_compute_start = t_gate;
+        let mut first_compute_done = t_gate;
+        let mut t_moe_end = t_gate;
+        for (i, &(_e, tokens, t_ready)) in ready.iter().enumerate() {
+            let ready_at = t_ready.max(t_gate);
+            let start = ready_at.max(cx.streams.free_at(StreamId::Compute));
+            let done = cx.streams.run(StreamId::Compute, ready_at,
+                                      cx.cost.expert_compute(tokens),
+                                      "decode-expert");
+            if i == 0 {
+                first_compute_start = start;
+                first_compute_done = done;
+            }
+            t_moe_end = done;
+        }
+
+        // --- Predict + prefetch the next layer. ----------------------
+        if layer + 1 < cx.n_layers {
+            // "when Layer N begins the expert computation, the
+            // predictor starts predicting the next layer's experts"
+            let predicted = predict(layer + 1);
+            let (pred_stream, pred_start) = if self.no_overlap {
+                // ablation: predictor blocks the compute stream
+                (StreamId::Compute, t_moe_end)
+            } else {
+                (StreamId::Predict, first_compute_start)
+            };
+            let t_pred_done = cx.streams.run(pred_stream, pred_start,
+                                             self.sys.predictor_latency_s,
+                                             "predict");
+            // Sync point 2: prefetch begins after the first expert
+            // completes AND the prediction is available.
+            let prefetch_ready = if self.no_overlap {
+                t_moe_end.max(t_pred_done)
+            } else {
+                first_compute_done.max(t_pred_done)
+            };
+            for &e in &predicted {
+                let key = ExpertKey::routed(layer + 1, e);
+                if !cx.cache.contains(key) {
+                    cx.fetch(key, prefetch_ready, LinkKind::Pinned);
+                }
+            }
+            self.predicted_next = predicted;
+            self.predicted_layer = Some(layer + 1);
+        }
+
+        cx.sync_expert_gauge(1)?;
+        Ok(t_moe_end)
+    }
+}

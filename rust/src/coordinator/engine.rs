@@ -1,0 +1,786 @@
+//! The inference engine: functional execution of the AOT-lowered model
+//! components (real tokens, CPU PJRT) interleaved with the policy's
+//! virtual-time schedule (latency/memory, paper-scale cost model).
+//!
+//! One engine serves one model. `serve` runs a request set to
+//! completion under one scheduling policy: prefills sequentially (one
+//! GPU), then decodes in lockstep (batched decode unions expert
+//! activations across requests — the Fig. 7 regime). Batch size 1
+//! reproduces the paper's primary single-request setting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{DeviceProfile, Manifest, PolicyKind, SystemConfig};
+use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, MemoryMeter, OomError};
+use crate::metrics::{summarize, PredictorAccuracy, RequestMetrics, Summary};
+use crate::predictor::{Episode, Matrices, MlpPredictor, StateConstructor};
+use crate::runtime::{ArgRef, Executable, Runtime, Tensor};
+use crate::simx::{CostModel, OpRecord, StreamId, Streams};
+use crate::workload::Request;
+
+use super::policy::{Policy, SimCtx};
+
+/// Paper-scale vocabulary for head-cost estimation (Mixtral's 32k).
+const PAPER_VOCAB: f64 = 32_000.0;
+
+/// Ablations of DuoServe's two mechanisms (DESIGN.md §4, ablation row):
+/// they answer "how much of the win is the pipeline vs the predictor?".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ablation {
+    /// Replace the learned ExpertMLP with the popularity x affinity
+    /// heuristic (paper §II-A Challenge #1's strawman).
+    NoPredictor,
+    /// Disable comm/compute overlap: transfers finish before the
+    /// dependent compute is issued (single-stream DuoServe).
+    NoOverlap,
+}
+
+#[derive(Clone)]
+pub struct ServeOptions {
+    pub policy: PolicyKind,
+    pub device: DeviceProfile,
+    /// Record per-op stream traces (tests, `--trace-streams`).
+    pub record_streams: bool,
+    /// DuoServe-only mechanism ablation.
+    pub ablation: Option<Ablation>,
+}
+
+impl ServeOptions {
+    pub fn new(policy: PolicyKind, device: DeviceProfile) -> Self {
+        ServeOptions { policy, device, record_streams: false, ablation: None }
+    }
+
+    pub fn ablated(policy: PolicyKind, device: DeviceProfile,
+                   ablation: Ablation) -> Self {
+        ServeOptions { policy, device, record_streams: false,
+                       ablation: Some(ablation) }
+    }
+}
+
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub metrics: Vec<RequestMetrics>,
+    pub summary: Summary,
+    /// Peak simulated GPU memory (Table II).
+    pub peak_bytes: u64,
+    /// GPU expert-cache hit rate over the run.
+    pub hit_rate: f64,
+    /// DuoServe predictor accuracy observed online.
+    pub accuracy: PredictorAccuracy,
+    /// Set when the policy ran out of simulated GPU memory.
+    pub oom: Option<OomError>,
+    pub stream_trace: Option<Vec<OpRecord>>,
+    /// Decode activation paths per request (Experts Tracer output).
+    pub episodes: Vec<Episode>,
+    /// Generated token ids per request (golden-test hook).
+    pub tokens: Vec<Vec<i32>>,
+}
+
+impl ServeOutcome {
+    pub fn is_oom(&self) -> bool {
+        self.oom.is_some()
+    }
+}
+
+struct Components {
+    embed_prefill: Arc<Executable>,
+    embed_decode: Arc<Executable>,
+    attn_prefill: Arc<Executable>,
+    attn_decode: Arc<Executable>,
+    gate_prefill: Arc<Executable>,
+    gate_decode: Arc<Executable>,
+    lm_head: Arc<Executable>,
+    /// bucket size -> expert executable
+    experts: BTreeMap<usize, Arc<Executable>>,
+}
+
+/// Per-request live state.
+struct ReqState {
+    idx: usize,
+    dataset: String,
+    prompt: Vec<i32>,
+    n_decode: usize,
+    valid: usize,
+    pos: usize,
+    h: Tensor,
+    kcs: Vec<xla::Literal>,
+    vcs: Vec<xla::Literal>,
+    tokens: Vec<i32>,
+    done: bool,
+    state_con: StateConstructor,
+    /// DuoServe's live prediction per layer (accuracy bookkeeping):
+    /// pending[l] = predicted set for layer l of the current step.
+    pending_pred: Vec<Option<Vec<usize>>>,
+    acc: PredictorAccuracy,
+    ttft: f64,
+    e2e: f64,
+    step_latencies: Vec<f64>,
+    /// Current decode step's per-layer selections.
+    step_path: Vec<Vec<usize>>,
+    /// All completed decode steps' paths (tracer output).
+    all_paths: Vec<Vec<Vec<usize>>>,
+}
+
+pub struct Engine {
+    pub man: Manifest,
+    pub host: HostPool,
+    pub mats: Matrices,
+    comps: Components,
+    mlp: Option<MlpPredictor>,
+    rt: Runtime,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let man = Manifest::load(artifacts_dir, model)?;
+        let rt = Runtime::cpu()?;
+        Self::with_runtime(man, rt)
+    }
+
+    pub fn with_runtime(man: Manifest, rt: Runtime) -> Result<Self> {
+        let host = HostPool::load(&man, &rt).context("loading host pool")?;
+        let mats = Matrices::load(&man).context("loading matrices")?;
+        let comp = |name: &str| -> Result<Arc<Executable>> {
+            rt.load(&man.component_path(name)?)
+        };
+        let s = man.sim.max_seq;
+        let mut experts = BTreeMap::new();
+        for &b in &man.expert_buckets {
+            experts.insert(b, comp(&format!("expert_t{b}"))?);
+        }
+        let comps = Components {
+            embed_prefill: comp(&format!("embed_t{s}"))?,
+            embed_decode: comp("embed_t1")?,
+            attn_prefill: comp("attn_prefill")?,
+            attn_decode: comp("attn_decode")?,
+            gate_prefill: comp(&format!("gate_t{s}"))?,
+            gate_decode: comp("gate_t1")?,
+            lm_head: comp("lm_head")?,
+            experts,
+        };
+        let mlp = MlpPredictor::load(&rt, &man).ok();
+        Ok(Engine { man, host, mats, comps, mlp, rt })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn has_mlp(&self) -> bool {
+        self.mlp.is_some()
+    }
+
+    /// Predict the expert set of `target_layer` from a recorded state
+    /// (used by the Table III bench and the decode prefetch path).
+    pub fn predict_layer(&self, sc: &StateConstructor, target_layer: usize)
+                         -> Result<Vec<usize>> {
+        let mlp = self.mlp.as_ref().context("no predictor artifact")?;
+        mlp.predict(&sc.build(target_layer, &self.mats))
+    }
+
+    /// Paper-layer / sim-layer ratio: memory gauges are paper-absolute,
+    /// so per-sim-layer residency scales up by this factor.
+    fn layer_scale(&self) -> f64 {
+        self.man.paper.n_layers as f64 / self.man.sim.n_layers as f64
+    }
+
+    fn make_cache(&self, kind: PolicyKind, sys: &SystemConfig) -> DeviceExpertCache {
+        let k = self.man.sim.top_k;
+        let e = self.man.sim.n_experts;
+        match kind {
+            PolicyKind::DuoServe => DeviceExpertCache::new(k, 2),
+            PolicyKind::Odf => DeviceExpertCache::new(k, 1),
+            PolicyKind::Lfp => DeviceExpertCache::new(e, 2),
+            PolicyKind::Mif => {
+                // Trace-priority cache: sized to hold the prefetched
+                // trace prediction (2k) plus corrections — 2k for small
+                // pools, 4k for large sparse pools. Unlimited layer
+                // window (every layer stays resident: the Table II
+                // memory blowup). Aggressive trace prefetch into this
+                // capacity churns out genuinely-hot entries, which is
+                // the "less adaptive" behaviour the paper describes.
+                let cap = if e <= 16 {
+                    (2 * k).min(e)
+                } else {
+                    (sys.mif_cache_topk_multiple * k).min(e)
+                };
+                DeviceExpertCache::new(cap, 0)
+            }
+        }
+    }
+
+    fn make_policy(&self, kind: PolicyKind, sys: &SystemConfig,
+                   ablation: Option<Ablation>) -> Box<dyn Policy> {
+        match kind {
+            PolicyKind::DuoServe => {
+                if ablation == Some(Ablation::NoOverlap) {
+                    Box::new(super::duoserve::DuoServePolicy::without_overlap(
+                        sys.clone()))
+                } else {
+                    Box::new(super::duoserve::DuoServePolicy::new(sys.clone()))
+                }
+            }
+            PolicyKind::Odf => Box::new(crate::baselines::OdfPolicy::new()),
+            PolicyKind::Lfp => Box::new(crate::baselines::LfpPolicy::new()),
+            PolicyKind::Mif => Box::new(crate::baselines::MifPolicy::new(
+                self.mats.clone(), self.man.sim.top_k)),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Host math (the combine path; O(T*D) f32 work the coordinator owns)
+    // -----------------------------------------------------------------
+
+    fn topk_row(&self, probs: &[f32]) -> Vec<usize> {
+        crate::predictor::top_k(probs, self.man.sim.top_k)
+    }
+
+    /// Run one expert over a token group (rows of h_norm), chunked and
+    /// zero-padded into the lowered bucket sizes.
+    fn run_expert(&self, key: ExpertKey, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let d = self.man.sim.d_model;
+        let w = self.host.expert_tensors(key)?;
+        let max_bucket = *self.man.expert_buckets.last().unwrap();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut i = 0;
+        while i < rows.len() {
+            let chunk = (rows.len() - i).min(max_bucket);
+            let b = self.man.bucket_for(chunk);
+            let mut x = vec![0.0f32; b * d];
+            for (j, row) in rows[i..i + chunk].iter().enumerate() {
+                x[j * d..(j + 1) * d].copy_from_slice(row);
+            }
+            let xt = Tensor::f32(x, vec![b, d]);
+            let exe = self.comps.experts.get(&b).expect("bucket executable");
+            let y = exe.run_mixed(&[ArgRef::T(&xt), w.w1.arg(), w.w3.arg(),
+                                    w.w2.arg()])?;
+            let y0 = Tensor::from_literal(&y[0])?;
+            let yd = y0.as_f32()?;
+            for j in 0..chunk {
+                out.push(yd[j * d..(j + 1) * d].to_vec());
+            }
+            i += chunk;
+        }
+        Ok(out)
+    }
+
+    /// Functional MoE over rows of (h, h_norm, probs): groups tokens by
+    /// expert, runs each expert once, applies the renormalised top-k
+    /// combine, adds shared experts. `rows` index into `h`/`hn`/`probs`.
+    /// Returns per-row output deltas and the (expert -> token count)
+    /// groups for the timing path, plus per-row selections.
+    #[allow(clippy::type_complexity)]
+    fn moe_functional(&self, layer: usize, hn: &[Vec<f32>],
+                      probs: &[Vec<f32>])
+                      -> Result<(Vec<Vec<f32>>, Vec<(usize, usize)>,
+                                 Vec<Vec<usize>>)> {
+        let d = self.man.sim.d_model;
+        let n_rows = hn.len();
+        let mut sel: Vec<Vec<usize>> = Vec::with_capacity(n_rows);
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, p) in probs.iter().enumerate() {
+            let s = self.topk_row(p);
+            for &e in &s {
+                groups.entry(e).or_default().push(i);
+            }
+            sel.push(s);
+        }
+
+        let mut delta = vec![vec![0.0f32; d]; n_rows];
+        for (&e, rows_idx) in &groups {
+            let rows: Vec<&[f32]> =
+                rows_idx.iter().map(|&i| hn[i].as_slice()).collect();
+            let ys = self.run_expert(ExpertKey::routed(layer, e), &rows)?;
+            for (j, &i) in rows_idx.iter().enumerate() {
+                let denom: f32 = sel[i].iter().map(|&ee| probs[i][ee]).sum();
+                let wgt = probs[i][e] / denom;
+                for (dd, y) in delta[i].iter_mut().zip(&ys[j]) {
+                    *dd += wgt * y;
+                }
+            }
+        }
+        // Shared experts: every token, unweighted (DeepSeek-style).
+        for s in 0..self.man.sim.n_shared {
+            let rows: Vec<&[f32]> = hn.iter().map(|r| r.as_slice()).collect();
+            let ys = self.run_expert(ExpertKey::shared(layer, s), &rows)?;
+            for (i, y) in ys.iter().enumerate() {
+                for (dd, yv) in delta[i].iter_mut().zip(y) {
+                    *dd += yv;
+                }
+            }
+        }
+
+        let group_counts: Vec<(usize, usize)> =
+            groups.iter().map(|(&e, v)| (e, v.len())).collect();
+        Ok((delta, group_counts, sel))
+    }
+
+    // -----------------------------------------------------------------
+    // Serving
+    // -----------------------------------------------------------------
+
+    pub fn serve(&self, requests: &[Request], opts: &ServeOptions)
+                 -> Result<ServeOutcome> {
+        let sys = SystemConfig::for_policy(opts.policy);
+        let cost = CostModel::new(&self.man, opts.device.clone());
+        let mut streams = if opts.record_streams {
+            Streams::recording()
+        } else {
+            Streams::new()
+        };
+        let mut cache = self.make_cache(opts.policy, &sys);
+        let mut meter = MemoryMeter::new(opts.device.vram_bytes);
+        let mut policy = self.make_policy(opts.policy, &sys, opts.ablation);
+
+        let sim = self.man.sim.clone();
+        let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+        let mut states: Vec<ReqState> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReqState {
+                idx: i,
+                dataset: r.dataset.clone(),
+                prompt: r.prompt.clone(),
+                n_decode: r.n_decode,
+                valid: r.prompt.len(),
+                pos: r.prompt.len(),
+                h: Tensor::zeros(&[1, sim.d_model]),
+                kcs: (0..sim.n_layers)
+                    .map(|_| Tensor::zeros(&kv_shape).to_literal().unwrap())
+                    .collect(),
+                vcs: (0..sim.n_layers)
+                    .map(|_| Tensor::zeros(&kv_shape).to_literal().unwrap())
+                    .collect(),
+                tokens: Vec::new(),
+                done: false,
+                state_con: StateConstructor::new(&self.man),
+                pending_pred: vec![None; sim.n_layers],
+                acc: PredictorAccuracy::default(),
+                ttft: 0.0,
+                e2e: 0.0,
+                step_latencies: Vec::new(),
+                step_path: Vec::new(),
+                all_paths: Vec::new(),
+            })
+            .collect();
+
+        let layer_scale = self.layer_scale();
+        let expert_bytes =
+            (self.man.paper.expert_bytes as f64 * layer_scale) as u64;
+
+        macro_rules! sim_ctx {
+            () => {
+                SimCtx {
+                    streams: &mut streams,
+                    cache: &mut cache,
+                    meter: &mut meter,
+                    cost: &cost,
+                    expert_bytes,
+                    n_layers: sim.n_layers,
+                    n_experts: sim.n_experts,
+                    top_k: sim.top_k,
+                }
+            };
+        }
+        macro_rules! check {
+            ($e:expr) => {
+                match $e {
+                    Ok(v) => v,
+                    Err(oom) => {
+                        return Ok(self.oom_outcome(oom, &streams, &states, opts))
+                    }
+                }
+            };
+        }
+
+        // -------- fixed GPU residency ---------------------------------
+        check!(meter.set_fixed(self.man.paper.nonmoe_bytes));
+        check!(meter.set_activations(sys.activation_bytes));
+
+        // ================= PREFILL (sequential) ======================
+        for ridx in 0..states.len() {
+            check!(policy.begin_request(&mut sim_ctx!()));
+            let t0 = streams.free_at(StreamId::Compute);
+            let res = self.prefill_one(&mut states[ridx], policy.as_mut(),
+                                       &mut streams, &mut cache, &mut meter,
+                                       &cost, expert_bytes, &sim)?;
+            let t_first = check!(res);
+            states[ridx].ttft = t_first - t0;
+            states[ridx].e2e = t_first;
+
+            let kv_total: u64 = states
+                .iter()
+                .filter(|s| !s.tokens.is_empty())
+                .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
+                .sum();
+            check!(meter.set_kv(kv_total));
+        }
+
+        // ================= DECODE (lockstep batch) ===================
+        let mut t_prev_step_end = streams.sync_all();
+        loop {
+            let active: Vec<usize> = states
+                .iter()
+                .filter(|s| !s.done)
+                .map(|s| s.idx)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let res = self.decode_step(&active, &mut states, policy.as_mut(),
+                                       &mut streams, &mut cache, &mut meter,
+                                       &cost, expert_bytes, &sim,
+                                       opts.ablation)?;
+            let t_step_end = check!(res);
+            policy.end_decode_step(&mut sim_ctx!());
+
+            for &r in &active {
+                let st = &mut states[r];
+                st.step_latencies.push(t_step_end - t_prev_step_end);
+                st.e2e = t_step_end;
+                let path = std::mem::take(&mut st.step_path);
+                st.all_paths.push(path);
+                st.state_con.clear();
+                st.pending_pred.iter_mut().for_each(|p| *p = None);
+                if st.tokens.len() >= st.n_decode || st.pos >= sim.kv_len {
+                    st.done = true;
+                }
+            }
+            t_prev_step_end = t_step_end;
+
+            let kv_total: u64 = states
+                .iter()
+                .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
+                .sum();
+            check!(meter.set_kv(kv_total));
+        }
+
+        Ok(self.finish_outcome(&states, &streams, &cache, &meter, None, opts))
+    }
+
+    /// Prefill one request: embed -> L x (attention, gate, MoE) -> head.
+    /// Returns the virtual time of the first token (TTFT instant).
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_one(&self, st: &mut ReqState, policy: &mut dyn Policy,
+                   streams: &mut Streams, cache: &mut DeviceExpertCache,
+                   meter: &mut MemoryMeter, cost: &CostModel,
+                   expert_bytes: u64, sim: &crate::config::SimDims)
+                   -> Result<std::result::Result<f64, OomError>> {
+        let nm = &self.host.nonmoe;
+        let valid = st.valid;
+        let mut padded = vec![0i32; sim.max_seq];
+        padded[..valid].copy_from_slice(&st.prompt);
+
+        // ---- functional embed / timing: head-ish cost ----------------
+        let toks = Tensor::i32(padded, vec![sim.max_seq]);
+        let pos0 = Tensor::scalar_i32(0);
+        let out = self.comps.embed_prefill.run_mixed(&[
+            ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(), nm.pos_emb.arg(),
+        ])?;
+        let mut h = Tensor::from_literal(&out[0])?;
+        let mut t_layer = streams.run(StreamId::Compute,
+                                      streams.free_at(StreamId::Compute),
+                                      cost.head_compute(valid, PAPER_VOCAB),
+                                      "embed");
+
+        for l in 0..sim.n_layers {
+            let lw = &self.host.nonmoe.layers[l];
+            // functional attention (+ KV update; KV stays as literals)
+            let vlen = Tensor::scalar_i32(valid as i32);
+            let out = self.comps.attn_prefill.run_mixed(&[
+                ArgRef::T(&h), ArgRef::T(&vlen), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
+            ])?;
+            let mut it = out.into_iter();
+            h = Tensor::from_literal(&it.next().unwrap())?;
+            st.kcs[l] = it.next().unwrap();
+            st.vcs[l] = it.next().unwrap();
+
+            // functional gate
+            let out = self.comps.gate_prefill.run_mixed(&[
+                ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
+            let probs_t = Tensor::from_literal(&out[0])?;
+            let hn_t = Tensor::from_literal(&out[1])?;
+
+            // timing: attention + gate on the compute stream
+            let t_layer_start = t_layer;
+            let t_gate = streams.run(StreamId::Compute, t_layer_start,
+                                     cost.attn_compute(valid, valid),
+                                     "prefill-nonmoe");
+
+            // host math: rows 0..valid
+            let hn: Vec<Vec<f32>> =
+                (0..valid).map(|i| hn_t.row(i).unwrap().to_vec()).collect();
+            let probs: Vec<Vec<f32>> =
+                (0..valid).map(|i| probs_t.row(i).unwrap().to_vec()).collect();
+            let (delta, groups, _sel) = self.moe_functional(l, &hn, &probs)?;
+            {
+                let hd = h.as_f32_mut()?;
+                let d = sim.d_model;
+                for (i, dl) in delta.iter().enumerate() {
+                    for (j, v) in dl.iter().enumerate() {
+                        hd[i * d + j] += v;
+                    }
+                }
+            }
+
+            // timing: the policy schedules the MoE section
+            let mut cx = SimCtx {
+                streams, cache, meter, cost, expert_bytes,
+                n_layers: sim.n_layers, n_experts: sim.n_experts,
+                top_k: sim.top_k,
+            };
+            let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
+                                                 t_layer_start, t_gate) {
+                Ok(t) => t,
+                Err(oom) => return Ok(Err(oom)),
+            };
+            // shared experts run on the compute stream (always resident)
+            t_layer = if sim.n_shared > 0 {
+                let dur =
+                    sim.n_shared as f64 * cost.expert_compute(valid);
+                streams.run(StreamId::Compute, t_moe, dur, "shared")
+            } else {
+                t_moe
+            };
+        }
+
+        // ---- first token ---------------------------------------------
+        let h_last = Tensor::f32(h.row(valid - 1)?.to_vec(), vec![1, sim.d_model]);
+        let out = self.comps.lm_head.run_mixed(&[
+            ArgRef::T(&h_last), nm.ln_final.arg(), nm.w_out.arg()])?;
+        let logits = Tensor::from_literal(&out[0])?;
+        let tok = argmax(logits.as_f32()?) as i32;
+        st.tokens.push(tok);
+        st.h = h_last;
+        let t_first = streams.run(StreamId::Compute, t_layer,
+                                  cost.head_compute(1, PAPER_VOCAB), "lm-head");
+        Ok(Ok(t_first))
+    }
+
+    /// One lockstep decode step over the active requests.
+    /// Returns the step's end time.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_step(&self, active: &[usize], states: &mut [ReqState],
+                   policy: &mut dyn Policy, streams: &mut Streams,
+                   cache: &mut DeviceExpertCache, meter: &mut MemoryMeter,
+                   cost: &CostModel, expert_bytes: u64,
+                   sim: &crate::config::SimDims, ablation: Option<Ablation>)
+                   -> Result<std::result::Result<f64, OomError>> {
+        let nm = &self.host.nonmoe;
+        let b = active.len();
+
+        // functional embed per request
+        for &r in active {
+            let st = &mut states[r];
+            let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
+            let pos = Tensor::scalar_i32(st.pos as i32);
+            let out = self.comps.embed_decode.run_mixed(&[
+                ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
+                nm.pos_emb.arg(),
+            ])?;
+            st.h = Tensor::from_literal(&out[0])?;
+        }
+
+        let ctx_max = active.iter().map(|&r| states[r].pos + 1).max().unwrap();
+        let mut t_layer = streams.free_at(StreamId::Compute);
+
+        for l in 0..sim.n_layers {
+            let lw = &self.host.nonmoe.layers[l];
+            // functional: attention + gate per request
+            let mut hn: Vec<Vec<f32>> = Vec::with_capacity(b);
+            let mut probs: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for &r in active {
+                let st = &mut states[r];
+                let pos = Tensor::scalar_i32(st.pos as i32);
+                let out = self.comps.attn_decode.run_mixed(&[
+                    ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
+                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                    ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
+                ])?;
+                let mut it = out.into_iter();
+                st.h = Tensor::from_literal(&it.next().unwrap())?;
+                st.kcs[l] = it.next().unwrap();
+                st.vcs[l] = it.next().unwrap();
+                let out = self.comps.gate_decode.run_mixed(&[
+                    ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
+                probs.push(Tensor::from_literal(&out[0])?.as_f32()?.to_vec());
+                hn.push(Tensor::from_literal(&out[1])?.as_f32()?.to_vec());
+            }
+
+            // timing: non-MoE
+            let t_layer_start = t_layer;
+            let t_gate = streams.run(StreamId::Compute, t_layer_start,
+                                     cost.attn_compute(b, ctx_max),
+                                     "decode-nonmoe");
+
+            // host math + functional experts
+            let (delta, groups, sel) = self.moe_functional(l, &hn, &probs)?;
+            for (bi, &r) in active.iter().enumerate() {
+                let st = &mut states[r];
+                {
+                    let hd = st.h.as_f32_mut()?;
+                    for (j, v) in delta[bi].iter().enumerate() {
+                        hd[j] += v;
+                    }
+                }
+                // accuracy: compare DuoServe's live prediction (if any)
+                if let Some(pred) = st.pending_pred[l].take() {
+                    st.acc.observe(&pred, &sel[bi]);
+                }
+                st.state_con.record(l, &sel[bi]);
+                st.step_path.push(sel[bi].clone());
+            }
+
+            // timing: policy schedules the MoE; its predict() hook runs
+            // the real MLP per request and records the union.
+            let t_moe = {
+                let mlp = self.mlp.as_ref();
+                let mats = &self.mats;
+                // Split-borrow dance: the closure needs &mut states for
+                // pending_pred bookkeeping, while the policy owns cx.
+                let mut predictions: Vec<(usize, usize, Vec<usize>)> = Vec::new();
+                let t_moe = {
+                    let states_ref: Vec<&StateConstructor> = active
+                        .iter()
+                        .map(|&r| &states[r].state_con)
+                        .collect();
+                    let heuristic = crate::predictor::HeuristicPredictor::
+                        popularity_affinity(sim.top_k);
+                    let mut predict = |target: usize| -> Vec<usize> {
+                        let mut union: Vec<usize> = Vec::new();
+                        for (bi, sc) in states_ref.iter().enumerate() {
+                            let p = if ablation == Some(Ablation::NoPredictor) {
+                                // Challenge-#1 ablation: heuristic only.
+                                let prev = sc.history().last();
+                                heuristic.predict(
+                                    mats, target,
+                                    prev.map(|v| v.as_slice()).unwrap_or(&[]))
+                            } else {
+                                match mlp {
+                                    Some(m) => m
+                                        .predict(&sc.build(target, mats))
+                                        .unwrap_or_default(),
+                                    None => Vec::new(),
+                                }
+                            };
+                            predictions.push((bi, target, p.clone()));
+                            for e in p {
+                                if !union.contains(&e) {
+                                    union.push(e);
+                                }
+                            }
+                        }
+                        union.sort_unstable();
+                        union
+                    };
+                    let mut cx = SimCtx {
+                        streams, cache, meter, cost, expert_bytes,
+                        n_layers: sim.n_layers, n_experts: sim.n_experts,
+                        top_k: sim.top_k,
+                    };
+                    match policy.decode_moe(&mut cx, l, &groups,
+                                            t_layer_start, t_gate,
+                                            &mut predict) {
+                        Ok(t) => t,
+                        Err(oom) => return Ok(Err(oom)),
+                    }
+                };
+                for (bi, target, p) in predictions {
+                    states[active[bi]].pending_pred[target] = Some(p);
+                }
+                t_moe
+            };
+
+            t_layer = if sim.n_shared > 0 {
+                let dur = sim.n_shared as f64 * cost.expert_compute(b);
+                streams.run(StreamId::Compute, t_moe, dur, "shared")
+            } else {
+                t_moe
+            };
+        }
+
+        // lm head per request (functional); one timing op for the batch
+        for &r in active {
+            let st = &mut states[r];
+            let out = self.comps.lm_head.run_mixed(&[
+                ArgRef::T(&st.h), nm.ln_final.arg(), nm.w_out.arg()])?;
+            let logits = Tensor::from_literal(&out[0])?;
+            let tok = argmax(logits.as_f32()?) as i32;
+            st.tokens.push(tok);
+            st.pos += 1;
+        }
+        let t_end = streams.run(StreamId::Compute, t_layer,
+                                cost.head_compute(b, PAPER_VOCAB), "lm-head");
+        Ok(Ok(t_end))
+    }
+
+    fn oom_outcome(&self, oom: OomError, streams: &Streams,
+                   states: &[ReqState], opts: &ServeOptions) -> ServeOutcome {
+        let mut out = self.finish_outcome(states, streams,
+                                          &DeviceExpertCache::new(1, 0),
+                                          &MemoryMeter::new(u64::MAX),
+                                          Some(oom), opts);
+        out.metrics.clear();
+        out
+    }
+
+    fn finish_outcome(&self, states: &[ReqState], streams: &Streams,
+                      cache: &DeviceExpertCache, meter: &MemoryMeter,
+                      oom: Option<OomError>, opts: &ServeOptions)
+                      -> ServeOutcome {
+        let metrics: Vec<RequestMetrics> = states
+            .iter()
+            .map(|s| RequestMetrics {
+                req_id: s.idx,
+                ttft: s.ttft,
+                e2e: s.e2e,
+                tokens_out: s.tokens.len(),
+                prompt_len: s.valid,
+                step_latencies: s.step_latencies.clone(),
+            })
+            .collect();
+        let makespan = streams.sync_all();
+        let mut accuracy = PredictorAccuracy::default();
+        for s in states {
+            accuracy.merge(&s.acc);
+        }
+        let episodes = states
+            .iter()
+            .map(|s| Episode {
+                dataset: s.dataset.clone(),
+                steps: s.all_paths.clone(),
+            })
+            .collect();
+        ServeOutcome {
+            summary: summarize(&metrics, makespan),
+            metrics,
+            peak_bytes: meter.peak_bytes(),
+            hit_rate: cache.hit_rate(),
+            accuracy,
+            oom,
+            stream_trace: if opts.record_streams {
+                Some(streams.trace().to_vec())
+            } else {
+                None
+            },
+            episodes,
+            tokens: states.iter().map(|s| s.tokens.clone()).collect(),
+        }
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}

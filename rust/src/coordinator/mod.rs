@@ -1,0 +1,16 @@
+//! The serving coordinator — the paper's system contribution.
+//!
+//! * [`engine`] — functional execution + virtual-time orchestration.
+//! * [`policy`] — the scheduling-policy abstraction (timing side).
+//! * [`duoserve`] — the DuoServe-MoE dual-phase policy itself.
+//! * [`scheduler`] — request admission / batch composition.
+
+pub mod duoserve;
+pub mod engine;
+pub mod policy;
+pub mod scheduler;
+
+pub use duoserve::DuoServePolicy;
+pub use engine::{Ablation, Engine, ServeOptions, ServeOutcome};
+pub use policy::{Policy, SimCtx};
+pub use scheduler::{BatchComposer, RequestQueue};

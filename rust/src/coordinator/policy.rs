@@ -1,0 +1,102 @@
+//! The expert-scheduling policy abstraction.
+//!
+//! Function and time are split (DESIGN.md §1): the engine computes
+//! tokens functionally (identical across policies — every policy must
+//! run the same activated experts), while the policy decides the
+//! *virtual-time* schedule: when transfers are issued, on which stream,
+//! what stays in the GPU expert cache, and therefore what the request's
+//! latency and the device's peak memory are.
+
+use crate::config::PolicyKind;
+use crate::memory::{DeviceExpertCache, ExpertKey, MemoryMeter, OomError};
+use crate::simx::{CostModel, Streams};
+
+/// Everything a policy needs to schedule one phase of one layer.
+pub struct SimCtx<'a> {
+    pub streams: &'a mut Streams,
+    pub cache: &'a mut DeviceExpertCache,
+    pub meter: &'a mut MemoryMeter,
+    pub cost: &'a CostModel,
+    /// Paper-scale bytes of one routed expert (the transfer unit).
+    pub expert_bytes: u64,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+}
+
+impl SimCtx<'_> {
+    /// Reconcile the memory meter with the cache after mutations
+    /// (+`in_flight` transfers that occupy staging slots).
+    pub fn sync_expert_gauge(&mut self, in_flight: usize) -> Result<(), OomError> {
+        let resident = self.cache.resident_count() + in_flight;
+        self.meter.set_experts(resident as u64 * self.expert_bytes)
+    }
+
+    /// Convenience: simulated fetch of one expert on the comm stream.
+    /// Returns the transfer completion time and caches the expert.
+    pub fn fetch(&mut self, key: ExpertKey, ready_at: f64,
+                 kind: crate::config::LinkKind) -> f64 {
+        let dur = self.cost.expert_transfer(kind);
+        let done = self.streams.run(crate::simx::StreamId::Comm, ready_at,
+                                    dur, "fetch");
+        self.cache.insert(key, done);
+        done
+    }
+}
+
+/// Expert groups of one layer: `(expert index, token count)` for every
+/// activated routed expert, ascending by expert index.
+pub type Groups = [(usize, usize)];
+
+/// One expert-scheduling policy (DuoServe or a baseline).
+pub trait Policy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    /// Called before each request's prefill begins.
+    fn begin_request(&mut self, cx: &mut SimCtx<'_>) -> Result<(), OomError>;
+
+    /// Schedule the MoE section of one *prefill* layer.
+    ///
+    /// * `t_layer_start` — when this layer began (attention may still be
+    ///   running; transfers may overlap it).
+    /// * `t_gate` — when the gate's routing decision is known (expert
+    ///   compute cannot start earlier).
+    ///
+    /// Returns the time the layer's routed-expert computation finishes.
+    fn prefill_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                   groups: &Groups, t_layer_start: f64, t_gate: f64)
+                   -> Result<f64, OomError>;
+
+    /// Schedule the MoE section of one *decode* layer.
+    ///
+    /// `predict(target_layer)` asks the engine for the predicted expert
+    /// set of a future layer (DuoServe routes this to the ExpertMLP via
+    /// the State Constructor; the engine also records Table III
+    /// accuracy). Policies that do not predict never call it.
+    fn decode_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
+                  groups: &Groups, t_layer_start: f64, t_gate: f64,
+                  predict: &mut dyn FnMut(usize) -> Vec<usize>)
+                  -> Result<f64, OomError>;
+
+    /// Called after each decode step completes.
+    fn end_decode_step(&mut self, _cx: &mut SimCtx<'_>) {}
+}
+
+/// Serial "fetch each expert, then compute it" helper used by ODF (and
+/// by correction paths): everything on the critical path.
+pub fn serial_fetch_compute(cx: &mut SimCtx<'_>, layer: usize,
+                            groups: &Groups, t_gate: f64,
+                            kind: crate::config::LinkKind) -> f64 {
+    use crate::simx::StreamId;
+    let mut t = t_gate;
+    for &(e, tokens) in groups {
+        let key = ExpertKey::routed(layer, e);
+        let ready = match cx.cache.touch(key, t) {
+            Some(r) => r.max(t),
+            None => cx.fetch(key, t, kind),
+        };
+        t = cx.streams.run(StreamId::Compute, ready,
+                           cx.cost.expert_compute(tokens), "expert");
+    }
+    t
+}

@@ -1,0 +1,122 @@
+//! Request admission and batch composition.
+//!
+//! The paper's primary setting is single-request serving (batch = 1,
+//! preserving sparse expert activation — §II-B Challenge #2); the
+//! batching-throughput extension (Fig. 7) composes fixed-size batches.
+//! `RequestQueue` is the FIFO admission queue the server loop drains;
+//! `BatchComposer` groups admitted requests into lockstep decode
+//! batches.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// FIFO admission queue with a bounded depth (backpressure).
+#[derive(Debug)]
+pub struct RequestQueue {
+    queue: VecDeque<Request>,
+    capacity: usize,
+    rejected: u64,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        RequestQueue { queue: VecDeque::new(), capacity, rejected: 0 }
+    }
+
+    /// Admit a request; returns false (and counts a rejection) when the
+    /// queue is full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+/// Groups requests into fixed-size serving batches (Fig. 7's sweep).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchComposer {
+    pub batch_size: usize,
+}
+
+impl BatchComposer {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size >= 1);
+        BatchComposer { batch_size }
+    }
+
+    /// Drain the queue into consecutive batches of `batch_size`
+    /// (the final batch may be smaller).
+    pub fn compose(&self, queue: &mut RequestQueue) -> Vec<Vec<Request>> {
+        let mut batches = Vec::new();
+        let mut cur = Vec::with_capacity(self.batch_size);
+        while let Some(r) = queue.pop() {
+            cur.push(r);
+            if cur.len() == self.batch_size {
+                batches.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            batches.push(cur);
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize) -> Request {
+        Request {
+            req_id: id,
+            dataset: "squad".into(),
+            cluster: 0,
+            prompt: vec![1, 2, 3],
+            n_decode: 4,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let mut q = RequestQueue::new(2);
+        assert!(q.push(req(0)));
+        assert!(q.push(req(1)));
+        assert!(!q.push(req(2)));
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn composer_batches_fifo() {
+        let mut q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        let batches = BatchComposer::new(2).compose(&mut q);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0][0].req_id, 0);
+        assert_eq!(batches[2].len(), 1);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal serving loop: JSON-line requests on stdin, JSON-line
+//! responses on stdout — the "users send requests to DuoServe-MoE"
+//! path of Fig. 3. A reader thread admits requests into a bounded
+//! queue (backpressure); the single-GPU worker drains it one request
+//! at a time (the paper's primary setting). Python never appears: the
+//! engine executes AOT artifacts only.
+//!
+//! Request:  {"prompt": [1,2,3], "n_decode": 8, "dataset": "squad"}
+//! Response: {"req_id": 0, "tokens": [...], "ttft": 0.12, "e2e": 0.51}
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::path::Path;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::util::Json;
+use duoserve::workload::Request;
+
+fn parse_request(line: &str, id: usize) -> Result<Request> {
+    let j = Json::parse(line)?;
+    Ok(Request {
+        req_id: id,
+        dataset: j
+            .opt("dataset")
+            .and_then(|d| d.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| "adhoc".into()),
+        cluster: 0,
+        prompt: j.get("prompt")?.i32_vec()?,
+        n_decode: j.get("n_decode")?.as_usize()?,
+        arrival: 0.0,
+    })
+}
+
+pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
+                   device: DeviceProfile) -> Result<()> {
+    let engine = Engine::load(artifacts, model)?;
+    eprintln!("duoserve: serving {model} with {} on {} \
+               (one JSON request per line; EOF to stop)",
+              policy.label(), device.name);
+
+    // Bounded admission queue: the reader blocks when the worker falls
+    // behind (backpressure instead of unbounded growth).
+    let (tx, rx) = mpsc::sync_channel::<(usize, Request)>(64);
+
+    let reader = std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        let mut id = 0usize;
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_request(&line, id) {
+                Ok(req) => {
+                    if tx.send((id, req)).is_err() {
+                        break;
+                    }
+                    id += 1;
+                }
+                Err(e) => eprintln!("bad request: {e}"),
+            }
+        }
+    });
+
+    let opts = ServeOptions::new(policy, device);
+    while let Ok((id, req)) = rx.recv() {
+        let out = engine.serve(std::slice::from_ref(&req), &opts)?;
+        let mut obj = BTreeMap::new();
+        obj.insert("req_id".into(), Json::from(id));
+        if let Some(oom) = &out.oom {
+            obj.insert("error".into(), Json::from(oom.to_string().as_str()));
+        } else {
+            let m = &out.metrics[0];
+            obj.insert(
+                "tokens".into(),
+                Json::Arr(out.tokens[0].iter().map(|&t| Json::from(t)).collect()),
+            );
+            obj.insert("ttft".into(), Json::from(m.ttft));
+            obj.insert("e2e".into(), Json::from(m.e2e));
+            obj.insert("hit_rate".into(), Json::from(out.hit_rate));
+        }
+        println!("{}", Json::Obj(obj));
+    }
+    let _ = reader.join();
+    Ok(())
+}

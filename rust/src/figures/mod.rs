@@ -1,0 +1,320 @@
+//! Paper table/figure regeneration — one function per table and figure
+//! of the evaluation section (DESIGN.md §4 maps each to its modules).
+//! Prints the same rows/series the paper reports; EXPERIMENTS.md records
+//! paper-vs-measured for each.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, PolicyKind, DATASETS, PAPER_MODELS};
+use crate::coordinator::{Engine, ServeOptions};
+use crate::metrics::{fmt_gb, fmt_secs, summarize, PredictorAccuracy,
+                        RequestMetrics, Table};
+use crate::predictor::{HeuristicPredictor, StateConstructor, Tracer};
+use crate::runtime::Runtime;
+use crate::workload::generate_requests;
+
+pub fn run(artifacts: &Path, figure: &str, requests: usize, seed: u64)
+           -> Result<()> {
+    match figure {
+        "fig2" => fig2(artifacts, requests, seed),
+        "fig5" => fig5(artifacts, requests, seed),
+        "fig6" => fig6(artifacts, requests.max(12), seed),
+        "fig7" => fig7(artifacts, seed),
+        "table2" => table2(artifacts, requests.min(4), seed),
+        "table3" => table3(artifacts),
+        "ablation" => ablation(artifacts, requests, seed),
+        "all" => {
+            for f in ["fig2", "fig5", "fig6", "fig7", "table2", "table3",
+                      "ablation"] {
+                println!("\n================ {f} ================");
+                run(artifacts, f, requests, seed)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure {other:?} (fig2|fig5|fig6|\
+                                fig7|table2|table3|ablation|all)"),
+    }
+}
+
+/// Ablation of DuoServe's two mechanisms (DESIGN.md §4): full system vs
+/// heuristic predictor vs single-stream, on two sparsity regimes.
+fn ablation(artifacts: &Path, requests: usize, seed: u64) -> Result<()> {
+    use crate::coordinator::engine::Ablation;
+    let rt = Runtime::cpu()?;
+    let device = DeviceProfile::a5000();
+    for model in ["mixtral8x7b-sim", "qwen3-30b-a3b-sim"] {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man, rt.clone())?;
+        let reqs = generate_requests(&engine.man, "squad", requests, seed);
+        let mut t = Table::new(&["variant", "mean TTFT", "mean E2E",
+                                 "hit-rate"]);
+        let variants: [(&str, Option<Ablation>); 3] = [
+            ("DuoServe (full)", None),
+            ("- learned predictor (heuristic)", Some(Ablation::NoPredictor)),
+            ("- dual-stream overlap", Some(Ablation::NoOverlap)),
+        ];
+        for (label, ab) in variants {
+            let mut opts = ServeOptions::new(PolicyKind::DuoServe,
+                                             device.clone());
+            opts.ablation = ab;
+            let mut ms = Vec::new();
+            let mut hit = 0.0;
+            for r in &reqs {
+                let out = engine.serve(std::slice::from_ref(r), &opts)?;
+                anyhow::ensure!(out.oom.is_none());
+                hit = out.hit_rate;
+                ms.extend(out.metrics);
+            }
+            let s = summarize(&ms, 0.0);
+            t.row(vec![label.into(), fmt_secs(s.mean_ttft),
+                       fmt_secs(s.mean_e2e),
+                       format!("{:.1}%", hit * 100.0)]);
+        }
+        println!("\n[Ablation] {model} / A5000 / squad:");
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// Serve each request individually; returns per-request metrics or None
+/// on OOM, plus (peak memory, hit rate).
+fn run_cell(engine: &Engine, policy: PolicyKind, device: &DeviceProfile,
+            dataset: &str, n: usize, seed: u64)
+            -> Result<Option<(Vec<RequestMetrics>, u64, f64)>> {
+    let reqs = generate_requests(&engine.man, dataset, n, seed);
+    let opts = ServeOptions::new(policy, device.clone());
+    let mut ms = Vec::new();
+    let mut peak = 0u64;
+    let mut hit = 0.0;
+    for r in &reqs {
+        let out = engine.serve(std::slice::from_ref(r), &opts)?;
+        if out.oom.is_some() {
+            return Ok(None);
+        }
+        peak = peak.max(out.peak_bytes);
+        hit = out.hit_rate;
+        ms.extend(out.metrics);
+    }
+    Ok(Some((ms, peak, hit)))
+}
+
+/// Fig. 2: expert popularity per layer + layer0->1 affinity heatmap.
+fn fig2(artifacts: &Path, requests: usize, seed: u64) -> Result<()> {
+    let engine = Engine::load(artifacts, "mixtral8x7b-sim")?;
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a5000());
+    let mut tracer = Tracer::new();
+    for r in &generate_requests(&engine.man, "squad", requests, seed) {
+        let out = engine.serve(std::slice::from_ref(r), &opts)?;
+        for ep in out.episodes {
+            tracer.begin_episode(&ep.dataset);
+            for step in ep.steps {
+                tracer.record_step(step);
+            }
+            tracer.end_episode();
+        }
+    }
+    let (l, e) = (engine.man.sim.n_layers, engine.man.sim.n_experts);
+    println!("Fig 2a — expert popularity per layer (rows=layers):");
+    for (li, row) in tracer.popularity(l, e).iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|p| format!("{p:.2}")).collect();
+        println!("  L{li:<2} {}", cells.join(" "));
+    }
+    println!("\nFig 2b — affinity layer0 -> layer1 (rows = layer-0 expert):");
+    for (i, row) in tracer.affinity(l, e)[0].iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|p| format!("{p:.2}")).collect();
+        println!("  e{i:<2} {}", cells.join(" "));
+    }
+    println!("\n(uniform would be {:.2} everywhere)", 1.0 / e as f64);
+    Ok(())
+}
+
+/// Fig. 5: average TTFT + E2E across models x datasets x devices x
+/// policies.
+fn fig5(artifacts: &Path, requests: usize, seed: u64) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    for model in PAPER_MODELS {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man, rt.clone())?;
+        for device in [DeviceProfile::a5000(), DeviceProfile::a6000()] {
+            for dataset in DATASETS {
+                let mut t = Table::new(&["policy", "mean TTFT", "mean E2E"]);
+                let mut duo: Option<(f64, f64)> = None;
+                let mut rows: Vec<(PolicyKind, Option<(f64, f64)>)> = Vec::new();
+                for policy in PolicyKind::ALL {
+                    let cell = run_cell(&engine, policy, &device, dataset,
+                                        requests, seed)?;
+                    let val = cell.map(|(ms, _, _)| {
+                        let s = summarize(&ms, 0.0);
+                        (s.mean_ttft, s.mean_e2e)
+                    });
+                    if policy == PolicyKind::DuoServe {
+                        duo = val;
+                    }
+                    rows.push((policy, val));
+                }
+                for (policy, val) in rows {
+                    match val {
+                        Some((ttft, e2e)) => {
+                            let speed = duo
+                                .map(|(dt, de)| format!(
+                                    "  ({:.2}x TTFT, {:.2}x E2E vs DuoServe)",
+                                    ttft / dt, e2e / de))
+                                .unwrap_or_default();
+                            t.row(vec![
+                                format!("{}{speed}", policy.label()),
+                                fmt_secs(ttft),
+                                fmt_secs(e2e),
+                            ]);
+                        }
+                        None => t.row(vec![policy.label().into(),
+                                           "OOM".into(), "OOM".into()]),
+                    }
+                }
+                println!("\n[Fig5] {model} / {} / {dataset}:", device.name);
+                println!("{}", t.render());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 6: P50/P95 E2E tail latency, Mixtral-8x7B and Qwen3-30B on
+/// A5000 + SQuAD.
+fn fig6(artifacts: &Path, requests: usize, seed: u64) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let device = DeviceProfile::a5000();
+    for model in ["mixtral8x7b-sim", "qwen3-30b-a3b-sim"] {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man, rt.clone())?;
+        let mut t = Table::new(&["policy", "P50 E2E", "P95 E2E"]);
+        for policy in PolicyKind::ALL {
+            match run_cell(&engine, policy, &device, "squad", requests, seed)? {
+                Some((ms, _, _)) => {
+                    let s = summarize(&ms, 0.0);
+                    t.row(vec![policy.label().into(), fmt_secs(s.p50_e2e),
+                               fmt_secs(s.p95_e2e)]);
+                }
+                None => t.row(vec![policy.label().into(), "OOM".into(),
+                              "OOM".into()]),
+            }
+        }
+        println!("\n[Fig6] {model} / A5000 / squad ({requests} requests):");
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// Fig. 7: total tokens/s vs batch size (1..12) on A5000 + SQuAD.
+fn fig7(artifacts: &Path, seed: u64) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let device = DeviceProfile::a5000();
+    for model in PAPER_MODELS {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man, rt.clone())?;
+        let mut t = Table::new(&["batch", "ODF", "LFP", "MIF", "DuoServe"]);
+        for batch in [1usize, 2, 4, 8, 12] {
+            let reqs = generate_requests(&engine.man, "squad", batch, seed);
+            let mut cells = vec![batch.to_string()];
+            for policy in PolicyKind::ALL {
+                let opts = ServeOptions::new(policy, device.clone());
+                let out = engine.serve(&reqs, &opts)?;
+                cells.push(if out.oom.is_some() {
+                    "OOM".into()
+                } else {
+                    format!("{:.1}", out.summary.tokens_per_sec)
+                });
+            }
+            t.row(cells);
+        }
+        println!("\n[Fig7] {model} / A5000 / squad — total tokens/s:");
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// Table II: peak GPU memory across models x policies (+ GPU-only).
+fn table2(artifacts: &Path, requests: usize, seed: u64) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let mut t = Table::new(&["model", "LFP", "ODF", "MIF", "DuoServe",
+                             "GPU only"]);
+    for model in PAPER_MODELS {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man, rt.clone())?;
+        let device = DeviceProfile::a5000();
+        let mut cells = vec![model.to_string()];
+        for policy in [PolicyKind::Lfp, PolicyKind::Odf, PolicyKind::Mif,
+                       PolicyKind::DuoServe] {
+            cells.push(
+                match run_cell(&engine, policy, &device, "squad", requests,
+                               seed)? {
+                    Some((_, peak, _)) => fmt_gb(peak),
+                    None => "OOM".into(),
+                },
+            );
+        }
+        // "GPU only": every weight resident.
+        let total = (engine.man.paper.total_params_b * 1e9
+            * engine.man.paper.bytes_per_param) as u64;
+        cells.push(fmt_gb(total));
+        t.row(cells);
+    }
+    println!("[Table II] peak GPU memory (A5000 budget = 24GB):");
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Table III: predictor accuracy (Top-k exact / at-least-half),
+/// DuoServe's learned MLP vs MIF's trace heuristic, on the held-out
+/// eval traces written by the offline preprocess.
+fn table3(artifacts: &Path) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let mut t = Table::new(&["model", "dataset", "Duo top-k", "MIF top-k",
+                             "Duo >=half", "MIF >=half"]);
+    for model in PAPER_MODELS {
+        let man = crate::config::Manifest::load(artifacts, model)?;
+        let engine = Engine::with_runtime(man.clone(), rt.clone())?;
+        let eval = crate::util::Json::parse(&std::fs::read_to_string(
+            man.resolve(&man.predictor.eval_traces))?)?;
+        let heuristic = HeuristicPredictor::popularity_affinity(man.sim.top_k);
+        for dataset in DATASETS {
+            let mut duo = PredictorAccuracy::default();
+            let mut mif = PredictorAccuracy::default();
+            for ep in eval.as_arr()? {
+                if ep.get("dataset")?.as_str()? != dataset {
+                    continue;
+                }
+                for step in ep.get("steps")?.as_arr()? {
+                    let path: Vec<Vec<usize>> = step
+                        .as_arr()?
+                        .iter()
+                        .map(|l| l.usize_vec())
+                        .collect::<anyhow::Result<_>>()?;
+                    let mut sc = StateConstructor::new(&man);
+                    for (l, sel) in path.iter().enumerate() {
+                        if l >= 1 {
+                            let pred = engine.predict_layer(&sc, l)?;
+                            duo.observe(&pred, sel);
+                            let hpred = heuristic.predict(&engine.mats, l,
+                                                          &path[l - 1]);
+                            mif.observe(&hpred, sel);
+                        }
+                        sc.record(l, sel);
+                    }
+                }
+            }
+            t.row(vec![
+                model.to_string(),
+                dataset.to_string(),
+                format!("{:.2}%", duo.exact_rate() * 100.0),
+                format!("{:.2}%", mif.exact_rate() * 100.0),
+                format!("{:.2}%", duo.half_rate() * 100.0),
+                format!("{:.2}%", mif.half_rate() * 100.0),
+            ]);
+        }
+    }
+    println!("[Table III] predictor accuracy on held-out traces:");
+    println!("{}", t.render());
+    Ok(())
+}

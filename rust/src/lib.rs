@@ -1,0 +1,30 @@
+//! DuoServe-MoE — reproduction of "DuoServe-MoE: Dual-Phase Expert
+//! Prefetch and Caching for LLM Inference QoS Assurance" (CS.DC 2025).
+//!
+//! A QoS-oriented single-GPU MoE serving system with phase-specialised
+//! expert scheduling: a two-stream prefetch pipeline for prefill and a
+//! learned layer-level expert predictor for decode, over a CPU-offloaded
+//! expert cache. Three-layer architecture:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request scheduling,
+//!   the Expert Dispatcher, the GPU expert cache, the State
+//!   Constructor + predictor, and the ODF/LFP/MIF baselines.
+//! * **L2/L1 (python, build-time only)** — the JAX MoE model and the
+//!   Pallas expert kernels, AOT-lowered to HLO text under `artifacts/`.
+//!
+//! Function and time are split: tokens are produced by real execution
+//! of the lowered components on CPU PJRT; latency/memory numbers come
+//! from a calibrated virtual-time cost model over the paper's real
+//! model dimensions (see DESIGN.md §1).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod memory;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod simx;
+pub mod figures;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,210 @@
+//! DuoServe-MoE CLI — the serving leader binary.
+//!
+//!   duoserve run           serve a synthetic workload under one policy
+//!   duoserve compare       run all four policies, print the QoS table
+//!   duoserve trace         collect expert-activation traces (Fig. 2)
+//!   duoserve bench-figure  regenerate a paper table/figure
+//!                          (fig2|fig5|fig6|fig7|table2|table3|all)
+//!   duoserve serve         request-loop server (stdin JSON lines)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::metrics::{fmt_gb, fmt_secs, Table};
+use duoserve::util::args::Args;
+use duoserve::workload::generate_requests;
+
+
+mod duoserve_server;
+
+const USAGE: &str = "\
+duoserve — DuoServe-MoE serving system (paper reproduction)
+
+USAGE: duoserve [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  run           --model M --policy P --device D --dataset DS
+                --requests N --batch B --seed S
+  compare       --model M --device D --dataset DS --requests N --seed S
+  trace         --model M --dataset DS --requests N --seed S
+  bench-figure  <fig2|fig5|fig6|fig7|table2|table3|all>
+                [--requests N] [--seed S]
+  serve         --model M --policy P --device D
+
+DEFAULTS: model=mixtral8x7b-sim policy=duoserve device=a5000
+          dataset=squad requests=8 batch=1 seed=42 artifacts=artifacts
+";
+
+fn device(name: &str) -> Result<DeviceProfile> {
+    DeviceProfile::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown device {name:?} (a5000|a6000)"))
+}
+
+fn policy(name: &str) -> Result<PolicyKind> {
+    name.parse().map_err(|e: String| anyhow::anyhow!(e))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["trace-streams"])?;
+    if args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    let model = args.str("model", "mixtral8x7b-sim");
+    let dataset = args.str("dataset", "squad");
+    let requests = args.usize("requests", 8)?;
+    let seed = args.u64("seed", 42)?;
+
+    match args.positional[0].as_str() {
+        "run" => {
+            let pol = policy(&args.str("policy", "duoserve"))?;
+            let dev = device(&args.str("device", "a5000"))?;
+            let batch = args.usize("batch", 1)?;
+            let engine = Engine::load(&artifacts, &model)?;
+            let reqs = generate_requests(&engine.man, &dataset, requests, seed);
+            let mut opts = ServeOptions::new(pol, dev);
+            opts.record_streams = args.flag("trace-streams");
+            let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
+            let mut peak = 0u64;
+            let mut hit = 0.0;
+            let mut makespan = 0.0;
+            for chunk in reqs.chunks(batch) {
+                let out = engine.serve(chunk, &opts)?;
+                if let Some(oom) = out.oom {
+                    println!("{}: {oom}", pol.label());
+                    return Ok(());
+                }
+                for m in &out.metrics {
+                    t.row(vec![
+                        m.req_id.to_string(),
+                        m.prompt_len.to_string(),
+                        m.tokens_out.to_string(),
+                        fmt_secs(m.ttft),
+                        fmt_secs(m.e2e),
+                    ]);
+                }
+                peak = peak.max(out.peak_bytes);
+                hit = out.hit_rate;
+                makespan += out.summary.makespan;
+                if let Some(trace) = &out.stream_trace {
+                    let mut by_label: std::collections::BTreeMap<&str,
+                        (usize, f64)> = Default::default();
+                    for op in trace {
+                        let e = by_label.entry(op.label.as_str())
+                            .or_insert((0, 0.0));
+                        e.0 += 1;
+                        e.1 += op.end - op.start;
+                    }
+                    println!("stream ops:");
+                    for (label, (n, busy)) in by_label {
+                        println!("  {label:<18} n={n:<6} busy={}",
+                                 fmt_secs(busy));
+                    }
+                }
+            }
+            println!("{}", t.render());
+            println!(
+                "policy={} hit-rate={:.1}% peak-mem={} makespan={}",
+                pol.label(),
+                hit * 100.0,
+                fmt_gb(peak),
+                fmt_secs(makespan),
+            );
+            Ok(())
+        }
+        "compare" => {
+            let dev = device(&args.str("device", "a5000"))?;
+            let engine = Engine::load(&artifacts, &model)?;
+            let reqs = generate_requests(&engine.man, &dataset, requests, seed);
+            let mut t = Table::new(&[
+                "policy", "mean TTFT", "mean E2E", "P95 E2E", "hit-rate",
+                "peak mem",
+            ]);
+            for pol in PolicyKind::ALL {
+                let opts = ServeOptions::new(pol, dev.clone());
+                let mut ms = Vec::new();
+                let mut peak = 0u64;
+                let mut hit = 0.0;
+                let mut oom = false;
+                for r in &reqs {
+                    let out = engine.serve(std::slice::from_ref(r), &opts)?;
+                    if out.oom.is_some() {
+                        oom = true;
+                        break;
+                    }
+                    peak = peak.max(out.peak_bytes);
+                    hit = out.hit_rate;
+                    ms.extend(out.metrics);
+                }
+                if oom {
+                    t.row(vec![pol.label().into(), "OOM".into(), "OOM".into(),
+                               "OOM".into(), "-".into(), "-".into()]);
+                    continue;
+                }
+                let s = duoserve::metrics::summarize(&ms, 0.0);
+                t.row(vec![
+                    pol.label().into(),
+                    fmt_secs(s.mean_ttft),
+                    fmt_secs(s.mean_e2e),
+                    fmt_secs(s.p95_e2e),
+                    format!("{:.1}%", hit * 100.0),
+                    fmt_gb(peak),
+                ]);
+            }
+            println!("{model} on {dataset} ({} requests):", requests);
+            println!("{}", t.render());
+            Ok(())
+        }
+        "trace" => {
+            let engine = Engine::load(&artifacts, &model)?;
+            let reqs = generate_requests(&engine.man, &dataset, requests, seed);
+            let opts = ServeOptions::new(PolicyKind::DuoServe,
+                                         DeviceProfile::a5000());
+            let mut tracer = duoserve::predictor::Tracer::new();
+            for r in &reqs {
+                let out = engine.serve(std::slice::from_ref(r), &opts)?;
+                for ep in out.episodes {
+                    tracer.begin_episode(&ep.dataset);
+                    for step in ep.steps {
+                        tracer.record_step(step);
+                    }
+                    tracer.end_episode();
+                }
+            }
+            let (l, e) = (engine.man.sim.n_layers, engine.man.sim.n_experts);
+            println!("expert popularity per layer (Fig. 2a):");
+            for (li, row) in tracer.popularity(l, e).iter().enumerate() {
+                let cells: Vec<String> =
+                    row.iter().map(|p| format!("{p:.2}")).collect();
+                println!("  layer {li:>2}: {}", cells.join(" "));
+            }
+            println!("\nlayer0 -> layer1 affinity (Fig. 2b):");
+            for (i, row) in tracer.affinity(l, e)[0].iter().enumerate() {
+                let cells: Vec<String> =
+                    row.iter().map(|p| format!("{p:.2}")).collect();
+                println!("  e{i:>2}: {}", cells.join(" "));
+            }
+            Ok(())
+        }
+        "bench-figure" => {
+            if args.positional.len() < 2 {
+                bail!("bench-figure needs a figure id \
+                       (fig2|fig5|fig6|fig7|table2|table3|all)");
+            }
+            duoserve::figures::run(&artifacts, &args.positional[1],
+                                  args.usize("requests", 6)?, seed)
+        }
+        "serve" => {
+            let pol = policy(&args.str("policy", "duoserve"))?;
+            let dev = device(&args.str("device", "a5000"))?;
+            duoserve_server::serve_stdin(&artifacts, &model, pol, dev)
+        }
+        other => {
+            bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+}

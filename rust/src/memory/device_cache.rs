@@ -1,0 +1,211 @@
+//! The GPU expert cache: bounded per-layer slots with virtual-time tags
+//! (`ready_at` = when the simulated transfer completes) and LRU
+//! eviction. Each scheduling policy configures capacity and
+//! layer-window differently:
+//!
+//! * DuoServe: `top_k` slots per layer, window of 2 layers (current +
+//!   prefetched-next — the paper's double-buffer, Fig. 4b).
+//! * ODF: `top_k` slots, window 1 (evicted after each layer).
+//! * LFP: `n_experts` slots, window 2 (current + next being prefetched).
+//! * MIF: large capacity, unlimited window (its memory blowup).
+//!
+//! Entries are *metadata only*: function and time are split (DESIGN.md
+//! §1) — the functional path reads weight tensors from the host pool
+//! (identical bytes), while this cache decides whether a simulated
+//! transfer happens and what Table II's expert-residency component is.
+
+use std::collections::HashMap;
+
+use crate::memory::ExpertKey;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CachedExpert {
+    /// Virtual time at which the transfer that produced this entry
+    /// completes; compute that uses it must start at/after this.
+    pub ready_at: f64,
+    pub last_used: f64,
+}
+
+#[derive(Debug)]
+pub struct DeviceExpertCache {
+    per_layer_capacity: usize,
+    /// Max number of distinct layers resident at once (0 = unlimited).
+    layer_window: usize,
+    slots: HashMap<ExpertKey, CachedExpert>,
+    hits: u64,
+    misses: u64,
+}
+
+impl DeviceExpertCache {
+    pub fn new(per_layer_capacity: usize, layer_window: usize) -> Self {
+        assert!(per_layer_capacity > 0, "cache capacity must be positive");
+        DeviceExpertCache {
+            per_layer_capacity,
+            layer_window,
+            slots: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.slots.contains_key(&key)
+    }
+
+    /// Look up an expert for use at virtual time `now`; counts hit/miss
+    /// statistics and refreshes LRU on hit. Returns `ready_at`.
+    pub fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
+        match self.slots.get_mut(&key) {
+            Some(slot) => {
+                self.hits += 1;
+                slot.last_used = now;
+                Some(slot.ready_at)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn get(&self, key: ExpertKey) -> Option<&CachedExpert> {
+        self.slots.get(&key)
+    }
+
+    /// Insert a fetched expert, evicting per policy:
+    /// 1. if the key's layer is full, evict that layer's LRU entry;
+    /// 2. if the layer window is exceeded, evict least-recently-used
+    ///    layers until it holds.
+    pub fn insert(&mut self, key: ExpertKey, ready_at: f64) {
+        let layer_count =
+            self.slots.keys().filter(|k| k.layer == key.layer).count();
+        if !self.slots.contains_key(&key) && layer_count >= self.per_layer_capacity {
+            if let Some(&victim) = self
+                .slots
+                .iter()
+                .filter(|(k, _)| k.layer == key.layer)
+                .min_by(|a, b| a.1.last_used.total_cmp(&b.1.last_used))
+                .map(|(k, _)| k)
+            {
+                self.slots.remove(&victim);
+            }
+        }
+        self.slots
+            .insert(key, CachedExpert { ready_at, last_used: ready_at });
+
+        if self.layer_window > 0 {
+            loop {
+                let mut layers: Vec<usize> =
+                    self.slots.keys().map(|k| k.layer).collect();
+                layers.sort_unstable();
+                layers.dedup();
+                if layers.len() <= self.layer_window {
+                    break;
+                }
+                let victim_layer = layers
+                    .into_iter()
+                    .filter(|&l| l != key.layer)
+                    .min_by(|&a, &b| {
+                        self.layer_last_used(a)
+                            .total_cmp(&self.layer_last_used(b))
+                    })
+                    .expect("window > 0 implies a victim layer exists");
+                self.evict_layer(victim_layer);
+            }
+        }
+    }
+
+    fn layer_last_used(&self, layer: usize) -> f64 {
+        self.slots
+            .iter()
+            .filter(|(k, _)| k.layer == layer)
+            .map(|(_, s)| s.last_used)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn evict_layer(&mut self, layer: usize) {
+        self.slots.retain(|k, _| k.layer != layer);
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn resident_in_layer(&self, layer: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .slots
+            .keys()
+            .filter(|k| k.layer == layer && !k.shared)
+            .map(|k| k.expert)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn per_layer_capacity(&self) -> usize {
+        self.per_layer_capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_enforced_per_layer() {
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 1), 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0);
+        c.insert(ExpertKey::routed(0, 3), 3.0);
+        assert_eq!(c.resident_in_layer(0).len(), 2);
+        // LRU: expert 1 (oldest) evicted
+        assert!(!c.contains(ExpertKey::routed(0, 1)));
+        assert!(c.contains(ExpertKey::routed(0, 3)));
+    }
+
+    #[test]
+    fn layer_window_evicts_old_layers() {
+        let mut c = DeviceExpertCache::new(2, 2);
+        c.insert(ExpertKey::routed(0, 0), 1.0);
+        c.insert(ExpertKey::routed(1, 0), 2.0);
+        c.insert(ExpertKey::routed(2, 0), 3.0);
+        assert!(!c.contains(ExpertKey::routed(0, 0)));
+        assert!(c.contains(ExpertKey::routed(1, 0)));
+        assert!(c.contains(ExpertKey::routed(2, 0)));
+    }
+
+    #[test]
+    fn touch_tracks_hits_and_misses() {
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 5), 1.5);
+        assert_eq!(c.touch(ExpertKey::routed(0, 5), 2.0), Some(1.5));
+        assert_eq!(c.touch(ExpertKey::routed(0, 6), 2.0), None);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn reinsert_existing_key_does_not_evict() {
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 1), 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0);
+        c.insert(ExpertKey::routed(0, 1), 3.0); // refresh, not new
+        assert_eq!(c.resident_in_layer(0), vec![1, 2]);
+    }
+}

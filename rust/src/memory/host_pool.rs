@@ -1,0 +1,179 @@
+//! Host-side weight storage ("CPU expert cache" in the paper): every
+//! expert blob plus the non-MoE weights, loaded once from the artifact
+//! tree's `.bin` files (raw little-endian f32, shapes from the
+//! manifest).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Manifest;
+use crate::runtime::{ArgRef, Runtime, Tensor};
+
+/// A static weight: host tensor (for coordinator-side math) plus its
+/// pre-staged device buffer, created once at load so the hot path
+/// never re-copies immutable weights per call (EXPERIMENTS.md §Perf).
+pub struct Weight {
+    pub t: Tensor,
+    buf: xla::PjRtBuffer,
+}
+
+impl Weight {
+    pub fn new(t: Tensor, rt: &Runtime) -> Result<Self> {
+        let buf = t.to_buffer(rt.client())?;
+        Ok(Weight { t, buf })
+    }
+
+    pub fn arg(&self) -> ArgRef<'_> {
+        ArgRef::B(&self.buf)
+    }
+}
+
+/// Identifies one routed or shared expert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertKey {
+    pub layer: usize,
+    pub expert: usize,
+    pub shared: bool,
+}
+
+impl ExpertKey {
+    pub fn routed(layer: usize, expert: usize) -> Self {
+        ExpertKey { layer, expert, shared: false }
+    }
+    pub fn shared(layer: usize, expert: usize) -> Self {
+        ExpertKey { layer, expert, shared: true }
+    }
+}
+
+/// Non-MoE weights (resident on GPU from engine start).
+pub struct NonMoeWeights {
+    pub emb: Weight,
+    pub pos_emb: Weight,
+    pub ln_final: Weight,
+    pub w_out: Weight,
+    pub layers: Vec<LayerNonMoe>,
+}
+
+pub struct LayerNonMoe {
+    pub ln_attn: Weight,
+    pub wq: Weight,
+    pub wk: Weight,
+    pub wv: Weight,
+    pub wo: Weight,
+    pub ln_moe: Weight,
+    pub wg: Weight,
+}
+
+/// The host pool: every expert's weight tensors (pre-split from the
+/// on-disk w1|w3|w2 blobs) + non-MoE weights. The functional path reads
+/// tensors from here; whether a simulated *transfer* precedes the read
+/// is the device cache's business.
+pub struct HostPool {
+    experts: HashMap<ExpertKey, Arc<CachedTensors>>,
+    pub nonmoe: NonMoeWeights,
+}
+
+fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} has non-f32 size {}", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl HostPool {
+    pub fn load(man: &Manifest, rt: &Runtime) -> Result<Self> {
+        let tensor = |name: &str| -> Result<Weight> {
+            let entry = man.weight_entry(name)?;
+            let data = read_f32_bin(&man.resolve(&entry.path))?;
+            let expect: usize = entry.shape.iter().product();
+            if data.len() != expect {
+                bail!("weight {name}: {} floats on disk, manifest says {expect}",
+                      data.len());
+            }
+            Weight::new(Tensor::f32(data, entry.shape.clone()), rt)
+        };
+
+        let mut layers = Vec::with_capacity(man.sim.n_layers);
+        for l in 0..man.sim.n_layers {
+            layers.push(LayerNonMoe {
+                ln_attn: tensor(&format!("layer{l}.ln_attn"))?,
+                wq: tensor(&format!("layer{l}.wq"))?,
+                wk: tensor(&format!("layer{l}.wk"))?,
+                wv: tensor(&format!("layer{l}.wv"))?,
+                wo: tensor(&format!("layer{l}.wo"))?,
+                ln_moe: tensor(&format!("layer{l}.ln_moe"))?,
+                wg: tensor(&format!("layer{l}.wg"))?,
+            });
+        }
+        let nonmoe = NonMoeWeights {
+            emb: tensor("emb")?,
+            pos_emb: tensor("pos_emb")?,
+            ln_final: tensor("ln_final")?,
+            w_out: tensor("w_out")?,
+            layers,
+        };
+
+        let (d, f) = (man.sim.d_model, man.sim.d_ff);
+        let blob_len = 3 * d * f;
+        let split = |data: Vec<f32>| -> Result<Arc<CachedTensors>> {
+            let n = d * f;
+            Ok(Arc::new(CachedTensors {
+                w1: Weight::new(Tensor::f32(data[..n].to_vec(), vec![d, f]), rt)?,
+                w3: Weight::new(Tensor::f32(data[n..2 * n].to_vec(), vec![d, f]), rt)?,
+                w2: Weight::new(Tensor::f32(data[2 * n..].to_vec(), vec![f, d]), rt)?,
+            }))
+        };
+
+        let mut experts = HashMap::new();
+        for l in 0..man.sim.n_layers {
+            for e in 0..man.sim.n_experts {
+                let entry = man.weight_entry(&format!("layer{l}.expert{e}"))?;
+                let data = read_f32_bin(&man.resolve(&entry.path))?;
+                if data.len() != blob_len {
+                    bail!("expert blob layer{l}.expert{e}: {} != {blob_len}",
+                          data.len());
+                }
+                experts.insert(ExpertKey::routed(l, e), split(data)?);
+            }
+            for s in 0..man.sim.n_shared {
+                let entry = man.weight_entry(&format!("layer{l}.shared{s}"))?;
+                let data = read_f32_bin(&man.resolve(&entry.path))?;
+                if data.len() != blob_len {
+                    bail!("shared blob layer{l}.shared{s}: {} != {blob_len}",
+                          data.len());
+                }
+                experts.insert(ExpertKey::shared(l, s), split(data)?);
+            }
+        }
+
+        Ok(HostPool { experts, nonmoe })
+    }
+
+    /// Weight tensors of one expert (the functional side of a
+    /// "transfer": the bytes handed to the expert executable).
+    pub fn expert_tensors(&self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
+        self.experts
+            .get(&key)
+            .cloned()
+            .with_context(|| format!("host pool missing {key:?}"))
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+}
+
+/// The three weight tensors of one expert, as stored in a GPU-cache slot.
+pub struct CachedTensors {
+    pub w1: Weight,
+    pub w3: Weight,
+    pub w2: Weight,
+}

@@ -1,0 +1,110 @@
+//! GPU memory accounting (simulated): gauge per component, running
+//! peak, and OOM detection against the device's VRAM — produces
+//! Table II's rows and the paper's MIF-OOM-on-22B verdicts.
+//!
+//! All sizes are *paper-scale* bytes (`config::PaperDims`), not the
+//! scaled-down functional model's.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OomError {
+    pub needed: u64,
+    pub vram: u64,
+    pub component: &'static str,
+}
+
+impl fmt::Display for OomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "OOM: {} needs {:.2} GB total but device has {:.2} GB",
+            self.component,
+            self.needed as f64 / 1e9,
+            self.vram as f64 / 1e9
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
+#[derive(Debug, Clone)]
+pub struct MemoryMeter {
+    vram: u64,
+    /// Weights resident for the whole run: non-MoE + shared experts.
+    fixed: u64,
+    /// DuoServe's on-GPU predictor (paper §VI-D: ~300 MB).
+    predictor: u64,
+    /// Activation workspace.
+    activations: u64,
+    kv: u64,
+    experts: u64,
+    peak: u64,
+}
+
+impl MemoryMeter {
+    pub fn new(vram: u64) -> Self {
+        MemoryMeter {
+            vram,
+            fixed: 0,
+            predictor: 0,
+            activations: 0,
+            kv: 0,
+            experts: 0,
+            peak: 0,
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.fixed + self.predictor + self.activations + self.kv + self.experts
+    }
+
+    fn check(&mut self, component: &'static str) -> Result<(), OomError> {
+        let t = self.total();
+        self.peak = self.peak.max(t);
+        if t > self.vram {
+            Err(OomError { needed: t, vram: self.vram, component })
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn set_fixed(&mut self, bytes: u64) -> Result<(), OomError> {
+        self.fixed = bytes;
+        self.check("resident weights")
+    }
+
+    pub fn set_predictor(&mut self, bytes: u64) -> Result<(), OomError> {
+        self.predictor = bytes;
+        self.check("predictor")
+    }
+
+    pub fn set_activations(&mut self, bytes: u64) -> Result<(), OomError> {
+        self.activations = bytes;
+        self.check("activations")
+    }
+
+    pub fn set_kv(&mut self, bytes: u64) -> Result<(), OomError> {
+        self.kv = bytes;
+        self.check("kv cache")
+    }
+
+    /// Gauge: bytes of routed experts currently in the GPU expert cache
+    /// (+ any in-flight double-buffer slot).
+    pub fn set_experts(&mut self, bytes: u64) -> Result<(), OomError> {
+        self.experts = bytes;
+        self.check("expert cache")
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.total()
+    }
+
+    pub fn vram(&self) -> u64 {
+        self.vram
+    }
+}

@@ -1,0 +1,12 @@
+//! Memory hierarchy: the CPU expert cache (host pool holding every
+//! expert's weights), the GPU expert cache (bounded per-layer slots the
+//! scheduling policies manage), and the memory meter that produces
+//! Table II's peak-usage rows and OOM verdicts.
+
+mod device_cache;
+mod host_pool;
+mod meter;
+
+pub use device_cache::{CachedExpert, DeviceExpertCache};
+pub use host_pool::{CachedTensors, ExpertKey, HostPool, LayerNonMoe, NonMoeWeights, Weight};
+pub use meter::{MemoryMeter, OomError};

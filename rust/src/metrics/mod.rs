@@ -1,0 +1,217 @@
+//! Serving metrics: the paper's evaluation quantities — TTFT, E2E
+//! latency, per-step decode latency, percentiles (Fig. 6), throughput
+//! (Fig. 7), peak memory (Table II), predictor accuracy (Table III) —
+//! plus table/CSV reporters used by the figure-regeneration benches.
+
+/// Outcome of serving one request under one policy.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub req_id: usize,
+    /// Time to first token: prefill completion (virtual seconds).
+    pub ttft: f64,
+    /// End-to-end latency: last token emitted.
+    pub e2e: f64,
+    pub tokens_out: usize,
+    pub prompt_len: usize,
+    /// Per-decode-step latencies.
+    pub step_latencies: Vec<f64>,
+}
+
+/// Predictor accuracy counters (Table III's two metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PredictorAccuracy {
+    pub exact: u64,
+    pub at_least_half: u64,
+    pub total: u64,
+}
+
+impl PredictorAccuracy {
+    pub fn observe(&mut self, predicted: &[usize], actual: &[usize]) {
+        let need = (actual.len() + 1) / 2;
+        let inter = predicted.iter().filter(|e| actual.contains(e)).count();
+        self.total += 1;
+        if inter == actual.len() && predicted.len() == actual.len() {
+            self.exact += 1;
+        }
+        if inter >= need {
+            self.at_least_half += 1;
+        }
+    }
+
+    pub fn exact_rate(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.exact as f64 / self.total as f64 }
+    }
+
+    pub fn half_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.at_least_half as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &PredictorAccuracy) {
+        self.exact += other.exact;
+        self.at_least_half += other.at_least_half;
+        self.total += other.total;
+    }
+}
+
+/// Aggregate over a batch of request metrics.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n_requests: usize,
+    pub mean_ttft: f64,
+    pub mean_e2e: f64,
+    pub p50_e2e: f64,
+    pub p95_e2e: f64,
+    pub p50_ttft: f64,
+    pub p95_ttft: f64,
+    pub total_tokens: usize,
+    /// Total tokens / makespan (Fig. 7's "total throughput").
+    pub tokens_per_sec: f64,
+    pub makespan: f64,
+}
+
+/// Nearest-rank percentile (p in [0, 100]).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
+    let n = reqs.len();
+    let mean = |f: &dyn Fn(&RequestMetrics) -> f64| -> f64 {
+        if n == 0 { 0.0 } else { reqs.iter().map(|r| f(r)).sum::<f64>() / n as f64 }
+    };
+    let mut e2e: Vec<f64> = reqs.iter().map(|r| r.e2e).collect();
+    e2e.sort_by(|a, b| a.total_cmp(b));
+    let mut ttft: Vec<f64> = reqs.iter().map(|r| r.ttft).collect();
+    ttft.sort_by(|a, b| a.total_cmp(b));
+    let total_tokens: usize = reqs.iter().map(|r| r.tokens_out).sum();
+    Summary {
+        n_requests: n,
+        mean_ttft: mean(&|r| r.ttft),
+        mean_e2e: mean(&|r| r.e2e),
+        p50_e2e: percentile(&e2e, 50.0),
+        p95_e2e: percentile(&e2e, 95.0),
+        p50_ttft: percentile(&ttft, 50.0),
+        p95_ttft: percentile(&ttft, 95.0),
+        total_tokens,
+        tokens_per_sec: if makespan > 0.0 {
+            total_tokens as f64 / makespan
+        } else {
+            0.0
+        },
+        makespan,
+    }
+}
+
+/// Fixed-width text table writer for the figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human-friendly seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+/// Human-friendly bytes.
+pub fn fmt_gb(bytes: u64) -> String {
+    format!("{:.2}GB", bytes as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[42.0], 50.0), 42.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn accuracy_metrics() {
+        let mut a = PredictorAccuracy::default();
+        a.observe(&[1, 2], &[1, 2]); // exact
+        a.observe(&[1, 3], &[1, 2]); // half
+        a.observe(&[3, 4], &[1, 2]); // miss
+        assert_eq!(a.exact, 1);
+        assert_eq!(a.at_least_half, 2);
+        assert_eq!(a.total, 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "ttft"]);
+        t.row(vec!["mixtral".into(), "1.5s".into()]);
+        let s = t.render();
+        assert!(s.contains("mixtral"));
+        assert!(s.lines().count() == 3);
+    }
+}

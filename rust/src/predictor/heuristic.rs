@@ -1,0 +1,80 @@
+//! Heuristic predictor: popularity × aggregated affinity, no learning.
+//!
+//! This is (a) the ablation the paper's Challenge #1 argues against
+//! ("directly designing a heuristic algorithm based solely on these
+//! patterns would not achieve high accuracy"), and (b) the prediction
+//! mechanism we give the MIF baseline (trace-statistics matching,
+//! weaker than the learned MLP — Table III's MIF columns).
+
+use super::{top_k, Matrices};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeuristicKind {
+    /// score_j = P_l(j) — popularity only.
+    Popularity,
+    /// score_j = P_l(j) * mean_i A_{l-1,l}(i, j) over the previous
+    /// layer's selected experts i.
+    PopularityAffinity,
+}
+
+#[derive(Debug)]
+pub struct HeuristicPredictor {
+    kind: HeuristicKind,
+    top_k: usize,
+}
+
+impl HeuristicPredictor {
+    pub fn new(kind: HeuristicKind, top_k: usize) -> Self {
+        HeuristicPredictor { kind, top_k }
+    }
+
+    pub fn popularity_affinity(top_k: usize) -> Self {
+        Self::new(HeuristicKind::PopularityAffinity, top_k)
+    }
+
+    /// Predict the expert set of `target_layer` given the previous
+    /// layer's selection.
+    pub fn predict(&self, mats: &Matrices, target_layer: usize,
+                   prev_selection: &[usize]) -> Vec<usize> {
+        let e = mats.n_experts;
+        let mut scores: Vec<f32> = mats.popularity(target_layer).to_vec();
+        if self.kind == HeuristicKind::PopularityAffinity
+            && target_layer >= 1
+            && !prev_selection.is_empty()
+        {
+            let mut agg = vec![0.0f32; e];
+            let inv = 1.0 / prev_selection.len() as f32;
+            for &i in prev_selection {
+                for (j, &a) in mats.affinity_row(target_layer - 1, i)
+                    .iter().enumerate()
+                {
+                    agg[j] += a * inv;
+                }
+            }
+            for j in 0..e {
+                scores[j] *= agg[j];
+            }
+        }
+        top_k(&scores, self.top_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popularity_only_ignores_history() {
+        let mats = Matrices::uniform(3, 4);
+        let p = HeuristicPredictor::new(HeuristicKind::Popularity, 2);
+        // uniform popularity -> tie-break picks experts 0,1
+        assert_eq!(p.predict(&mats, 1, &[3]), vec![0, 1]);
+    }
+
+    #[test]
+    fn returns_k_experts() {
+        let mats = Matrices::uniform(4, 8);
+        let p = HeuristicPredictor::popularity_affinity(3);
+        assert_eq!(p.predict(&mats, 2, &[0, 1]).len(), 3);
+    }
+}

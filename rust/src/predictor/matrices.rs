@@ -1,0 +1,67 @@
+//! Popularity and affinity matrices from the offline preprocess
+//! (python writes them as raw f32 `.bin`; shapes come from the
+//! manifest: popularity (L, E), affinity (L-1, E, E), row-normalised).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct Matrices {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    popularity: Vec<f32>,
+    affinity: Vec<f32>,
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Matrices {
+    pub fn load(man: &Manifest) -> Result<Self> {
+        let (l, e) = (man.sim.n_layers, man.sim.n_experts);
+        let popularity = read_f32(&man.resolve(&man.predictor.popularity))?;
+        if popularity.len() != l * e {
+            bail!("popularity: {} floats, expected {}", popularity.len(), l * e);
+        }
+        let affinity = read_f32(&man.resolve(&man.predictor.affinity))?;
+        if affinity.len() != (l - 1) * e * e {
+            bail!("affinity: {} floats, expected {}", affinity.len(),
+                  (l - 1) * e * e);
+        }
+        Ok(Matrices { n_layers: l, n_experts: e, popularity, affinity })
+    }
+
+    /// Uniform matrices (tests / cold-start before preprocess).
+    pub fn uniform(n_layers: usize, n_experts: usize) -> Self {
+        let p = 1.0 / n_experts as f32;
+        Matrices {
+            n_layers,
+            n_experts,
+            popularity: vec![p; n_layers * n_experts],
+            affinity: vec![p; (n_layers - 1) * n_experts * n_experts],
+        }
+    }
+
+    /// Popularity vector of `layer`: P_l(·), length E.
+    pub fn popularity(&self, layer: usize) -> &[f32] {
+        let e = self.n_experts;
+        &self.popularity[layer * e..(layer + 1) * e]
+    }
+
+    /// Affinity row A_{l,l+1}(i, ·): given expert `i` at `layer`, the
+    /// distribution over experts at `layer + 1`. Length E.
+    pub fn affinity_row(&self, layer: usize, i: usize) -> &[f32] {
+        let e = self.n_experts;
+        let base = layer * e * e + i * e;
+        &self.affinity[base..base + e]
+    }
+}

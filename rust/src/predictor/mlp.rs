@@ -1,0 +1,46 @@
+//! The deployed ExpertMLP: an AOT-lowered HLO module (weights baked at
+//! export by `aot.py`) executed on the PJRT client from the predict
+//! stream. Input: s_l (1, input_dim); output: (1, E) sigmoid
+//! probabilities.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::config::Manifest;
+use crate::runtime::{Executable, Runtime, Tensor};
+
+pub struct MlpPredictor {
+    exe: Arc<Executable>,
+    input_dim: usize,
+    n_experts: usize,
+    top_k: usize,
+}
+
+impl MlpPredictor {
+    pub fn load(rt: &Runtime, man: &Manifest) -> Result<Self> {
+        let exe = rt.load(&man.resolve(&man.predictor.hlo))?;
+        Ok(MlpPredictor {
+            exe,
+            input_dim: man.predictor.input_dim,
+            n_experts: man.sim.n_experts,
+            top_k: man.sim.top_k,
+        })
+    }
+
+    /// Per-expert activation probabilities for the target layer.
+    pub fn probs(&self, state: &[f32]) -> Result<Vec<f32>> {
+        ensure!(state.len() == self.input_dim,
+                "state dim {} != {}", state.len(), self.input_dim);
+        let s = Tensor::f32(state.to_vec(), vec![1, self.input_dim]);
+        let out = self.exe.run(&[&s])?;
+        let probs = out[0].as_f32()?.to_vec();
+        ensure!(probs.len() == self.n_experts);
+        Ok(probs)
+    }
+
+    /// Predicted top-k expert set (sorted ascending).
+    pub fn predict(&self, state: &[f32]) -> Result<Vec<usize>> {
+        Ok(super::top_k(&self.probs(state)?, self.top_k))
+    }
+}

@@ -1,0 +1,52 @@
+//! The decode-phase expert predictor stack: offline-trained matrices
+//! (popularity Eq. 2, affinity Eq. 3), the State Constructor that turns
+//! an activation path into the ExpertMLP's input vector s_l (Eq. 4–5),
+//! the MLP itself (AOT-lowered HLO, weights baked at export), a
+//! popularity×affinity heuristic fallback, and the Experts Tracer for
+//! online trace collection.
+
+mod heuristic;
+mod matrices;
+mod mlp;
+mod state;
+mod tracer;
+
+pub use heuristic::{HeuristicKind, HeuristicPredictor};
+pub use matrices::Matrices;
+pub use mlp::MlpPredictor;
+pub use state::StateConstructor;
+pub use tracer::{Episode, Tracer};
+
+/// Deterministic top-k over expert scores: highest score wins, ties to
+/// the lower expert index (matches `ref.top_k_ref` / `T.predict_topk`
+/// on the python side). Returns sorted indices.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<usize> = order.into_iter().take(k).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::top_k;
+
+    #[test]
+    fn top_k_basic() {
+        assert_eq!(top_k(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_tie_breaks_low_index() {
+        assert_eq!(top_k(&[0.5, 0.5, 0.5, 0.1], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_k_equals_len() {
+        assert_eq!(top_k(&[0.2, 0.1], 2), vec![0, 1]);
+    }
+}

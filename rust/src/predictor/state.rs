@@ -1,0 +1,138 @@
+//! The State Constructor (paper Fig. 3): accumulates the current
+//! decode step's per-layer expert selections and builds the ExpertMLP
+//! input s_l = [h_l, p_l, a_{l-1,l}, layer-onehot] (Eq. 4–5).
+//!
+//! The feature layout mirrors `python/compile/predictor.py::build_state`
+//! EXACTLY — the MLP was trained on the python layout, and the rust
+//! integration tests cross-check both against artifact goldens.
+
+use crate::config::Manifest;
+
+use super::Matrices;
+
+#[derive(Debug)]
+pub struct StateConstructor {
+    n_layers: usize,
+    n_experts: usize,
+    history_window: usize,
+    input_dim: usize,
+    /// Per-layer selections of the *current* decode step.
+    history: Vec<Vec<usize>>,
+}
+
+impl StateConstructor {
+    pub fn new(man: &Manifest) -> Self {
+        StateConstructor {
+            n_layers: man.sim.n_layers,
+            n_experts: man.sim.n_experts,
+            history_window: man.predictor.history_window,
+            input_dim: man.predictor.input_dim,
+            history: Vec::new(),
+        }
+    }
+
+    /// Record layer `layer`'s actual gate selection (ascending indices).
+    pub fn record(&mut self, layer: usize, experts: &[usize]) {
+        debug_assert_eq!(layer, self.history.len(),
+                         "layers must be recorded in order");
+        let mut sel = experts.to_vec();
+        sel.sort_unstable();
+        self.history.push(sel);
+    }
+
+    /// The paper: "After each round of computation, the State
+    /// Constructor clears the stored activation trace."
+    pub fn clear(&mut self) {
+        self.history.clear();
+    }
+
+    pub fn history(&self) -> &[Vec<usize>] {
+        &self.history
+    }
+
+    /// Build s_l for predicting `target_layer` (>= 1). Requires layers
+    /// 0..target_layer to be recorded.
+    pub fn build(&self, target_layer: usize, mats: &Matrices) -> Vec<f32> {
+        assert!(target_layer >= 1 && target_layer < self.n_layers);
+        assert!(self.history.len() >= target_layer,
+                "need layers 0..{target_layer} recorded, have {}",
+                self.history.len());
+        let e = self.n_experts;
+        let h_dim = self.history_window * e;
+        let mut s = vec![0.0f32; self.input_dim];
+
+        // history: slot 0 = most recent layer, older layers after.
+        let lo = target_layer.saturating_sub(self.history_window);
+        for (slot, l) in (lo..target_layer).rev().enumerate() {
+            for &ei in &self.history[l] {
+                s[slot * e + ei] = 1.0;
+            }
+        }
+        // popularity of the target layer
+        s[h_dim..h_dim + e].copy_from_slice(mats.popularity(target_layer));
+        // aggregated affinity: mean of the affinity rows of the experts
+        // selected at target_layer - 1
+        let prev = &self.history[target_layer - 1];
+        if !prev.is_empty() {
+            let inv = 1.0 / prev.len() as f32;
+            for &i in prev {
+                let row = mats.affinity_row(target_layer - 1, i);
+                for (j, &a) in row.iter().enumerate() {
+                    s[h_dim + e + j] += a * inv;
+                }
+            }
+        }
+        // layer one-hot
+        s[h_dim + 2 * e + target_layer] = 1.0;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_state(n_layers: usize, n_experts: usize, hw: usize)
+                   -> StateConstructor {
+        StateConstructor {
+            n_layers,
+            n_experts,
+            history_window: hw,
+            input_dim: hw * n_experts + 2 * n_experts + n_layers,
+            history: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn layout_matches_python_build_state() {
+        // Mirrors python/tests/test_predictor.py::test_build_state_layout
+        let (l, e, hw) = (4, 8, 4);
+        let mats = Matrices::uniform(l, e);
+        let mut sc = dummy_state(l, e, hw);
+        sc.record(0, &[0, 1]);
+        sc.record(1, &[2, 3]);
+        let s = sc.build(2, &mats);
+        assert_eq!(s.len(), hw * e + 2 * e + l);
+        // slot 0 = layer 1 (experts 2, 3)
+        assert_eq!(s[2], 1.0);
+        assert_eq!(s[3], 1.0);
+        assert_eq!(s[0], 0.0);
+        // slot 1 = layer 0 (experts 0, 1)
+        assert_eq!(s[e], 1.0);
+        assert_eq!(s[e + 1], 1.0);
+        // popularity section uniform
+        assert!((s[hw * e] - 1.0 / e as f32).abs() < 1e-6);
+        // layer one-hot at the end
+        assert_eq!(s[hw * e + 2 * e + 2], 1.0);
+        let onehot_sum: f32 = s[hw * e + 2 * e..].iter().sum();
+        assert_eq!(onehot_sum, 1.0);
+    }
+
+    #[test]
+    fn clear_resets_history() {
+        let mut sc = dummy_state(4, 8, 4);
+        sc.record(0, &[1]);
+        sc.clear();
+        assert!(sc.history().is_empty());
+    }
+}

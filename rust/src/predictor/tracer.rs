@@ -1,0 +1,134 @@
+//! The Experts Tracer: records expert activation paths during serving
+//! (paper §IV-A Eq. 1). Used to (a) regenerate Fig. 2's popularity /
+//! affinity statistics from the rust side, and (b) support the paper's
+//! "collect traces alongside actual inference" deployment mode.
+
+/// One request's decode-phase activation path:
+/// `steps[t][l]` = sorted expert indices at layer `l`, decode step `t`.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub dataset: String,
+    pub steps: Vec<Vec<Vec<usize>>>,
+}
+
+#[derive(Debug, Default)]
+pub struct Tracer {
+    episodes: Vec<Episode>,
+    current: Option<Episode>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn begin_episode(&mut self, dataset: &str) {
+        self.current = Some(Episode { dataset: dataset.to_string(),
+                                      steps: Vec::new() });
+    }
+
+    /// Record one decode step's full per-layer path.
+    pub fn record_step(&mut self, per_layer: Vec<Vec<usize>>) {
+        if let Some(ep) = self.current.as_mut() {
+            ep.steps.push(per_layer);
+        }
+    }
+
+    pub fn end_episode(&mut self) {
+        if let Some(ep) = self.current.take() {
+            if !ep.steps.is_empty() {
+                self.episodes.push(ep);
+            }
+        }
+    }
+
+    pub fn episodes(&self) -> &[Episode] {
+        &self.episodes
+    }
+
+    /// Popularity matrix P_l(i) (Eq. 2) over the collected episodes.
+    pub fn popularity(&self, n_layers: usize, n_experts: usize) -> Vec<Vec<f64>> {
+        let mut pop = vec![vec![0.0f64; n_experts]; n_layers];
+        for ep in &self.episodes {
+            for step in &ep.steps {
+                for (l, sel) in step.iter().enumerate() {
+                    for &e in sel {
+                        pop[l][e] += 1.0;
+                    }
+                }
+            }
+        }
+        for row in pop.iter_mut() {
+            let sum: f64 = row.iter().sum();
+            if sum > 0.0 {
+                row.iter_mut().for_each(|v| *v /= sum);
+            }
+        }
+        pop
+    }
+
+    /// Affinity matrices A_{l,l+1}(i,j) (Eq. 3), row-normalised.
+    pub fn affinity(&self, n_layers: usize, n_experts: usize)
+                    -> Vec<Vec<Vec<f64>>> {
+        let mut aff = vec![vec![vec![0.0f64; n_experts]; n_experts];
+                           n_layers - 1];
+        for ep in &self.episodes {
+            for step in &ep.steps {
+                for l in 0..n_layers - 1 {
+                    for &i in &step[l] {
+                        for &j in &step[l + 1] {
+                            aff[l][i][j] += 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        for layer in aff.iter_mut() {
+            for row in layer.iter_mut() {
+                let sum: f64 = row.iter().sum();
+                if sum > 0.0 {
+                    row.iter_mut().for_each(|v| *v /= sum);
+                }
+            }
+        }
+        aff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popularity_counts_and_normalises() {
+        let mut t = Tracer::new();
+        t.begin_episode("squad");
+        t.record_step(vec![vec![0, 1], vec![2, 3]]);
+        t.record_step(vec![vec![0, 2], vec![2, 3]]);
+        t.end_episode();
+        let pop = t.popularity(2, 4);
+        assert!((pop[0][0] - 0.5).abs() < 1e-9);
+        assert!((pop[1][2] - 0.5).abs() < 1e-9);
+        assert!((pop[0].iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn affinity_conditioned_on_prev_layer() {
+        let mut t = Tracer::new();
+        t.begin_episode("orca");
+        t.record_step(vec![vec![0], vec![1]]);
+        t.record_step(vec![vec![0], vec![2]]);
+        t.end_episode();
+        let aff = t.affinity(2, 4);
+        assert!((aff[0][0][1] - 0.5).abs() < 1e-9);
+        assert!((aff[0][0][2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_episode_dropped() {
+        let mut t = Tracer::new();
+        t.begin_episode("squad");
+        t.end_episode();
+        assert!(t.episodes().is_empty());
+    }
+}

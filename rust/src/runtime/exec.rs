@@ -1,0 +1,143 @@
+//! Executable loading + execution. Follows /opt/xla-example/load_hlo:
+//! HLO **text** -> `HloModuleProto::from_text_file` -> compile on the
+//! CPU PJRT client -> execute with literal args. Compiled executables
+//! are cached per path so every component compiles exactly once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::Tensor;
+
+/// A compiled PJRT executable for one lowered component.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: Arc<xla::PjRtClient>,
+    pub name: String,
+}
+
+/// Argument to an executable: a host tensor (staged on the fly), a
+/// literal (opaque KV state), or a pre-staged device buffer (static
+/// weights — zero per-call copies). The staging always goes through
+/// rust-owned `PjRtBuffer`s and `execute_b`: the `xla` crate's
+/// `execute()` leaks every input buffer it creates
+/// (`buffer.release()` without a matching free in xla_rs.cc), which
+/// OOMs long serving runs — see EXPERIMENTS.md §Perf iteration 2.
+pub enum ArgRef<'a> {
+    T(&'a Tensor),
+    L(&'a xla::Literal),
+    B(&'a xla::PjRtBuffer),
+}
+
+impl<'a> From<&'a Tensor> for ArgRef<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        ArgRef::T(t)
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<ArgRef> = args.iter().map(|&t| ArgRef::T(t)).collect();
+        self.run_mixed(&refs)?
+            .iter()
+            .map(Tensor::from_literal)
+            .collect()
+    }
+
+    /// Execute with mixed args; returns the raw output literals so
+    /// opaque state (KV caches) never round-trips through host vectors.
+    /// All input staging is rust-owned (`execute_b`) — never the leaky
+    /// `execute()` path.
+    pub fn run_mixed(&self, args: &[ArgRef<'_>]) -> Result<Vec<xla::Literal>> {
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<(bool, usize)> = Vec::with_capacity(args.len());
+        let mut borrowed: Vec<&xla::PjRtBuffer> = Vec::new();
+        for a in args {
+            match a {
+                ArgRef::T(t) => {
+                    order.push((true, owned.len()));
+                    owned.push(t.to_buffer(&self.client)?);
+                }
+                ArgRef::L(l) => {
+                    order.push((true, owned.len()));
+                    owned.push(
+                        self.client.buffer_from_host_literal(None, l)?);
+                }
+                ArgRef::B(b) => {
+                    order.push((false, borrowed.len()));
+                    borrowed.push(b);
+                }
+            }
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&(own, i)| if own { &owned[i] } else { borrowed[i] })
+            .collect();
+        let out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT client + executable cache. `Clone` is cheap (Arc).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    cache: Arc<Mutex<HashMap<PathBuf, Arc<Executable>>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client: Arc::new(client),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let exe = Arc::new(Executable { exe, client: self.client.clone(), name });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts and executes
+//! them on the CPU PJRT client. This is the only module that touches
+//! the `xla` crate; everything above it works with [`Tensor`]s.
+
+mod exec;
+mod tensor;
+
+pub use exec::{ArgRef, Executable, Runtime};
+pub use tensor::Tensor;

@@ -1,0 +1,119 @@
+//! A minimal host tensor: f32 or i32 data + shape. The coordinator's
+//! host math (residual adds, top-k, combine) happens on these; the
+//! runtime converts to/from `xla::Literal` at executable boundaries.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32 { data, shape }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::F32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Row `i` of a rank-2 f32 tensor.
+    pub fn row(&self, i: usize) -> Result<&[f32]> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("row() needs rank-2, got {:?}", shape);
+        }
+        let w = shape[1];
+        Ok(&self.as_f32()?[i * w..(i + 1) * w])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Stage this tensor as a device buffer (rust-owned, freed on drop).
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            Tensor::F32 { data, shape } => {
+                Ok(client.buffer_from_host_buffer(data, shape, None)?)
+            }
+            Tensor::I32 { data, shape } => {
+                Ok(client.buffer_from_host_buffer(data, shape, None)?)
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(Tensor::i32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Per-op cost model: maps paper-scale work (FLOPs / bytes) onto the
+//! device profile. The functional path runs scaled-down models on CPU
+//! PJRT; *time* comes from here, using the real backbone's dimensions
+//! (see `config::PaperDims`) so latency numbers have the paper's shape.
+
+use crate::config::{DeviceProfile, LinkKind, Manifest};
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    device: DeviceProfile,
+    /// Paper-scale expert FLOPs for one token (cached).
+    expert_flops_1: f64,
+    expert_bytes: u64,
+    d_model: f64,
+    bytes_per_param: f64,
+}
+
+impl CostModel {
+    pub fn new(man: &Manifest, device: DeviceProfile) -> Self {
+        CostModel {
+            expert_flops_1: man.paper_expert_flops(1),
+            expert_bytes: man.paper.expert_bytes,
+            d_model: man.paper.d_model as f64,
+            bytes_per_param: man.paper.bytes_per_param,
+            device,
+        }
+    }
+
+    pub fn device(&self) -> &DeviceProfile {
+        &self.device
+    }
+
+    /// Host->device transfer of one expert's weights.
+    pub fn expert_transfer(&self, kind: LinkKind) -> f64 {
+        self.device.transfer_time(self.expert_bytes, kind)
+    }
+
+    /// Expert FFN over `tokens` tokens (roofline: weight streaming from
+    /// HBM bounds small batches, FLOPs bound large ones).
+    pub fn expert_compute(&self, tokens: usize) -> f64 {
+        let flops = self.expert_flops_1 * tokens as f64;
+        let hbm = self.expert_bytes as f64
+            + 2.0 * tokens as f64 * self.d_model * self.bytes_per_param;
+        self.device.compute_time(flops, hbm)
+    }
+
+    /// Non-MoE work of one layer for `tokens` tokens at context `ctx`:
+    /// attention projections + scores + gate + norms.
+    pub fn attn_compute(&self, tokens: usize, ctx: usize) -> f64 {
+        let d = self.d_model;
+        let t = tokens as f64;
+        let proj = 2.0 * 4.0 * d * d * t;
+        let att = 2.0 * 2.0 * d * ctx as f64 * t;
+        let gate = 2.0 * d * 64.0 * t; // router GEMM, E<=128
+        let flops = proj + att + gate;
+        let hbm = (4.0 * d * d) * self.bytes_per_param
+            + 2.0 * (ctx as f64) * d * self.bytes_per_param;
+        self.device.compute_time(flops, hbm)
+    }
+
+    /// Embedding + LM head for `tokens` tokens.
+    pub fn head_compute(&self, tokens: usize, vocab_paper: f64) -> f64 {
+        let flops = 2.0 * self.d_model * vocab_paper * tokens as f64;
+        let hbm = self.d_model * vocab_paper * self.bytes_per_param;
+        self.device.compute_time(flops, hbm)
+    }
+
+    /// KV-cache bytes for one request at context length `ctx`
+    /// (paper-scale: 2 * layers * d_model * ctx, fp16).
+    pub fn kv_bytes(&self, n_layers_paper: usize, ctx: usize) -> u64 {
+        (2 * n_layers_paper * ctx) as u64 * (self.d_model as u64) * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceProfile, LinkKind};
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let d = DeviceProfile::a5000();
+        let t1 = d.transfer_time(1 << 20, LinkKind::Pinned);
+        let t2 = d.transfer_time(2 << 20, LinkKind::Pinned);
+        assert!(t2 > t1);
+        let slope1 = t1 - d.pcie_latency_s;
+        let slope2 = t2 - d.pcie_latency_s;
+        assert!((slope2 / slope1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pageable_slower_than_pinned() {
+        let d = DeviceProfile::a5000();
+        assert!(d.transfer_time(88 << 20, LinkKind::Pageable)
+                > d.transfer_time(88 << 20, LinkKind::Pinned));
+    }
+
+    #[test]
+    fn compute_time_has_launch_floor() {
+        let d = DeviceProfile::a5000();
+        assert!(d.compute_time(1.0, 1.0) >= 2e-6);
+    }
+
+    #[test]
+    fn roofline_picks_max_of_flop_and_membound() {
+        let d = DeviceProfile::a5000();
+        // huge flops, no bytes -> flop bound
+        let t_flop = d.compute_time(1e12, 0.0);
+        assert!((t_flop - 1e12 / (d.eff_tflops * 1e12)).abs() < 1e-9);
+        // huge bytes, no flops -> memory bound
+        let t_mem = d.compute_time(0.0, 1e9);
+        assert!((t_mem - 1e9 / d.hbm_bw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn a6000_faster_and_bigger_than_a5000() {
+        let a = DeviceProfile::a5000();
+        let b = DeviceProfile::a6000();
+        assert!(b.vram_bytes > a.vram_bytes);
+        assert!(b.eff_tflops > a.eff_tflops);
+    }
+}

@@ -1,0 +1,18 @@
+//! Virtual-time simulation substrate.
+//!
+//! The paper's mechanism is a CUDA multi-stream pipeline; its claims are
+//! about *overlap structure* — which transfers hide behind which
+//! computations and where the synchronisation points fall. We reproduce
+//! that structure exactly with a timeline calculus over named streams
+//! and a calibrated per-op cost model (see `config::DeviceProfile`),
+//! while the *functional* execution happens for real on CPU PJRT.
+//!
+//! Every scheduled op is recorded, so tests can assert the overlap
+//! structure itself (e.g. "during prefill, the comm stream is busy
+//! while the compute stream runs the previous expert").
+
+mod cost;
+mod streams;
+
+pub use cost::CostModel;
+pub use streams::{OpRecord, StreamId, Streams};

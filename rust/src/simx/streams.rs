@@ -1,0 +1,102 @@
+//! Named virtual streams with a shared timeline.
+//!
+//! A stream executes ops in issue order; an op starts when both its
+//! dependencies are ready (`ready_at`) and the stream is free. This is
+//! the standard timeline calculus for CUDA-stream pipelines:
+//!
+//!   start = max(stream_free, ready_at)
+//!   end   = start + duration
+//!
+//! Synchronisation points are expressed by callers as `max` over the
+//! completion times of the ops being joined — exactly how
+//! `cudaStreamSynchronize`/events compose.
+
+/// The three streams of DuoServe-MoE's runtime (paper Fig. 4): the
+/// baselines use subsets of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamId {
+    /// Operator computation (attention, experts, gate, lm head).
+    Compute,
+    /// Host->device expert weight transfers.
+    Comm,
+    /// The decode-phase expert predictor (DuoServe only).
+    Predict,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub stream: StreamId,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Stream timeline state for one request-processing episode.
+#[derive(Debug, Default)]
+pub struct Streams {
+    free: [f64; 3],
+    trace: Vec<OpRecord>,
+    record: bool,
+}
+
+fn idx(s: StreamId) -> usize {
+    match s {
+        StreamId::Compute => 0,
+        StreamId::Comm => 1,
+        StreamId::Predict => 2,
+    }
+}
+
+impl Streams {
+    pub fn new() -> Self {
+        Streams { free: [0.0; 3], trace: Vec::new(), record: false }
+    }
+
+    /// Start recording op traces (tests / `--trace-streams`).
+    pub fn recording() -> Self {
+        Streams { free: [0.0; 3], trace: Vec::new(), record: true }
+    }
+
+    /// Schedule an op: starts at `max(stream free, ready_at)`, occupies
+    /// the stream for `duration`. Returns the completion time.
+    pub fn run(&mut self, s: StreamId, ready_at: f64, duration: f64,
+               label: &str) -> f64 {
+        debug_assert!(duration >= 0.0 && ready_at >= 0.0,
+                      "bad op: ready={ready_at} dur={duration}");
+        let start = self.free[idx(s)].max(ready_at);
+        let end = start + duration;
+        self.free[idx(s)] = end;
+        if self.record {
+            self.trace.push(OpRecord {
+                stream: s,
+                label: label.to_string(),
+                start,
+                end,
+            });
+        }
+        end
+    }
+
+    /// Time at which stream `s` becomes free.
+    pub fn free_at(&self, s: StreamId) -> f64 {
+        self.free[idx(s)]
+    }
+
+    /// Join all streams (full device synchronisation).
+    pub fn sync_all(&self) -> f64 {
+        self.free.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn trace(&self) -> &[OpRecord] {
+        &self.trace
+    }
+
+    /// Total busy time of a stream (for utilisation metrics).
+    pub fn busy_time(&self, s: StreamId) -> f64 {
+        self.trace
+            .iter()
+            .filter(|op| op.stream == s)
+            .map(|op| op.end - op.start)
+            .sum()
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI-argument helper: `--key value` / `--flag` parsing with
+//! typed getters and leftover positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I,
+                                                 flag_names: &[&str])
+                                                 -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                    out.opts.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.opts
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.opts.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = args(&["run", "--model", "m1", "--verbose", "--n=5", "x"]);
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.str("model", ""), "m1");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.str("model", "tiny"), "tiny");
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["--model".to_string()], &[]).is_err());
+    }
+}

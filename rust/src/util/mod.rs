@@ -1,0 +1,11 @@
+//! In-tree substrates for the offline build environment: a JSON
+//! parser/writer, a seeded deterministic RNG, and a tiny CLI-argument
+//! helper. (The build image vendors only the `xla` crate's closure, so
+//! serde/rand/clap are reimplemented here — DESIGN.md §1.)
+
+pub mod args;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

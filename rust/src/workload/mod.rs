@@ -1,0 +1,153 @@
+//! Synthetic workload generation (rust mirror of
+//! `python/compile/workload.py`): seeded, clustered token streams with
+//! per-dataset prompt/output length distributions standing in for
+//! SQuAD (long prompt, short answer) and Orca-Math (mid prompt, long
+//! reasoning output).
+
+use crate::config::Manifest;
+use crate::util::Rng;
+
+/// Must match `python/compile/weights.py::N_CLUSTERS`.
+pub const N_CLUSTERS: usize = 8;
+/// Must match `python/compile/workload.py::TOPIC_PURITY`.
+pub const TOPIC_PURITY: f64 = 0.8;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub req_id: usize,
+    pub dataset: String,
+    pub cluster: usize,
+    pub prompt: Vec<i32>,
+    /// Output tokens to generate (including the prefill's first token).
+    pub n_decode: usize,
+    /// Virtual arrival time (0 for closed-loop benchmarks).
+    pub arrival: f64,
+}
+
+fn prompt_range(dataset: &str, max_seq: usize) -> (usize, usize) {
+    match dataset {
+        "squad" => ((max_seq / 2).max(4), max_seq * 9 / 10),
+        "orca" => ((max_seq * 3 / 10).max(4), max_seq * 6 / 10),
+        other => panic!("unknown dataset {other:?}"),
+    }
+}
+
+fn decode_len(dataset: &str, max_decode: usize, rng: &mut Rng) -> usize {
+    let base: usize = if dataset == "squad" { 16 } else { 32 };
+    let lo = (base / 2).max(2);
+    rng.range(lo, base).min(max_decode)
+}
+
+/// Topical token stream: mostly members of `cluster`'s congruence
+/// class (token % N_CLUSTERS == cluster), occasionally uniform.
+pub fn sample_tokens(man: &Manifest, cluster: usize, n: usize,
+                     rng: &mut Rng) -> Vec<i32> {
+    let vocab = man.sim.vocab;
+    let per_class = vocab / N_CLUSTERS;
+    (0..n)
+        .map(|_| {
+            let t = if rng.bool_with(TOPIC_PURITY) {
+                rng.below(per_class) * N_CLUSTERS + cluster
+            } else {
+                rng.below(vocab)
+            };
+            t.min(vocab - 1) as i32
+        })
+        .collect()
+}
+
+pub fn generate_requests(man: &Manifest, dataset: &str, n_requests: usize,
+                         seed: u64) -> Vec<Request> {
+    let ds_salt: u64 = dataset.bytes().map(|b| b as u64).sum();
+    let mut rng = Rng::seed_from(seed.wrapping_mul(0x9E37_79B9) ^ ds_salt);
+    let (lo, hi) = prompt_range(dataset, man.sim.max_seq);
+    (0..n_requests)
+        .map(|i| {
+            let cluster = rng.below(N_CLUSTERS);
+            let plen = rng.range(lo, hi);
+            Request {
+                req_id: i,
+                dataset: dataset.to_string(),
+                cluster,
+                prompt: sample_tokens(man, cluster, plen, &mut rng),
+                n_decode: decode_len(dataset, man.sim.max_decode, &mut rng),
+                arrival: 0.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+    use std::path::Path;
+
+    fn man() -> Manifest {
+        Manifest::load(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path(),
+                       "mixtral-tiny").expect("run `make artifacts-tiny` first")
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = man();
+        let a = generate_requests(&m, "squad", 8, 42);
+        let b = generate_requests(&m, "squad", 8, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.n_decode, y.n_decode);
+        }
+    }
+
+    #[test]
+    fn seeds_and_datasets_differ() {
+        let m = man();
+        let a = generate_requests(&m, "squad", 8, 1);
+        let b = generate_requests(&m, "squad", 8, 2);
+        assert!(a.iter().zip(&b).any(|(x, y)| x.prompt != y.prompt));
+        let c = generate_requests(&m, "orca", 8, 1);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn lengths_in_bounds() {
+        let m = man();
+        for ds in ["squad", "orca"] {
+            for r in generate_requests(&m, ds, 32, 0) {
+                assert!(!r.prompt.is_empty());
+                assert!(r.prompt.len() <= m.sim.max_seq);
+                assert!(r.n_decode >= 1 && r.n_decode <= m.sim.max_decode);
+                assert!(r.prompt.iter().all(|&t| (t as usize) < m.sim.vocab));
+            }
+        }
+    }
+
+    #[test]
+    fn squad_prompts_longer_orca_outputs_longer() {
+        let m = man();
+        let squad = generate_requests(&m, "squad", 64, 0);
+        let orca = generate_requests(&m, "orca", 64, 0);
+        let mean = |v: &[Request], f: &dyn Fn(&Request) -> usize| {
+            v.iter().map(f).sum::<usize>() as f64 / v.len() as f64
+        };
+        assert!(mean(&squad, &|r| r.prompt.len()) > mean(&orca, &|r| r.prompt.len()));
+        assert!(mean(&orca, &|r| r.n_decode) > mean(&squad, &|r| r.n_decode));
+    }
+
+    #[test]
+    fn tokens_are_topical() {
+        let m = man();
+        let mut rng = Rng::seed_from(0);
+        let toks = sample_tokens(&m, 3, 4000, &mut rng);
+        let frac = toks.iter().filter(|&&t| t as usize % N_CLUSTERS == 3)
+            .count() as f64 / toks.len() as f64;
+        assert!(frac > TOPIC_PURITY - 0.1, "topical fraction {frac}");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dataset")]
+    fn unknown_dataset_panics() {
+        let m = man();
+        generate_requests(&m, "imagenet", 1, 0);
+    }
+}

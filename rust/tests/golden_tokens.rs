@@ -1,0 +1,129 @@
+//! Cross-language correctness: the rust engine (separately-lowered
+//! components + host-side combine, orchestrated by the coordinator)
+//! must reproduce the python ReferenceModel's generations
+//! token-for-token and route-for-route, for every scheduling policy
+//! (policies change *time*, never *function*).
+//!
+//! Goldens are written by `python -m compile.aot` (artifacts/<model>/
+//! goldens.json). Requires `make artifacts-tiny`.
+
+use std::path::{Path, PathBuf};
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::util::Json;
+use duoserve::workload::Request;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_goldens(engine: &Engine) -> Vec<Json> {
+    let path = engine.man.resolve(&engine.man.goldens);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing goldens {path:?}: {e} \
+                                    (run `make artifacts-tiny`)"));
+    Json::parse(&text).unwrap().as_arr().unwrap().to_vec()
+}
+
+fn golden_request(g: &Json, id: usize) -> Request {
+    Request {
+        req_id: id,
+        dataset: g.get("dataset").unwrap().as_str().unwrap().to_string(),
+        cluster: 0,
+        prompt: g.get("prompt").unwrap().i32_vec().unwrap(),
+        n_decode: g.get("n_decode").unwrap().as_usize().unwrap(),
+        arrival: 0.0,
+    }
+}
+
+fn check_policy(policy: PolicyKind) {
+    let engine = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let goldens = load_goldens(&engine);
+    assert!(!goldens.is_empty());
+    let opts = ServeOptions::new(policy, DeviceProfile::a6000());
+
+    for (i, g) in goldens.iter().enumerate() {
+        let req = golden_request(g, i);
+        let out = engine.serve(std::slice::from_ref(&req), &opts).unwrap();
+        assert!(out.oom.is_none(), "unexpected OOM under {policy:?}");
+        let want: Vec<i32> = g.get("tokens").unwrap().i32_vec().unwrap();
+        assert_eq!(out.tokens[0], want,
+                   "golden {i} tokens diverged under {policy:?}");
+    }
+}
+
+#[test]
+fn duoserve_matches_reference_tokens() {
+    check_policy(PolicyKind::DuoServe);
+}
+
+#[test]
+fn odf_matches_reference_tokens() {
+    check_policy(PolicyKind::Odf);
+}
+
+#[test]
+fn lfp_matches_reference_tokens() {
+    check_policy(PolicyKind::Lfp);
+}
+
+#[test]
+fn mif_matches_reference_tokens() {
+    check_policy(PolicyKind::Mif);
+}
+
+#[test]
+fn decode_routing_matches_reference() {
+    // Beyond tokens: the per-layer expert selections of every decode
+    // step must match the reference's routing trace exactly.
+    let engine = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let goldens = load_goldens(&engine);
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+
+    for (i, g) in goldens.iter().enumerate() {
+        let req = golden_request(g, i);
+        let out = engine.serve(std::slice::from_ref(&req), &opts).unwrap();
+        // decode_routing: [step][layer][k] from the reference model
+        let want: Vec<Vec<Vec<usize>>> = g
+            .get("decode_routing")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|step| {
+                step.as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|l| {
+                        let mut v = l.usize_vec().unwrap();
+                        v.sort_unstable();
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        let got = &out.episodes[0].steps;
+        assert_eq!(got.len(), want.len(), "golden {i}: step count");
+        for (s, (gs, ws)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(gs, ws, "golden {i} step {s}: routing diverged");
+        }
+    }
+}
+
+#[test]
+fn policies_produce_identical_tokens() {
+    // Function/time split: all four policies must emit identical text.
+    let engine = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let goldens = load_goldens(&engine);
+    let req = golden_request(&goldens[0], 0);
+    let mut all = Vec::new();
+    for policy in PolicyKind::ALL {
+        let opts = ServeOptions::new(policy, DeviceProfile::a6000());
+        let out = engine.serve(std::slice::from_ref(&req), &opts).unwrap();
+        all.push(out.tokens[0].clone());
+    }
+    for w in all.windows(2) {
+        assert_eq!(w[0], w[1]);
+    }
+}

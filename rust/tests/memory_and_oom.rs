@@ -1,0 +1,130 @@
+//! Memory accounting and OOM behaviour: Table II's mechanics — peak
+//! tracking, per-policy residency, and the MIF-OOM-on-22B verdict
+//! reproduced at meter level (without needing the 22B artifact).
+
+use std::path::{Path, PathBuf};
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::memory::{DeviceExpertCache, ExpertKey, MemoryMeter};
+use duoserve::workload::generate_requests;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+// ---------------- meter unit behaviour --------------------------------
+
+#[test]
+fn meter_tracks_peak_across_gauges() {
+    let mut m = MemoryMeter::new(100);
+    m.set_fixed(40).unwrap();
+    m.set_kv(30).unwrap();
+    m.set_kv(10).unwrap(); // shrink
+    assert_eq!(m.peak_bytes(), 70);
+    assert_eq!(m.current_bytes(), 50);
+}
+
+#[test]
+fn meter_reports_oom_component() {
+    let mut m = MemoryMeter::new(100);
+    m.set_fixed(90).unwrap();
+    let err = m.set_experts(20).unwrap_err();
+    assert_eq!(err.component, "expert cache");
+    assert_eq!(err.needed, 110);
+    assert_eq!(err.vram, 100);
+}
+
+#[test]
+fn meter_peak_includes_oom_attempt() {
+    let mut m = MemoryMeter::new(100);
+    m.set_fixed(90).unwrap();
+    let _ = m.set_experts(20);
+    assert_eq!(m.peak_bytes(), 110);
+}
+
+// ---------------- cache residency -------------------------------------
+
+#[test]
+fn cache_window_bounds_residency() {
+    // DuoServe discipline: k slots, 2-layer window -> <= 2k resident.
+    let mut c = DeviceExpertCache::new(2, 2);
+    for layer in 0..10 {
+        for e in 0..5 {
+            c.insert(ExpertKey::routed(layer, e), layer as f64 + e as f64);
+        }
+        assert!(c.resident_count() <= 4,
+                "window violated: {} resident", c.resident_count());
+    }
+}
+
+#[test]
+fn unlimited_window_accumulates() {
+    // MIF discipline: residency grows across layers (memory blowup).
+    let mut c = DeviceExpertCache::new(4, 0);
+    for layer in 0..6 {
+        for e in 0..4 {
+            c.insert(ExpertKey::routed(layer, e), 1.0);
+        }
+    }
+    assert_eq!(c.resident_count(), 24);
+}
+
+// ---------------- engine-level Table II shape -------------------------
+
+#[test]
+fn peak_memory_below_vram_for_all_policies_on_tiny() {
+    let e = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let reqs = generate_requests(&e.man, "orca", 2, 3);
+    for policy in PolicyKind::ALL {
+        let opts = ServeOptions::new(policy, DeviceProfile::a6000());
+        let out = e.serve(&reqs[..1], &opts).unwrap();
+        assert!(out.oom.is_none(), "{policy:?} OOM on tiny");
+        assert!(out.peak_bytes > 0);
+        assert!(out.peak_bytes <= DeviceProfile::a6000().vram_bytes);
+    }
+}
+
+#[test]
+fn mif_oom_when_vram_insufficient() {
+    // Shrink VRAM so MIF's accumulated cache blows the budget while
+    // DuoServe still fits — Table II's 22B story at meter level.
+    let e = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let reqs = generate_requests(&e.man, "squad", 1, 5);
+    let mut small = DeviceProfile::a5000();
+    // DuoServe tiny run peaks ~5.6GB (Mixtral-8x7B paper dims); pick a
+    // budget between DuoServe's and MIF's peaks.
+    let duo_peak = {
+        let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+        e.serve(&reqs, &opts).unwrap().peak_bytes
+    };
+    let mif_peak = {
+        let opts = ServeOptions::new(PolicyKind::Mif, DeviceProfile::a6000());
+        e.serve(&reqs, &opts).unwrap().peak_bytes
+    };
+    assert!(mif_peak > duo_peak);
+    small.vram_bytes = (duo_peak + mif_peak) / 2;
+
+    let duo = e
+        .serve(&reqs, &ServeOptions::new(PolicyKind::DuoServe, small.clone()))
+        .unwrap();
+    assert!(duo.oom.is_none(), "DuoServe should fit");
+    let mif = e
+        .serve(&reqs, &ServeOptions::new(PolicyKind::Mif, small))
+        .unwrap();
+    assert!(mif.oom.is_some(), "MIF should OOM at this budget");
+    assert!(mif.metrics.is_empty(), "OOM outcome reports no metrics");
+}
+
+#[test]
+fn kv_cache_grows_with_decode() {
+    // Longer outputs -> more KV bytes -> higher peak.
+    let e = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    let mut reqs = generate_requests(&e.man, "squad", 1, 9);
+    reqs[0].n_decode = 2;
+    let short = e.serve(&reqs, &opts).unwrap().peak_bytes;
+    reqs[0].n_decode = e.man.sim.max_decode;
+    let long = e.serve(&reqs, &opts).unwrap().peak_bytes;
+    assert!(long > short, "kv growth not reflected: {long} !> {short}");
+}

@@ -1,0 +1,200 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! in-tree seeded RNG as the case generator (no proptest crate in the
+//! offline image — same discipline: many random cases, shrunk seeds
+//! reported on failure via the assert message).
+
+use duoserve::memory::{DeviceExpertCache, ExpertKey};
+use duoserve::metrics::percentile;
+use duoserve::predictor::top_k;
+use duoserve::simx::{StreamId, Streams};
+use duoserve::util::{Json, Rng};
+
+const CASES: u64 = 200;
+
+// ---------------- cache invariants -------------------------------------
+
+#[test]
+fn prop_cache_never_exceeds_capacity_or_window() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed);
+        let cap = r.range(1, 8);
+        let window = r.range(0, 3);
+        let mut c = DeviceExpertCache::new(cap, window);
+        for step in 0..100 {
+            let key = ExpertKey::routed(r.below(12), r.below(16));
+            if r.bool_with(0.7) {
+                c.insert(key, step as f64);
+            } else {
+                c.touch(key, step as f64);
+            }
+            // capacity per layer
+            for layer in 0..12 {
+                assert!(c.resident_in_layer(layer).len() <= cap,
+                        "seed {seed}: layer over capacity");
+            }
+            if window > 0 {
+                let mut layers: Vec<usize> = (0..12)
+                    .filter(|&l| !c.resident_in_layer(l).is_empty())
+                    .collect();
+                layers.dedup();
+                assert!(layers.len() <= window,
+                        "seed {seed}: window violated: {layers:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_hits_plus_misses_equals_touches() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0xABCD);
+        let mut c = DeviceExpertCache::new(4, 0);
+        let mut touches = 0;
+        for i in 0..200 {
+            let key = ExpertKey::routed(r.below(4), r.below(8));
+            if r.bool_with(0.5) {
+                c.touch(key, i as f64);
+                touches += 1;
+            } else {
+                c.insert(key, i as f64);
+            }
+        }
+        let (h, m) = c.stats();
+        assert_eq!(h + m, touches, "seed {seed}");
+    }
+}
+
+// ---------------- stream timeline invariants ---------------------------
+
+#[test]
+fn prop_stream_ops_never_overlap_within_stream() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0x5EED);
+        let mut s = Streams::recording();
+        for _ in 0..60 {
+            let stream = match r.below(3) {
+                0 => StreamId::Compute,
+                1 => StreamId::Comm,
+                _ => StreamId::Predict,
+            };
+            let ready = r.f64() * 5.0;
+            let dur = r.f64() * 0.3;
+            s.run(stream, ready, dur, "op");
+        }
+        for sid in [StreamId::Compute, StreamId::Comm, StreamId::Predict] {
+            let mut ops: Vec<_> = s
+                .trace()
+                .iter()
+                .filter(|o| o.stream == sid)
+                .collect();
+            ops.sort_by(|a, b| a.start.total_cmp(&b.start));
+            for w in ops.windows(2) {
+                assert!(w[0].end <= w[1].start + 1e-12,
+                        "seed {seed}: intra-stream overlap");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stream_completion_monotone_in_issue_order() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0xF00D);
+        let mut s = Streams::new();
+        let mut last = 0.0;
+        for _ in 0..50 {
+            let t = s.run(StreamId::Comm, r.f64(), r.f64() * 0.1, "x");
+            assert!(t >= last, "seed {seed}: completion regressed");
+            last = t;
+        }
+    }
+}
+
+#[test]
+fn prop_op_starts_respect_ready_time() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0xBEEF);
+        let mut s = Streams::recording();
+        for _ in 0..40 {
+            let ready = r.f64() * 2.0;
+            let end = s.run(StreamId::Compute, ready, 0.01, "op");
+            assert!(end >= ready + 0.01 - 1e-12, "seed {seed}");
+        }
+        for op in s.trace() {
+            assert!(op.end - op.start >= 0.0);
+        }
+    }
+}
+
+// ---------------- top-k / percentile -----------------------------------
+
+#[test]
+fn prop_top_k_is_the_k_largest() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0x70C0);
+        let n = r.range(1, 64);
+        let k = r.range(1, n);
+        let scores: Vec<f32> = (0..n).map(|_| r.f64() as f32).collect();
+        let sel = top_k(&scores, k);
+        assert_eq!(sel.len(), k, "seed {seed}");
+        // every selected >= every unselected
+        let min_sel = sel
+            .iter()
+            .map(|&i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        for i in 0..n {
+            if !sel.contains(&i) {
+                assert!(scores[i] <= min_sel + 1e-9, "seed {seed}");
+            }
+        }
+        // sorted, unique
+        for w in sel.windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: not sorted-unique");
+        }
+    }
+}
+
+#[test]
+fn prop_percentile_bounds_and_monotonicity() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0x9C7);
+        let n = r.range(1, 100);
+        let mut v: Vec<f64> = (0..n).map(|_| r.f64() * 10.0).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile(&v, 50.0);
+        let p95 = percentile(&v, 95.0);
+        assert!(p50 <= p95, "seed {seed}");
+        assert!(p95 <= *v.last().unwrap() + 1e-12, "seed {seed}");
+        assert!(p50 >= v[0] - 1e-12, "seed {seed}");
+    }
+}
+
+// ---------------- json round-trip ---------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn gen(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool_with(0.5)),
+            2 => Json::Num((r.below(2_000_000) as f64) - 1_000_000.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", r.below(1000))),
+            4 => Json::Arr((0..r.below(5)).map(|_| gen(r, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..r.below(5) {
+                    m.insert(format!("k{i}"), gen(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0x15_0A);
+        let v = gen(&mut r, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
