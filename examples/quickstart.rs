@@ -1,13 +1,11 @@
-//! Quickstart: load a model's AOT artifacts, serve one request with
-//! DuoServe-MoE scheduling, print the generated tokens and QoS metrics.
+//! Quickstart: load a model's AOT artifacts (self-generated on first
+//! run), serve one request with DuoServe-MoE scheduling, print the
+//! generated tokens and QoS metrics.
 //!
-//!     make artifacts            # once (python, build-time only)
 //!     cargo run --release --example quickstart
 //!
 //! Optional args: [model] [device], e.g.
 //!     cargo run --release --example quickstart -- mixtral8x7b-sim a6000
-
-use std::path::Path;
 
 use anyhow::Result;
 
@@ -24,9 +22,10 @@ fn main() -> Result<()> {
         .and_then(|d| DeviceProfile::by_name(d))
         .unwrap_or_else(DeviceProfile::a5000);
 
-    // 1. Load the engine: compiles every AOT-lowered component (HLO
-    //    text -> PJRT executable) and maps the host expert pool.
-    let engine = Engine::load(Path::new("artifacts"), model)?;
+    // 1. Load the engine: every lowered component plus the host
+    //    expert pool (artifacts are generated on first use).
+    let artifacts = duoserve::testkit::ensure_model(model);
+    let engine = Engine::load(&artifacts, model)?;
     println!("loaded {model}: {} layers, {} experts (top-{}), \
               serving on simulated {}",
              engine.man.sim.n_layers, engine.man.sim.n_experts,

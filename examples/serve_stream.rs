@@ -1,0 +1,78 @@
+//! Open-loop serving under an arrival stream — the continuous-batching
+//! counterpart of `serve_workload`. A Poisson request stream is played
+//! through the event-driven serving loop at several arrival rates;
+//! TTFT/E2E are measured from each request's arrival (queueing delay
+//! included) and reported together with SLO attainment, DuoServe vs
+//! the on-demand-fetch baseline.
+//!
+//!     cargo run --release --example serve_stream -- \
+//!         [model] [device] [requests]
+
+use anyhow::Result;
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::metrics::{fmt_secs, slo_attainment, SloSpec};
+use duoserve::workload::{assign_arrivals, generate_requests, ArrivalProcess};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("mixtral-tiny");
+    let device = args
+        .get(1)
+        .and_then(|d| DeviceProfile::by_name(d))
+        .unwrap_or_else(DeviceProfile::a5000);
+    let n_requests: usize =
+        args.get(2).and_then(|v| v.parse().ok()).unwrap_or(12);
+
+    let artifacts = duoserve::testkit::ensure_model(model);
+    let engine = Engine::load(&artifacts, model)?;
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64 };
+
+    // Calibrate the SLO from an unloaded run: a single request served
+    // on an idle engine defines the no-queueing baseline.
+    let mut probe = generate_requests(&engine.man, "squad", 1, 7);
+    assign_arrivals(&mut probe, &ArrivalProcess::Closed);
+    let duo_opts = ServeOptions::new(PolicyKind::DuoServe, device.clone());
+    let base = engine.serve_continuous(&probe, &duo_opts, &ccfg)?;
+    let spec = SloSpec {
+        ttft: base.metrics[0].ttft * 2.0,
+        e2e: base.metrics[0].e2e * 2.0,
+    };
+    println!("{model} on simulated {}, {} requests; SLO ttft<={} e2e<={}\n",
+             device.name, n_requests, fmt_secs(spec.ttft),
+             fmt_secs(spec.e2e));
+
+    for rate in [0.5, 2.0, 8.0] {
+        println!("arrival rate {rate:.1} req/s (Poisson):");
+        for pol in [PolicyKind::Odf, PolicyKind::DuoServe] {
+            let mut reqs =
+                generate_requests(&engine.man, "squad", n_requests, 99);
+            assign_arrivals(&mut reqs,
+                            &ArrivalProcess::Poisson { rate, seed: 5 });
+            let opts = ServeOptions::new(pol, device.clone());
+            let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
+            if let Some(oom) = out.oom {
+                println!("  {:>8}: {oom}", pol.label());
+                continue;
+            }
+            let rep = slo_attainment(&out.metrics, &spec);
+            println!(
+                "  {:>8}: p50-ttft {:>8} p95-ttft {:>8} p95-e2e {:>8} \
+                 attainment ttft {:>5.1}% e2e {:>5.1}% rejected {}",
+                pol.label(),
+                fmt_secs(out.summary.p50_ttft),
+                fmt_secs(out.summary.p95_ttft),
+                fmt_secs(out.summary.p95_e2e),
+                rep.ttft_attainment * 100.0,
+                rep.e2e_attainment * 100.0,
+                out.rejected,
+            );
+        }
+        println!();
+    }
+    println!("(TTFT/E2E measured from arrival: queueing delay included.\n\
+              DuoServe's faster prefill/decode drains the queue sooner, \
+              which is where SLO attainment under load comes from.)");
+    Ok(())
+}

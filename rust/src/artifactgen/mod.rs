@@ -1,0 +1,686 @@
+//! Rust-native artifact generation — the offline half of the build
+//! when the python AOT pipeline is unavailable (the offline image has
+//! no PJRT). Mirrors `python/compile/{configs,weights,aot}.py`:
+//!
+//! * the model zoo (sim dims + paper cost-model dims, Table I);
+//! * structured synthetic weights — cluster-centred token embeddings,
+//!   gate columns with inter-layer affinity (`rho * parent + noise`)
+//!   and Zipf-ish popularity skew, so routing exhibits Fig. 2's
+//!   statistics and the predictor has something to predict;
+//! * component spec artifacts for the native runtime;
+//! * popularity/affinity matrices (Eq. 2–3) measured by running the
+//!   engine itself over a trace workload;
+//! * the deployed ExpertMLP artifact (a linear popularity+affinity
+//!   reader in MLP form — see `predictor_weights`);
+//! * held-out eval traces and golden token/routing records, produced
+//!   by the engine and frozen for the regression tests.
+//!
+//! Everything is keyed by the config seed and the in-tree RNG, so
+//! artifacts are reproducible byte-for-byte.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DeviceProfile, PolicyKind};
+use crate::coordinator::{Engine, ServeOptions};
+use crate::predictor::Tracer;
+use crate::util::{Json, Rng};
+use crate::workload::{generate_requests, N_CLUSTERS};
+
+/// History window of the deployed predictor
+/// (`python/compile/predictor.py::HISTORY_WINDOW`).
+pub const HISTORY_WINDOW: usize = 4;
+
+/// Marker file written last; its presence means the model's artifact
+/// tree is complete and consistent.
+pub const COMPLETE_MARKER: &str = ".complete";
+
+// ---------------------------------------------------------------------
+// model zoo (mirrors python/compile/configs.py)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub max_decode: usize,
+}
+
+impl SimSpec {
+    fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    fn kv_len(&self) -> usize {
+        self.max_seq + self.max_decode
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PaperSpec {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub bytes_per_param: f64,
+    pub total_params_b: f64,
+    pub active_params_b: f64,
+}
+
+impl PaperSpec {
+    fn expert_bytes(&self) -> u64 {
+        (3.0 * self.d_model as f64 * self.d_ff as f64 * self.bytes_per_param)
+            as u64
+    }
+    fn total_expert_bytes(&self) -> u64 {
+        self.expert_bytes() * (self.n_experts * self.n_layers) as u64
+    }
+    fn nonmoe_bytes(&self) -> u64 {
+        let total = (self.total_params_b * 1e9 * self.bytes_per_param) as u64;
+        let floor = (0.05 * total as f64) as u64;
+        total.saturating_sub(self.total_expert_bytes()).max(floor)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub sim: SimSpec,
+    pub paper: PaperSpec,
+    pub expert_buckets: Vec<usize>,
+    pub gate_affinity_rho: f64,
+    pub gate_popularity_scale: f64,
+    pub seed: u64,
+}
+
+pub fn zoo() -> Vec<ModelSpec> {
+    let mixtral_paper = PaperSpec {
+        n_layers: 32, d_model: 4096, d_ff: 14336, n_experts: 8, top_k: 2,
+        n_shared: 0, bytes_per_param: 0.5, total_params_b: 46.7,
+        active_params_b: 12.9,
+    };
+    vec![
+        ModelSpec {
+            name: "mixtral-tiny",
+            sim: SimSpec {
+                n_layers: 4, d_model: 64, d_ff: 128, n_experts: 8, top_k: 2,
+                n_shared: 0, n_heads: 4, vocab: 256, max_seq: 32,
+                max_decode: 32,
+            },
+            paper: mixtral_paper.clone(),
+            expert_buckets: vec![1, 4, 16, 32],
+            gate_affinity_rho: 0.85,
+            gate_popularity_scale: 0.7,
+            seed: 0,
+        },
+        ModelSpec {
+            name: "mixtral8x7b-sim",
+            sim: SimSpec {
+                n_layers: 8, d_model: 128, d_ff: 256, n_experts: 8, top_k: 2,
+                n_shared: 0, n_heads: 4, vocab: 512, max_seq: 128,
+                max_decode: 64,
+            },
+            paper: mixtral_paper,
+            expert_buckets: vec![1, 4, 16, 64, 128],
+            gate_affinity_rho: 0.85,
+            gate_popularity_scale: 0.7,
+            seed: 0,
+        },
+        ModelSpec {
+            name: "mixtral8x22b-sim",
+            sim: SimSpec {
+                n_layers: 14, d_model: 160, d_ff: 320, n_experts: 8, top_k: 2,
+                n_shared: 0, n_heads: 4, vocab: 512, max_seq: 128,
+                max_decode: 64,
+            },
+            paper: PaperSpec {
+                n_layers: 56, d_model: 6144, d_ff: 16384, n_experts: 8,
+                top_k: 2, n_shared: 0, bytes_per_param: 0.5,
+                total_params_b: 141.0, active_params_b: 39.0,
+            },
+            expert_buckets: vec![1, 4, 16, 64, 128],
+            gate_affinity_rho: 0.85,
+            gate_popularity_scale: 0.7,
+            seed: 0,
+        },
+        ModelSpec {
+            name: "qwen3-30b-a3b-sim",
+            sim: SimSpec {
+                n_layers: 12, d_model: 64, d_ff: 48, n_experts: 128,
+                top_k: 8, n_shared: 0, n_heads: 4, vocab: 512, max_seq: 128,
+                max_decode: 64,
+            },
+            paper: PaperSpec {
+                n_layers: 48, d_model: 2048, d_ff: 768, n_experts: 128,
+                top_k: 8, n_shared: 0, bytes_per_param: 1.0,
+                total_params_b: 30.5, active_params_b: 3.3,
+            },
+            expert_buckets: vec![1, 4, 16, 64, 128],
+            gate_affinity_rho: 0.9,
+            gate_popularity_scale: 0.7,
+            seed: 0,
+        },
+        ModelSpec {
+            name: "deepseek16b-sim",
+            sim: SimSpec {
+                n_layers: 7, d_model: 64, d_ff: 48, n_experts: 64, top_k: 6,
+                n_shared: 2, n_heads: 4, vocab: 512, max_seq: 128,
+                max_decode: 64,
+            },
+            paper: PaperSpec {
+                n_layers: 28, d_model: 2048, d_ff: 1408, n_experts: 64,
+                top_k: 6, n_shared: 2, bytes_per_param: 2.0,
+                total_params_b: 16.4, active_params_b: 2.8,
+            },
+            expert_buckets: vec![1, 4, 16, 64, 128],
+            gate_affinity_rho: 0.9,
+            gate_popularity_scale: 0.7,
+            seed: 0,
+        },
+    ]
+}
+
+pub fn spec(model: &str) -> Result<ModelSpec> {
+    zoo().into_iter()
+        .find(|m| m.name == model)
+        .with_context(|| format!("unknown model {model:?}"))
+}
+
+// ---------------------------------------------------------------------
+// sampling helpers
+// ---------------------------------------------------------------------
+
+/// Standard normal via Box-Muller over the in-tree RNG.
+fn normal(rng: &mut Rng) -> f64 {
+    let u1 = (1.0 - rng.f64()).max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (normal(rng) * scale) as f32).collect()
+}
+
+fn permutation(rng: &mut Rng, n: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut v);
+    v
+}
+
+/// Normalise each column of a row-major (d, e) matrix to unit L2 norm.
+fn normalise_cols(m: &mut [f32], d: usize, e: usize) {
+    for j in 0..e {
+        let mut s = 0.0f64;
+        for i in 0..d {
+            s += (m[i * e + j] as f64).powi(2);
+        }
+        let inv = 1.0 / s.sqrt().max(1e-12);
+        for i in 0..d {
+            m[i * e + j] = (m[i * e + j] as f64 * inv) as f32;
+        }
+    }
+}
+
+/// Cluster-structured token embeddings (weights.py::make_embedding):
+/// token t belongs to cluster t % N_CLUSTERS; embedding = centre+noise.
+fn make_embedding(s: &SimSpec, rng: &mut Rng) -> Vec<f32> {
+    let d = s.d_model;
+    let mut centres = normal_vec(rng, N_CLUSTERS * d, 1.0);
+    // normalise each centre row
+    for c in 0..N_CLUSTERS {
+        let row = &mut centres[c * d..(c + 1) * d];
+        let n: f64 = row.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        let inv = 1.0 / n.max(1e-12);
+        row.iter_mut().for_each(|v| *v = (*v as f64 * inv) as f32);
+    }
+    let noise_scale = 1.0 / (d as f64).sqrt();
+    let mut emb = vec![0.0f32; s.vocab * d];
+    for t in 0..s.vocab {
+        let c = t % N_CLUSTERS;
+        for i in 0..d {
+            emb[t * d + i] = 0.8 * centres[c * d + i]
+                + 0.35 * (normal(rng) * noise_scale) as f32;
+        }
+    }
+    emb
+}
+
+/// Gate columns with inter-layer affinity and popularity skew
+/// (weights.py::make_gates): per layer a row-major (d, e) matrix.
+fn make_gates(spec: &ModelSpec, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let (d, e, l) = (spec.sim.d_model, spec.sim.n_experts, spec.sim.n_layers);
+    let rho = spec.gate_affinity_rho;
+
+    // Zipf-ish popularity scale, shared across layers.
+    let ranks = permutation(rng, e);
+    let zipf: Vec<f64> = ranks.iter().map(|&r| 1.0 / (1.0 + r as f64)).collect();
+    let zmax = zipf.iter().cloned().fold(0.0f64, f64::max);
+    let zmean = zipf.iter().sum::<f64>() / e as f64;
+    let pop_scale: Vec<f64> = zipf
+        .iter()
+        .map(|&z| 1.0 + spec.gate_popularity_scale * (z / zmax - zmean))
+        .collect();
+
+    let parent = permutation(rng, e);
+    let mut gates: Vec<Vec<f32>> = Vec::with_capacity(l);
+
+    let mut cols = normal_vec(rng, d * e, 1.0);
+    normalise_cols(&mut cols, d, e);
+    let scale_cols = |m: &[f32]| -> Vec<f32> {
+        let mut out = m.to_vec();
+        for j in 0..e {
+            for i in 0..d {
+                out[i * e + j] = (out[i * e + j] as f64 * pop_scale[j] * 4.0)
+                    as f32;
+            }
+        }
+        out
+    };
+    gates.push(scale_cols(&cols));
+    let mut prev_unit = cols;
+
+    for _ in 1..l {
+        let mut noise = normal_vec(rng, d * e, 1.0);
+        normalise_cols(&mut noise, d, e);
+        let mut cols = vec![0.0f32; d * e];
+        let blend = (1.0 - rho * rho).sqrt();
+        for j in 0..e {
+            let p = parent[j];
+            for i in 0..d {
+                cols[i * e + j] = (rho * prev_unit[i * e + p] as f64
+                    + blend * noise[i * e + j] as f64)
+                    as f32;
+            }
+        }
+        normalise_cols(&mut cols, d, e);
+        gates.push(scale_cols(&cols));
+        prev_unit = cols;
+    }
+    gates
+}
+
+// ---------------------------------------------------------------------
+// file helpers
+// ---------------------------------------------------------------------
+
+fn write_f32_bin(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn jusize(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn jarr_usize(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| jusize(x)).collect())
+}
+
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// ---------------------------------------------------------------------
+// generation
+// ---------------------------------------------------------------------
+
+struct WeightWriter<'a> {
+    root: &'a Path,
+    entries: BTreeMap<String, Json>,
+}
+
+impl<'a> WeightWriter<'a> {
+    fn put(&mut self, name: &str, data: &[f32], shape: &[usize]) -> Result<()> {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>(),
+                         "{name}: data/shape mismatch");
+        let rel = format!("weights/{name}.bin");
+        write_f32_bin(&self.root.join(&rel), data)?;
+        self.entries.insert(
+            name.to_string(),
+            jobj(vec![("path", jstr(&rel)), ("shape", jarr_usize(shape))]),
+        );
+        Ok(())
+    }
+}
+
+/// The deployed ExpertMLP artifact: a single linear layer + sigmoid
+/// over the State Constructor's feature vector. The popularity and
+/// aggregated-affinity sections of s_l carry the trace statistics; the
+/// most-recent-history slot adds a self-transition hint. This is the
+/// shape a trained MLP collapses to on the synthetic routing
+/// distribution, constructed here analytically so the offline build
+/// needs no training loop (train_predictor.py produces the learned
+/// version when the python toolchain is present).
+fn predictor_weights(sim: &SimSpec) -> Json {
+    let e = sim.n_experts;
+    let input_dim = HISTORY_WINDOW * e + 2 * e + sim.n_layers;
+    let mut w = vec![0.0f64; input_dim * e];
+    for j in 0..e {
+        // most recent layer's selection (slot 0 of the history section)
+        w[j * e + j] = 0.75;
+        // popularity section
+        w[(HISTORY_WINDOW * e + j) * e + j] = 3.0;
+        // aggregated affinity section
+        w[(HISTORY_WINDOW * e + e + j) * e + j] = 6.0;
+    }
+    let bias = vec![-2.0f64; e];
+    jobj(vec![
+        ("kind", jstr("predictor")),
+        ("layers", Json::Arr(vec![jobj(vec![
+            ("dims", jarr_usize(&[input_dim, e])),
+            ("w", Json::Arr(w.into_iter().map(jnum).collect())),
+            ("b", Json::Arr(bias.into_iter().map(jnum).collect())),
+        ])])),
+    ])
+}
+
+fn component_files(spec: &ModelSpec, root: &Path)
+                   -> Result<BTreeMap<String, Json>> {
+    fs::create_dir_all(root.join("components"))?;
+    let mut comps = BTreeMap::new();
+    let mut put = |name: String, kind: &str| -> Result<()> {
+        let rel = format!("components/{name}.json");
+        let body = jobj(vec![("kind", jstr(kind)), ("name", jstr(&name))]);
+        fs::write(root.join(&rel), format!("{body}"))?;
+        comps.insert(name, jstr(&rel));
+        Ok(())
+    };
+    let s = spec.sim.max_seq;
+    put(format!("embed_t{s}"), "embed")?;
+    put("embed_t1".to_string(), "embed")?;
+    put("attn_prefill".to_string(), "attn_prefill")?;
+    put("attn_decode".to_string(), "attn_decode")?;
+    put(format!("gate_t{s}"), "gate")?;
+    put("gate_t1".to_string(), "gate")?;
+    put("lm_head".to_string(), "lm_head")?;
+    for &b in &spec.expert_buckets {
+        put(format!("expert_t{b}"), "expert")?;
+    }
+    Ok(comps)
+}
+
+fn build_manifest(spec: &ModelSpec, comps: BTreeMap<String, Json>,
+                  weights: BTreeMap<String, Json>) -> Json {
+    let s = &spec.sim;
+    let p = &spec.paper;
+    let sim = jobj(vec![
+        ("n_layers", jusize(s.n_layers)),
+        ("d_model", jusize(s.d_model)),
+        ("d_ff", jusize(s.d_ff)),
+        ("n_experts", jusize(s.n_experts)),
+        ("top_k", jusize(s.top_k)),
+        ("n_shared", jusize(s.n_shared)),
+        ("n_heads", jusize(s.n_heads)),
+        ("vocab", jusize(s.vocab)),
+        ("max_seq", jusize(s.max_seq)),
+        ("max_decode", jusize(s.max_decode)),
+        ("head_dim", jusize(s.head_dim())),
+        ("kv_len", jusize(s.kv_len())),
+    ]);
+    let paper = jobj(vec![
+        ("n_layers", jusize(p.n_layers)),
+        ("d_model", jusize(p.d_model)),
+        ("d_ff", jusize(p.d_ff)),
+        ("n_experts", jusize(p.n_experts)),
+        ("top_k", jusize(p.top_k)),
+        ("n_shared", jusize(p.n_shared)),
+        ("bytes_per_param", jnum(p.bytes_per_param)),
+        ("total_params_b", jnum(p.total_params_b)),
+        ("active_params_b", jnum(p.active_params_b)),
+        ("expert_bytes", jusize(p.expert_bytes() as usize)),
+        ("nonmoe_bytes", jusize(p.nonmoe_bytes() as usize)),
+        ("total_expert_bytes", jusize(p.total_expert_bytes() as usize)),
+    ]);
+    let e = s.n_experts;
+    let predictor = jobj(vec![
+        ("hlo", jstr("predictor_mlp.json")),
+        ("input_dim", jusize(HISTORY_WINDOW * e + 2 * e + s.n_layers)),
+        ("history_window", jusize(HISTORY_WINDOW)),
+        ("hidden_dims", Json::Arr(Vec::new())),
+        ("popularity", jstr("popularity.bin")),
+        ("affinity", jstr("affinity.bin")),
+        ("eval_traces", jstr("eval_traces.json")),
+        ("accuracy", Json::Obj(BTreeMap::new())),
+        ("train_episodes", jusize(0)),
+    ]);
+    jobj(vec![
+        ("name", jstr(spec.name)),
+        ("sim", sim),
+        ("paper", paper),
+        ("expert_buckets", jarr_usize(&spec.expert_buckets)),
+        ("gate_affinity_rho", jnum(spec.gate_affinity_rho)),
+        ("gate_popularity_scale", jnum(spec.gate_popularity_scale)),
+        ("seed", jusize(spec.seed as usize)),
+        ("components", Json::Obj(comps)),
+        ("weights", Json::Obj(weights)),
+        ("predictor", predictor),
+        ("goldens", jstr("goldens.json")),
+    ])
+}
+
+/// Serve requests one at a time and feed the activation paths into a
+/// tracer; returns the tracer and per-request (tokens, routing).
+#[allow(clippy::type_complexity)]
+fn run_traces(engine: &Engine, reqs: &[crate::workload::Request])
+              -> Result<(Tracer, Vec<(Vec<i32>, Vec<Vec<Vec<usize>>>)>)> {
+    let opts = ServeOptions::new(PolicyKind::Odf, DeviceProfile::a6000());
+    let mut tracer = Tracer::new();
+    let mut outs = Vec::new();
+    for r in reqs {
+        let out = engine.serve(std::slice::from_ref(r), &opts)?;
+        if let Some(oom) = out.oom {
+            bail!("artifact trace run hit {oom}");
+        }
+        for ep in &out.episodes {
+            tracer.begin_episode(&ep.dataset);
+            for step in &ep.steps {
+                tracer.record_step(step.clone());
+            }
+            tracer.end_episode();
+        }
+        outs.push((out.tokens[0].clone(), out.episodes[0].steps.clone()));
+    }
+    Ok((tracer, outs))
+}
+
+fn episodes_json(reqs: &[crate::workload::Request],
+                 outs: &[(Vec<i32>, Vec<Vec<Vec<usize>>>)]) -> Json {
+    Json::Arr(
+        reqs.iter()
+            .zip(outs)
+            .map(|(r, (_tokens, steps))| {
+                jobj(vec![
+                    ("dataset", jstr(&r.dataset)),
+                    ("steps", Json::Arr(steps.iter().map(|step| {
+                        Json::Arr(step.iter().map(|sel| jarr_usize(sel))
+                                  .collect())
+                    }).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Generate the full artifact tree for one model under
+/// `<artifacts_dir>/<model>/`. Idempotent: regenerates from scratch.
+pub fn generate(artifacts_dir: &Path, model: &str) -> Result<PathBuf> {
+    let spec = spec(model)?;
+    let root = artifacts_dir.join(model);
+    fs::create_dir_all(root.join("weights"))?;
+    // Invalidate any previous tree first: if this run is interrupted
+    // partway, the absent marker forces a clean regeneration instead
+    // of serving a mixed old/new artifact set.
+    let marker = root.join(COMPLETE_MARKER);
+    if marker.exists() {
+        fs::remove_file(&marker)?;
+    }
+
+    let s = spec.sim.clone();
+    let (d, f, e) = (s.d_model, s.d_ff, s.n_experts);
+    let sd = 1.0 / (d as f64).sqrt();
+    let sf = 1.0 / (f as f64).sqrt();
+
+    // ---- weights ---------------------------------------------------
+    let mut rng = Rng::seed_from(spec.seed.wrapping_mul(0xA076_1D64_78BD_642F)
+        ^ model.bytes().map(|b| b as u64).sum::<u64>());
+    let gates = make_gates(&spec, &mut rng);
+    let mut ww = WeightWriter { root: &root, entries: BTreeMap::new() };
+
+    ww.put("emb", &make_embedding(&s, &mut rng), &[s.vocab, d])?;
+    ww.put("pos_emb", &normal_vec(&mut rng, s.kv_len() * d, 0.02),
+           &[s.kv_len(), d])?;
+    for l in 0..s.n_layers {
+        ww.put(&format!("layer{l}.ln_attn"), &vec![1.0f32; d], &[d])?;
+        for w in ["wq", "wk", "wv", "wo"] {
+            ww.put(&format!("layer{l}.{w}"),
+                   &normal_vec(&mut rng, d * d, sd), &[d, d])?;
+        }
+        ww.put(&format!("layer{l}.ln_moe"), &vec![1.0f32; d], &[d])?;
+        ww.put(&format!("layer{l}.wg"), &gates[l], &[d, e])?;
+        for ei in 0..e {
+            // blob layout = w1 (d,f) | w3 (d,f) | w2 (f,d), matching
+            // HostPool::load's split.
+            let mut blob = normal_vec(&mut rng, 2 * d * f, sd);
+            blob.extend(normal_vec(&mut rng, f * d, sf));
+            ww.put(&format!("layer{l}.expert{ei}"), &blob, &[3, d, f])?;
+        }
+        for si in 0..s.n_shared {
+            let mut blob = normal_vec(&mut rng, 2 * d * f, sd);
+            blob.extend(normal_vec(&mut rng, f * d, sf));
+            ww.put(&format!("layer{l}.shared{si}"), &blob, &[3, d, f])?;
+        }
+    }
+    ww.put("ln_final", &vec![1.0f32; d], &[d])?;
+    ww.put("w_out", &normal_vec(&mut rng, d * s.vocab, sd), &[d, s.vocab])?;
+    let weight_entries = ww.entries;
+
+    // ---- components + predictor + placeholder matrices -------------
+    let comps = component_files(&spec, &root)?;
+    fs::write(root.join("predictor_mlp.json"),
+              format!("{}", predictor_weights(&s)))?;
+    let uniform_p = vec![1.0f32 / e as f32; s.n_layers * e];
+    write_f32_bin(&root.join("popularity.bin"), &uniform_p)?;
+    let uniform_a = vec![1.0f32 / e as f32; (s.n_layers - 1) * e * e];
+    write_f32_bin(&root.join("affinity.bin"), &uniform_a)?;
+    // goldens placeholder so Manifest consumers can resolve the path
+    fs::write(root.join("goldens.json"), "[]")?;
+    fs::write(root.join("eval_traces.json"), "[]")?;
+
+    let manifest = build_manifest(&spec, comps, weight_entries);
+    fs::write(root.join("manifest.json"), format!("{manifest}"))?;
+
+    // ---- measured popularity / affinity matrices -------------------
+    // Run the engine over a trace workload (ODF: pure function, no
+    // predictor in the loop) and freeze Eq. 2–3 statistics.
+    {
+        let engine = Engine::load(artifacts_dir, model)
+            .context("loading engine for trace collection")?;
+        let mut reqs = Vec::new();
+        for ds in ["squad", "orca"] {
+            for mut r in generate_requests(&engine.man, ds, 6,
+                                           spec.seed ^ 0x7ace) {
+                r.n_decode = r.n_decode.min(8);
+                reqs.push(r);
+            }
+        }
+        let (tracer, _) = run_traces(&engine, &reqs)?;
+        let pop = tracer.popularity(s.n_layers, e);
+        let mut flat_p = Vec::with_capacity(s.n_layers * e);
+        for row in &pop {
+            flat_p.extend(row.iter().map(|&v| v as f32));
+        }
+        write_f32_bin(&root.join("popularity.bin"), &flat_p)?;
+        let aff = tracer.affinity(s.n_layers, e);
+        let mut flat_a = Vec::with_capacity((s.n_layers - 1) * e * e);
+        for layer in &aff {
+            for row in layer {
+                flat_a.extend(row.iter().map(|&v| v as f32));
+            }
+        }
+        write_f32_bin(&root.join("affinity.bin"), &flat_a)?;
+    }
+
+    // ---- eval traces + goldens (fresh engine: real matrices) -------
+    {
+        let engine = Engine::load(artifacts_dir, model)
+            .context("loading engine for goldens")?;
+        let mut eval_reqs = Vec::new();
+        for ds in ["squad", "orca"] {
+            for mut r in generate_requests(&engine.man, ds, 3,
+                                           spec.seed ^ 0xe7a1) {
+                r.n_decode = r.n_decode.min(6);
+                eval_reqs.push(r);
+            }
+        }
+        let (_, eval_outs) = run_traces(&engine, &eval_reqs)?;
+        fs::write(root.join("eval_traces.json"),
+                  format!("{}", episodes_json(&eval_reqs, &eval_outs)))?;
+
+        let mut golden_reqs = Vec::new();
+        for (i, ds) in ["squad", "orca", "squad"].iter().enumerate() {
+            let mut r = generate_requests(&engine.man, ds, i + 1,
+                                          spec.seed ^ 0x601d)
+                .pop()
+                .expect("nonempty request batch");
+            r.req_id = i;
+            r.n_decode = 4 + i;
+            golden_reqs.push(r);
+        }
+        let (_, golden_outs) = run_traces(&engine, &golden_reqs)?;
+        let goldens = Json::Arr(
+            golden_reqs
+                .iter()
+                .zip(&golden_outs)
+                .map(|(r, (tokens, steps))| {
+                    jobj(vec![
+                        ("dataset", jstr(&r.dataset)),
+                        ("prompt", Json::Arr(
+                            r.prompt.iter().map(|&t| Json::from(t)).collect())),
+                        ("n_decode", jusize(r.n_decode)),
+                        ("tokens", Json::Arr(
+                            tokens.iter().map(|&t| Json::from(t)).collect())),
+                        ("decode_routing", Json::Arr(steps.iter().map(|step| {
+                            Json::Arr(step.iter().map(|sel| jarr_usize(sel))
+                                      .collect())
+                        }).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        fs::write(root.join("goldens.json"), format!("{goldens}"))?;
+    }
+
+    fs::write(root.join(COMPLETE_MARKER), "ok")?;
+    Ok(root)
+}
+
+/// Generate every model in the zoo.
+pub fn generate_all(artifacts_dir: &Path) -> Result<()> {
+    for m in zoo() {
+        eprintln!("generating artifacts for {} ...", m.name);
+        generate(artifacts_dir, m.name)?;
+    }
+    Ok(())
+}

@@ -18,11 +18,13 @@ use crate::config::{DeviceProfile, Manifest, PolicyKind, SystemConfig};
 use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, MemoryMeter, OomError};
 use crate::metrics::{summarize, PredictorAccuracy, RequestMetrics, Summary};
 use crate::predictor::{Episode, Matrices, MlpPredictor, StateConstructor};
-use crate::runtime::{ArgRef, Executable, Runtime, Tensor};
+use crate::runtime::{ArgRef, Executable, Literal, Runtime, Tensor};
 use crate::simx::{CostModel, OpRecord, StreamId, Streams};
 use crate::workload::Request;
 
 use super::policy::{Policy, SimCtx};
+use super::scheduler::{ContinuousConfig, ContinuousScheduler, Decision,
+                       ServerEvent};
 
 /// Paper-scale vocabulary for head-cost estimation (Mixtral's 32k).
 const PAPER_VOCAB: f64 = 32_000.0;
@@ -78,6 +80,11 @@ pub struct ServeOutcome {
     pub episodes: Vec<Episode>,
     /// Generated token ids per request (golden-test hook).
     pub tokens: Vec<Vec<i32>>,
+    /// Arrivals dropped at the admission queue (continuous mode).
+    pub rejected: u64,
+    /// The virtual-time schedule of the continuous serving loop
+    /// (empty in phase-bulk mode).
+    pub events: Vec<ServerEvent>,
 }
 
 impl ServeOutcome {
@@ -107,8 +114,8 @@ struct ReqState {
     valid: usize,
     pos: usize,
     h: Tensor,
-    kcs: Vec<xla::Literal>,
-    vcs: Vec<xla::Literal>,
+    kcs: Vec<Literal>,
+    vcs: Vec<Literal>,
     tokens: Vec<i32>,
     done: bool,
     state_con: StateConstructor,
@@ -123,6 +130,17 @@ struct ReqState {
     step_path: Vec<Vec<usize>>,
     /// All completed decode steps' paths (tracer output).
     all_paths: Vec<Vec<Vec<usize>>>,
+    /// Virtual arrival instant (continuous mode; 0 closed-loop).
+    arrival: f64,
+    /// Prefill issue instant minus arrival (continuous mode).
+    queue_delay: f64,
+    /// Whether the request ever got a serving slot (false for
+    /// admission-queue rejections in continuous mode).
+    served: bool,
+    /// Completion instant of this request's latest prefill/decode
+    /// event (per-request step-latency bookkeeping in continuous
+    /// mode, where requests join mid-stream).
+    last_event_t: f64,
 }
 
 pub struct Engine {
@@ -323,6 +341,38 @@ impl Engine {
     // Serving
     // -----------------------------------------------------------------
 
+    fn new_state(&self, i: usize, r: &Request, sim: &crate::config::SimDims,
+                 kv_shape: &[usize]) -> ReqState {
+        ReqState {
+            idx: i,
+            dataset: r.dataset.clone(),
+            prompt: r.prompt.clone(),
+            n_decode: r.n_decode,
+            valid: r.prompt.len(),
+            pos: r.prompt.len(),
+            h: Tensor::zeros(&[1, sim.d_model]),
+            // Literal == Tensor on the native backend: build the KV
+            // literals directly rather than allocating twice through
+            // to_literal().
+            kcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
+            vcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
+            tokens: Vec::new(),
+            done: false,
+            state_con: StateConstructor::new(&self.man),
+            pending_pred: vec![None; sim.n_layers],
+            acc: PredictorAccuracy::default(),
+            ttft: 0.0,
+            e2e: 0.0,
+            step_latencies: Vec::new(),
+            step_path: Vec::new(),
+            all_paths: Vec::new(),
+            arrival: r.arrival,
+            queue_delay: 0.0,
+            served: false,
+            last_event_t: 0.0,
+        }
+    }
+
     pub fn serve(&self, requests: &[Request], opts: &ServeOptions)
                  -> Result<ServeOutcome> {
         let sys = SystemConfig::for_policy(opts.policy);
@@ -341,30 +391,10 @@ impl Engine {
         let mut states: Vec<ReqState> = requests
             .iter()
             .enumerate()
-            .map(|(i, r)| ReqState {
-                idx: i,
-                dataset: r.dataset.clone(),
-                prompt: r.prompt.clone(),
-                n_decode: r.n_decode,
-                valid: r.prompt.len(),
-                pos: r.prompt.len(),
-                h: Tensor::zeros(&[1, sim.d_model]),
-                kcs: (0..sim.n_layers)
-                    .map(|_| Tensor::zeros(&kv_shape).to_literal().unwrap())
-                    .collect(),
-                vcs: (0..sim.n_layers)
-                    .map(|_| Tensor::zeros(&kv_shape).to_literal().unwrap())
-                    .collect(),
-                tokens: Vec::new(),
-                done: false,
-                state_con: StateConstructor::new(&self.man),
-                pending_pred: vec![None; sim.n_layers],
-                acc: PredictorAccuracy::default(),
-                ttft: 0.0,
-                e2e: 0.0,
-                step_latencies: Vec::new(),
-                step_path: Vec::new(),
-                all_paths: Vec::new(),
+            .map(|(i, r)| {
+                let mut st = self.new_state(i, r, &sim, &kv_shape);
+                st.served = true; // phase-bulk admits everything up front
+                st
             })
             .collect();
 
@@ -407,7 +437,7 @@ impl Engine {
             let t0 = streams.free_at(StreamId::Compute);
             let res = self.prefill_one(&mut states[ridx], policy.as_mut(),
                                        &mut streams, &mut cache, &mut meter,
-                                       &cost, expert_bytes, &sim)?;
+                                       &cost, expert_bytes, &sim, t0)?;
             let t_first = check!(res);
             states[ridx].ttft = t_first - t0;
             states[ridx].e2e = t_first;
@@ -463,12 +493,16 @@ impl Engine {
     }
 
     /// Prefill one request: embed -> L x (attention, gate, MoE) -> head.
+    /// The first op is issued no earlier than `start_at` (continuous
+    /// mode anchors it at the admission instant so an idle server does
+    /// not back-date work before the request arrived).
     /// Returns the virtual time of the first token (TTFT instant).
     #[allow(clippy::too_many_arguments)]
     fn prefill_one(&self, st: &mut ReqState, policy: &mut dyn Policy,
                    streams: &mut Streams, cache: &mut DeviceExpertCache,
                    meter: &mut MemoryMeter, cost: &CostModel,
-                   expert_bytes: u64, sim: &crate::config::SimDims)
+                   expert_bytes: u64, sim: &crate::config::SimDims,
+                   start_at: f64)
                    -> Result<std::result::Result<f64, OomError>> {
         let nm = &self.host.nonmoe;
         let valid = st.valid;
@@ -481,9 +515,8 @@ impl Engine {
         let out = self.comps.embed_prefill.run_mixed(&[
             ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(), nm.pos_emb.arg(),
         ])?;
-        let mut h = Tensor::from_literal(&out[0])?;
-        let mut t_layer = streams.run(StreamId::Compute,
-                                      streams.free_at(StreamId::Compute),
+        let mut h = out.into_iter().next().unwrap();
+        let mut t_layer = streams.run(StreamId::Compute, start_at,
                                       cost.head_compute(valid, PAPER_VOCAB),
                                       "embed");
 
@@ -497,15 +530,16 @@ impl Engine {
                 ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
             ])?;
             let mut it = out.into_iter();
-            h = Tensor::from_literal(&it.next().unwrap())?;
+            h = it.next().unwrap();
             st.kcs[l] = it.next().unwrap();
             st.vcs[l] = it.next().unwrap();
 
             // functional gate
             let out = self.comps.gate_prefill.run_mixed(&[
                 ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
-            let probs_t = Tensor::from_literal(&out[0])?;
-            let hn_t = Tensor::from_literal(&out[1])?;
+            let mut git = out.into_iter();
+            let probs_t = git.next().unwrap();
+            let hn_t = git.next().unwrap();
 
             // timing: attention + gate on the compute stream
             let t_layer_start = t_layer;
@@ -584,7 +618,7 @@ impl Engine {
                 ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
                 nm.pos_emb.arg(),
             ])?;
-            st.h = Tensor::from_literal(&out[0])?;
+            st.h = out.into_iter().next().unwrap();
         }
 
         let ctx_max = active.iter().map(|&r| states[r].pos + 1).max().unwrap();
@@ -604,13 +638,13 @@ impl Engine {
                     ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
                 ])?;
                 let mut it = out.into_iter();
-                st.h = Tensor::from_literal(&it.next().unwrap())?;
+                st.h = it.next().unwrap();
                 st.kcs[l] = it.next().unwrap();
                 st.vcs[l] = it.next().unwrap();
                 let out = self.comps.gate_decode.run_mixed(&[
                     ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
-                probs.push(Tensor::from_literal(&out[0])?.as_f32()?.to_vec());
-                hn.push(Tensor::from_literal(&out[1])?.as_f32()?.to_vec());
+                probs.push(out[0].as_f32()?.to_vec());
+                hn.push(out[1].as_f32()?.to_vec());
             }
 
             // timing: non-MoE
@@ -736,6 +770,7 @@ impl Engine {
                       -> ServeOutcome {
         let metrics: Vec<RequestMetrics> = states
             .iter()
+            .filter(|s| s.served)
             .map(|s| RequestMetrics {
                 req_id: s.idx,
                 ttft: s.ttft,
@@ -743,6 +778,8 @@ impl Engine {
                 tokens_out: s.tokens.len(),
                 prompt_len: s.valid,
                 step_latencies: s.step_latencies.clone(),
+                arrival: s.arrival,
+                queue_delay: s.queue_delay,
             })
             .collect();
         let makespan = streams.sync_all();
@@ -771,7 +808,172 @@ impl Engine {
             },
             episodes,
             tokens: states.iter().map(|s| s.tokens.clone()).collect(),
+            rejected: 0,
+            events: Vec::new(),
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Continuous (event-driven) serving
+    // -----------------------------------------------------------------
+
+    /// Serve an open-loop request stream with continuous batching: an
+    /// event-driven loop over virtual time that admits new prefills
+    /// between decode iterations (FIFO, bounded queue, max-in-flight
+    /// budget) instead of draining phases in bulk. TTFT and E2E are
+    /// measured from each request's *arrival*, so queueing delay is
+    /// part of the reported QoS — the quantity SLO attainment is
+    /// defined over.
+    pub fn serve_continuous(&self, requests: &[Request],
+                            opts: &ServeOptions, ccfg: &ContinuousConfig)
+                            -> Result<ServeOutcome> {
+        let sys = SystemConfig::for_policy(opts.policy);
+        let cost = CostModel::new(&self.man, opts.device.clone());
+        let mut streams = if opts.record_streams {
+            Streams::recording()
+        } else {
+            Streams::new()
+        };
+        let mut cache = self.make_cache(opts.policy, &sys);
+        let mut meter = MemoryMeter::new(opts.device.vram_bytes);
+        let mut policy = self.make_policy(opts.policy, &sys, opts.ablation);
+
+        let sim = self.man.sim.clone();
+        let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+        let mut states: Vec<ReqState> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| self.new_state(i, r, &sim, &kv_shape))
+            .collect();
+
+        let layer_scale = self.layer_scale();
+        let expert_bytes =
+            (self.man.paper.expert_bytes as f64 * layer_scale) as u64;
+
+        let arrival_times: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
+        let mut sched = ContinuousScheduler::new(&arrival_times, ccfg);
+
+        macro_rules! sim_ctx {
+            () => {
+                SimCtx {
+                    streams: &mut streams,
+                    cache: &mut cache,
+                    meter: &mut meter,
+                    cost: &cost,
+                    expert_bytes,
+                    n_layers: sim.n_layers,
+                    n_experts: sim.n_experts,
+                    top_k: sim.top_k,
+                }
+            };
+        }
+        macro_rules! check {
+            ($e:expr) => {
+                match $e {
+                    Ok(v) => v,
+                    Err(oom) => {
+                        let mut out =
+                            self.oom_outcome(oom, &streams, &states, opts);
+                        out.rejected = sched.rejected();
+                        out.events = sched.events().to_vec();
+                        return Ok(out);
+                    }
+                }
+            };
+        }
+
+        check!(meter.set_fixed(self.man.paper.nonmoe_bytes));
+        check!(meter.set_activations(sys.activation_bytes));
+
+        macro_rules! sync_kv {
+            () => {{
+                let kv_total: u64 = states
+                    .iter()
+                    .filter(|s| s.served && !s.done)
+                    .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
+                    .sum();
+                check!(meter.set_kv(kv_total));
+            }};
+        }
+
+        let mut now = 0.0f64;
+        loop {
+            match sched.next_decision(now) {
+                Decision::AdmitPrefill(r) => {
+                    check!(policy.begin_request(&mut sim_ctx!()));
+                    {
+                        let st = &mut states[r];
+                        st.served = true;
+                        st.queue_delay = now - st.arrival;
+                    }
+                    let res = self.prefill_one(&mut states[r],
+                                               policy.as_mut(), &mut streams,
+                                               &mut cache, &mut meter, &cost,
+                                               expert_bytes, &sim, now)?;
+                    let t_first = check!(res);
+                    {
+                        let st = &mut states[r];
+                        st.ttft = t_first - st.arrival;
+                        st.e2e = t_first - st.arrival;
+                        st.last_event_t = t_first;
+                    }
+                    // Completion (tokens >= n_decode) is evaluated only
+                    // after decode steps, exactly as in phase-bulk
+                    // serve(): both modes emit identical token streams
+                    // even for n_decode = 1.
+                    sched.record(ServerEvent::PrefillDone { req: r,
+                                                            at: t_first });
+                    now = t_first;
+                    sync_kv!();
+                }
+                Decision::DecodeStep => {
+                    let active: Vec<usize> = sched.running().to_vec();
+                    let res = self.decode_step(&active, &mut states,
+                                               policy.as_mut(), &mut streams,
+                                               &mut cache, &mut meter, &cost,
+                                               expert_bytes, &sim,
+                                               opts.ablation)?;
+                    let t_end = check!(res);
+                    policy.end_decode_step(&mut sim_ctx!());
+                    for &r in &active {
+                        let st = &mut states[r];
+                        st.step_latencies.push(t_end - st.last_event_t);
+                        st.last_event_t = t_end;
+                        st.e2e = t_end - st.arrival;
+                        let path = std::mem::take(&mut st.step_path);
+                        st.all_paths.push(path);
+                        st.state_con.clear();
+                        st.pending_pred.iter_mut().for_each(|p| *p = None);
+                        if st.tokens.len() >= st.n_decode
+                            || st.pos >= sim.kv_len
+                        {
+                            st.done = true;
+                        }
+                    }
+                    sched.record(ServerEvent::StepDone {
+                        batch: active.clone(),
+                        at: t_end,
+                    });
+                    for &r in &active {
+                        if states[r].done {
+                            sched.retire(r, t_end);
+                        }
+                    }
+                    now = t_end;
+                    sync_kv!();
+                }
+                Decision::IdleUntil(t) => {
+                    now = t;
+                }
+                Decision::Finished => break,
+            }
+        }
+
+        let mut out =
+            self.finish_outcome(&states, &streams, &cache, &meter, None, opts);
+        out.rejected = sched.rejected();
+        out.events = sched.into_events();
+        Ok(out)
     }
 }
 

@@ -1,9 +1,12 @@
 //! The serving coordinator — the paper's system contribution.
 //!
-//! * [`engine`] — functional execution + virtual-time orchestration.
+//! * [`engine`] — functional execution + virtual-time orchestration
+//!   (phase-bulk `serve` and event-driven `serve_continuous`).
 //! * [`policy`] — the scheduling-policy abstraction (timing side).
 //! * [`duoserve`] — the DuoServe-MoE dual-phase policy itself.
-//! * [`scheduler`] — request admission / batch composition.
+//! * [`scheduler`] — request admission: the bounded FIFO queue and
+//!   lockstep batch composer (phase-bulk), and the event-driven
+//!   continuous-batching scheduler.
 
 pub mod duoserve;
 pub mod engine;
@@ -13,4 +16,5 @@ pub mod scheduler;
 pub use duoserve::DuoServePolicy;
 pub use engine::{Ablation, Engine, ServeOptions, ServeOutcome};
 pub use policy::{Policy, SimCtx};
-pub use scheduler::{BatchComposer, RequestQueue};
+pub use scheduler::{BatchComposer, ContinuousConfig, ContinuousScheduler,
+                    Decision, RequestQueue, ServerEvent};

@@ -17,6 +17,7 @@
 //! from a calibrated virtual-time cost model over the paper's real
 //! model dimensions (see DESIGN.md §1).
 
+pub mod artifactgen;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
@@ -26,5 +27,6 @@ pub mod predictor;
 pub mod runtime;
 pub mod simx;
 pub mod figures;
+pub mod testkit;
 pub mod util;
 pub mod workload;

@@ -12,10 +12,10 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{Engine, ServeOptions};
-use duoserve::metrics::{fmt_gb, fmt_secs, Table};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment, SloSpec, Table};
 use duoserve::util::args::Args;
-use duoserve::workload::generate_requests;
+use duoserve::workload::{assign_arrivals, generate_requests, ArrivalProcess};
 
 
 mod duoserve_server;
@@ -28,14 +28,20 @@ USAGE: duoserve [--artifacts DIR] <command> [options]
 COMMANDS:
   run           --model M --policy P --device D --dataset DS
                 --requests N --batch B --seed S
+                --mode phase-bulk|continuous
+                (continuous mode: --rate R requests/s Poisson arrivals,
+                 --max-in-flight K --queue-cap Q
+                 --slo-ttft SECS --slo-e2e SECS)
   compare       --model M --device D --dataset DS --requests N --seed S
   trace         --model M --dataset DS --requests N --seed S
-  bench-figure  <fig2|fig5|fig6|fig7|table2|table3|all>
+  bench-figure  <fig2|fig5|fig6|fig7|table2|table3|ablation|all>
                 [--requests N] [--seed S]
   serve         --model M --policy P --device D
+  gen-artifacts --model M | --all     (rust-native artifact build)
 
 DEFAULTS: model=mixtral8x7b-sim policy=duoserve device=a5000
           dataset=squad requests=8 batch=1 seed=42 artifacts=artifacts
+          mode=phase-bulk rate=2.0 max-in-flight=4 queue-cap=64
 ";
 
 fn device(name: &str) -> Result<DeviceProfile> {
@@ -48,7 +54,7 @@ fn policy(name: &str) -> Result<PolicyKind> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["trace-streams"])?;
+    let args = Args::parse(std::env::args().skip(1), &["trace-streams", "all"])?;
     if args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -60,6 +66,70 @@ fn main() -> Result<()> {
     let seed = args.u64("seed", 42)?;
 
     match args.positional[0].as_str() {
+        "run" if args.str("mode", "phase-bulk") == "continuous" => {
+            let pol = policy(&args.str("policy", "duoserve"))?;
+            let dev = device(&args.str("device", "a5000"))?;
+            let engine = Engine::load(&artifacts, &model)?;
+            let mut reqs =
+                generate_requests(&engine.man, &dataset, requests, seed);
+            let rate = args.f64("rate", 2.0)?;
+            let process = if rate > 0.0 {
+                ArrivalProcess::Poisson { rate, seed }
+            } else {
+                ArrivalProcess::Closed
+            };
+            assign_arrivals(&mut reqs, &process);
+            let ccfg = ContinuousConfig {
+                max_in_flight: args.usize("max-in-flight", 4)?,
+                queue_capacity: args.usize("queue-cap", 64)?,
+            };
+            let opts = ServeOptions::new(pol, dev);
+            let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
+            if let Some(oom) = out.oom {
+                println!("{}: {oom}", pol.label());
+                return Ok(());
+            }
+            let mut t = Table::new(&["req", "arrival", "queue", "ttft",
+                                     "e2e", "tokens"]);
+            for m in &out.metrics {
+                t.row(vec![
+                    m.req_id.to_string(),
+                    fmt_secs(m.arrival),
+                    fmt_secs(m.queue_delay),
+                    fmt_secs(m.ttft),
+                    fmt_secs(m.e2e),
+                    m.tokens_out.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            let s = &out.summary;
+            println!(
+                "policy={} mode=continuous rate={rate}/s served={} \
+                 rejected={} makespan={} p95-ttft={} p95-e2e={}",
+                pol.label(),
+                s.n_requests,
+                out.rejected,
+                fmt_secs(s.makespan),
+                fmt_secs(s.p95_ttft),
+                fmt_secs(s.p95_e2e),
+            );
+            let slo_ttft = args.f64("slo-ttft", 0.0)?;
+            let slo_e2e = args.f64("slo-e2e", 0.0)?;
+            if slo_ttft > 0.0 && slo_e2e > 0.0 {
+                let spec = SloSpec { ttft: slo_ttft, e2e: slo_e2e };
+                let rep = slo_attainment(&out.metrics, &spec);
+                println!(
+                    "SLO attainment: ttft<={}: {:.1}%  e2e<={}: {:.1}%  \
+                     joint: {:.1}%",
+                    fmt_secs(spec.ttft),
+                    rep.ttft_attainment * 100.0,
+                    fmt_secs(spec.e2e),
+                    rep.e2e_attainment * 100.0,
+                    rep.joint_attainment * 100.0,
+                );
+            }
+            Ok(())
+        }
         "run" => {
             let pol = policy(&args.str("policy", "duoserve"))?;
             let dev = device(&args.str("device", "a5000"))?;
@@ -202,6 +272,16 @@ fn main() -> Result<()> {
             let pol = policy(&args.str("policy", "duoserve"))?;
             let dev = device(&args.str("device", "a5000"))?;
             duoserve_server::serve_stdin(&artifacts, &model, pol, dev)
+        }
+        "gen-artifacts" => {
+            if args.flag("all") {
+                duoserve::artifactgen::generate_all(&artifacts)?;
+            } else {
+                let m = args.str("model", "mixtral-tiny");
+                duoserve::artifactgen::generate(&artifacts, &m)?;
+                println!("generated {}", artifacts.join(&m).display());
+            }
+            Ok(())
         }
         other => {
             bail!("unknown command {other:?}\n\n{USAGE}");

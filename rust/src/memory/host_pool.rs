@@ -12,22 +12,22 @@ use anyhow::{bail, Context, Result};
 use crate::config::Manifest;
 use crate::runtime::{ArgRef, Runtime, Tensor};
 
-/// A static weight: host tensor (for coordinator-side math) plus its
-/// pre-staged device buffer, created once at load so the hot path
-/// never re-copies immutable weights per call (EXPERIMENTS.md §Perf).
+/// A static weight, loaded once and handed to executables by
+/// reference so the hot path never re-copies immutable weights per
+/// call (EXPERIMENTS.md §Perf). On the native backend this is simply
+/// the host tensor; a device-backed runtime would pre-stage a buffer
+/// here.
 pub struct Weight {
     pub t: Tensor,
-    buf: xla::PjRtBuffer,
 }
 
 impl Weight {
-    pub fn new(t: Tensor, rt: &Runtime) -> Result<Self> {
-        let buf = t.to_buffer(rt.client())?;
-        Ok(Weight { t, buf })
+    pub fn new(t: Tensor, _rt: &Runtime) -> Result<Self> {
+        Ok(Weight { t })
     }
 
     pub fn arg(&self) -> ArgRef<'_> {
-        ArgRef::B(&self.buf)
+        ArgRef::T(&self.t)
     }
 }
 

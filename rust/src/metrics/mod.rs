@@ -4,6 +4,12 @@
 //! plus table/CSV reporters used by the figure-regeneration benches.
 
 /// Outcome of serving one request under one policy.
+///
+/// In the continuous serving mode, `ttft` and `e2e` are measured from
+/// the request's *arrival* (queueing delay included — the quantity the
+/// SLO is written against); in phase-bulk mode they are measured from
+/// the prefill's issue instant, matching the paper's closed-loop
+/// evaluation.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
     pub req_id: usize,
@@ -15,6 +21,10 @@ pub struct RequestMetrics {
     pub prompt_len: usize,
     /// Per-decode-step latencies.
     pub step_latencies: Vec<f64>,
+    /// Virtual arrival instant (0 for closed-loop runs).
+    pub arrival: f64,
+    /// Admission-queue wait: prefill issue instant minus arrival.
+    pub queue_delay: f64,
 }
 
 /// Predictor accuracy counters (Table III's two metrics).
@@ -107,6 +117,60 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
             0.0
         },
         makespan,
+    }
+}
+
+// ---------------------------------------------------------------------
+// SLO attainment (the QoS quantities of the continuous serving mode)
+// ---------------------------------------------------------------------
+
+/// Per-request latency targets, measured from arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// TTFT target (seconds from arrival).
+    pub ttft: f64,
+    /// End-to-end target (seconds from arrival).
+    pub e2e: f64,
+}
+
+/// Fraction of requests meeting their targets.
+#[derive(Debug, Clone, Copy)]
+pub struct SloReport {
+    pub n_requests: usize,
+    /// Fraction with ttft <= spec.ttft.
+    pub ttft_attainment: f64,
+    /// Fraction with e2e <= spec.e2e.
+    pub e2e_attainment: f64,
+    /// Fraction meeting both targets.
+    pub joint_attainment: f64,
+}
+
+/// SLO-attainment percentages over a served request set.
+pub fn slo_attainment(reqs: &[RequestMetrics], spec: &SloSpec) -> SloReport {
+    let n = reqs.len();
+    if n == 0 {
+        return SloReport {
+            n_requests: 0,
+            ttft_attainment: 0.0,
+            e2e_attainment: 0.0,
+            joint_attainment: 0.0,
+        };
+    }
+    let mut ok_ttft = 0usize;
+    let mut ok_e2e = 0usize;
+    let mut ok_both = 0usize;
+    for r in reqs {
+        let t = r.ttft <= spec.ttft;
+        let e = r.e2e <= spec.e2e;
+        ok_ttft += t as usize;
+        ok_e2e += e as usize;
+        ok_both += (t && e) as usize;
+    }
+    SloReport {
+        n_requests: n,
+        ttft_attainment: ok_ttft as f64 / n as f64,
+        e2e_attainment: ok_e2e as f64 / n as f64,
+        joint_attainment: ok_both as f64 / n as f64,
     }
 }
 
@@ -204,6 +268,28 @@ mod tests {
         assert_eq!(a.exact, 1);
         assert_eq!(a.at_least_half, 2);
         assert_eq!(a.total, 3);
+    }
+
+    #[test]
+    fn slo_attainment_counts_fractions() {
+        let mk = |ttft: f64, e2e: f64| RequestMetrics {
+            req_id: 0,
+            ttft,
+            e2e,
+            tokens_out: 4,
+            prompt_len: 8,
+            step_latencies: vec![],
+            arrival: 0.0,
+            queue_delay: 0.0,
+        };
+        let reqs = vec![mk(0.5, 2.0), mk(1.5, 2.0), mk(0.5, 9.0), mk(2.0, 9.0)];
+        let rep = slo_attainment(&reqs, &SloSpec { ttft: 1.0, e2e: 3.0 });
+        assert_eq!(rep.n_requests, 4);
+        assert!((rep.ttft_attainment - 0.5).abs() < 1e-12);
+        assert!((rep.e2e_attainment - 0.5).abs() < 1e-12);
+        assert!((rep.joint_attainment - 0.25).abs() < 1e-12);
+        assert_eq!(slo_attainment(&[], &SloSpec { ttft: 1.0, e2e: 1.0 })
+                   .n_requests, 0);
     }
 
     #[test]

@@ -1,34 +1,34 @@
-//! Executable loading + execution. Follows /opt/xla-example/load_hlo:
-//! HLO **text** -> `HloModuleProto::from_text_file` -> compile on the
-//! CPU PJRT client -> execute with literal args. Compiled executables
-//! are cached per path so every component compiles exactly once.
+//! Executable loading + execution over the native CPU backend.
+//!
+//! A component artifact is a JSON spec (`{"kind": "...", ...}`)
+//! written by the artifact generator; loading parses the spec into a
+//! [`native::ComponentKind`] and execution dispatches to the native
+//! math. Loaded executables are cached per path so every component
+//! loads exactly once — the same contract the PJRT-backed runtime had
+//! (compile once, execute many).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::Tensor;
+use crate::util::Json;
 
-/// A compiled PJRT executable for one lowered component.
+use super::native::{self, ComponentKind, MlpWeights};
+use super::{Literal, Tensor};
+
+/// A loaded component executable.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    client: Arc<xla::PjRtClient>,
+    kind: ComponentKind,
     pub name: String,
 }
 
-/// Argument to an executable: a host tensor (staged on the fly), a
-/// literal (opaque KV state), or a pre-staged device buffer (static
-/// weights — zero per-call copies). The staging always goes through
-/// rust-owned `PjRtBuffer`s and `execute_b`: the `xla` crate's
-/// `execute()` leaks every input buffer it creates
-/// (`buffer.release()` without a matching free in xla_rs.cc), which
-/// OOMs long serving runs — see EXPERIMENTS.md §Perf iteration 2.
+/// Argument to an executable: a host tensor or an opaque literal
+/// (KV-cache state threaded through without inspection).
 pub enum ArgRef<'a> {
     T(&'a Tensor),
-    L(&'a xla::Literal),
-    B(&'a xla::PjRtBuffer),
+    L(&'a Literal),
 }
 
 impl<'a> From<&'a Tensor> for ArgRef<'a> {
@@ -38,93 +38,102 @@ impl<'a> From<&'a Tensor> for ArgRef<'a> {
 }
 
 impl Executable {
-    /// Execute with host tensors; returns the flattened output tuple
-    /// (aot.py lowers everything with `return_tuple=True`).
+    /// Execute with host tensors; returns the flattened output tuple.
     pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<ArgRef> = args.iter().map(|&t| ArgRef::T(t)).collect();
-        self.run_mixed(&refs)?
-            .iter()
-            .map(Tensor::from_literal)
-            .collect()
+        self.run_mixed(&refs)
     }
 
     /// Execute with mixed args; returns the raw output literals so
-    /// opaque state (KV caches) never round-trips through host vectors.
-    /// All input staging is rust-owned (`execute_b`) — never the leaky
-    /// `execute()` path.
-    pub fn run_mixed(&self, args: &[ArgRef<'_>]) -> Result<Vec<xla::Literal>> {
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut order: Vec<(bool, usize)> = Vec::with_capacity(args.len());
-        let mut borrowed: Vec<&xla::PjRtBuffer> = Vec::new();
-        for a in args {
-            match a {
-                ArgRef::T(t) => {
-                    order.push((true, owned.len()));
-                    owned.push(t.to_buffer(&self.client)?);
-                }
-                ArgRef::L(l) => {
-                    order.push((true, owned.len()));
-                    owned.push(
-                        self.client.buffer_from_host_literal(None, l)?);
-                }
-                ArgRef::B(b) => {
-                    order.push((false, borrowed.len()));
-                    borrowed.push(b);
-                }
-            }
-        }
-        let bufs: Vec<&xla::PjRtBuffer> = order
+    /// opaque state (KV caches) never round-trips through host math.
+    pub fn run_mixed(&self, args: &[ArgRef<'_>]) -> Result<Vec<Literal>> {
+        let tensors: Vec<&Tensor> = args
             .iter()
-            .map(|&(own, i)| if own { &owned[i] } else { borrowed[i] })
+            .map(|a| match a {
+                ArgRef::T(t) => *t,
+                ArgRef::L(l) => *l,
+            })
             .collect();
-        let out = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.name))?;
-        Ok(lit.to_tuple()?)
+        native::execute(&self.kind, &tensors)
+            .with_context(|| format!("executing {}", self.name))
     }
 }
 
-/// PJRT client + executable cache. `Clone` is cheap (Arc).
+/// Native runtime: component cache. `Clone` is cheap (Arc).
 #[derive(Clone)]
 pub struct Runtime {
-    client: Arc<xla::PjRtClient>,
     cache: Arc<Mutex<HashMap<PathBuf, Arc<Executable>>>>,
+}
+
+fn parse_mlp(spec: &Json) -> Result<MlpWeights> {
+    let mut layers = Vec::new();
+    for layer in spec.get("layers")?.as_arr()? {
+        let dims = layer.get("dims")?.usize_vec()?;
+        if dims.len() != 2 {
+            bail!("predictor layer dims must be [in, out], got {dims:?}");
+        }
+        let w: Vec<f32> = layer
+            .get("w")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Result<_>>()?;
+        let b: Vec<f32> = layer
+            .get("b")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Result<_>>()?;
+        if w.len() != dims[0] * dims[1] || b.len() != dims[1] {
+            bail!("predictor layer size mismatch: w={} b={} dims={dims:?}",
+                  w.len(), b.len());
+        }
+        layers.push((w, dims, b));
+    }
+    if layers.is_empty() {
+        bail!("predictor spec has no layers");
+    }
+    Ok(MlpWeights { layers })
+}
+
+fn parse_spec(text: &str) -> Result<ComponentKind> {
+    let spec = Json::parse(text)?;
+    let kind = spec.get("kind")?.as_str()?;
+    Ok(match kind {
+        "embed" => ComponentKind::Embed,
+        "attn_prefill" => ComponentKind::AttnPrefill,
+        "attn_decode" => ComponentKind::AttnDecode,
+        "gate" => ComponentKind::Gate,
+        "expert" => ComponentKind::Expert,
+        "lm_head" => ComponentKind::LmHead,
+        "predictor" => ComponentKind::Predictor(parse_mlp(&spec)?),
+        other => bail!("unknown component kind {other:?}"),
+    })
 }
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client: Arc::new(client),
-            cache: Arc::new(Mutex::new(HashMap::new())),
-        })
+        Ok(Runtime { cache: Arc::new(Mutex::new(HashMap::new())) })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
+    /// Load a component artifact (cached by path).
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(path) {
             return Ok(exe.clone());
         }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading component {}", path.display()))?;
+        let kind = parse_spec(&text)
+            .with_context(|| format!("parsing component {}", path.display()))?;
         let name = path
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_default();
-        let exe = Arc::new(Executable { exe, client: self.client.clone(), name });
+        let exe = Arc::new(Executable { kind, name });
         self.cache
             .lock()
             .unwrap()
@@ -132,12 +141,8 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of loaded executables currently cached.
     pub fn cached_count(&self) -> usize {
         self.cache.lock().unwrap().len()
-    }
-
-    pub(crate) fn client(&self) -> &xla::PjRtClient {
-        &self.client
     }
 }

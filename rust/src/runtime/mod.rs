@@ -1,9 +1,12 @@
-//! PJRT runtime: loads the AOT-lowered HLO-text artifacts and executes
-//! them on the CPU PJRT client. This is the only module that touches
-//! the `xla` crate; everything above it works with [`Tensor`]s.
+//! Runtime: loads the AOT component artifacts and executes them on the
+//! native CPU backend (`native`). This is the only module that knows
+//! how components are computed; everything above it works with
+//! [`Tensor`]s through the [`Executable`] boundary, so a real
+//! PJRT-backed runtime can be swapped in behind the same seams.
 
 mod exec;
+mod native;
 mod tensor;
 
 pub use exec::{ArgRef, Executable, Runtime};
-pub use tensor::Tensor;
+pub use tensor::{Literal, Tensor};

@@ -1,8 +1,17 @@
 //! A minimal host tensor: f32 or i32 data + shape. The coordinator's
 //! host math (residual adds, top-k, combine) happens on these; the
-//! runtime converts to/from `xla::Literal` at executable boundaries.
+//! runtime's native components consume and produce them directly.
+//!
+//! [`Literal`] is the opaque-state handle the engine threads through
+//! executables without inspecting (KV caches). With the native CPU
+//! backend it is simply a `Tensor`; the alias keeps the executable
+//! boundary explicit so a real PJRT backend can swap in a device-side
+//! literal type behind the same seams.
 
 use anyhow::{bail, Result};
+
+/// Opaque executable-boundary value (see module docs).
+pub type Literal = Tensor;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
@@ -67,6 +76,15 @@ impl Tensor {
         }
     }
 
+    /// The single element of a scalar (or length-1) i32 tensor.
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        let d = self.as_i32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
     /// Row `i` of a rank-2 f32 tensor.
     pub fn row(&self, i: usize) -> Result<&[f32]> {
         let shape = self.shape();
@@ -77,43 +95,13 @@ impl Tensor {
         Ok(&self.as_f32()?[i * w..(i + 1) * w])
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Tensor::F32 { data, shape } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-            Tensor::I32 { data, shape } => {
-                if shape.is_empty() {
-                    xla::Literal::scalar(data[0])
-                } else {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-            }
-        };
-        Ok(lit)
+    /// Executable-boundary conversion (native backend: a copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        Ok(self.clone())
     }
 
-    /// Stage this tensor as a device buffer (rust-owned, freed on drop).
-    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        match self {
-            Tensor::F32 { data, shape } => {
-                Ok(client.buffer_from_host_buffer(data, shape, None)?)
-            }
-            Tensor::I32 { data, shape } => {
-                Ok(client.buffer_from_host_buffer(data, shape, None)?)
-            }
-        }
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Tensor::f32(lit.to_vec::<f32>()?, dims)),
-            xla::ElementType::S32 => Ok(Tensor::i32(lit.to_vec::<i32>()?, dims)),
-            other => bail!("unsupported element type {other:?}"),
-        }
+    /// Executable-boundary conversion (native backend: a copy).
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        Ok(lit.clone())
     }
 }

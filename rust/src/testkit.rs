@@ -1,0 +1,34 @@
+//! Shared bootstrap for tests, benches and examples: resolves the
+//! artifact directory and generates a model's artifact tree on first
+//! use (the rust-native generator — see [`crate::artifactgen`]), so
+//! `cargo test` is self-contained in the offline image.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::artifactgen;
+
+/// The repo's artifact directory (`<package root>/artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+static GEN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Ensure `<artifacts>/<model>` exists and is complete; generates it
+/// if missing. Returns the artifacts directory (the argument
+/// `Engine::load` and `Manifest::load` expect).
+pub fn ensure_model(model: &str) -> PathBuf {
+    let dir = artifacts_dir();
+    let _guard = GEN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !dir.join(model).join(artifactgen::COMPLETE_MARKER).exists() {
+        artifactgen::generate(&dir, model)
+            .unwrap_or_else(|e| panic!("generating artifacts for {model}: {e:?}"));
+    }
+    dir
+}
+
+/// Convenience for the tiny test model.
+pub fn ensure_tiny() -> PathBuf {
+    ensure_model("mixtral-tiny")
+}

@@ -68,6 +68,15 @@ impl Args {
         }
     }
 
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
     pub fn require(&self, name: &str) -> Result<&str> {
         match self.opts.get(name) {
             Some(v) => Ok(v),
@@ -104,5 +113,13 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(vec!["--model".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn f64_parses_and_defaults() {
+        let a = args(&["--rate", "2.5"]);
+        assert_eq!(a.f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.f64("slo-ttft", 1.25).unwrap(), 1.25);
+        assert!(args(&["--rate", "abc"]).f64("rate", 0.0).is_err());
     }
 }

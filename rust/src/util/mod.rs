@@ -1,7 +1,8 @@
 //! In-tree substrates for the offline build environment: a JSON
 //! parser/writer, a seeded deterministic RNG, and a tiny CLI-argument
-//! helper. (The build image vendors only the `xla` crate's closure, so
-//! serde/rand/clap are reimplemented here — DESIGN.md §1.)
+//! helper. (The build image vendors no registry crates — anyhow is an
+//! in-tree subset under `vendor/anyhow`, and serde/rand/clap
+//! equivalents live here.)
 
 pub mod args;
 pub mod json;

@@ -1,0 +1,129 @@
+//! Request arrival processes for open-loop serving (the continuous
+//! serving mode's traffic model). Closed-loop benchmarks leave every
+//! arrival at 0; the serving loop's queueing behaviour only appears
+//! under arrival-time traffic (ProMoE's point: proactive caching must
+//! be evaluated under live request streams).
+
+use crate::util::Rng;
+use crate::workload::Request;
+
+/// How request arrival times are produced.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// All requests present at t = 0 (closed-loop benchmarks).
+    Closed,
+    /// Poisson process with `rate` requests/second (virtual seconds),
+    /// drawn reproducibly from `seed`.
+    Poisson { rate: f64, seed: u64 },
+    /// Explicit arrival instants (trace-driven replay). Must be
+    /// non-decreasing and at least as long as the request slice.
+    Trace(Vec<f64>),
+}
+
+/// Cumulative arrival instants of a Poisson process: n exponential
+/// inter-arrival gaps with mean `1/rate`.
+pub fn poisson_times(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    assert!(rate > 0.0, "poisson rate must be positive");
+    let mut rng = Rng::seed_from(seed ^ 0xA771_4A15);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = 1.0 - rng.f64(); // in (0, 1], ln is finite
+            t += -u.ln() / rate;
+            t
+        })
+        .collect()
+}
+
+/// Stamp arrival times onto a request slice (in slice order).
+pub fn assign_arrivals(reqs: &mut [Request], process: &ArrivalProcess) {
+    match process {
+        ArrivalProcess::Closed => {
+            for r in reqs.iter_mut() {
+                r.arrival = 0.0;
+            }
+        }
+        ArrivalProcess::Poisson { rate, seed } => {
+            let times = poisson_times(reqs.len(), *rate, *seed);
+            for (r, t) in reqs.iter_mut().zip(times) {
+                r.arrival = t;
+            }
+        }
+        ArrivalProcess::Trace(times) => {
+            assert!(times.len() >= reqs.len(),
+                    "trace has {} arrivals for {} requests",
+                    times.len(), reqs.len());
+            for w in times.windows(2) {
+                assert!(w[1] >= w[0], "trace arrivals must be non-decreasing");
+            }
+            for (r, &t) in reqs.iter_mut().zip(times) {
+                r.arrival = t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_recovered_within_tolerance() {
+        let n = 4000;
+        let rate = 5.0;
+        let times = poisson_times(n, rate, 7);
+        let mean_gap = times.last().unwrap() / n as f64;
+        let got_rate = 1.0 / mean_gap;
+        assert!((got_rate - rate).abs() / rate < 0.1,
+                "recovered rate {got_rate} from nominal {rate}");
+    }
+
+    #[test]
+    fn poisson_reproducible_and_seed_sensitive() {
+        assert_eq!(poisson_times(50, 2.0, 11), poisson_times(50, 2.0, 11));
+        assert_ne!(poisson_times(50, 2.0, 11), poisson_times(50, 2.0, 12));
+    }
+
+    #[test]
+    fn poisson_times_strictly_increasing_and_finite() {
+        let times = poisson_times(500, 100.0, 3);
+        for w in times.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(times.iter().all(|t| t.is_finite() && *t > 0.0));
+    }
+
+    fn req(id: usize) -> Request {
+        Request {
+            req_id: id,
+            dataset: "squad".into(),
+            cluster: 0,
+            prompt: vec![1, 2, 3],
+            n_decode: 4,
+            arrival: -1.0,
+        }
+    }
+
+    #[test]
+    fn assign_closed_zeroes_arrivals() {
+        let mut reqs = vec![req(0), req(1)];
+        assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+        assert!(reqs.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn assign_trace_passthrough() {
+        let mut reqs = vec![req(0), req(1), req(2)];
+        assign_arrivals(&mut reqs,
+                        &ArrivalProcess::Trace(vec![0.5, 0.5, 2.0]));
+        assert_eq!(reqs[2].arrival, 2.0);
+        assert_eq!(reqs[0].arrival, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn assign_trace_rejects_unsorted() {
+        let mut reqs = vec![req(0), req(1)];
+        assign_arrivals(&mut reqs, &ArrivalProcess::Trace(vec![1.0, 0.5]));
+    }
+}

@@ -4,6 +4,10 @@
 //! SQuAD (long prompt, short answer) and Orca-Math (mid prompt, long
 //! reasoning output).
 
+mod arrivals;
+
+pub use arrivals::{assign_arrivals, poisson_times, ArrivalProcess};
+
 use crate::config::Manifest;
 use crate::util::Rng;
 
@@ -81,11 +85,10 @@ pub fn generate_requests(man: &Manifest, dataset: &str, n_requests: usize,
 mod tests {
     use super::*;
     use crate::config::Manifest;
-    use std::path::Path;
 
     fn man() -> Manifest {
-        Manifest::load(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path(),
-                       "mixtral-tiny").expect("run `make artifacts-tiny` first")
+        let dir = crate::testkit::ensure_tiny();
+        Manifest::load(&dir, "mixtral-tiny").expect("tiny artifacts")
     }
 
     #[test]

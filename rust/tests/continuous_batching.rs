@@ -1,0 +1,226 @@
+//! Behavioural tests of the event-driven continuous-batching serving
+//! loop: schedule determinism, FIFO fairness under backlog, the
+//! max-in-flight budget, prefill/decode interleaving for late
+//! arrivals, admission rejections, and functional equivalence with the
+//! phase-bulk mode (function and time are split — the serving
+//! discipline may never change the tokens).
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServerEvent};
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess, Request};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn short_requests(engine: &Engine, n: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = generate_requests(&engine.man, "squad", n, seed);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.n_decode = 3 + (i % 3);
+    }
+    reqs
+}
+
+fn opts(policy: PolicyKind) -> ServeOptions {
+    ServeOptions::new(policy, DeviceProfile::a6000())
+}
+
+#[test]
+fn same_seed_gives_identical_tokens_and_schedule() {
+    let e = engine();
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    let mk = || {
+        let mut reqs = short_requests(&e, 6, 17);
+        assign_arrivals(&mut reqs,
+                        &ArrivalProcess::Poisson { rate: 3.0, seed: 9 });
+        reqs
+    };
+    let a = e.serve_continuous(&mk(), &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    let b = e.serve_continuous(&mk(), &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "token streams diverged across runs");
+    assert_eq!(a.events, b.events, "virtual-time schedule diverged");
+    let ttfts = |out: &duoserve::coordinator::ServeOutcome| -> Vec<f64> {
+        out.metrics.iter().map(|m| m.ttft).collect()
+    };
+    assert_eq!(ttfts(&a), ttfts(&b));
+}
+
+#[test]
+fn backlog_is_served_fifo_with_distinct_queueing_delays() {
+    let e = engine();
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    let mut reqs = short_requests(&e, 6, 23);
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let out = e
+        .serve_continuous(&reqs, &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.rejected, 0);
+    assert_eq!(out.metrics.len(), reqs.len());
+
+    // FIFO: prefills issued in arrival (= request-id) order.
+    let starts: Vec<usize> = out
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            ServerEvent::PrefillStart { req, .. } => Some(*req),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(starts, (0..reqs.len()).collect::<Vec<_>>());
+
+    // The single GPU serialises prefills, so simultaneous arrivals get
+    // strictly increasing queueing delays — and TTFT is measured from
+    // arrival, so it inherits that queueing component.
+    let mut by_id = out.metrics.clone();
+    by_id.sort_by_key(|m| m.req_id);
+    assert_eq!(by_id[0].queue_delay, 0.0);
+    for w in by_id.windows(2) {
+        assert!(w[1].queue_delay > w[0].queue_delay,
+                "queue delays not distinct/increasing: {} vs {}",
+                w[0].queue_delay, w[1].queue_delay);
+        assert!(w[1].ttft > w[0].ttft,
+                "arrival-relative TTFT lost the queueing component");
+    }
+}
+
+#[test]
+fn max_in_flight_budget_never_exceeded() {
+    let e = engine();
+    let max_in_flight = 3;
+    let ccfg = ContinuousConfig { max_in_flight, queue_capacity: 32 };
+    let mut reqs = short_requests(&e, 8, 5);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 50.0, seed: 2 });
+    let out = e
+        .serve_continuous(&reqs, &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(out.oom.is_none());
+    let mut in_flight = 0usize;
+    let mut peak = 0usize;
+    for ev in &out.events {
+        match ev {
+            ServerEvent::PrefillStart { .. } => {
+                in_flight += 1;
+                peak = peak.max(in_flight);
+            }
+            ServerEvent::Complete { .. } => {
+                in_flight = in_flight.checked_sub(1).expect("negative in-flight");
+            }
+            ServerEvent::StepDone { batch, .. } => {
+                assert!(batch.len() <= max_in_flight,
+                        "decode batch {} exceeds budget", batch.len());
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(in_flight, 0, "requests left holding slots");
+    assert!(peak <= max_in_flight, "budget exceeded: peak {peak}");
+    assert_eq!(peak, max_in_flight, "test never saturated the budget");
+}
+
+#[test]
+fn continuous_mode_emits_the_same_tokens_as_phase_bulk() {
+    // The serving discipline owns *time* only: per-request token
+    // streams must be identical between the seed phase-bulk engine and
+    // the continuous loop, whatever the batch interleaving.
+    let e = engine();
+    let reqs = short_requests(&e, 4, 31);
+    let bulk = e.serve(&reqs, &opts(PolicyKind::DuoServe)).unwrap();
+
+    let mut open = reqs.clone();
+    assign_arrivals(&mut open,
+                    &ArrivalProcess::Poisson { rate: 4.0, seed: 8 });
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    let cont = e
+        .serve_continuous(&open, &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(bulk.oom.is_none() && cont.oom.is_none());
+    assert_eq!(bulk.tokens, cont.tokens,
+               "continuous batching changed the function");
+}
+
+#[test]
+fn late_arrival_prefills_while_earlier_request_is_mid_decode() {
+    let e = engine();
+    // Probe: request 0 alone, phase-bulk (virtual times are absolute
+    // for the first request), to place request 1's arrival mid-decode.
+    let mut reqs = short_requests(&e, 2, 41);
+    reqs[0].n_decode = e.man.sim.max_decode;
+    reqs[1].n_decode = 3;
+    let probe = e
+        .serve(&reqs[..1], &opts(PolicyKind::DuoServe))
+        .unwrap();
+    let (t_first, t_end) = (probe.metrics[0].ttft, probe.metrics[0].e2e);
+    assert!(t_end > t_first);
+
+    reqs[0].arrival = 0.0;
+    reqs[1].arrival = (t_first + t_end) / 2.0;
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8 };
+    let out = e
+        .serve_continuous(&reqs, &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(out.oom.is_none());
+
+    let idx_of = |pred: &dyn Fn(&ServerEvent) -> bool| -> usize {
+        out.events.iter().position(|ev| pred(ev)).expect("event missing")
+    };
+    let prefill1 = idx_of(&|ev| matches!(ev,
+        ServerEvent::PrefillDone { req: 1, .. }));
+    let solo_step_before = out.events[..prefill1].iter().any(|ev| {
+        matches!(ev, ServerEvent::StepDone { batch, .. } if batch == &[0])
+    });
+    assert!(solo_step_before,
+            "request 0 should be mid-decode before request 1's prefill");
+    let joint_step_after = out.events[prefill1..].iter().any(|ev| {
+        matches!(ev, ServerEvent::StepDone { batch, .. }
+                 if batch.contains(&0) && batch.contains(&1))
+    });
+    assert!(joint_step_after,
+            "request 1 should join request 0's running decode batch");
+    let complete0 = idx_of(&|ev| matches!(ev,
+        ServerEvent::Complete { req: 0, .. }));
+    assert!(prefill1 < complete0,
+            "request 1's prefill should not wait for request 0 to drain");
+
+    // Queueing delays reflect the distinct arrivals.
+    let m1 = out.metrics.iter().find(|m| m.req_id == 1).unwrap();
+    assert!(m1.arrival > 0.0);
+    assert!(m1.ttft < t_first + t_end,
+            "late arrival waited for a full phase drain");
+}
+
+#[test]
+fn admission_queue_rejections_are_counted_and_excluded() {
+    let e = engine();
+    let ccfg = ContinuousConfig { max_in_flight: 1, queue_capacity: 2 };
+    let mut reqs = short_requests(&e, 8, 3);
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let out = e
+        .serve_continuous(&reqs, &opts(PolicyKind::DuoServe), &ccfg)
+        .unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.rejected, 6, "capacity-2 queue under an 8-burst");
+    assert_eq!(out.metrics.len(), 2, "rejected requests must not report QoS");
+    let rejected_events = out
+        .events
+        .iter()
+        .filter(|ev| matches!(ev, ServerEvent::Rejected { .. }))
+        .count();
+    assert_eq!(rejected_events as u64, out.rejected);
+    // Rejected requests produced no tokens.
+    for m in &out.metrics {
+        assert!(m.tokens_out > 0);
+    }
+    for (i, toks) in out.tokens.iter().enumerate() {
+        if i >= 2 {
+            assert!(toks.is_empty(), "rejected request {i} generated tokens");
+        }
+    }
+}

@@ -7,7 +7,7 @@
 //! Goldens are written by `python -m compile.aot` (artifacts/<model>/
 //! goldens.json). Requires `make artifacts-tiny`.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
@@ -15,7 +15,7 @@ use duoserve::util::Json;
 use duoserve::workload::Request;
 
 fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    duoserve::testkit::ensure_tiny()
 }
 
 fn load_goldens(engine: &Engine) -> Vec<Json> {

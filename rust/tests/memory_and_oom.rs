@@ -2,7 +2,7 @@
 //! tracking, per-policy residency, and the MIF-OOM-on-22B verdict
 //! reproduced at meter level (without needing the 22B artifact).
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
@@ -10,7 +10,7 @@ use duoserve::memory::{DeviceExpertCache, ExpertKey, MemoryMeter};
 use duoserve::workload::generate_requests;
 
 fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    duoserve::testkit::ensure_tiny()
 }
 
 // ---------------- meter unit behaviour --------------------------------

@@ -2,7 +2,7 @@
 //! stream usage, cache discipline, and the QoS ordering the paper
 //! claims. All run on the tiny artifact (`make artifacts-tiny`).
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
@@ -10,7 +10,7 @@ use duoserve::simx::StreamId;
 use duoserve::workload::generate_requests;
 
 fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    duoserve::testkit::ensure_tiny()
 }
 
 fn engine() -> Engine {

@@ -2,7 +2,7 @@
 //! tensor round-trips, component numerics against the manifest, and
 //! predictor-artifact sanity (the constants-elision regression).
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use duoserve::config::Manifest;
 use duoserve::memory::{ExpertKey, HostPool};
@@ -10,7 +10,7 @@ use duoserve::predictor::{Matrices, MlpPredictor, StateConstructor};
 use duoserve::runtime::{Runtime, Tensor};
 
 fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    duoserve::testkit::ensure_tiny()
 }
 
 fn manifest() -> Manifest {
@@ -164,4 +164,125 @@ fn hostpool_rejects_missing_expert() {
     let rt = Runtime::cpu().unwrap();
     let host = HostPool::load(&man, &rt).unwrap();
     assert!(host.expert_tensors(ExpertKey::routed(999, 0)).is_err());
+}
+
+// ---------------- stream-trace invariants ------------------------------
+//
+// The virtual-time stream calculus must behave like real CUDA streams:
+// ops on one stream are serial, cache hits never wait on the comm
+// stream, and the NoOverlap ablation degenerates to fetch-then-compute.
+
+use duoserve::config::{DeviceProfile, PolicyKind, SystemConfig};
+use duoserve::coordinator::engine::Ablation;
+use duoserve::coordinator::{ContinuousConfig, DuoServePolicy, Engine,
+                            Policy, ServeOptions, SimCtx};
+use duoserve::memory::{DeviceExpertCache, MemoryMeter};
+use duoserve::simx::{CostModel, StreamId, Streams};
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess};
+
+#[test]
+fn per_stream_ops_never_overlap_in_real_serving_trace() {
+    // Not a synthetic Streams exercise (proptests cover that): the
+    // full continuous serving loop, with interleaved prefills and
+    // decode steps, must still issue a serial timeline per stream.
+    let dir = artifacts_dir();
+    let engine = Engine::load(&dir, "mixtral-tiny").unwrap();
+    let mut reqs = generate_requests(&engine.man, "squad", 4, 21);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 5.0, seed: 3 });
+    let mut opts = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    opts.record_streams = true;
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    let trace = out.stream_trace.unwrap();
+    assert!(!trace.is_empty());
+    for sid in [StreamId::Compute, StreamId::Comm, StreamId::Predict] {
+        let mut ops: Vec<_> =
+            trace.iter().filter(|o| o.stream == sid).collect();
+        ops.sort_by(|a, b| a.start.total_cmp(&b.start));
+        for w in ops.windows(2) {
+            assert!(w[0].end <= w[1].start + 1e-9,
+                    "{sid:?}: [{:.6},{:.6}] overlaps [{:.6},{:.6}]",
+                    w[0].start, w[0].end, w[1].start, w[1].end);
+        }
+    }
+}
+
+#[test]
+fn no_overlap_ablation_serialises_comm_before_dependent_compute() {
+    // Single-stream ablation. In the prefill pipeline the ablation
+    // degenerates to strict fetch-then-compute: an expert computation
+    // starts only after every transfer issued before it has completed
+    // (nothing is prefetched ahead). The predictor also loses its
+    // dedicated stream: it must run on the compute stream.
+    let dir = artifacts_dir();
+    let engine = Engine::load(&dir, "mixtral-tiny").unwrap();
+    let reqs = generate_requests(&engine.man, "squad", 1, 13);
+    let mut opts = ServeOptions::ablated(PolicyKind::DuoServe,
+                                         DeviceProfile::a6000(),
+                                         Ablation::NoOverlap);
+    opts.record_streams = true;
+    let out = engine.serve(&reqs[..1], &opts).unwrap();
+    let trace = out.stream_trace.unwrap();
+    let mut last_comm_end = 0.0f64;
+    let mut saw_expert = false;
+    for op in &trace {
+        if op.stream == StreamId::Comm {
+            last_comm_end = last_comm_end.max(op.end);
+        } else if op.label == "prefill-expert" {
+            saw_expert = true;
+            assert!(op.start >= last_comm_end - 1e-9,
+                    "prefill expert compute at {:.6} overlaps an earlier \
+                     transfer ending {:.6}", op.start, last_comm_end);
+        }
+    }
+    assert!(saw_expert, "trace has no prefill expert computations");
+    assert_eq!(trace.iter().filter(|o| o.stream == StreamId::Predict).count(),
+               0, "NoOverlap must not use the predict stream");
+}
+
+#[test]
+fn comm_backlog_does_not_delay_cache_hits() {
+    // Sync point 1 of the decode pipeline: experts already resident
+    // (prefetched earlier) start computing at the gate instant even if
+    // the comm stream is busy with an unrelated transfer.
+    let dir = artifacts_dir();
+    let man = duoserve::config::Manifest::load(&dir, "mixtral-tiny").unwrap();
+    let cost = CostModel::new(&man, DeviceProfile::a6000());
+    let mut streams = Streams::recording();
+    let mut cache = DeviceExpertCache::new(man.sim.top_k, 2);
+    let mut meter = MemoryMeter::new(u64::MAX);
+    let sys = SystemConfig::for_policy(PolicyKind::DuoServe);
+    let mut policy = DuoServePolicy::new(sys);
+
+    // Jam the comm stream far into the future.
+    streams.run(StreamId::Comm, 0.0, 10.0, "unrelated-transfer");
+    // The last layer's experts are already in the cache, ready long ago.
+    let layer = man.sim.n_layers - 1; // last layer: no next-layer predict
+    let t_gate = 1.0;
+    let groups = [(0usize, 1usize), (1usize, 1usize)];
+    for &(e, _) in &groups {
+        cache.insert(duoserve::memory::ExpertKey::routed(layer, e), 0.25);
+    }
+    let mut cx = SimCtx {
+        streams: &mut streams,
+        cache: &mut cache,
+        meter: &mut meter,
+        cost: &cost,
+        expert_bytes: man.paper.expert_bytes,
+        n_layers: man.sim.n_layers,
+        n_experts: man.sim.n_experts,
+        top_k: man.sim.top_k,
+    };
+    let mut predict = |_: usize| -> Vec<usize> { Vec::new() };
+    let t_end = policy
+        .decode_moe(&mut cx, layer, &groups, 0.9, t_gate, &mut predict)
+        .unwrap();
+    let expect = t_gate + 2.0 * cost.expert_compute(1);
+    assert!((t_end - expect).abs() < 1e-9,
+            "cache hits waited on the comm stream: end {t_end}, \
+             expected {expect}");
+    assert!(t_end < 10.0, "hit path serialised behind unrelated transfer");
 }

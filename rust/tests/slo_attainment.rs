@@ -1,0 +1,136 @@
+//! SLO-attainment tests of the continuous serving mode under a fixed
+//! arrival trace: DuoServe must beat the on-demand-fetch baseline on
+//! tail latency and attainment, and attainment must degrade
+//! monotonically as the arrival rate rises (Fig. 6's QoS story, now
+//! with real queueing).
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServeOutcome};
+use duoserve::metrics::{slo_attainment, SloReport, SloSpec};
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess, Request};
+
+const N_REQS: usize = 8;
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn requests(engine: &Engine) -> Vec<Request> {
+    let mut reqs = generate_requests(&engine.man, "squad", N_REQS, 71);
+    for r in reqs.iter_mut() {
+        r.n_decode = r.n_decode.min(6);
+    }
+    reqs
+}
+
+/// Worst-case isolated (unloaded) TTFT / E2E across the request set,
+/// under DuoServe — the no-queueing baseline the SLO is written
+/// against.
+fn isolated_worst(engine: &Engine, reqs: &[Request]) -> (f64, f64) {
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    let mut worst_ttft = 0.0f64;
+    let mut worst_e2e = 0.0f64;
+    for r in reqs {
+        let out = engine.serve(std::slice::from_ref(r), &opts).unwrap();
+        assert!(out.oom.is_none());
+        worst_ttft = worst_ttft.max(out.metrics[0].ttft);
+        worst_e2e = worst_e2e.max(out.metrics[0].e2e);
+    }
+    (worst_ttft, worst_e2e)
+}
+
+fn run_at_spacing(engine: &Engine, reqs: &[Request], policy: PolicyKind,
+                  spacing: f64) -> ServeOutcome {
+    let mut reqs = reqs.to_vec();
+    let times: Vec<f64> = (0..reqs.len()).map(|i| i as f64 * spacing).collect();
+    assign_arrivals(&mut reqs, &ArrivalProcess::Trace(times));
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64 };
+    let opts = ServeOptions::new(policy, DeviceProfile::a6000());
+    let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.metrics.len(), reqs.len());
+    out
+}
+
+fn report(out: &ServeOutcome, spec: &SloSpec) -> SloReport {
+    slo_attainment(&out.metrics, spec)
+}
+
+#[test]
+fn attainment_degrades_monotonically_with_arrival_rate() {
+    let e = engine();
+    let reqs = requests(&e);
+    let (iso_ttft, iso_e2e) = isolated_worst(&e, &reqs);
+    let spec = SloSpec { ttft: 1.5 * iso_ttft, e2e: 1.5 * iso_e2e };
+
+    // Same request set, same FIFO trace shape, three arrival rates:
+    // fully separated, moderately overlapped, and a burst.
+    let low = run_at_spacing(&e, &reqs, PolicyKind::DuoServe, 3.0 * iso_e2e);
+    let mid = run_at_spacing(&e, &reqs, PolicyKind::DuoServe, 0.6 * iso_e2e);
+    let high = run_at_spacing(&e, &reqs, PolicyKind::DuoServe, 0.0);
+
+    let (a_low, a_mid, a_high) =
+        (report(&low, &spec), report(&mid, &spec), report(&high, &spec));
+
+    assert!((a_low.joint_attainment - 1.0).abs() < 1e-12,
+            "unloaded attainment must be 100%, got {:.3}",
+            a_low.joint_attainment);
+    assert!(a_mid.joint_attainment <= a_low.joint_attainment + 1e-12);
+    assert!(a_high.joint_attainment <= a_mid.joint_attainment + 1e-12,
+            "attainment rose with load: burst {:.3} > mid {:.3}",
+            a_high.joint_attainment, a_mid.joint_attainment);
+    assert!(a_high.joint_attainment < a_low.joint_attainment,
+            "burst load must violate some SLOs");
+    // Under backlog the queueing component dominates TTFT.
+    assert!(high.summary.p95_ttft > low.summary.p95_ttft);
+}
+
+#[test]
+fn duoserve_beats_odf_on_tail_latency_and_attainment_under_load() {
+    let e = engine();
+    let reqs = requests(&e);
+    let (iso_ttft, iso_e2e) = isolated_worst(&e, &reqs);
+    let spec = SloSpec { ttft: 1.5 * iso_ttft, e2e: 1.5 * iso_e2e };
+
+    // A burst: every request arrives at t=0 and queues.
+    let duo = run_at_spacing(&e, &reqs, PolicyKind::DuoServe, 0.0);
+    let odf = run_at_spacing(&e, &reqs, PolicyKind::Odf, 0.0);
+
+    assert!(duo.summary.p95_ttft < odf.summary.p95_ttft,
+            "p95 TTFT: duo {} !< odf {}",
+            duo.summary.p95_ttft, odf.summary.p95_ttft);
+    assert!(duo.summary.p95_e2e < odf.summary.p95_e2e,
+            "p95 E2E: duo {} !< odf {}",
+            duo.summary.p95_e2e, odf.summary.p95_e2e);
+
+    let (a_duo, a_odf) = (report(&duo, &spec), report(&odf, &spec));
+    assert!(a_duo.ttft_attainment >= a_odf.ttft_attainment,
+            "TTFT attainment: duo {:.3} < odf {:.3}",
+            a_duo.ttft_attainment, a_odf.ttft_attainment);
+    assert!(a_duo.joint_attainment >= a_odf.joint_attainment,
+            "joint attainment: duo {:.3} < odf {:.3}",
+            a_duo.joint_attainment, a_odf.joint_attainment);
+    // The first request runs unloaded, so DuoServe attains at least it.
+    assert!(a_duo.joint_attainment > 0.0,
+            "DuoServe should attain at least the unqueued request");
+}
+
+#[test]
+fn queue_delay_accounts_for_ttft_gap() {
+    // Bookkeeping consistency: TTFT measured from arrival equals the
+    // queueing delay plus the on-engine prefill latency, so TTFT must
+    // always be at least the queue delay.
+    let e = engine();
+    let reqs = requests(&e);
+    let out = run_at_spacing(&e, &reqs, PolicyKind::DuoServe, 0.0);
+    for m in &out.metrics {
+        assert!(m.queue_delay >= 0.0);
+        assert!(m.ttft >= m.queue_delay - 1e-12,
+                "req {}: ttft {} < queue delay {}", m.req_id, m.ttft,
+                m.queue_delay);
+        assert!(m.e2e >= m.ttft - 1e-12);
+    }
+}

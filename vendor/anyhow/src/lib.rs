@@ -1,0 +1,192 @@
+//! Minimal drop-in subset of the `anyhow` crate for the offline build
+//! image (no registry access). Implements exactly the surface this
+//! repository uses: `Error`, `Result`, the `Context` trait on `Result`
+//! and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! `Error` is a context chain rendered eagerly into strings — no
+//! downcasting (nothing in-tree downcasts). Like real `anyhow`,
+//! `Error` deliberately does NOT implement `std::error::Error`, so the
+//! blanket `From<E: std::error::Error>` impl cannot overlap with
+//! `From<Error>`.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost context message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context()` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(msg)` / `.with_context(|| msg)` on results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_displays_outermost() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 2);
+            ensure!(false, "boom {}", 7);
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+}
