@@ -1,27 +1,57 @@
 //! Hot-path micro-benchmarks (no criterion in the offline image; same
-//! methodology — warmup, N timed iterations, mean/min reported):
+//! methodology — warmup, N timed iterations, mean/min/p50/p95):
 //!
 //! * predictor end-to-end call (state build + MLP executable) — the
 //!   paper claims ~0.6 ms hidden by the predict stream (§VI-D);
-//! * expert executable invocation at each token bucket — the L3->PJRT
+//! * expert executable invocation at each token bucket — the L3
 //!   dispatch cost the engine pays per expert group;
+//! * lm_head at decode (T=1) and prefill (T=max_seq) shapes — the
+//!   single largest matmul (T x D x V);
+//! * naive vs blocked+threaded matmul kernels at paper-ish shapes —
+//!   the in-run before/after for the kernel refactor;
 //! * device-cache ops and top-k — the per-layer scheduling overhead;
-//! * one full decode step through the engine (functional path).
+//! * one full request through the engine (functional path).
+//!
+//! Results are also written as a machine-readable artifact
+//! (`BENCH_hotpath.json` by default; see README "Performance") so the
+//! repo can track perf across commits. Env knobs:
+//!
+//! * `DUOSERVE_BENCH_PROFILE=smoke` — ~10x fewer iterations (sanity
+//!   profile for `make bench-smoke`);
+//! * `DUOSERVE_BENCH_OUT=<path>` — where the JSON lands.
 //!
 //!     cargo bench --bench hotpath_micro
 
 mod harness;
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
 use duoserve::memory::{DeviceExpertCache, ExpertKey};
+use duoserve::metrics::percentile;
 use duoserve::predictor::{top_k, StateConstructor};
-use duoserve::runtime::Tensor;
+use duoserve::runtime::{kernels, ArgRef, Tensor};
+use duoserve::util::Json;
 use duoserve::workload::generate_requests;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+struct Stat {
+    name: String,
+    iters: usize,
+    mean_us: f64,
+    min_us: f64,
+    p50_us: f64,
+    p95_us: f64,
+}
+
+fn smoke() -> bool {
+    std::env::var("DUOSERVE_BENCH_PROFILE").as_deref() == Ok("smoke")
+}
+
+fn bench<F: FnMut()>(stats: &mut Vec<Stat>, name: &str, full_iters: usize,
+                     mut f: F) {
+    let iters = if smoke() { (full_iters / 10).max(3) } else { full_iters };
     for _ in 0..3 {
         f(); // warmup
     }
@@ -33,18 +63,99 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    println!("{name:<38} mean {:>9.1}us  min {:>9.1}us  ({iters} iters)",
-             mean * 1e6, min * 1e6);
+    times.sort_by(|a, b| a.total_cmp(b));
+    let p50 = percentile(&times, 50.0);
+    let p95 = percentile(&times, 95.0);
+    println!("{name:<40} mean {:>9.1}us  min {:>9.1}us  p50 {:>9.1}us  \
+              p95 {:>9.1}us  ({iters} iters)",
+             mean * 1e6, min * 1e6, p50 * 1e6, p95 * 1e6);
+    stats.push(Stat {
+        name: name.to_string(),
+        iters,
+        mean_us: mean * 1e6,
+        min_us: min * 1e6,
+        p50_us: p50 * 1e6,
+        p95_us: p95 * 1e6,
+    });
+}
+
+/// Deterministic pseudo-random fill (no rand crate in the image).
+fn fill(n: usize, salt: u32) -> Vec<f32> {
+    let mut x = 0x9E37_79B9u32 ^ salt;
+    (0..n)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            (x as f32 / u32::MAX as f32) - 0.5
+        })
+        .collect()
+}
+
+fn config_fingerprint(engine: &Engine) -> Json {
+    let sim = &engine.man.sim;
+    let mut c = BTreeMap::new();
+    c.insert("model".to_string(), Json::from("mixtral-tiny"));
+    c.insert("n_layers".to_string(), Json::from(sim.n_layers));
+    c.insert("d_model".to_string(), Json::from(sim.d_model));
+    c.insert("d_ff".to_string(), Json::from(sim.d_ff));
+    c.insert("n_experts".to_string(), Json::from(sim.n_experts));
+    c.insert("top_k".to_string(), Json::from(sim.top_k));
+    c.insert("n_heads".to_string(), Json::from(sim.n_heads));
+    c.insert("vocab".to_string(), Json::from(sim.vocab));
+    c.insert("max_seq".to_string(), Json::from(sim.max_seq));
+    c.insert("kv_len".to_string(), Json::from(sim.kv_len));
+    c.insert("expert_buckets".to_string(),
+             Json::Arr(engine.man.expert_buckets.iter()
+                       .map(|&b| Json::from(b)).collect()));
+    c.insert("matmul_threads".to_string(), Json::from(kernels::n_threads()));
+    c.insert("matmul_par_flops".to_string(), Json::from(kernels::PAR_FLOPS));
+    c.insert("profile".to_string(),
+             Json::from(if smoke() { "smoke" } else { "full" }));
+    c.insert("debug_assertions".to_string(),
+             Json::Bool(cfg!(debug_assertions)));
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    c.insert("unix_time".to_string(), Json::from(unix as f64));
+    Json::Obj(c)
+}
+
+fn write_artifact(engine: &Engine, stats: &[Stat]) -> anyhow::Result<()> {
+    let path = std::env::var("DUOSERVE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let rows: Vec<Json> = stats
+        .iter()
+        .map(|s| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::from(s.name.as_str()));
+            m.insert("iters".to_string(), Json::from(s.iters));
+            m.insert("mean_us".to_string(), Json::from(s.mean_us));
+            m.insert("min_us".to_string(), Json::from(s.min_us));
+            m.insert("p50_us".to_string(), Json::from(s.p50_us));
+            m.insert("p95_us".to_string(), Json::from(s.p95_us));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::from("duoserve-hotpath/v1"));
+    top.insert("config".to_string(), config_fingerprint(engine));
+    top.insert("benchmarks".to_string(), Json::Arr(rows));
+    std::fs::write(&path, format!("{}\n", Json::Obj(top)))?;
+    println!("\nwrote {path}");
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::load(&harness::artifacts(), "mixtral-tiny")?;
     let man = engine.man.clone();
+    let mut stats: Vec<Stat> = Vec::new();
 
     // --- predictor call (paper §VI-D: ~0.6ms on their GPU) -----------
     let mut sc = StateConstructor::new(&man);
     sc.record(0, &[0, 1]);
-    bench("predictor: build_state + MLP exec", 200, || {
+    bench(&mut stats, "predictor: build_state + MLP exec", 200, || {
         let _ = engine.predict_layer(&sc, 1).unwrap();
     });
 
@@ -55,15 +166,56 @@ fn main() -> anyhow::Result<()> {
     for &b in &man.expert_buckets {
         let exe = rt.load(&man.component_path(&format!("expert_t{b}"))?)?;
         let x = Tensor::zeros(&[b, man.sim.d_model]);
-        bench(&format!("expert exec bucket={b}"), 100, || {
-            let _ = exe.run_mixed(&[duoserve::runtime::ArgRef::T(&x), w.w1.arg(), w.w3.arg(), w.w2.arg()]).unwrap();
+        bench(&mut stats, &format!("expert exec bucket={b}"), 100, || {
+            let _ = exe
+                .run_mixed(vec![ArgRef::T(&x), w.w1.arg(), w.w3.arg(),
+                                w.w2.arg()])
+                .unwrap();
         });
+    }
+
+    // --- lm_head: the largest matmul (T x D x V) ----------------------
+    let lm = rt.load(&man.component_path("lm_head")?)?;
+    let nm = &host.nonmoe;
+    let h1 = Tensor::f32(fill(man.sim.d_model, 7), vec![1, man.sim.d_model]);
+    bench(&mut stats, "lm_head exec T=1 (decode)", 200, || {
+        let _ = lm
+            .run_mixed(vec![ArgRef::T(&h1), nm.ln_final.arg(),
+                            nm.w_out.arg()])
+            .unwrap();
+    });
+    let hs = Tensor::f32(fill(man.sim.max_seq * man.sim.d_model, 11),
+                         vec![man.sim.max_seq, man.sim.d_model]);
+    bench(&mut stats,
+          &format!("lm_head exec T={} (prefill)", man.sim.max_seq), 100,
+          || {
+              let _ = lm
+                  .run_mixed(vec![ArgRef::T(&hs), nm.ln_final.arg(),
+                                  nm.w_out.arg()])
+                  .unwrap();
+          });
+
+    // --- raw kernels at paper-ish shapes: naive vs blocked+threaded ---
+    // (1, 1024) x (1024, 4096): the decode-step lm_head shape class.
+    // (16, 1024) x (1024, 1024): a prefill attention projection class.
+    for &(m, k, n) in &[(1usize, 1024usize, 4096usize), (16, 1024, 1024)] {
+        let a = fill(m * k, 13);
+        let b = fill(k * n, 17);
+        let bt = kernels::transpose(&b, k, n);
+        let mut out = vec![0.0f32; m * n];
+        bench(&mut stats, &format!("kernel naive {m}x{k}x{n}"), 30, || {
+            let _ = kernels::matmul_naive(&a, m, k, &b, n);
+        });
+        bench(&mut stats, &format!("kernel blocked+mt {m}x{k}x{n}"), 30,
+              || {
+                  kernels::matmul_bt(&a, m, k, &bt, n, &mut out);
+              });
     }
 
     // --- cache + top-k host ops ---------------------------------------
     let mut cache = DeviceExpertCache::new(2, 2);
     let mut i = 0usize;
-    bench("device-cache insert+touch", 10_000, || {
+    bench(&mut stats, "device-cache insert+touch", 10_000, || {
         let key = ExpertKey::routed(i % 4, i % 8);
         cache.insert(key, i as f64);
         let _ = cache.touch(key, i as f64);
@@ -71,16 +223,16 @@ fn main() -> anyhow::Result<()> {
     });
 
     let scores: Vec<f32> = (0..128).map(|j| (j as f32 * 0.7).sin()).collect();
-    bench("top-k (E=128, k=8)", 10_000, || {
+    bench(&mut stats, "top-k (E=128, k=8)", 10_000, || {
         let _ = top_k(&scores, 8);
     });
 
     // --- full engine steps --------------------------------------------
     let reqs = generate_requests(&man, "squad", 1, 5);
     let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
-    bench("engine: full request (prefill+decode)", 10, || {
+    bench(&mut stats, "engine: full request (prefill+decode)", 10, || {
         let _ = engine.serve(&reqs, &opts).unwrap();
     });
 
-    Ok(())
+    write_artifact(&engine, &stats)
 }

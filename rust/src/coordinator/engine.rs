@@ -274,9 +274,9 @@ impl Engine {
             }
             let xt = Tensor::f32(x, vec![b, d]);
             let exe = self.comps.experts.get(&b).expect("bucket executable");
-            let y = exe.run_mixed(&[ArgRef::T(&xt), w.w1.arg(), w.w3.arg(),
-                                    w.w2.arg()])?;
-            let y0 = Tensor::from_literal(&y[0])?;
+            let y = exe.run_mixed(vec![ArgRef::T(&xt), w.w1.arg(),
+                                       w.w3.arg(), w.w2.arg()])?;
+            let y0 = y.into_iter().next().unwrap();
             let yd = y0.as_f32()?;
             for j in 0..chunk {
                 out.push(yd[j * d..(j + 1) * d].to_vec());
@@ -352,8 +352,11 @@ impl Engine {
             pos: r.prompt.len(),
             h: Tensor::zeros(&[1, sim.d_model]),
             // Literal == Tensor on the native backend: build the KV
-            // literals directly rather than allocating twice through
-            // to_literal().
+            // literals directly. Each serve step transfers these into
+            // the attention executable by ownership (ArgRef::Own) and
+            // takes them back from the outputs, so the caches are
+            // mutated in place — one KV row written per layer per
+            // decode step, never a full-cache copy.
             kcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
             vcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
             tokens: Vec::new(),
@@ -512,7 +515,7 @@ impl Engine {
         // ---- functional embed / timing: head-ish cost ----------------
         let toks = Tensor::i32(padded, vec![sim.max_seq]);
         let pos0 = Tensor::scalar_i32(0);
-        let out = self.comps.embed_prefill.run_mixed(&[
+        let out = self.comps.embed_prefill.run_mixed(vec![
             ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(), nm.pos_emb.arg(),
         ])?;
         let mut h = out.into_iter().next().unwrap();
@@ -522,12 +525,16 @@ impl Engine {
 
         for l in 0..sim.n_layers {
             let lw = &self.host.nonmoe.layers[l];
-            // functional attention (+ KV update; KV stays as literals)
+            // functional attention. The KV literals transfer in by
+            // ownership and come back (mutated in place) as outputs:
+            // zero cache copies at the boundary.
             let vlen = Tensor::scalar_i32(valid as i32);
-            let out = self.comps.attn_prefill.run_mixed(&[
+            let kc = std::mem::take(&mut st.kcs[l]);
+            let vc = std::mem::take(&mut st.vcs[l]);
+            let out = self.comps.attn_prefill.run_mixed(vec![
                 ArgRef::T(&h), ArgRef::T(&vlen), lw.ln_attn.arg(),
                 lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
+                ArgRef::Own(kc), ArgRef::Own(vc),
             ])?;
             let mut it = out.into_iter();
             h = it.next().unwrap();
@@ -535,7 +542,7 @@ impl Engine {
             st.vcs[l] = it.next().unwrap();
 
             // functional gate
-            let out = self.comps.gate_prefill.run_mixed(&[
+            let out = self.comps.gate_prefill.run_mixed(vec![
                 ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
             let mut git = out.into_iter();
             let probs_t = git.next().unwrap();
@@ -586,9 +593,9 @@ impl Engine {
 
         // ---- first token ---------------------------------------------
         let h_last = Tensor::f32(h.row(valid - 1)?.to_vec(), vec![1, sim.d_model]);
-        let out = self.comps.lm_head.run_mixed(&[
+        let out = self.comps.lm_head.run_mixed(vec![
             ArgRef::T(&h_last), nm.ln_final.arg(), nm.w_out.arg()])?;
-        let logits = Tensor::from_literal(&out[0])?;
+        let logits = out.into_iter().next().unwrap();
         let tok = argmax(logits.as_f32()?) as i32;
         st.tokens.push(tok);
         st.h = h_last;
@@ -614,7 +621,7 @@ impl Engine {
             let st = &mut states[r];
             let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
             let pos = Tensor::scalar_i32(st.pos as i32);
-            let out = self.comps.embed_decode.run_mixed(&[
+            let out = self.comps.embed_decode.run_mixed(vec![
                 ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
                 nm.pos_emb.arg(),
             ])?;
@@ -632,16 +639,21 @@ impl Engine {
             for &r in active {
                 let st = &mut states[r];
                 let pos = Tensor::scalar_i32(st.pos as i32);
-                let out = self.comps.attn_decode.run_mixed(&[
+                // KV ownership transfer: the attention executable
+                // writes one row in place (O(d_model) per layer) and
+                // hands the caches back — no full-cache copies.
+                let kc = std::mem::take(&mut st.kcs[l]);
+                let vc = std::mem::take(&mut st.vcs[l]);
+                let out = self.comps.attn_decode.run_mixed(vec![
                     ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
                     lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                    ArgRef::L(&st.kcs[l]), ArgRef::L(&st.vcs[l]),
+                    ArgRef::Own(kc), ArgRef::Own(vc),
                 ])?;
                 let mut it = out.into_iter();
                 st.h = it.next().unwrap();
                 st.kcs[l] = it.next().unwrap();
                 st.vcs[l] = it.next().unwrap();
-                let out = self.comps.gate_decode.run_mixed(&[
+                let out = self.comps.gate_decode.run_mixed(vec![
                     ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
                 probs.push(out[0].as_f32()?.to_vec());
                 hn.push(out[1].as_f32()?.to_vec());
@@ -742,9 +754,9 @@ impl Engine {
         // lm head per request (functional); one timing op for the batch
         for &r in active {
             let st = &mut states[r];
-            let out = self.comps.lm_head.run_mixed(&[
+            let out = self.comps.lm_head.run_mixed(vec![
                 ArgRef::T(&st.h), nm.ln_final.arg(), nm.w_out.arg()])?;
-            let logits = Tensor::from_literal(&out[0])?;
+            let logits = out.into_iter().next().unwrap();
             let tok = argmax(logits.as_f32()?) as i32;
             st.tokens.push(tok);
             st.pos += 1;

@@ -10,24 +10,53 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Manifest;
-use crate::runtime::{ArgRef, Runtime, Tensor};
+use crate::runtime::{kernels, ArgRef, Runtime, Tensor};
 
 /// A static weight, loaded once and handed to executables by
 /// reference so the hot path never re-copies immutable weights per
-/// call (EXPERIMENTS.md §Perf). On the native backend this is simply
-/// the host tensor; a device-backed runtime would pre-stage a buffer
-/// here.
+/// call (EXPERIMENTS.md §Perf). Rank-2 matmul weights additionally
+/// carry a `(n, k)` transposed layout, built once at load, so the
+/// runtime's blocked kernel reads contiguous rows on every call. On
+/// the native backend this is simply the host tensor (+ transpose); a
+/// device-backed runtime would pre-stage buffers here.
 pub struct Weight {
     pub t: Tensor,
+    /// Cached transpose for matmul right-hand sides (None for rank-1
+    /// norms and for lookup tables constructed via [`Weight::lhs`]).
+    /// Keeping *both* layouts doubles resident bytes for matmul
+    /// weights — a deliberate time/space trade: `t` stays the
+    /// canonical artifact-contract tensor (handed to executables
+    /// as-is, read by parity tests, pre-staged by a device backend),
+    /// `bt` is the kernel-layout cache.
+    pub bt: Option<Tensor>,
 }
 
 impl Weight {
+    /// A weight used as a matmul RHS: pre-transposes rank-2 f32
+    /// tensors once so every executable call hits the fast kernel.
     pub fn new(t: Tensor, _rt: &Runtime) -> Result<Self> {
-        Ok(Weight { t })
+        let bt = match (t.shape(), t.as_f32()) {
+            ([k, n], Ok(data)) if *k > 0 && *n > 0 => {
+                let (k, n) = (*k, *n);
+                Some(Tensor::f32(kernels::transpose(data, k, n), vec![n, k]))
+            }
+            _ => None,
+        };
+        Ok(Weight { t, bt })
+    }
+
+    /// A weight never used as a matmul RHS (embedding / position
+    /// lookup tables): skips the transpose cache so load time and
+    /// resident bytes aren't doubled for tables the kernel never reads.
+    pub fn lhs(t: Tensor, _rt: &Runtime) -> Result<Self> {
+        Ok(Weight { t, bt: None })
     }
 
     pub fn arg(&self) -> ArgRef<'_> {
-        ArgRef::T(&self.t)
+        match &self.bt {
+            Some(bt) => ArgRef::WT { t: &self.t, bt },
+            None => ArgRef::T(&self.t),
+        }
     }
 }
 
@@ -90,7 +119,7 @@ fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
 
 impl HostPool {
     pub fn load(man: &Manifest, rt: &Runtime) -> Result<Self> {
-        let tensor = |name: &str| -> Result<Weight> {
+        let raw = |name: &str| -> Result<Tensor> {
             let entry = man.weight_entry(name)?;
             let data = read_f32_bin(&man.resolve(&entry.path))?;
             let expect: usize = entry.shape.iter().product();
@@ -98,8 +127,11 @@ impl HostPool {
                 bail!("weight {name}: {} floats on disk, manifest says {expect}",
                       data.len());
             }
-            Weight::new(Tensor::f32(data, entry.shape.clone()), rt)
+            Ok(Tensor::f32(data, entry.shape.clone()))
         };
+        let tensor = |name: &str| -> Result<Weight> { Weight::new(raw(name)?, rt) };
+        // lookup tables: never a matmul RHS, skip the transpose cache
+        let tensor_lhs = |name: &str| -> Result<Weight> { Weight::lhs(raw(name)?, rt) };
 
         let mut layers = Vec::with_capacity(man.sim.n_layers);
         for l in 0..man.sim.n_layers {
@@ -114,8 +146,8 @@ impl HostPool {
             });
         }
         let nonmoe = NonMoeWeights {
-            emb: tensor("emb")?,
-            pos_emb: tensor("pos_emb")?,
+            emb: tensor_lhs("emb")?,
+            pos_emb: tensor_lhs("pos_emb")?,
             ln_final: tensor("ln_final")?,
             w_out: tensor("w_out")?,
             layers,

@@ -15,7 +15,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::Json;
 
-use super::native::{self, ComponentKind, MlpWeights};
+use super::kernels;
+use super::native::{self, ComponentKind, MlpLayer, MlpWeights};
 use super::{Literal, Tensor};
 
 /// A loaded component executable.
@@ -24,11 +25,19 @@ pub struct Executable {
     pub name: String,
 }
 
-/// Argument to an executable: a host tensor or an opaque literal
-/// (KV-cache state threaded through without inspection).
+/// Argument to an executable.
+///
+/// `T` borrows a host tensor; `WT` borrows a static rank-2 weight
+/// together with its load-time `(n, k)` transpose so the blocked
+/// matmul kernel reads contiguous rows; `Own` transfers ownership of
+/// a literal *into* the executable — the component may mutate it in
+/// place and hand it back as an output. The engine uses `Own` for the
+/// per-request KV caches: a decode step writes one KV row per layer
+/// instead of cloning the whole cache through the boundary.
 pub enum ArgRef<'a> {
     T(&'a Tensor),
-    L(&'a Literal),
+    WT { t: &'a Tensor, bt: &'a Tensor },
+    Own(Literal),
 }
 
 impl<'a> From<&'a Tensor> for ArgRef<'a> {
@@ -41,20 +50,15 @@ impl Executable {
     /// Execute with host tensors; returns the flattened output tuple.
     pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<ArgRef> = args.iter().map(|&t| ArgRef::T(t)).collect();
-        self.run_mixed(&refs)
+        self.run_mixed(refs)
     }
 
     /// Execute with mixed args; returns the raw output literals so
     /// opaque state (KV caches) never round-trips through host math.
-    pub fn run_mixed(&self, args: &[ArgRef<'_>]) -> Result<Vec<Literal>> {
-        let tensors: Vec<&Tensor> = args
-            .iter()
-            .map(|a| match a {
-                ArgRef::T(t) => *t,
-                ArgRef::L(l) => *l,
-            })
-            .collect();
-        native::execute(&self.kind, &tensors)
+    /// Consumes the arg list: `Own` literals move into the executable
+    /// (and, for in-place state like KV caches, back out as outputs).
+    pub fn run_mixed(&self, mut args: Vec<ArgRef<'_>>) -> Result<Vec<Literal>> {
+        native::execute(&self.kind, &mut args)
             .with_context(|| format!("executing {}", self.name))
     }
 }
@@ -88,7 +92,12 @@ fn parse_mlp(spec: &Json) -> Result<MlpWeights> {
             bail!("predictor layer size mismatch: w={} b={} dims={dims:?}",
                   w.len(), b.len());
         }
-        layers.push((w, dims, b));
+        // Pre-transpose once at parse so every predictor call runs the
+        // blocked dot-product kernel (the ~0.6 ms prefetch-window
+        // budget of §VI-D is paid per decode layer); the row-major
+        // original is dropped here — nothing downstream reads it.
+        let wt = kernels::transpose(&w, dims[0], dims[1]);
+        layers.push(MlpLayer { din: dims[0], dout: dims[1], wt, b });
     }
     if layers.is_empty() {
         bail!("predictor spec has no layers");
@@ -121,8 +130,16 @@ impl Runtime {
     }
 
     /// Load a component artifact (cached by path).
+    ///
+    /// One lock scope covers lookup *and* insert: the old
+    /// check/unlock/parse/lock/insert sequence was a TOCTOU race where
+    /// two threads could both miss, both parse, and construct the same
+    /// `Executable` twice. Parsing under the lock is deliberate —
+    /// loads are cold-path (once per component per process) and the
+    /// single scope guarantees exactly-once construction.
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(path) {
             return Ok(exe.clone());
         }
         let text = std::fs::read_to_string(path)
@@ -134,10 +151,7 @@ impl Runtime {
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_default();
         let exe = Arc::new(Executable { kind, name });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), exe.clone());
+        cache.insert(path.to_path_buf(), exe.clone());
         Ok(exe)
     }
 

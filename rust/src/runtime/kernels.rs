@@ -1,0 +1,290 @@
+//! CPU matmul kernels for the native backend's hot path.
+//!
+//! Three tiers, all summing each output element over `k` in ascending
+//! order with a single accumulator, so every tier is bit-identical to
+//! the naive reference (no re-association — parity tests compare
+//! exactly):
+//!
+//! * [`matmul_naive`] — the i/k/j triple loop over row-major B. Kept
+//!   as the parity oracle and for one-off cold-path math.
+//! * [`matmul_bt_into`] — register-blocked kernel over a
+//!   **transposed** B layout (`bt` is `(n, k)` row-major): each output
+//!   element is a contiguous dot product, computed four columns at a
+//!   time in registers. Static weights pre-transpose once at load
+//!   (`memory::host_pool::Weight`), so the per-call cost is pure
+//!   FLOPs.
+//! * [`matmul_bt`] — the threaded wrapper: above [`PAR_FLOPS`] it
+//!   splits rows (or, for a single row, columns) across a
+//!   `std::thread::scope`. This is what prefill attention, `lm_head`
+//!   (T x D x V, the single largest matmul) and the expert FFN buckets
+//!   go through.
+//!
+//! [`Scratch`] is the reusable temporary-buffer pool the native
+//! components allocate from (per engine thread), killing the per-step
+//! `vec![0.0; ..]` churn of rms-norm/score/matmul temporaries.
+
+/// FLOP threshold (m*k*n) above which [`matmul_bt`] spawns threads.
+/// Below it, thread spawn/join overhead (~tens of microseconds)
+/// dominates any speedup.
+pub const PAR_FLOPS: usize = 1 << 20;
+
+/// Hard cap on worker threads per matmul.
+pub const MAX_THREADS: usize = 8;
+
+/// Worker-thread count: `available_parallelism` capped at
+/// [`MAX_THREADS`], probed once per process.
+pub fn n_threads() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_THREADS);
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// (m,k) x (k,n) row-major matmul — the naive reference kernel.
+pub fn matmul_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize)
+                    -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Transpose row-major (k, n) into row-major (n, k), writing `out`.
+pub fn transpose_into(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), n * k);
+    for kk in 0..k {
+        let br = &b[kk * n..(kk + 1) * n];
+        for (j, &v) in br.iter().enumerate() {
+            out[j * k + kk] = v;
+        }
+    }
+}
+
+/// Transpose row-major (k, n) into a fresh row-major (n, k) vec.
+pub fn transpose(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * k];
+    transpose_into(b, k, n, &mut out);
+    out
+}
+
+/// Register-blocked (m,k) x (k,n) with `bt` the (n,k) transpose of B;
+/// single-threaded, writes `out` (m*n). Four output columns are
+/// accumulated per pass so four B rows stream through cache together;
+/// each element still sums over k in order (bit-parity with naive).
+pub fn matmul_bt_into(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize,
+                      out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &bt[j * k..(j + 1) * k];
+            let b1 = &bt[(j + 1) * k..(j + 2) * k];
+            let b2 = &bt[(j + 2) * k..(j + 3) * k];
+            let b3 = &bt[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) =
+                (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for ((((&av, &x0), &x1), &x2), &x3) in ar
+                .iter()
+                .zip(b0.iter())
+                .zip(b1.iter())
+                .zip(b2.iter())
+                .zip(b3.iter())
+            {
+                s0 += av * x0;
+                s1 += av * x1;
+                s2 += av * x2;
+                s3 += av * x3;
+            }
+            or[j] = s0;
+            or[j + 1] = s1;
+            or[j + 2] = s2;
+            or[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let br = &bt[j * k..(j + 1) * k];
+            or[j] = ar.iter().zip(br.iter()).map(|(&x, &y)| x * y).sum();
+            j += 1;
+        }
+    }
+}
+
+/// Blocked matmul over transposed B with an explicit thread count
+/// (tests force the parallel path on small shapes through this).
+/// Rows are split across threads; a single row splits columns instead
+/// (the decode-time `lm_head` shape: 1 x D x V).
+pub fn matmul_bt_threads(a: &[f32], m: usize, k: usize, bt: &[f32],
+                         n: usize, out: &mut [f32], threads: usize) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let threads = threads.max(1);
+    if threads == 1 {
+        matmul_bt_into(a, m, k, bt, n, out);
+        return;
+    }
+    if m > 1 {
+        let rows_per = (m + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ach, och) in
+                a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n))
+            {
+                s.spawn(move || {
+                    matmul_bt_into(ach, ach.len() / k, k, bt, n, och);
+                });
+            }
+        });
+    } else {
+        let cols_per = (n + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (bch, och) in
+                bt.chunks(cols_per * k).zip(out.chunks_mut(cols_per))
+            {
+                s.spawn(move || {
+                    matmul_bt_into(a, 1, k, bch, bch.len() / k, och);
+                });
+            }
+        });
+    }
+}
+
+/// The hot-path entry: blocked kernel over transposed B, threaded
+/// above [`PAR_FLOPS`].
+pub fn matmul_bt(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize,
+                 out: &mut [f32]) {
+    let flops = m.saturating_mul(k).saturating_mul(n);
+    let threads = if flops >= PAR_FLOPS { n_threads() } else { 1 };
+    matmul_bt_threads(a, m, k, bt, n, out, threads);
+}
+
+/// Reusable f32 temporary-buffer pool. `take_zeroed` hands out a
+/// zero-filled buffer (reusing a retired one's allocation when
+/// possible); `put` retires a buffer back to the pool. Buffers that
+/// escape into output tensors are simply never retired.
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+/// Pool-size cap: beyond this, retired buffers are dropped instead of
+/// hoarded (bounds worst-case resident scratch).
+const SCRATCH_POOL_CAP: usize = 64;
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch { pool: Vec::new() }
+    }
+
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    pub fn put(&mut self, v: Vec<f32>) {
+        if self.pool.len() < SCRATCH_POOL_CAP && v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// Buffers currently pooled (introspection for tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, mul: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 % 13) as f32 - 6.0) * mul).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_exactly() {
+        for &(m, k, n) in
+            &[(1, 1, 1), (1, 5, 7), (3, 4, 4), (5, 9, 11), (2, 16, 3)]
+        {
+            let a = seq(m * k, 0.25);
+            let b = seq(k * n, 0.5);
+            let want = matmul_naive(&a, m, k, &b, n);
+            let bt = transpose(&b, k, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_bt_into(&a, m, k, &bt, n, &mut got);
+            assert_eq!(got, want, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn threaded_matches_naive_exactly() {
+        for &(m, k, n) in &[(1, 8, 13), (7, 5, 9), (16, 4, 4)] {
+            let a = seq(m * k, 0.125);
+            let b = seq(k * n, 0.75);
+            let want = matmul_naive(&a, m, k, &b, n);
+            let bt = transpose(&b, k, n);
+            for threads in [2, 3, 8] {
+                let mut got = vec![0.0f32; m * n];
+                matmul_bt_threads(&a, m, k, &bt, n, &mut got, threads);
+                assert_eq!(got, want, "shape ({m},{k},{n}) x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let b = seq(3 * 5, 1.0);
+        let bt = transpose(&b, 3, 5);
+        let back = transpose(&bt, 5, 3);
+        assert_eq!(b, back);
+    }
+
+    #[test]
+    fn scratch_reuses_allocations() {
+        let mut s = Scratch::new();
+        let mut v = s.take_zeroed(128);
+        v[0] = 3.0;
+        let cap = v.capacity();
+        s.put(v);
+        let v2 = s.take_zeroed(64);
+        assert_eq!(v2.capacity(), cap, "buffer not reused");
+        assert!(v2.iter().all(|&x| x == 0.0), "reused buffer not zeroed");
+        assert_eq!(v2.len(), 64);
+    }
+}

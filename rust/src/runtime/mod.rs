@@ -3,10 +3,16 @@
 //! how components are computed; everything above it works with
 //! [`Tensor`]s through the [`Executable`] boundary, so a real
 //! PJRT-backed runtime can be swapped in behind the same seams.
+//!
+//! `kernels` holds the CPU matmul kernels (naive reference, blocked
+//! transposed-B, threaded) and the scratch-buffer pool; `copy_stats`
+//! counts copy-on-write deep copies at the literal boundary so tests
+//! can assert the decode hot path is zero-copy.
 
 mod exec;
+pub mod kernels;
 mod native;
 mod tensor;
 
 pub use exec::{ArgRef, Executable, Runtime};
-pub use tensor::{Literal, Tensor};
+pub use tensor::{copy_stats, Literal, Tensor};

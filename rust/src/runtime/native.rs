@@ -8,10 +8,24 @@
 //! specs (`{"kind": ...}`) written by the artifact generator; weights
 //! arrive as executable arguments exactly as they would on PJRT, so
 //! the coordinator's expert-dispatch contract is unchanged.
+//!
+//! Hot-path discipline (see `kernels`):
+//! * matmuls run the register-blocked kernel over a pre-transposed
+//!   weight layout ([`ArgRef::WT`]), threaded above a FLOP threshold;
+//! * attention mutates the KV cache **in place** when the engine
+//!   transfers ownership ([`ArgRef::Own`]): a decode step writes one
+//!   KV row per layer instead of cloning 2 x kv_len x d_model floats
+//!   (borrowed KV handles still get correct copy-on-write semantics);
+//! * temporaries (rms-norm outputs, scores, matmul results) come from
+//!   a per-thread [`kernels::Scratch`] pool instead of fresh
+//!   allocations every step.
 
-use anyhow::{bail, Result};
+use std::cell::RefCell;
 
-use super::Tensor;
+use anyhow::{anyhow, bail, Result};
+
+use super::kernels;
+use super::{ArgRef, Tensor};
 
 /// What a loaded component computes. Shapes come from the arguments,
 /// so one kind serves every lowering bucket.
@@ -27,38 +41,136 @@ pub enum ComponentKind {
     Predictor(MlpWeights),
 }
 
-/// Baked predictor weights: per layer a row-major (in, out) matrix and
-/// an out-length bias.
+/// Baked predictor weights.
 pub struct MlpWeights {
-    pub layers: Vec<(Vec<f32>, Vec<usize>, Vec<f32>)>,
+    pub layers: Vec<MlpLayer>,
+}
+
+/// One predictor layer: the (dout, din) transpose of the row-major
+/// weights (the only layout the blocked kernel reads — built once at
+/// parse; the original is dropped to avoid doubling resident memory)
+/// and a dout-length bias.
+pub struct MlpLayer {
+    pub din: usize,
+    pub dout: usize,
+    pub wt: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// The engine drives components from one thread, so a per-thread
+    /// pool *is* the per-engine scratch arena.
+    static SCRATCH: RefCell<kernels::Scratch> =
+        RefCell::new(kernels::Scratch::new());
+}
+
+/// A zero-filled scratch buffer (reuses a retired allocation when one
+/// is pooled). Buffers that escape into output tensors simply never
+/// come back.
+fn take_buf(len: usize) -> Vec<f32> {
+    SCRATCH.with(|s| s.borrow_mut().take_zeroed(len))
+}
+
+/// Retire a temporary back to the pool.
+fn put_buf(v: Vec<f32>) {
+    SCRATCH.with(|s| s.borrow_mut().put(v));
+}
+
+// ---------------------------------------------------------------------
+// argument access
+// ---------------------------------------------------------------------
+
+/// A borrowed argument plus its cached transpose when the caller
+/// supplied one ([`ArgRef::WT`], static weights).
+struct ArgView<'a> {
+    t: &'a Tensor,
+    bt: Option<&'a Tensor>,
+}
+
+fn arg_tensor<'a>(args: &'a [ArgRef<'_>], i: usize, what: &str)
+                  -> Result<&'a Tensor> {
+    match args.get(i) {
+        Some(ArgRef::T(t)) => Ok(*t),
+        Some(ArgRef::WT { t, .. }) => Ok(*t),
+        Some(ArgRef::Own(t)) => Ok(t),
+        None => bail!("missing arg {i} ({what})"),
+    }
+}
+
+fn view<'a>(args: &'a [ArgRef<'_>], i: usize, what: &str)
+            -> Result<ArgView<'a>> {
+    match args.get(i) {
+        Some(ArgRef::T(t)) => Ok(ArgView { t: *t, bt: None }),
+        Some(ArgRef::WT { t, bt }) => Ok(ArgView { t: *t, bt: Some(*bt) }),
+        Some(ArgRef::Own(t)) => Ok(ArgView { t, bt: None }),
+        None => bail!("missing arg {i} ({what})"),
+    }
+}
+
+fn f32_arg<'a>(args: &'a [ArgRef<'_>], i: usize, what: &str)
+               -> Result<(&'a [f32], &'a [usize])> {
+    let t = arg_tensor(args, i, what)?;
+    Ok((t.as_f32()?, t.shape()))
+}
+
+/// Transfer ownership of argument `i` out of the slot. `Own` args
+/// move (the zero-copy path); borrowed args shallow-clone, so a later
+/// in-place write copy-on-writes and the caller's tensor is untouched.
+fn take_arg(args: &mut [ArgRef<'_>], i: usize, what: &str) -> Result<Tensor> {
+    let slot = args
+        .get_mut(i)
+        .ok_or_else(|| anyhow!("missing arg {i} ({what})"))?;
+    Ok(match std::mem::replace(slot, ArgRef::Own(Tensor::default())) {
+        ArgRef::Own(t) => t,
+        ArgRef::T(t) => t.clone(),
+        ArgRef::WT { t, .. } => t.clone(),
+    })
 }
 
 // ---------------------------------------------------------------------
 // math helpers
 // ---------------------------------------------------------------------
 
-/// (m,k) x (k,n) row-major matmul.
-fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+/// a (m, k) @ b (k, n) through the blocked kernel; uses the cached
+/// transposed layout when the arg carries one, else transposes into
+/// scratch for this call. Bit-identical to the naive reference kernel
+/// (k-ascending single-accumulator sums).
+fn mm(a: &[f32], m: usize, b: &ArgView<'_>, what: &str) -> Result<Vec<f32>> {
+    let bs = b.t.shape();
+    if bs.len() != 2 {
+        bail!("{what}: matmul rhs must be rank-2, got {bs:?}");
+    }
+    let (k, n) = (bs[0], bs[1]);
+    if a.len() != m * k {
+        bail!("{what}: lhs has {} elements, expected {m}x{k}", a.len());
+    }
+    let mut out = take_buf(m * n);
+    match b.bt {
+        Some(bt) => {
+            let btd = bt.as_f32()?;
+            if btd.len() != n * k {
+                bail!("{what}: cached transpose has {} elements, \
+                       expected {n}x{k}", btd.len());
             }
-            let br = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += av * bv;
-            }
+            kernels::matmul_bt(a, m, k, btd, n, &mut out);
+        }
+        None => {
+            let mut tb = take_buf(n * k);
+            kernels::transpose_into(b.t.as_f32()?, k, n, &mut tb);
+            kernels::matmul_bt(a, m, k, &tb, n, &mut out);
+            put_buf(tb);
         }
     }
-    out
+    Ok(out)
 }
 
 /// RMSNorm rows of x (t, d) by weight w (d), eps 1e-6 (ref.rms_norm_ref).
 fn rms_norm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; t * d];
+    let mut out = take_buf(t * d);
     for i in 0..t {
         let row = &x[i * d..(i + 1) * d];
         let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -87,28 +199,20 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-fn f32_arg<'a>(args: &'a [&Tensor], i: usize, what: &str)
-               -> Result<(&'a [f32], &'a [usize])> {
-    let t = args
-        .get(i)
-        .ok_or_else(|| anyhow::anyhow!("missing arg {i} ({what})"))?;
-    Ok((t.as_f32()?, t.shape()))
-}
-
 // ---------------------------------------------------------------------
 // components
 // ---------------------------------------------------------------------
 
 /// embed(tok_ids (T,), pos0 scalar, emb (V,D), pos_emb (KV,D)) -> (h,)
-fn embed(args: &[&Tensor]) -> Result<Vec<Tensor>> {
-    let toks = args[0].as_i32()?;
-    let pos0 = args[1].scalar_i32_value()? as usize;
+fn embed(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
+    let toks = arg_tensor(args, 0, "tok_ids")?.as_i32()?;
+    let pos0 = arg_tensor(args, 1, "pos0")?.scalar_i32_value()? as usize;
     let (emb, es) = f32_arg(args, 2, "emb")?;
     let (pe, ps) = f32_arg(args, 3, "pos_emb")?;
     let (vocab, d) = (es[0], es[1]);
     let kv_len = ps[0];
     let t = toks.len();
-    let mut h = vec![0.0f32; t * d];
+    let mut h = take_buf(t * d);
     for (i, &tok) in toks.iter().enumerate() {
         let tok = tok as usize;
         if tok >= vocab {
@@ -133,20 +237,34 @@ fn embed(args: &[&Tensor]) -> Result<Vec<Tensor>> {
 ///       kc vc (KV, NH, HD). Prefill: scalar = valid_len, queries at
 ///       absolute positions 0..T. Decode: scalar = pos, one query at
 ///       `pos`, valid bound pos+1.
-fn attention(args: &[&Tensor], decode: bool) -> Result<Vec<Tensor>> {
+///
+/// The KV caches are taken by ownership transfer and mutated in
+/// place: T rows of D floats written per call, never a cache clone
+/// (unless the caller kept a borrowed handle, which copy-on-writes).
+fn attention(args: &mut [ArgRef<'_>], decode: bool) -> Result<Vec<Tensor>> {
+    // Take KV ownership first (mutable slot access), then read the
+    // borrowed args.
+    let mut kc_t = take_arg(args, 7, "kc")?;
+    let mut vc_t = take_arg(args, 8, "vc")?;
     let (h, hs) = f32_arg(args, 0, "h")?;
-    let scalar = args[1].scalar_i32_value()? as usize;
+    let scalar = arg_tensor(args, 1, "scalar")?.scalar_i32_value()? as usize;
     let (ln, _) = f32_arg(args, 2, "ln")?;
-    let (wq, _) = f32_arg(args, 3, "wq")?;
-    let (wk, _) = f32_arg(args, 4, "wk")?;
-    let (wv, _) = f32_arg(args, 5, "wv")?;
-    let (wo, _) = f32_arg(args, 6, "wo")?;
-    let (kc, ks) = f32_arg(args, 7, "kc")?;
-    let (vc, _) = f32_arg(args, 8, "vc")?;
+    let wq = view(args, 3, "wq")?;
+    let wk = view(args, 4, "wk")?;
+    let wv = view(args, 5, "wv")?;
+    let wo = view(args, 6, "wo")?;
     let (t, d) = (hs[0], hs[1]);
+    let ks: Vec<usize> = kc_t.shape().to_vec();
+    if ks.len() != 3 {
+        bail!("kv cache must be rank-3 (kv_len, n_heads, head_dim), \
+               got {ks:?}");
+    }
     let (kv_len, n_heads, hd) = (ks[0], ks[1], ks[2]);
     if n_heads * hd != d {
         bail!("kv shape {ks:?} inconsistent with d_model {d}");
+    }
+    if vc_t.shape() != ks.as_slice() {
+        bail!("v cache shape {:?} != k cache shape {ks:?}", vc_t.shape());
     }
     let (pos0, valid_bound) = if decode {
         (scalar, scalar + 1)
@@ -155,24 +273,34 @@ fn attention(args: &[&Tensor], decode: bool) -> Result<Vec<Tensor>> {
     };
 
     let hn = rms_norm(h, t, d, ln);
-    let q = matmul(&hn, t, d, wq, d);
-    let k_new = matmul(&hn, t, d, wk, d);
-    let v_new = matmul(&hn, t, d, wv, d);
+    let q = mm(&hn, t, &wq, "attn wq")?;
+    let k_new = mm(&hn, t, &wk, "attn wk")?;
+    let v_new = mm(&hn, t, &wv, "attn wv")?;
+    put_buf(hn);
 
-    let mut kc2 = kc.to_vec();
-    let mut vc2 = vc.to_vec();
-    for i in 0..t {
-        let p = pos0 + i;
-        if p >= kv_len {
-            bail!("kv write position {p} out of range {kv_len}");
+    // In-place KV row writes: O(t * d_model), not a cache clone.
+    {
+        let kc = kc_t.as_f32_mut()?;
+        let vc = vc_t.as_f32_mut()?;
+        for i in 0..t {
+            let p = pos0 + i;
+            if p >= kv_len {
+                bail!("kv write position {p} out of range {kv_len}");
+            }
+            kc[p * d..(p + 1) * d]
+                .copy_from_slice(&k_new[i * d..(i + 1) * d]);
+            vc[p * d..(p + 1) * d]
+                .copy_from_slice(&v_new[i * d..(i + 1) * d]);
         }
-        kc2[p * d..(p + 1) * d].copy_from_slice(&k_new[i * d..(i + 1) * d]);
-        vc2[p * d..(p + 1) * d].copy_from_slice(&v_new[i * d..(i + 1) * d]);
     }
+    put_buf(k_new);
+    put_buf(v_new);
 
+    let kc = kc_t.as_f32()?;
+    let vc = vc_t.as_f32()?;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut att_out = vec![0.0f32; t * d];
-    let mut scores = vec![0.0f32; kv_len];
+    let mut att_out = take_buf(t * d);
+    let mut scores = take_buf(kv_len);
     for qi in 0..t {
         let q_abs = pos0 + qi;
         for head in 0..n_heads {
@@ -182,46 +310,53 @@ fn attention(args: &[&Tensor], decode: bool) -> Result<Vec<Tensor>> {
                 scores[kp] = if masked {
                     -1e9
                 } else {
-                    let krow = &kc2[kp * d + head * hd..kp * d + (head + 1) * hd];
+                    let krow =
+                        &kc[kp * d + head * hd..kp * d + (head + 1) * hd];
                     qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
                         * scale
                 };
             }
             softmax_row(&mut scores);
-            let orow = &mut att_out[qi * d + head * hd..qi * d + (head + 1) * hd];
+            let orow =
+                &mut att_out[qi * d + head * hd..qi * d + (head + 1) * hd];
             for (kp, &w) in scores.iter().enumerate() {
                 if w == 0.0 {
                     continue;
                 }
-                let vrow = &vc2[kp * d + head * hd..kp * d + (head + 1) * hd];
+                let vrow = &vc[kp * d + head * hd..kp * d + (head + 1) * hd];
                 for (o, &v) in orow.iter_mut().zip(vrow) {
                     *o += w * v;
                 }
             }
         }
     }
+    put_buf(q);
+    put_buf(scores);
 
-    let proj = matmul(&att_out, t, d, wo, d);
-    let mut out = h.to_vec();
+    let proj = mm(&att_out, t, &wo, "attn wo")?;
+    put_buf(att_out);
+    let mut out = take_buf(t * d);
+    out.copy_from_slice(h);
     for (o, p) in out.iter_mut().zip(&proj) {
         *o += p;
     }
-    Ok(vec![
-        Tensor::f32(out, vec![t, d]),
-        Tensor::f32(kc2, vec![kv_len, n_heads, hd]),
-        Tensor::f32(vc2, vec![kv_len, n_heads, hd]),
-    ])
+    put_buf(proj);
+    Ok(vec![Tensor::f32(out, vec![t, d]), kc_t, vc_t])
 }
 
 /// gate(h (T,D), ln (D,), wg (D,E)) -> (probs (T,E), h_norm (T,D))
-fn gate(args: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn gate(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let (h, hs) = f32_arg(args, 0, "h")?;
     let (ln, _) = f32_arg(args, 1, "ln")?;
-    let (wg, gs) = f32_arg(args, 2, "wg")?;
+    let wg = view(args, 2, "wg")?;
+    let gs = wg.t.shape();
+    if gs.len() != 2 {
+        bail!("gate wg must be rank-2, got {gs:?}");
+    }
     let (t, d) = (hs[0], hs[1]);
     let e = gs[1];
     let hn = rms_norm(h, t, d, ln);
-    let mut probs = matmul(&hn, t, d, wg, e);
+    let mut probs = mm(&hn, t, &wg, "gate wg")?;
     for i in 0..t {
         softmax_row(&mut probs[i * e..(i + 1) * e]);
     }
@@ -230,53 +365,65 @@ fn gate(args: &[&Tensor]) -> Result<Vec<Tensor>> {
 
 /// expert(x (B,D), w1 (D,F), w3 (D,F), w2 (F,D)) -> (y (B,D))
 /// y = (silu(x@w1) * (x@w3)) @ w2  — the Pallas expert_ffn contract.
-fn expert(args: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn expert(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let (x, xs) = f32_arg(args, 0, "x")?;
-    let (w1, w1s) = f32_arg(args, 1, "w1")?;
-    let (w3, _) = f32_arg(args, 2, "w3")?;
-    let (w2, _) = f32_arg(args, 3, "w2")?;
+    let w1 = view(args, 1, "w1")?;
+    let w3 = view(args, 2, "w3")?;
+    let w2 = view(args, 3, "w2")?;
     let (b, d) = (xs[0], xs[1]);
-    let f = w1s[1];
-    let mut up = matmul(x, b, d, w1, f);
-    let gatev = matmul(x, b, d, w3, f);
+    let mut up = mm(x, b, &w1, "expert w1")?;
+    let gatev = mm(x, b, &w3, "expert w3")?;
     for (u, g) in up.iter_mut().zip(&gatev) {
         *u = silu(*u) * g;
     }
-    let y = matmul(&up, b, f, w2, d);
+    let y = mm(&up, b, &w2, "expert w2")?;
+    put_buf(up);
+    put_buf(gatev);
     Ok(vec![Tensor::f32(y, vec![b, d])])
 }
 
 /// lm_head(h (T,D), ln (D,), w_out (D,V)) -> (logits (T,V))
-fn lm_head(args: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn lm_head(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let (h, hs) = f32_arg(args, 0, "h")?;
     let (ln, _) = f32_arg(args, 1, "ln")?;
-    let (w_out, ws) = f32_arg(args, 2, "w_out")?;
+    let w_out = view(args, 2, "w_out")?;
+    let ws = w_out.t.shape();
+    if ws.len() != 2 {
+        bail!("lm_head w_out must be rank-2, got {ws:?}");
+    }
     let (t, d) = (hs[0], hs[1]);
     let v = ws[1];
     let hn = rms_norm(h, t, d, ln);
-    let logits = matmul(&hn, t, d, w_out, v);
+    let logits = mm(&hn, t, &w_out, "lm_head w_out")?;
+    put_buf(hn);
     Ok(vec![Tensor::f32(logits, vec![t, v])])
 }
 
-/// predictor(s (1,IN)) -> (probs (1,E)): ReLU MLP + sigmoid output,
-/// weights baked into the component artifact.
-fn predictor(w: &MlpWeights, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+/// predictor(s (rows,IN)) -> (probs (rows,E)): ReLU MLP + sigmoid
+/// output, weights baked into the component artifact.
+fn predictor(w: &MlpWeights, args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let (s, ss) = f32_arg(args, 0, "state")?;
-    let mut h = s.to_vec();
-    let mut rows = ss[0];
+    if ss.len() != 2 {
+        bail!("predictor input must be rank-2 (rows, features), \
+               got shape {ss:?}");
+    }
+    let rows = ss[0];
     if rows == 0 {
         bail!("empty predictor input");
     }
+    let mut h = s.to_vec();
     let n_layers = w.layers.len();
-    for (li, (mat, dims, bias)) in w.layers.iter().enumerate() {
-        let (din, dout) = (dims[0], dims[1]);
+    for (li, layer) in w.layers.iter().enumerate() {
+        let (din, dout) = (layer.din, layer.dout);
         if h.len() != rows * din {
             bail!("predictor layer {li}: input {} != {rows}x{din}", h.len());
         }
-        let mut y = matmul(&h, rows, din, mat, dout);
+        let mut y = take_buf(rows * dout);
+        kernels::matmul_bt(&h, rows, din, &layer.wt, dout, &mut y);
         for r in 0..rows {
-            for j in 0..dout {
-                y[r * dout + j] += bias[j];
+            let yr = &mut y[r * dout..(r + 1) * dout];
+            for (v, &bv) in yr.iter_mut().zip(&layer.b) {
+                *v += bv;
             }
         }
         if li + 1 < n_layers {
@@ -288,15 +435,17 @@ fn predictor(w: &MlpWeights, args: &[&Tensor]) -> Result<Vec<Tensor>> {
                 *v = 1.0 / (1.0 + (-*v).exp());
             }
         }
-        h = y;
-        rows = ss[0];
+        put_buf(std::mem::replace(&mut h, y));
     }
-    let e = w.layers.last().map(|(_, dims, _)| dims[1]).unwrap_or(0);
-    Ok(vec![Tensor::f32(h, vec![ss[0], e])])
+    let e = w.layers.last().map(|l| l.dout).unwrap_or(0);
+    Ok(vec![Tensor::f32(h, vec![rows, e])])
 }
 
-/// Dispatch one component invocation.
-pub fn execute(kind: &ComponentKind, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+/// Dispatch one component invocation. Takes the arg list mutably so
+/// components that accept ownership transfer (attention's KV caches)
+/// can move literals out of their slots.
+pub fn execute(kind: &ComponentKind, args: &mut [ArgRef<'_>])
+               -> Result<Vec<Tensor>> {
     match kind {
         ComponentKind::Embed => embed(args),
         ComponentKind::AttnPrefill => attention(args, false),
@@ -313,10 +462,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn matmul_identity() {
+    fn mm_identity() {
         let a = vec![1.0, 2.0, 3.0, 4.0]; // (2,2)
-        let id = vec![1.0, 0.0, 0.0, 1.0];
-        assert_eq!(matmul(&a, 2, 2, &id, 2), a);
+        let id = Tensor::f32(vec![1.0, 0.0, 0.0, 1.0], vec![2, 2]);
+        let args = [ArgRef::T(&id)];
+        let v = view(&args, 0, "id").unwrap();
+        assert_eq!(mm(&a, 2, &v, "test").unwrap(), a);
     }
 
     #[test]
@@ -334,7 +485,9 @@ mod tests {
         let w1 = Tensor::f32(vec![0.5; 4 * 8], vec![4, 8]);
         let w3 = Tensor::f32(vec![0.25; 4 * 8], vec![4, 8]);
         let w2 = Tensor::f32(vec![0.1; 8 * 4], vec![8, 4]);
-        let out = expert(&[&x, &w1, &w3, &w2]).unwrap();
+        let args = [ArgRef::T(&x), ArgRef::T(&w1), ArgRef::T(&w3),
+                    ArgRef::T(&w2)];
+        let out = expert(&args).unwrap();
         assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
     }
 
@@ -349,16 +502,46 @@ mod tests {
         let id = Tensor::f32(vec![1.0, 0.0, 0.0, 1.0], vec![d, d]);
         let kc = Tensor::zeros(&[2, 1, d]);
         let vc = Tensor::zeros(&[2, 1, d]);
-        let out = attention(&[&h, &pos, &ln, &id, &id, &id, &id, &kc, &vc],
-                            true)
-            .unwrap();
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&pos), ArgRef::T(&ln), ArgRef::T(&id),
+            ArgRef::T(&id), ArgRef::T(&id), ArgRef::T(&id), ArgRef::T(&kc),
+            ArgRef::T(&vc),
+        ];
+        let out = attention(&mut args, true).unwrap();
         let hn = rms_norm(h.as_f32().unwrap(), 1, d, ln.as_f32().unwrap());
         let got = out[0].as_f32().unwrap();
         // residual + (attention output == v_new == hn) @ I
         assert!((got[0] - (1.0 + hn[0])).abs() < 1e-5);
         assert!((got[1] - (2.0 + hn[1])).abs() < 1e-5);
-        // cache row 0 written with k_new == hn
+        // output cache row 0 written with k_new == hn ...
         let kc2 = out[1].as_f32().unwrap();
         assert!((kc2[0] - hn[0]).abs() < 1e-6);
+        // ... while the caller's borrowed cache copy-on-wrote: the
+        // original handle is untouched.
+        assert!(kc.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn attention_owned_kv_is_mutated_in_place() {
+        let d = 2;
+        let h = Tensor::f32(vec![0.5, -1.0], vec![1, d]);
+        let pos = Tensor::scalar_i32(1);
+        let ln = Tensor::f32(vec![1.0, 1.0], vec![d]);
+        let id = Tensor::f32(vec![1.0, 0.0, 0.0, 1.0], vec![d, d]);
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&pos), ArgRef::T(&ln), ArgRef::T(&id),
+            ArgRef::T(&id), ArgRef::T(&id), ArgRef::T(&id),
+            ArgRef::Own(Tensor::zeros(&[4, 1, d])),
+            ArgRef::Own(Tensor::zeros(&[4, 1, d])),
+        ];
+        // (The zero-deep-copy property of this path is asserted by the
+        // dedicated `zero_copy` integration test, which owns the
+        // process-global counters.)
+        let out = attention(&mut args, true).unwrap();
+        // row 1 written, row 0 untouched
+        let kc2 = out[1].as_f32().unwrap();
+        assert_eq!(&kc2[..d], &[0.0, 0.0]);
+        let hn = rms_norm(h.as_f32().unwrap(), 1, d, ln.as_f32().unwrap());
+        assert!((kc2[d] - hn[0]).abs() < 1e-6);
     }
 }

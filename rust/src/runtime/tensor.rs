@@ -2,40 +2,93 @@
 //! host math (residual adds, top-k, combine) happens on these; the
 //! runtime's native components consume and produce them directly.
 //!
+//! Data is `Arc`-backed: `clone()` and the executable-boundary
+//! conversions ([`Tensor::to_literal`] / [`Tensor::from_literal`]) are
+//! O(1) handle copies, and mutation goes through copy-on-write
+//! ([`Tensor::as_f32_mut`] via `Arc::make_mut`). When the engine
+//! transfers ownership of a literal into an executable (the KV-cache
+//! path), the handle is unique and the write happens in place — a
+//! decode step writes one KV row per layer instead of cloning the
+//! whole cache. [`copy_stats`] counts the deep copies that do happen
+//! at this boundary so tests can assert the hot path performs none.
+//!
 //! [`Literal`] is the opaque-state handle the engine threads through
 //! executables without inspecting (KV caches). With the native CPU
 //! backend it is simply a `Tensor`; the alias keeps the executable
 //! boundary explicit so a real PJRT backend can swap in a device-side
 //! literal type behind the same seams.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 /// Opaque executable-boundary value (see module docs).
 pub type Literal = Tensor;
 
+/// Counters for copy-on-write deep copies at the literal boundary.
+/// Process-global (atomic): the zero-copy regression test resets them,
+/// runs a serve, and asserts the decode hot path cloned nothing.
+pub mod copy_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DEEP_COPIES: AtomicU64 = AtomicU64::new(0);
+    static DEEP_COPY_ELEMS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record(elems: usize) {
+        DEEP_COPIES.fetch_add(1, Ordering::Relaxed);
+        DEEP_COPY_ELEMS.fetch_add(elems as u64, Ordering::Relaxed);
+    }
+
+    /// Number of copy-on-write deep copies since the last reset.
+    pub fn deep_copies() -> u64 {
+        DEEP_COPIES.load(Ordering::Relaxed)
+    }
+
+    /// Total elements deep-copied since the last reset.
+    pub fn deep_copy_elems() -> u64 {
+        DEEP_COPY_ELEMS.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        DEEP_COPIES.store(0, Ordering::Relaxed);
+        DEEP_COPY_ELEMS.store(0, Ordering::Relaxed);
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
-    F32 { data: Vec<f32>, shape: Vec<usize> },
-    I32 { data: Vec<i32>, shape: Vec<usize> },
+    F32 { data: Arc<Vec<f32>>, shape: Vec<usize> },
+    I32 { data: Arc<Vec<i32>>, shape: Vec<usize> },
+}
+
+/// The empty tensor: what `std::mem::take` leaves behind when the
+/// engine transfers a literal into an executable.
+impl Default for Tensor {
+    fn default() -> Self {
+        Tensor::F32 { data: Arc::new(Vec::new()), shape: vec![0] }
+    }
 }
 
 impl Tensor {
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor::F32 { data, shape }
+        Tensor::F32 { data: Arc::new(data), shape }
     }
 
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor::I32 { data, shape }
+        Tensor::I32 { data: Arc::new(data), shape }
     }
 
     pub fn scalar_i32(v: i32) -> Self {
-        Tensor::I32 { data: vec![v], shape: vec![] }
+        Tensor::I32 { data: Arc::new(vec![v]), shape: vec![] }
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
-        Tensor::F32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+        Tensor::F32 {
+            data: Arc::new(vec![0.0; shape.iter().product()]),
+            shape: shape.to_vec(),
+        }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -57,21 +110,28 @@ impl Tensor {
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
-            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::F32 { data, .. } => Ok(data.as_slice()),
             Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
         }
     }
 
+    /// Mutable view; copy-on-write when the data is shared. A unique
+    /// handle (the in-place KV path) mutates without copying.
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
-            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::F32 { data, .. } => {
+                if Arc::strong_count(data) > 1 || Arc::weak_count(data) > 0 {
+                    copy_stats::record(data.len());
+                }
+                Ok(Arc::make_mut(data).as_mut_slice())
+            }
             Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
-            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::I32 { data, .. } => Ok(data.as_slice()),
             Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
         }
     }
@@ -95,13 +155,58 @@ impl Tensor {
         Ok(&self.as_f32()?[i * w..(i + 1) * w])
     }
 
-    /// Executable-boundary conversion (native backend: a copy).
+    /// Executable-boundary conversion (native backend: an O(1) handle
+    /// copy — the data is shared, not cloned).
     pub fn to_literal(&self) -> Result<Literal> {
         Ok(self.clone())
     }
 
-    /// Executable-boundary conversion (native backend: a copy).
+    /// Executable-boundary conversion (native backend: an O(1) handle
+    /// copy — the data is shared, not cloned).
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         Ok(lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test fn: the copy counters are process-global and cargo runs
+    // tests in parallel, so the counter assertions must be serialized.
+    #[test]
+    fn cow_semantics_and_copy_counting() {
+        // shared handle: the write must copy (and be counted) ...
+        let mut a = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = a.clone();
+        let c0 = copy_stats::deep_copies();
+        a.as_f32_mut().unwrap()[0] = 9.0;
+        assert!(copy_stats::deep_copies() > c0);
+        // ... and leave the other handle untouched
+        assert_eq!(b.as_f32().unwrap()[0], 1.0);
+        assert_eq!(a.as_f32().unwrap()[0], 9.0);
+
+        // unique handle: mutation must not deep-copy
+        let mut u = Tensor::zeros(&[8]);
+        let c1 = copy_stats::deep_copies();
+        u.as_f32_mut().unwrap()[3] = 1.5;
+        u.as_f32_mut().unwrap()[4] = 2.5;
+        assert_eq!(copy_stats::deep_copies(), c1,
+                   "unique tensor mutation must not deep-copy");
+        assert_eq!(u.as_f32().unwrap()[3], 1.5);
+
+        // literal boundary: O(1) handle copies, no data clone
+        let c2 = copy_stats::deep_copies();
+        let l = b.to_literal().unwrap();
+        let back = Tensor::from_literal(&l).unwrap();
+        assert_eq!(b, back);
+        assert_eq!(copy_stats::deep_copies(), c2);
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let t = Tensor::default();
+        assert!(t.is_empty());
+        assert_eq!(t.shape(), &[0]);
     }
 }

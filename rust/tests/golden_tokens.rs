@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
 use duoserve::util::Json;
 use duoserve::workload::Request;
 
@@ -109,6 +109,50 @@ fn decode_routing_matches_reference() {
             assert_eq!(gs, ws, "golden {i} step {s}: routing diverged");
         }
     }
+}
+
+#[test]
+fn continuous_serve_matches_goldens_with_interleaved_requests() {
+    // The continuous loop admits prefills *between* decode iterations,
+    // so staggered arrivals interleave one request's prefill with
+    // others' decodes over shared engine state — exactly where a KV
+    // aliasing bug after the zero-copy refactor would corrupt a token
+    // stream. Every request must still reproduce its golden exactly.
+    let engine = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let goldens = load_goldens(&engine);
+    assert!(!goldens.is_empty());
+    let reqs: Vec<Request> = goldens
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let mut r = golden_request(g, i);
+            r.arrival = i as f64 * 0.002;
+            r
+        })
+        .collect();
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    let ccfg = ContinuousConfig {
+        max_in_flight: 2,
+        queue_capacity: goldens.len().max(4),
+    };
+    let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.rejected, 0, "goldens must not be queue-rejected");
+    for (i, g) in goldens.iter().enumerate() {
+        let want: Vec<i32> = g.get("tokens").unwrap().i32_vec().unwrap();
+        assert_eq!(out.tokens[i], want,
+                   "continuous-mode golden {i} tokens diverged");
+    }
+
+    // And continuous must equal phase-bulk on the same request set.
+    let bulk_reqs: Vec<Request> = goldens
+        .iter()
+        .enumerate()
+        .map(|(i, g)| golden_request(g, i))
+        .collect();
+    let bulk = engine.serve(&bulk_reqs, &opts).unwrap();
+    assert_eq!(out.tokens, bulk.tokens,
+               "continuous vs phase-bulk token streams diverged");
 }
 
 #[test]

@@ -1,0 +1,354 @@
+//! Parity property tests for the zero-copy / blocked-kernel refactor:
+//! the register-blocked (and threaded) matmul kernels and the in-place
+//! attention path must produce outputs identical to straight-line
+//! naive reference implementations (the pre-refactor kernels), across
+//! odd shapes that straddle the 4-wide register block and the
+//! thread-chunk boundaries. Both tiers sum each output element over k
+//! in ascending order with one accumulator, so the expected diff is
+//! exactly zero; the assertions allow <= 1e-6 for safety.
+//!
+//! Also guards the copy-on-write contract at the literal boundary:
+//! passing a *borrowed* KV cache into attention must leave the
+//! caller's tensor untouched, and the owned-transfer path must produce
+//! the same outputs as the borrowed path.
+
+use duoserve::coordinator::Engine;
+use duoserve::memory::ExpertKey;
+use duoserve::runtime::{kernels, ArgRef, Tensor};
+use duoserve::util::Rng;
+
+const CASES: u64 = 60;
+
+fn randv(r: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= 1e-6,
+                "{what} elem {i}: got {g}, want {w}");
+    }
+}
+
+// ------------------------------------------------------------------
+// naive reference kernels (the pre-refactor implementations)
+// ------------------------------------------------------------------
+
+fn rms_norm_ref(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for i in 0..t {
+        let row = &x[i * d..(i + 1) * d];
+        let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (j, &v) in row.iter().enumerate() {
+            out[i * d + j] = v * inv * w[j];
+        }
+    }
+    out
+}
+
+fn softmax_ref(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// The pre-refactor attention: full-cache clones + naive matmuls.
+#[allow(clippy::too_many_arguments)]
+fn attention_ref(h: &[f32], t: usize, d: usize, scalar: usize, decode: bool,
+                 ln: &[f32], wq: &[f32], wk: &[f32], wv: &[f32], wo: &[f32],
+                 kc: &[f32], vc: &[f32], kv_len: usize, n_heads: usize,
+                 hd: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (pos0, valid_bound) = if decode {
+        (scalar, scalar + 1)
+    } else {
+        (0usize, scalar)
+    };
+    let hn = rms_norm_ref(h, t, d, ln);
+    let q = kernels::matmul_naive(&hn, t, d, wq, d);
+    let k_new = kernels::matmul_naive(&hn, t, d, wk, d);
+    let v_new = kernels::matmul_naive(&hn, t, d, wv, d);
+
+    let mut kc2 = kc.to_vec();
+    let mut vc2 = vc.to_vec();
+    for i in 0..t {
+        let p = pos0 + i;
+        kc2[p * d..(p + 1) * d].copy_from_slice(&k_new[i * d..(i + 1) * d]);
+        vc2[p * d..(p + 1) * d].copy_from_slice(&v_new[i * d..(i + 1) * d]);
+    }
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att_out = vec![0.0f32; t * d];
+    let mut scores = vec![0.0f32; kv_len];
+    for qi in 0..t {
+        let q_abs = pos0 + qi;
+        for head in 0..n_heads {
+            let qrow = &q[qi * d + head * hd..qi * d + (head + 1) * hd];
+            for kp in 0..kv_len {
+                let masked = kp > q_abs || kp >= valid_bound;
+                scores[kp] = if masked {
+                    -1e9
+                } else {
+                    let krow =
+                        &kc2[kp * d + head * hd..kp * d + (head + 1) * hd];
+                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
+                        * scale
+                };
+            }
+            softmax_ref(&mut scores);
+            let orow =
+                &mut att_out[qi * d + head * hd..qi * d + (head + 1) * hd];
+            for (kp, &w) in scores.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow =
+                    &vc2[kp * d + head * hd..kp * d + (head + 1) * hd];
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += w * v;
+                }
+            }
+        }
+    }
+    let proj = kernels::matmul_naive(&att_out, t, d, wo, d);
+    let mut out = h.to_vec();
+    for (o, p) in out.iter_mut().zip(&proj) {
+        *o += p;
+    }
+    (out, kc2, vc2)
+}
+
+fn silu_ref(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+// ------------------------------------------------------------------
+// kernel parity
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_blocked_matmul_matches_naive_on_odd_shapes() {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0xB10C);
+        let m = r.range(1, 33);
+        let k = r.range(1, 33);
+        let n = r.range(1, 49);
+        let a = randv(&mut r, m * k);
+        let b = randv(&mut r, k * n);
+        let want = kernels::matmul_naive(&a, m, k, &b, n);
+        let bt = kernels::transpose(&b, k, n);
+        let mut got = vec![0.0f32; m * n];
+        kernels::matmul_bt_into(&a, m, k, &bt, n, &mut got);
+        assert_close(&got, &want, &format!("seed {seed} ({m},{k},{n})"));
+        // forced multi-threaded path on the same (small, odd) shape:
+        // chunking across rows / columns must not change results
+        for threads in [2usize, 3, 8] {
+            let mut gt = vec![0.0f32; m * n];
+            kernels::matmul_bt_threads(&a, m, k, &bt, n, &mut gt, threads);
+            assert_eq!(gt, got,
+                       "seed {seed} ({m},{k},{n}) x{threads} threads");
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_handles_zeros_like_naive() {
+    // The naive kernel skips zero lhs entries; the blocked kernel adds
+    // their exact-zero contributions. Results must still agree.
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from(seed ^ 0x0ED5);
+        let m = r.range(1, 9);
+        let k = r.range(1, 17);
+        let n = r.range(1, 9);
+        let mut a = randv(&mut r, m * k);
+        for v in a.iter_mut() {
+            if r.bool_with(0.5) {
+                *v = 0.0;
+            }
+        }
+        let b = randv(&mut r, k * n);
+        let want = kernels::matmul_naive(&a, m, k, &b, n);
+        let bt = kernels::transpose(&b, k, n);
+        let mut got = vec![0.0f32; m * n];
+        kernels::matmul_bt(&a, m, k, &bt, n, &mut got);
+        assert_close(&got, &want, &format!("seed {seed}"));
+    }
+}
+
+// ------------------------------------------------------------------
+// component parity through the Executable boundary
+// ------------------------------------------------------------------
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+#[test]
+fn attention_decode_matches_reference_and_cow_protects_caller() {
+    let e = engine();
+    let sim = e.man.sim.clone();
+    let d = sim.d_model;
+    let rt = e.runtime();
+    let exe = rt.load(&e.man.component_path("attn_decode").unwrap()).unwrap();
+    let lw = &e.host.nonmoe.layers[0];
+    let kvs = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+
+    for seed in 0..8u64 {
+        let mut r = Rng::seed_from(seed ^ 0xA77E);
+        let kc = Tensor::f32(randv(&mut r, sim.kv_len * d), kvs.clone());
+        let vc = Tensor::f32(randv(&mut r, sim.kv_len * d), kvs.clone());
+        let kc_before = kc.as_f32().unwrap().to_vec();
+        let vc_before = vc.as_f32().unwrap().to_vec();
+        let pos = r.range(0, sim.kv_len - 1);
+        let h = Tensor::f32(randv(&mut r, d), vec![1, d]);
+        let pos_t = Tensor::scalar_i32(pos as i32);
+
+        // borrowed-KV path (copy-on-write)
+        let out = exe
+            .run_mixed(vec![
+                ArgRef::T(&h), ArgRef::T(&pos_t), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::T(&kc), ArgRef::T(&vc),
+            ])
+            .unwrap();
+
+        let (want_h, want_kc, want_vc) = attention_ref(
+            h.as_f32().unwrap(), 1, d, pos, true,
+            lw.ln_attn.t.as_f32().unwrap(), lw.wq.t.as_f32().unwrap(),
+            lw.wk.t.as_f32().unwrap(), lw.wv.t.as_f32().unwrap(),
+            lw.wo.t.as_f32().unwrap(), &kc_before, &vc_before,
+            sim.kv_len, sim.n_heads, sim.head_dim);
+
+        assert_close(out[0].as_f32().unwrap(), &want_h,
+                     &format!("seed {seed} h"));
+        assert_close(out[1].as_f32().unwrap(), &want_kc,
+                     &format!("seed {seed} kc"));
+        assert_close(out[2].as_f32().unwrap(), &want_vc,
+                     &format!("seed {seed} vc"));
+        // COW contract: the caller's borrowed caches are untouched
+        assert_eq!(kc.as_f32().unwrap(), kc_before.as_slice(),
+                   "seed {seed}: borrowed k cache was mutated");
+        assert_eq!(vc.as_f32().unwrap(), vc_before.as_slice(),
+                   "seed {seed}: borrowed v cache was mutated");
+
+        // owned-transfer path (in place): identical outputs
+        let out2 = exe
+            .run_mixed(vec![
+                ArgRef::T(&h), ArgRef::T(&pos_t), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::Own(kc.clone()), ArgRef::Own(vc.clone()),
+            ])
+            .unwrap();
+        assert_eq!(out2[0], out[0], "seed {seed}: owned path h diverged");
+        assert_eq!(out2[1], out[1], "seed {seed}: owned path kc diverged");
+        assert_eq!(out2[2], out[2], "seed {seed}: owned path vc diverged");
+    }
+}
+
+#[test]
+fn attention_prefill_matches_reference_across_valid_lengths() {
+    let e = engine();
+    let sim = e.man.sim.clone();
+    let d = sim.d_model;
+    let rt = e.runtime();
+    let exe =
+        rt.load(&e.man.component_path("attn_prefill").unwrap()).unwrap();
+    let lw = &e.host.nonmoe.layers[0];
+    let kvs = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+
+    for seed in 0..6u64 {
+        let mut r = Rng::seed_from(seed ^ 0x9E1F);
+        let t = r.range(1, sim.max_seq);
+        let valid = r.range(1, t);
+        let kc = Tensor::zeros(&kvs);
+        let vc = Tensor::zeros(&kvs);
+        let h = Tensor::f32(randv(&mut r, t * d), vec![t, d]);
+        let vlen = Tensor::scalar_i32(valid as i32);
+
+        let out = exe
+            .run_mixed(vec![
+                ArgRef::T(&h), ArgRef::T(&vlen), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::T(&kc), ArgRef::T(&vc),
+            ])
+            .unwrap();
+
+        let zeros = vec![0.0f32; sim.kv_len * d];
+        let (want_h, want_kc, want_vc) = attention_ref(
+            h.as_f32().unwrap(), t, d, valid, false,
+            lw.ln_attn.t.as_f32().unwrap(), lw.wq.t.as_f32().unwrap(),
+            lw.wk.t.as_f32().unwrap(), lw.wv.t.as_f32().unwrap(),
+            lw.wo.t.as_f32().unwrap(), &zeros, &zeros,
+            sim.kv_len, sim.n_heads, sim.head_dim);
+
+        assert_close(out[0].as_f32().unwrap(), &want_h,
+                     &format!("seed {seed} t={t} valid={valid} h"));
+        assert_close(out[1].as_f32().unwrap(), &want_kc,
+                     &format!("seed {seed} kc"));
+        assert_close(out[2].as_f32().unwrap(), &want_vc,
+                     &format!("seed {seed} vc"));
+    }
+}
+
+#[test]
+fn expert_ffn_matches_reference() {
+    let e = engine();
+    let sim = e.man.sim.clone();
+    let (d, f) = (sim.d_model, sim.d_ff);
+    let rt = e.runtime();
+    let &b = e.man.expert_buckets.first().unwrap();
+    let exe = rt
+        .load(&e.man.component_path(&format!("expert_t{b}")).unwrap())
+        .unwrap();
+    let w = e.host.expert_tensors(ExpertKey::routed(0, 0)).unwrap();
+
+    for seed in 0..6u64 {
+        let mut r = Rng::seed_from(seed ^ 0xFF17);
+        let x = Tensor::f32(randv(&mut r, b * d), vec![b, d]);
+        let out = exe
+            .run_mixed(vec![ArgRef::T(&x), w.w1.arg(), w.w3.arg(),
+                            w.w2.arg()])
+            .unwrap();
+
+        let xd = x.as_f32().unwrap();
+        let mut up = kernels::matmul_naive(xd, b, d,
+                                           w.w1.t.as_f32().unwrap(), f);
+        let gatev = kernels::matmul_naive(xd, b, d,
+                                          w.w3.t.as_f32().unwrap(), f);
+        for (u, g) in up.iter_mut().zip(&gatev) {
+            *u = silu_ref(*u) * g;
+        }
+        let want = kernels::matmul_naive(&up, b, f,
+                                         w.w2.t.as_f32().unwrap(), d);
+        assert_close(out[0].as_f32().unwrap(), &want,
+                     &format!("seed {seed} expert"));
+    }
+}
+
+#[test]
+fn predictor_rejects_non_rank2_input_with_clear_error() {
+    // Satellite guard: a rank-1 state must fail with a shape error,
+    // not an index panic.
+    let e = engine();
+    if !e.has_mlp() {
+        return;
+    }
+    let rt = e.runtime();
+    let exe = rt
+        .load(&e.man.resolve(&e.man.predictor.hlo))
+        .unwrap();
+    let bad = Tensor::f32(vec![0.0; e.man.predictor.input_dim],
+                          vec![e.man.predictor.input_dim]);
+    let err = exe.run(&[&bad]).unwrap_err();
+    // the vendored anyhow's Debug rendering shows the whole chain
+    let msg = format!("{err:?}");
+    assert!(msg.contains("rank-2"), "unhelpful error: {msg}");
+}

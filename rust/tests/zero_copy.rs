@@ -1,0 +1,53 @@
+//! Zero-copy regression guard for the decode hot path: a serve run —
+//! prefill plus every decode step, phase-bulk and continuous — must
+//! perform **zero** full-KV-cache deep copies at the literal
+//! boundary. Per-step KV writes are O(d_model) per layer via
+//! ownership transfer (`ArgRef::Own`); any reintroduced clone (e.g. a
+//! `to_vec()` on the cache, or a shared handle forcing copy-on-write)
+//! trips the `copy_stats` counters.
+//!
+//! This lives in its own test binary on purpose: the counters are
+//! process-global, and other suites (native_parity, the runtime unit
+//! tests) intentionally exercise the copy-on-write path in parallel.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::runtime::copy_stats;
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess};
+
+#[test]
+fn serving_performs_zero_kv_cache_deep_copies() {
+    let dir = duoserve::testkit::ensure_tiny();
+    let engine = Engine::load(&dir, "mixtral-tiny").unwrap();
+    let opts =
+        ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+
+    // phase-bulk: sequential prefills + lockstep batched decode
+    let reqs = generate_requests(&engine.man, "squad", 3, 11);
+    copy_stats::reset();
+    let out = engine.serve(&reqs, &opts).unwrap();
+    assert!(out.oom.is_none());
+    assert!(out.tokens.iter().all(|t| !t.is_empty()),
+            "serve generated no tokens — the hot path never ran");
+    assert_eq!(
+        copy_stats::deep_copies(), 0,
+        "phase-bulk serve deep-copied {} tensors ({} elements) at the \
+         literal boundary; the decode hot path must be zero-copy",
+        copy_stats::deep_copies(), copy_stats::deep_copy_elems());
+
+    // continuous: open-loop arrivals joining the running batch
+    // mid-stream (the KV-aliasing stress case)
+    let mut reqs = generate_requests(&engine.man, "orca", 4, 13);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 3.0, seed: 5 });
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    copy_stats::reset();
+    let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(
+        copy_stats::deep_copies(), 0,
+        "continuous serve deep-copied {} tensors ({} elements) at the \
+         literal boundary",
+        copy_stats::deep_copies(), copy_stats::deep_copy_elems());
+}
