@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::experts::{ExpertProvider, StagedExpertProvider, StagingMode};
 use duoserve::memory::{DeviceExpertCache, ExpertKey};
 use duoserve::metrics::percentile;
 use duoserve::predictor::{top_k, StateConstructor};
@@ -210,6 +211,36 @@ fn main() -> anyhow::Result<()> {
               || {
                   kernels::matmul_bt(&a, m, k, &bt, n, &mut out);
               });
+    }
+
+    // --- MoE expert path through the provider seam --------------------
+    // cache-hit: weights already delivered into the staged table;
+    // cache-miss: the synchronous host-pool fallback (on-demand path);
+    // prefetched: the full hint -> worker round-trip -> staged acquire.
+    {
+        let key = ExpertKey::routed(0, 1);
+        let mut hit = StagedExpertProvider::new(
+            engine.host.clone(), DeviceExpertCache::new(2, 2), 1,
+            StagingMode::Threaded);
+        hit.prefetch(&[key]);
+        hit.worker().unwrap().drain();
+        bench(&mut stats, "moe-path expert acquire cache-hit", 10_000, || {
+            let _ = hit.acquire(key).unwrap();
+        });
+
+        let mut miss = StagedExpertProvider::new(
+            engine.host.clone(), DeviceExpertCache::new(2, 2), 1,
+            StagingMode::Sync);
+        bench(&mut stats, "moe-path expert acquire cache-miss", 10_000, || {
+            let _ = miss.acquire(key).unwrap();
+        });
+
+        bench(&mut stats, "moe-path expert acquire prefetched", 500, || {
+            hit.retire_below(usize::MAX); // clear the staged table
+            hit.prefetch(&[key]);
+            hit.worker().unwrap().drain();
+            let _ = hit.acquire(key).unwrap();
+        });
     }
 
     // --- cache + top-k host ops ---------------------------------------

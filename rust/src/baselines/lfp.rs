@@ -27,7 +27,7 @@ impl LfpPolicy {
         let mut t_all_fetched = t_layer_start;
         for e in 0..cx.n_experts {
             let key = ExpertKey::routed(layer, e);
-            let done = match cx.cache.touch(key, t_layer_start) {
+            let done = match cx.touch(key, t_layer_start) {
                 Some(r) => r,
                 None => cx.fetch(key, t_layer_start, LinkKind::Pinned),
             };

@@ -82,7 +82,7 @@ impl Policy for MifPolicy {
         let mut ready_at = std::collections::HashMap::new();
         for &e in &to_fetch {
             let key = ExpertKey::routed(layer, e);
-            let done = match cx.cache.touch(key, t_sched) {
+            let done = match cx.touch(key, t_sched) {
                 Some(r) => r,
                 None => cx.fetch(key, t_sched, LinkKind::Pinned),
             };
@@ -117,7 +117,7 @@ impl Policy for MifPolicy {
         for &(e, tokens) in groups {
             actual.push(e);
             let key = ExpertKey::routed(layer, e);
-            let ready = match cx.cache.touch(key, t_gate) {
+            let ready = match cx.touch(key, t_gate) {
                 Some(r) => r.max(t_gate),
                 None => {
                     // Unpredicted experts come through MoE-Infinity's
@@ -131,7 +131,7 @@ impl Policy for MifPolicy {
                     }
                     let done = cx.streams.run(StreamId::Comm, t_gate, dur,
                                               "mif-miss-fetch");
-                    cx.cache.insert(key, done);
+                    cx.provider.admit(key, done);
                     done
                 }
             };
@@ -150,7 +150,7 @@ impl Policy for MifPolicy {
             let ready = if first_start.is_finite() { first_start } else { t_gate };
             for e in predicted {
                 let key = ExpertKey::routed(layer + 1, e);
-                if !cx.cache.contains(key) {
+                if !cx.resident(key) {
                     cx.fetch(key, ready, LinkKind::Pinned);
                 }
             }

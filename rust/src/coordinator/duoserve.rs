@@ -19,6 +19,12 @@
 //!      critical path);
 //!   2. after expert-1 compute *and* predictor completion: the comm
 //!      stream may begin prefetching the next layer.
+//!
+//! All residency operations go through the [`SimCtx`] provider seam;
+//! the `no_overlap` flag covers the *virtual-time* half of the
+//! `Ablation::NoOverlap` story (single-stream schedule) while the
+//! engine pairs it with the synchronous expert provider for the
+//! real-concurrency half.
 
 use std::collections::VecDeque;
 
@@ -32,21 +38,11 @@ pub struct DuoServePolicy {
     sys: SystemConfig,
     /// Ablation: serialise transfers behind compute (single-stream).
     no_overlap: bool,
-    /// Completion time of the predictor-issued prefetch per (layer,
-    /// expert) is tracked in the shared cache; this records which
-    /// experts were predicted for the next layer (for mismatch checks).
-    predicted_next: Vec<usize>,
-    predicted_layer: Option<usize>,
 }
 
 impl DuoServePolicy {
     pub fn new(sys: SystemConfig) -> Self {
-        DuoServePolicy {
-            sys,
-            no_overlap: false,
-            predicted_next: Vec::new(),
-            predicted_layer: None,
-        }
+        DuoServePolicy { sys, no_overlap: false }
     }
 
     /// Single-stream ablation: every transfer completes before the
@@ -63,16 +59,13 @@ impl Policy for DuoServePolicy {
 
     fn begin_request(&mut self, cx: &mut SimCtx<'_>) -> Result<(), OomError> {
         // The predictor is resident on GPU for the whole run (§VI-D).
-        cx.meter.set_predictor(self.sys.predictor_bytes)?;
-        self.predicted_next.clear();
-        self.predicted_layer = None;
-        Ok(())
+        cx.meter.set_predictor(self.sys.predictor_bytes)
     }
 
     fn prefill_moe(&mut self, cx: &mut SimCtx<'_>, layer: usize,
                    groups: &Groups, t_layer_start: f64, t_gate: f64)
                    -> Result<f64, OomError> {
-        let k = cx.cache.per_layer_capacity();
+        let k = cx.provider.per_layer_capacity();
         // Ring of expert-compute completion times: the fetch of expert
         // i must wait for slot (i - k) to be released by its compute.
         let mut completions: VecDeque<f64> = VecDeque::with_capacity(k);
@@ -91,7 +84,7 @@ impl Policy for DuoServePolicy {
             // Prefetch may overlap the layer's attention (dense prefill
             // activation needs no gate decision to start fetching).
             let key = ExpertKey::routed(layer, e);
-            let t_fetch = match cx.cache.touch(key, slot_free) {
+            let t_fetch = match cx.touch(key, slot_free) {
                 Some(ready) => ready,
                 None => cx.fetch(key, slot_free.max(t_layer_start), LinkKind::Pinned),
             };
@@ -120,7 +113,7 @@ impl Policy for DuoServePolicy {
         let mut ready: Vec<(usize, usize, f64)> = Vec::with_capacity(groups.len());
         for &(e, tokens) in groups {
             let key = ExpertKey::routed(layer, e);
-            let t_ready = match cx.cache.touch(key, t_gate) {
+            let t_ready = match cx.touch(key, t_gate) {
                 Some(r) => r,
                 None => cx.fetch(key, t_gate, LinkKind::Pinned),
             };
@@ -167,12 +160,10 @@ impl Policy for DuoServePolicy {
             };
             for &e in &predicted {
                 let key = ExpertKey::routed(layer + 1, e);
-                if !cx.cache.contains(key) {
+                if !cx.resident(key) {
                     cx.fetch(key, prefetch_ready, LinkKind::Pinned);
                 }
             }
-            self.predicted_next = predicted;
-            self.predicted_layer = Some(layer + 1);
         }
 
         cx.sync_expert_gauge(1)?;

@@ -2,11 +2,20 @@
 //! components (real tokens, CPU PJRT) interleaved with the policy's
 //! virtual-time schedule (latency/memory, paper-scale cost model).
 //!
-//! One engine serves one model. `serve` runs a request set to
-//! completion under one scheduling policy: prefills sequentially (one
-//! GPU), then decodes in lockstep (batched decode unions expert
-//! activations across requests — the Fig. 7 regime). Batch size 1
-//! reproduces the paper's primary single-request setting.
+//! One engine serves one model. The serving work itself lives in
+//! [`super::session::ServeSession`] — one shared step-loop core — so
+//! the two entry points here are thin:
+//!
+//! * [`Engine::serve`] — phase-bulk (the paper's evaluation harness):
+//!   prefills sequentially, then decodes in lockstep (batched decode
+//!   unions expert activations across requests — the Fig. 7 regime).
+//!   Batch size 1 reproduces the paper's primary single-request
+//!   setting.
+//! * [`Engine::serve_continuous`] — the event-driven open-loop serving
+//!   system (continuous batching, arrival-relative QoS).
+//!
+//! All expert fetches — functional bytes and simulated residency —
+//! go through the [`crate::experts::ExpertProvider`] seam.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,19 +24,19 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::{DeviceProfile, Manifest, PolicyKind, SystemConfig};
-use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, MemoryMeter, OomError};
-use crate::metrics::{summarize, PredictorAccuracy, RequestMetrics, Summary};
+use crate::experts::{ExpertProvider, ExpertStats, StagedExpertProvider,
+                     StagingMode};
+use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, OomError};
+use crate::metrics::{PredictorAccuracy, RequestMetrics, Summary};
 use crate::predictor::{Episode, Matrices, MlpPredictor, StateConstructor};
-use crate::runtime::{ArgRef, Executable, Literal, Runtime, Tensor};
-use crate::simx::{CostModel, OpRecord, StreamId, Streams};
+use crate::runtime::{ArgRef, Executable, Runtime, Tensor};
+use crate::simx::{OpRecord, StreamId};
 use crate::workload::Request;
 
-use super::policy::{Policy, SimCtx};
+use super::policy::Policy;
 use super::scheduler::{ContinuousConfig, ContinuousScheduler, Decision,
                        ServerEvent};
-
-/// Paper-scale vocabulary for head-cost estimation (Mixtral's 32k).
-const PAPER_VOCAB: f64 = 32_000.0;
+use super::session::{ServeSession, StepAnchor};
 
 /// Ablations of DuoServe's two mechanisms (DESIGN.md §4, ablation row):
 /// they answer "how much of the win is the pipeline vs the predictor?".
@@ -37,7 +46,10 @@ pub enum Ablation {
     /// heuristic (paper §II-A Challenge #1's strawman).
     NoPredictor,
     /// Disable comm/compute overlap: transfers finish before the
-    /// dependent compute is issued (single-stream DuoServe).
+    /// dependent compute is issued (single-stream DuoServe). In the
+    /// native runtime this also selects the synchronous expert
+    /// provider — no prefetch-worker thread — so the ablation is a
+    /// deterministic provider toggle, not a policy special case.
     NoOverlap,
 }
 
@@ -49,17 +61,26 @@ pub struct ServeOptions {
     pub record_streams: bool,
     /// DuoServe-only mechanism ablation.
     pub ablation: Option<Ablation>,
+    /// How the expert provider delivers weights: threaded prefetch
+    /// worker (default) or fully synchronous. `Ablation::NoOverlap`
+    /// forces `Sync` regardless.
+    pub staging: StagingMode,
 }
 
 impl ServeOptions {
     pub fn new(policy: PolicyKind, device: DeviceProfile) -> Self {
-        ServeOptions { policy, device, record_streams: false, ablation: None }
+        ServeOptions {
+            policy,
+            device,
+            record_streams: false,
+            ablation: None,
+            staging: StagingMode::Threaded,
+        }
     }
 
     pub fn ablated(policy: PolicyKind, device: DeviceProfile,
                    ablation: Ablation) -> Self {
-        ServeOptions { policy, device, record_streams: false,
-                       ablation: Some(ablation) }
+        ServeOptions { ablation: Some(ablation), ..Self::new(policy, device) }
     }
 }
 
@@ -73,6 +94,10 @@ pub struct ServeOutcome {
     pub hit_rate: f64,
     /// DuoServe predictor accuracy observed online.
     pub accuracy: PredictorAccuracy,
+    /// Full expert-path accounting from the provider's ledger
+    /// (hits/misses/bytes/staging counters; single source of truth
+    /// for both serving modes).
+    pub expert_stats: ExpertStats,
     /// Set when the policy ran out of simulated GPU memory.
     pub oom: Option<OomError>,
     pub stream_trace: Option<Vec<OpRecord>>,
@@ -93,63 +118,37 @@ impl ServeOutcome {
     }
 }
 
-struct Components {
-    embed_prefill: Arc<Executable>,
-    embed_decode: Arc<Executable>,
-    attn_prefill: Arc<Executable>,
-    attn_decode: Arc<Executable>,
-    gate_prefill: Arc<Executable>,
-    gate_decode: Arc<Executable>,
-    lm_head: Arc<Executable>,
+pub(crate) struct Components {
+    pub embed_prefill: Arc<Executable>,
+    pub embed_decode: Arc<Executable>,
+    pub attn_prefill: Arc<Executable>,
+    pub attn_decode: Arc<Executable>,
+    pub gate_prefill: Arc<Executable>,
+    pub gate_decode: Arc<Executable>,
+    pub lm_head: Arc<Executable>,
     /// bucket size -> expert executable
-    experts: BTreeMap<usize, Arc<Executable>>,
-}
-
-/// Per-request live state.
-struct ReqState {
-    idx: usize,
-    dataset: String,
-    prompt: Vec<i32>,
-    n_decode: usize,
-    valid: usize,
-    pos: usize,
-    h: Tensor,
-    kcs: Vec<Literal>,
-    vcs: Vec<Literal>,
-    tokens: Vec<i32>,
-    done: bool,
-    state_con: StateConstructor,
-    /// DuoServe's live prediction per layer (accuracy bookkeeping):
-    /// pending[l] = predicted set for layer l of the current step.
-    pending_pred: Vec<Option<Vec<usize>>>,
-    acc: PredictorAccuracy,
-    ttft: f64,
-    e2e: f64,
-    step_latencies: Vec<f64>,
-    /// Current decode step's per-layer selections.
-    step_path: Vec<Vec<usize>>,
-    /// All completed decode steps' paths (tracer output).
-    all_paths: Vec<Vec<Vec<usize>>>,
-    /// Virtual arrival instant (continuous mode; 0 closed-loop).
-    arrival: f64,
-    /// Prefill issue instant minus arrival (continuous mode).
-    queue_delay: f64,
-    /// Whether the request ever got a serving slot (false for
-    /// admission-queue rejections in continuous mode).
-    served: bool,
-    /// Completion instant of this request's latest prefill/decode
-    /// event (per-request step-latency bookkeeping in continuous
-    /// mode, where requests join mid-stream).
-    last_event_t: f64,
+    pub experts: BTreeMap<usize, Arc<Executable>>,
 }
 
 pub struct Engine {
     pub man: Manifest,
-    pub host: HostPool,
+    pub host: Arc<HostPool>,
     pub mats: Matrices,
-    comps: Components,
-    mlp: Option<MlpPredictor>,
+    pub(crate) comps: Components,
+    pub(crate) mlp: Option<MlpPredictor>,
     rt: Runtime,
+}
+
+/// Early-return on simulated OOM: close the run out through the
+/// session's outcome builder (continuous mode attaches the scheduler's
+/// rejection count and event schedule).
+macro_rules! check {
+    ($sess:ident, $sched:expr, $e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(oom) => return Ok($sess.outcome(Some(oom), $sched)),
+        }
+    };
 }
 
 impl Engine {
@@ -160,7 +159,8 @@ impl Engine {
     }
 
     pub fn with_runtime(man: Manifest, rt: Runtime) -> Result<Self> {
-        let host = HostPool::load(&man, &rt).context("loading host pool")?;
+        let host =
+            Arc::new(HostPool::load(&man, &rt).context("loading host pool")?);
         let mats = Matrices::load(&man).context("loading matrices")?;
         let comp = |name: &str| -> Result<Arc<Executable>> {
             rt.load(&man.component_path(name)?)
@@ -202,11 +202,12 @@ impl Engine {
 
     /// Paper-layer / sim-layer ratio: memory gauges are paper-absolute,
     /// so per-sim-layer residency scales up by this factor.
-    fn layer_scale(&self) -> f64 {
+    pub(crate) fn layer_scale(&self) -> f64 {
         self.man.paper.n_layers as f64 / self.man.sim.n_layers as f64
     }
 
-    fn make_cache(&self, kind: PolicyKind, sys: &SystemConfig) -> DeviceExpertCache {
+    fn make_cache(&self, kind: PolicyKind, sys: &SystemConfig)
+                  -> DeviceExpertCache {
         let k = self.man.sim.top_k;
         let e = self.man.sim.n_experts;
         match kind {
@@ -231,8 +232,25 @@ impl Engine {
         }
     }
 
-    fn make_policy(&self, kind: PolicyKind, sys: &SystemConfig,
-                   ablation: Option<Ablation>) -> Box<dyn Policy> {
+    /// The session's expert provider: policy-specific simulated cache
+    /// + the host pool + the staging mode. `Ablation::NoOverlap` maps
+    /// onto the synchronous provider (no prefetch-worker thread), so
+    /// the single-stream ablation is deterministic by construction.
+    pub(crate) fn make_provider(&self, kind: PolicyKind, sys: &SystemConfig,
+                                expert_bytes: u64, opts: &ServeOptions)
+                                -> Box<dyn ExpertProvider> {
+        let cache = self.make_cache(kind, sys);
+        let staging = if opts.ablation == Some(Ablation::NoOverlap) {
+            StagingMode::Sync
+        } else {
+            opts.staging
+        };
+        Box::new(StagedExpertProvider::new(self.host.clone(), cache,
+                                           expert_bytes, staging))
+    }
+
+    pub(crate) fn make_policy(&self, kind: PolicyKind, sys: &SystemConfig,
+                              ablation: Option<Ablation>) -> Box<dyn Policy> {
         match kind {
             PolicyKind::DuoServe => {
                 if ablation == Some(Ablation::NoOverlap) {
@@ -253,15 +271,14 @@ impl Engine {
     // Host math (the combine path; O(T*D) f32 work the coordinator owns)
     // -----------------------------------------------------------------
 
-    fn topk_row(&self, probs: &[f32]) -> Vec<usize> {
-        crate::predictor::top_k(probs, self.man.sim.top_k)
-    }
-
     /// Run one expert over a token group (rows of h_norm), chunked and
-    /// zero-padded into the lowered bucket sizes.
-    fn run_expert(&self, key: ExpertKey, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// zero-padded into the lowered bucket sizes. Weights come through
+    /// the provider seam: staged if the prefetch worker already
+    /// delivered them, synchronous otherwise.
+    fn run_expert(&self, provider: &mut dyn ExpertProvider, key: ExpertKey,
+                  rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let d = self.man.sim.d_model;
-        let w = self.host.expert_tensors(key)?;
+        let w = provider.acquire(key)?;
         let max_bucket = *self.man.expert_buckets.last().unwrap();
         let mut out = Vec::with_capacity(rows.len());
         let mut i = 0;
@@ -292,16 +309,18 @@ impl Engine {
     /// Returns per-row output deltas and the (expert -> token count)
     /// groups for the timing path, plus per-row selections.
     #[allow(clippy::type_complexity)]
-    fn moe_functional(&self, layer: usize, hn: &[Vec<f32>],
-                      probs: &[Vec<f32>])
-                      -> Result<(Vec<Vec<f32>>, Vec<(usize, usize)>,
-                                 Vec<Vec<usize>>)> {
+    pub(crate) fn moe_functional(&self, provider: &mut dyn ExpertProvider,
+                                 layer: usize, hn: &[Vec<f32>],
+                                 probs: &[Vec<f32>])
+                                 -> Result<(Vec<Vec<f32>>, Vec<(usize, usize)>,
+                                            Vec<Vec<usize>>)> {
         let d = self.man.sim.d_model;
+        let top_k = self.man.sim.top_k;
         let n_rows = hn.len();
         let mut sel: Vec<Vec<usize>> = Vec::with_capacity(n_rows);
         let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (i, p) in probs.iter().enumerate() {
-            let s = self.topk_row(p);
+            let s = crate::util::math::top_k(p, top_k);
             for &e in &s {
                 groups.entry(e).or_default().push(i);
             }
@@ -312,7 +331,8 @@ impl Engine {
         for (&e, rows_idx) in &groups {
             let rows: Vec<&[f32]> =
                 rows_idx.iter().map(|&i| hn[i].as_slice()).collect();
-            let ys = self.run_expert(ExpertKey::routed(layer, e), &rows)?;
+            let ys = self.run_expert(&mut *provider,
+                                     ExpertKey::routed(layer, e), &rows)?;
             for (j, &i) in rows_idx.iter().enumerate() {
                 let denom: f32 = sel[i].iter().map(|&ee| probs[i][ee]).sum();
                 let wgt = probs[i][e] / denom;
@@ -324,7 +344,8 @@ impl Engine {
         // Shared experts: every token, unweighted (DeepSeek-style).
         for s in 0..self.man.sim.n_shared {
             let rows: Vec<&[f32]> = hn.iter().map(|r| r.as_slice()).collect();
-            let ys = self.run_expert(ExpertKey::shared(layer, s), &rows)?;
+            let ys = self.run_expert(&mut *provider,
+                                     ExpertKey::shared(layer, s), &rows)?;
             for (i, y) in ys.iter().enumerate() {
                 for (dd, yv) in delta[i].iter_mut().zip(y) {
                     *dd += yv;
@@ -338,496 +359,45 @@ impl Engine {
     }
 
     // -----------------------------------------------------------------
-    // Serving
+    // Serving entry points (thin loops over the shared ServeSession)
     // -----------------------------------------------------------------
 
-    fn new_state(&self, i: usize, r: &Request, sim: &crate::config::SimDims,
-                 kv_shape: &[usize]) -> ReqState {
-        ReqState {
-            idx: i,
-            dataset: r.dataset.clone(),
-            prompt: r.prompt.clone(),
-            n_decode: r.n_decode,
-            valid: r.prompt.len(),
-            pos: r.prompt.len(),
-            h: Tensor::zeros(&[1, sim.d_model]),
-            // Literal == Tensor on the native backend: build the KV
-            // literals directly. Each serve step transfers these into
-            // the attention executable by ownership (ArgRef::Own) and
-            // takes them back from the outputs, so the caches are
-            // mutated in place — one KV row written per layer per
-            // decode step, never a full-cache copy.
-            kcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
-            vcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
-            tokens: Vec::new(),
-            done: false,
-            state_con: StateConstructor::new(&self.man),
-            pending_pred: vec![None; sim.n_layers],
-            acc: PredictorAccuracy::default(),
-            ttft: 0.0,
-            e2e: 0.0,
-            step_latencies: Vec::new(),
-            step_path: Vec::new(),
-            all_paths: Vec::new(),
-            arrival: r.arrival,
-            queue_delay: 0.0,
-            served: false,
-            last_event_t: 0.0,
-        }
-    }
-
+    /// Phase-bulk serving: sequential prefills, then lockstep batched
+    /// decode — the paper's closed-loop evaluation harness.
     pub fn serve(&self, requests: &[Request], opts: &ServeOptions)
                  -> Result<ServeOutcome> {
-        let sys = SystemConfig::for_policy(opts.policy);
-        let cost = CostModel::new(&self.man, opts.device.clone());
-        let mut streams = if opts.record_streams {
-            Streams::recording()
-        } else {
-            Streams::new()
-        };
-        let mut cache = self.make_cache(opts.policy, &sys);
-        let mut meter = MemoryMeter::new(opts.device.vram_bytes);
-        let mut policy = self.make_policy(opts.policy, &sys, opts.ablation);
-
-        let sim = self.man.sim.clone();
-        let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
-        let mut states: Vec<ReqState> = requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let mut st = self.new_state(i, r, &sim, &kv_shape);
-                st.served = true; // phase-bulk admits everything up front
-                st
-            })
-            .collect();
-
-        let layer_scale = self.layer_scale();
-        let expert_bytes =
-            (self.man.paper.expert_bytes as f64 * layer_scale) as u64;
-
-        macro_rules! sim_ctx {
-            () => {
-                SimCtx {
-                    streams: &mut streams,
-                    cache: &mut cache,
-                    meter: &mut meter,
-                    cost: &cost,
-                    expert_bytes,
-                    n_layers: sim.n_layers,
-                    n_experts: sim.n_experts,
-                    top_k: sim.top_k,
-                }
-            };
-        }
-        macro_rules! check {
-            ($e:expr) => {
-                match $e {
-                    Ok(v) => v,
-                    Err(oom) => {
-                        return Ok(self.oom_outcome(oom, &streams, &states, opts))
-                    }
-                }
-            };
-        }
-
-        // -------- fixed GPU residency ---------------------------------
-        check!(meter.set_fixed(self.man.paper.nonmoe_bytes));
-        check!(meter.set_activations(sys.activation_bytes));
+        let mut sess = ServeSession::open(self, requests, opts, true);
+        check!(sess, None, sess.reserve_fixed());
 
         // ================= PREFILL (sequential) ======================
-        for ridx in 0..states.len() {
-            check!(policy.begin_request(&mut sim_ctx!()));
-            let t0 = streams.free_at(StreamId::Compute);
-            let res = self.prefill_one(&mut states[ridx], policy.as_mut(),
-                                       &mut streams, &mut cache, &mut meter,
-                                       &cost, expert_bytes, &sim, t0)?;
-            let t_first = check!(res);
-            states[ridx].ttft = t_first - t0;
-            states[ridx].e2e = t_first;
-
-            let kv_total: u64 = states
-                .iter()
-                .filter(|s| !s.tokens.is_empty())
-                .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
-                .sum();
-            check!(meter.set_kv(kv_total));
+        for ridx in 0..sess.states.len() {
+            check!(sess, None, sess.begin_request());
+            let t0 = sess.streams.free_at(StreamId::Compute);
+            let res = sess.prefill(ridx, t0)?;
+            let t_first = check!(sess, None, res);
+            let st = &mut sess.states[ridx];
+            st.ttft = t_first - t0;
+            st.e2e = t_first;
+            check!(sess, None, sess.sync_kv(false));
         }
 
         // ================= DECODE (lockstep batch) ===================
-        let mut t_prev_step_end = streams.sync_all();
+        let mut t_prev_step_end = sess.streams.sync_all();
         loop {
-            let active: Vec<usize> = states
-                .iter()
-                .filter(|s| !s.done)
-                .map(|s| s.idx)
-                .collect();
+            let active = sess.active();
             if active.is_empty() {
                 break;
             }
-            let res = self.decode_step(&active, &mut states, policy.as_mut(),
-                                       &mut streams, &mut cache, &mut meter,
-                                       &cost, expert_bytes, &sim,
-                                       opts.ablation)?;
-            let t_step_end = check!(res);
-            policy.end_decode_step(&mut sim_ctx!());
-
-            for &r in &active {
-                let st = &mut states[r];
-                st.step_latencies.push(t_step_end - t_prev_step_end);
-                st.e2e = t_step_end;
-                let path = std::mem::take(&mut st.step_path);
-                st.all_paths.push(path);
-                st.state_con.clear();
-                st.pending_pred.iter_mut().for_each(|p| *p = None);
-                if st.tokens.len() >= st.n_decode || st.pos >= sim.kv_len {
-                    st.done = true;
-                }
-            }
+            let res = sess.decode(&active)?;
+            let t_step_end = check!(sess, None, res);
+            sess.after_decode(&active, t_step_end,
+                              StepAnchor::Global(t_prev_step_end));
             t_prev_step_end = t_step_end;
-
-            let kv_total: u64 = states
-                .iter()
-                .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
-                .sum();
-            check!(meter.set_kv(kv_total));
+            check!(sess, None, sess.sync_kv(false));
         }
 
-        Ok(self.finish_outcome(&states, &streams, &cache, &meter, None, opts))
+        Ok(sess.outcome(None, None))
     }
-
-    /// Prefill one request: embed -> L x (attention, gate, MoE) -> head.
-    /// The first op is issued no earlier than `start_at` (continuous
-    /// mode anchors it at the admission instant so an idle server does
-    /// not back-date work before the request arrived).
-    /// Returns the virtual time of the first token (TTFT instant).
-    #[allow(clippy::too_many_arguments)]
-    fn prefill_one(&self, st: &mut ReqState, policy: &mut dyn Policy,
-                   streams: &mut Streams, cache: &mut DeviceExpertCache,
-                   meter: &mut MemoryMeter, cost: &CostModel,
-                   expert_bytes: u64, sim: &crate::config::SimDims,
-                   start_at: f64)
-                   -> Result<std::result::Result<f64, OomError>> {
-        let nm = &self.host.nonmoe;
-        let valid = st.valid;
-        let mut padded = vec![0i32; sim.max_seq];
-        padded[..valid].copy_from_slice(&st.prompt);
-
-        // ---- functional embed / timing: head-ish cost ----------------
-        let toks = Tensor::i32(padded, vec![sim.max_seq]);
-        let pos0 = Tensor::scalar_i32(0);
-        let out = self.comps.embed_prefill.run_mixed(vec![
-            ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(), nm.pos_emb.arg(),
-        ])?;
-        let mut h = out.into_iter().next().unwrap();
-        let mut t_layer = streams.run(StreamId::Compute, start_at,
-                                      cost.head_compute(valid, PAPER_VOCAB),
-                                      "embed");
-
-        for l in 0..sim.n_layers {
-            let lw = &self.host.nonmoe.layers[l];
-            // functional attention. The KV literals transfer in by
-            // ownership and come back (mutated in place) as outputs:
-            // zero cache copies at the boundary.
-            let vlen = Tensor::scalar_i32(valid as i32);
-            let kc = std::mem::take(&mut st.kcs[l]);
-            let vc = std::mem::take(&mut st.vcs[l]);
-            let out = self.comps.attn_prefill.run_mixed(vec![
-                ArgRef::T(&h), ArgRef::T(&vlen), lw.ln_attn.arg(),
-                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                ArgRef::Own(kc), ArgRef::Own(vc),
-            ])?;
-            let mut it = out.into_iter();
-            h = it.next().unwrap();
-            st.kcs[l] = it.next().unwrap();
-            st.vcs[l] = it.next().unwrap();
-
-            // functional gate
-            let out = self.comps.gate_prefill.run_mixed(vec![
-                ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
-            let mut git = out.into_iter();
-            let probs_t = git.next().unwrap();
-            let hn_t = git.next().unwrap();
-
-            // timing: attention + gate on the compute stream
-            let t_layer_start = t_layer;
-            let t_gate = streams.run(StreamId::Compute, t_layer_start,
-                                     cost.attn_compute(valid, valid),
-                                     "prefill-nonmoe");
-
-            // host math: rows 0..valid
-            let hn: Vec<Vec<f32>> =
-                (0..valid).map(|i| hn_t.row(i).unwrap().to_vec()).collect();
-            let probs: Vec<Vec<f32>> =
-                (0..valid).map(|i| probs_t.row(i).unwrap().to_vec()).collect();
-            let (delta, groups, _sel) = self.moe_functional(l, &hn, &probs)?;
-            {
-                let hd = h.as_f32_mut()?;
-                let d = sim.d_model;
-                for (i, dl) in delta.iter().enumerate() {
-                    for (j, v) in dl.iter().enumerate() {
-                        hd[i * d + j] += v;
-                    }
-                }
-            }
-
-            // timing: the policy schedules the MoE section
-            let mut cx = SimCtx {
-                streams, cache, meter, cost, expert_bytes,
-                n_layers: sim.n_layers, n_experts: sim.n_experts,
-                top_k: sim.top_k,
-            };
-            let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
-                                                 t_layer_start, t_gate) {
-                Ok(t) => t,
-                Err(oom) => return Ok(Err(oom)),
-            };
-            // shared experts run on the compute stream (always resident)
-            t_layer = if sim.n_shared > 0 {
-                let dur =
-                    sim.n_shared as f64 * cost.expert_compute(valid);
-                streams.run(StreamId::Compute, t_moe, dur, "shared")
-            } else {
-                t_moe
-            };
-        }
-
-        // ---- first token ---------------------------------------------
-        let h_last = Tensor::f32(h.row(valid - 1)?.to_vec(), vec![1, sim.d_model]);
-        let out = self.comps.lm_head.run_mixed(vec![
-            ArgRef::T(&h_last), nm.ln_final.arg(), nm.w_out.arg()])?;
-        let logits = out.into_iter().next().unwrap();
-        let tok = argmax(logits.as_f32()?) as i32;
-        st.tokens.push(tok);
-        st.h = h_last;
-        let t_first = streams.run(StreamId::Compute, t_layer,
-                                  cost.head_compute(1, PAPER_VOCAB), "lm-head");
-        Ok(Ok(t_first))
-    }
-
-    /// One lockstep decode step over the active requests.
-    /// Returns the step's end time.
-    #[allow(clippy::too_many_arguments)]
-    fn decode_step(&self, active: &[usize], states: &mut [ReqState],
-                   policy: &mut dyn Policy, streams: &mut Streams,
-                   cache: &mut DeviceExpertCache, meter: &mut MemoryMeter,
-                   cost: &CostModel, expert_bytes: u64,
-                   sim: &crate::config::SimDims, ablation: Option<Ablation>)
-                   -> Result<std::result::Result<f64, OomError>> {
-        let nm = &self.host.nonmoe;
-        let b = active.len();
-
-        // functional embed per request
-        for &r in active {
-            let st = &mut states[r];
-            let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
-            let pos = Tensor::scalar_i32(st.pos as i32);
-            let out = self.comps.embed_decode.run_mixed(vec![
-                ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
-                nm.pos_emb.arg(),
-            ])?;
-            st.h = out.into_iter().next().unwrap();
-        }
-
-        let ctx_max = active.iter().map(|&r| states[r].pos + 1).max().unwrap();
-        let mut t_layer = streams.free_at(StreamId::Compute);
-
-        for l in 0..sim.n_layers {
-            let lw = &self.host.nonmoe.layers[l];
-            // functional: attention + gate per request
-            let mut hn: Vec<Vec<f32>> = Vec::with_capacity(b);
-            let mut probs: Vec<Vec<f32>> = Vec::with_capacity(b);
-            for &r in active {
-                let st = &mut states[r];
-                let pos = Tensor::scalar_i32(st.pos as i32);
-                // KV ownership transfer: the attention executable
-                // writes one row in place (O(d_model) per layer) and
-                // hands the caches back — no full-cache copies.
-                let kc = std::mem::take(&mut st.kcs[l]);
-                let vc = std::mem::take(&mut st.vcs[l]);
-                let out = self.comps.attn_decode.run_mixed(vec![
-                    ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
-                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                    ArgRef::Own(kc), ArgRef::Own(vc),
-                ])?;
-                let mut it = out.into_iter();
-                st.h = it.next().unwrap();
-                st.kcs[l] = it.next().unwrap();
-                st.vcs[l] = it.next().unwrap();
-                let out = self.comps.gate_decode.run_mixed(vec![
-                    ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
-                probs.push(out[0].as_f32()?.to_vec());
-                hn.push(out[1].as_f32()?.to_vec());
-            }
-
-            // timing: non-MoE
-            let t_layer_start = t_layer;
-            let t_gate = streams.run(StreamId::Compute, t_layer_start,
-                                     cost.attn_compute(b, ctx_max),
-                                     "decode-nonmoe");
-
-            // host math + functional experts
-            let (delta, groups, sel) = self.moe_functional(l, &hn, &probs)?;
-            for (bi, &r) in active.iter().enumerate() {
-                let st = &mut states[r];
-                {
-                    let hd = st.h.as_f32_mut()?;
-                    for (j, v) in delta[bi].iter().enumerate() {
-                        hd[j] += v;
-                    }
-                }
-                // accuracy: compare DuoServe's live prediction (if any)
-                if let Some(pred) = st.pending_pred[l].take() {
-                    st.acc.observe(&pred, &sel[bi]);
-                }
-                st.state_con.record(l, &sel[bi]);
-                st.step_path.push(sel[bi].clone());
-            }
-
-            // timing: policy schedules the MoE; its predict() hook runs
-            // the real MLP per request and records the union.
-            let t_moe = {
-                let mlp = self.mlp.as_ref();
-                let mats = &self.mats;
-                // Split-borrow dance: the closure needs &mut states for
-                // pending_pred bookkeeping, while the policy owns cx.
-                let mut predictions: Vec<(usize, usize, Vec<usize>)> = Vec::new();
-                let t_moe = {
-                    let states_ref: Vec<&StateConstructor> = active
-                        .iter()
-                        .map(|&r| &states[r].state_con)
-                        .collect();
-                    let heuristic = crate::predictor::HeuristicPredictor::
-                        popularity_affinity(sim.top_k);
-                    let mut predict = |target: usize| -> Vec<usize> {
-                        let mut union: Vec<usize> = Vec::new();
-                        for (bi, sc) in states_ref.iter().enumerate() {
-                            let p = if ablation == Some(Ablation::NoPredictor) {
-                                // Challenge-#1 ablation: heuristic only.
-                                let prev = sc.history().last();
-                                heuristic.predict(
-                                    mats, target,
-                                    prev.map(|v| v.as_slice()).unwrap_or(&[]))
-                            } else {
-                                match mlp {
-                                    Some(m) => m
-                                        .predict(&sc.build(target, mats))
-                                        .unwrap_or_default(),
-                                    None => Vec::new(),
-                                }
-                            };
-                            predictions.push((bi, target, p.clone()));
-                            for e in p {
-                                if !union.contains(&e) {
-                                    union.push(e);
-                                }
-                            }
-                        }
-                        union.sort_unstable();
-                        union
-                    };
-                    let mut cx = SimCtx {
-                        streams, cache, meter, cost, expert_bytes,
-                        n_layers: sim.n_layers, n_experts: sim.n_experts,
-                        top_k: sim.top_k,
-                    };
-                    match policy.decode_moe(&mut cx, l, &groups,
-                                            t_layer_start, t_gate,
-                                            &mut predict) {
-                        Ok(t) => t,
-                        Err(oom) => return Ok(Err(oom)),
-                    }
-                };
-                for (bi, target, p) in predictions {
-                    states[active[bi]].pending_pred[target] = Some(p);
-                }
-                t_moe
-            };
-
-            t_layer = if sim.n_shared > 0 {
-                let dur = sim.n_shared as f64 * cost.expert_compute(b);
-                streams.run(StreamId::Compute, t_moe, dur, "shared")
-            } else {
-                t_moe
-            };
-        }
-
-        // lm head per request (functional); one timing op for the batch
-        for &r in active {
-            let st = &mut states[r];
-            let out = self.comps.lm_head.run_mixed(vec![
-                ArgRef::T(&st.h), nm.ln_final.arg(), nm.w_out.arg()])?;
-            let logits = out.into_iter().next().unwrap();
-            let tok = argmax(logits.as_f32()?) as i32;
-            st.tokens.push(tok);
-            st.pos += 1;
-        }
-        let t_end = streams.run(StreamId::Compute, t_layer,
-                                cost.head_compute(b, PAPER_VOCAB), "lm-head");
-        Ok(Ok(t_end))
-    }
-
-    fn oom_outcome(&self, oom: OomError, streams: &Streams,
-                   states: &[ReqState], opts: &ServeOptions) -> ServeOutcome {
-        let mut out = self.finish_outcome(states, streams,
-                                          &DeviceExpertCache::new(1, 0),
-                                          &MemoryMeter::new(u64::MAX),
-                                          Some(oom), opts);
-        out.metrics.clear();
-        out
-    }
-
-    fn finish_outcome(&self, states: &[ReqState], streams: &Streams,
-                      cache: &DeviceExpertCache, meter: &MemoryMeter,
-                      oom: Option<OomError>, opts: &ServeOptions)
-                      -> ServeOutcome {
-        let metrics: Vec<RequestMetrics> = states
-            .iter()
-            .filter(|s| s.served)
-            .map(|s| RequestMetrics {
-                req_id: s.idx,
-                ttft: s.ttft,
-                e2e: s.e2e,
-                tokens_out: s.tokens.len(),
-                prompt_len: s.valid,
-                step_latencies: s.step_latencies.clone(),
-                arrival: s.arrival,
-                queue_delay: s.queue_delay,
-            })
-            .collect();
-        let makespan = streams.sync_all();
-        let mut accuracy = PredictorAccuracy::default();
-        for s in states {
-            accuracy.merge(&s.acc);
-        }
-        let episodes = states
-            .iter()
-            .map(|s| Episode {
-                dataset: s.dataset.clone(),
-                steps: s.all_paths.clone(),
-            })
-            .collect();
-        ServeOutcome {
-            summary: summarize(&metrics, makespan),
-            metrics,
-            peak_bytes: meter.peak_bytes(),
-            hit_rate: cache.hit_rate(),
-            accuracy,
-            oom,
-            stream_trace: if opts.record_streams {
-                Some(streams.trace().to_vec())
-            } else {
-                None
-            },
-            episodes,
-            tokens: states.iter().map(|s| s.tokens.clone()).collect(),
-            rejected: 0,
-            events: Vec::new(),
-        }
-    }
-
-    // -----------------------------------------------------------------
-    // Continuous (event-driven) serving
-    // -----------------------------------------------------------------
 
     /// Serve an open-loop request stream with continuous batching: an
     /// event-driven loop over virtual time that admits new prefills
@@ -839,92 +409,26 @@ impl Engine {
     pub fn serve_continuous(&self, requests: &[Request],
                             opts: &ServeOptions, ccfg: &ContinuousConfig)
                             -> Result<ServeOutcome> {
-        let sys = SystemConfig::for_policy(opts.policy);
-        let cost = CostModel::new(&self.man, opts.device.clone());
-        let mut streams = if opts.record_streams {
-            Streams::recording()
-        } else {
-            Streams::new()
-        };
-        let mut cache = self.make_cache(opts.policy, &sys);
-        let mut meter = MemoryMeter::new(opts.device.vram_bytes);
-        let mut policy = self.make_policy(opts.policy, &sys, opts.ablation);
-
-        let sim = self.man.sim.clone();
-        let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
-        let mut states: Vec<ReqState> = requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| self.new_state(i, r, &sim, &kv_shape))
-            .collect();
-
-        let layer_scale = self.layer_scale();
-        let expert_bytes =
-            (self.man.paper.expert_bytes as f64 * layer_scale) as u64;
-
-        let arrival_times: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
+        let mut sess = ServeSession::open(self, requests, opts, false);
+        let arrival_times: Vec<f64> =
+            requests.iter().map(|r| r.arrival).collect();
         let mut sched = ContinuousScheduler::new(&arrival_times, ccfg);
-
-        macro_rules! sim_ctx {
-            () => {
-                SimCtx {
-                    streams: &mut streams,
-                    cache: &mut cache,
-                    meter: &mut meter,
-                    cost: &cost,
-                    expert_bytes,
-                    n_layers: sim.n_layers,
-                    n_experts: sim.n_experts,
-                    top_k: sim.top_k,
-                }
-            };
-        }
-        macro_rules! check {
-            ($e:expr) => {
-                match $e {
-                    Ok(v) => v,
-                    Err(oom) => {
-                        let mut out =
-                            self.oom_outcome(oom, &streams, &states, opts);
-                        out.rejected = sched.rejected();
-                        out.events = sched.events().to_vec();
-                        return Ok(out);
-                    }
-                }
-            };
-        }
-
-        check!(meter.set_fixed(self.man.paper.nonmoe_bytes));
-        check!(meter.set_activations(sys.activation_bytes));
-
-        macro_rules! sync_kv {
-            () => {{
-                let kv_total: u64 = states
-                    .iter()
-                    .filter(|s| s.served && !s.done)
-                    .map(|s| cost.kv_bytes(self.man.paper.n_layers, s.pos))
-                    .sum();
-                check!(meter.set_kv(kv_total));
-            }};
-        }
+        check!(sess, Some(&sched), sess.reserve_fixed());
 
         let mut now = 0.0f64;
         loop {
             match sched.next_decision(now) {
                 Decision::AdmitPrefill(r) => {
-                    check!(policy.begin_request(&mut sim_ctx!()));
+                    check!(sess, Some(&sched), sess.begin_request());
                     {
-                        let st = &mut states[r];
+                        let st = &mut sess.states[r];
                         st.served = true;
                         st.queue_delay = now - st.arrival;
                     }
-                    let res = self.prefill_one(&mut states[r],
-                                               policy.as_mut(), &mut streams,
-                                               &mut cache, &mut meter, &cost,
-                                               expert_bytes, &sim, now)?;
-                    let t_first = check!(res);
+                    let res = sess.prefill(r, now)?;
+                    let t_first = check!(sess, Some(&sched), res);
                     {
-                        let st = &mut states[r];
+                        let st = &mut sess.states[r];
                         st.ttft = t_first - st.arrival;
                         st.e2e = t_first - st.arrival;
                         st.last_event_t = t_first;
@@ -936,43 +440,24 @@ impl Engine {
                     sched.record(ServerEvent::PrefillDone { req: r,
                                                             at: t_first });
                     now = t_first;
-                    sync_kv!();
+                    check!(sess, Some(&sched), sess.sync_kv(true));
                 }
                 Decision::DecodeStep => {
                     let active: Vec<usize> = sched.running().to_vec();
-                    let res = self.decode_step(&active, &mut states,
-                                               policy.as_mut(), &mut streams,
-                                               &mut cache, &mut meter, &cost,
-                                               expert_bytes, &sim,
-                                               opts.ablation)?;
-                    let t_end = check!(res);
-                    policy.end_decode_step(&mut sim_ctx!());
-                    for &r in &active {
-                        let st = &mut states[r];
-                        st.step_latencies.push(t_end - st.last_event_t);
-                        st.last_event_t = t_end;
-                        st.e2e = t_end - st.arrival;
-                        let path = std::mem::take(&mut st.step_path);
-                        st.all_paths.push(path);
-                        st.state_con.clear();
-                        st.pending_pred.iter_mut().for_each(|p| *p = None);
-                        if st.tokens.len() >= st.n_decode
-                            || st.pos >= sim.kv_len
-                        {
-                            st.done = true;
-                        }
-                    }
+                    let res = sess.decode(&active)?;
+                    let t_end = check!(sess, Some(&sched), res);
+                    sess.after_decode(&active, t_end, StepAnchor::PerRequest);
                     sched.record(ServerEvent::StepDone {
                         batch: active.clone(),
                         at: t_end,
                     });
                     for &r in &active {
-                        if states[r].done {
+                        if sess.states[r].done {
                             sched.retire(r, t_end);
                         }
                     }
                     now = t_end;
-                    sync_kv!();
+                    check!(sess, Some(&sched), sess.sync_kv(true));
                 }
                 Decision::IdleUntil(t) => {
                     now = t;
@@ -981,20 +466,6 @@ impl Engine {
             }
         }
 
-        let mut out =
-            self.finish_outcome(&states, &streams, &cache, &meter, None, opts);
-        out.rejected = sched.rejected();
-        out.events = sched.into_events();
-        Ok(out)
+        Ok(sess.outcome(None, Some(&sched)))
     }
-}
-
-fn argmax(v: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in v.iter().enumerate() {
-        if x > v[best] {
-            best = i;
-        }
-    }
-    best
 }

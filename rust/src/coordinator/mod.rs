@@ -1,8 +1,12 @@
 //! The serving coordinator — the paper's system contribution.
 //!
-//! * [`engine`] — functional execution + virtual-time orchestration
+//! * [`engine`] — functional execution + thin serving entry points
 //!   (phase-bulk `serve` and event-driven `serve_continuous`).
-//! * [`policy`] — the scheduling-policy abstraction (timing side).
+//! * [`session`] — the shared `ServeSession` step-loop core both entry
+//!   points drive (prefill/decode passes, KV gauging, bookkeeping,
+//!   outcome assembly).
+//! * [`policy`] — the scheduling-policy abstraction (timing side);
+//!   residency is consulted through the `experts::ExpertProvider` seam.
 //! * [`duoserve`] — the DuoServe-MoE dual-phase policy itself.
 //! * [`scheduler`] — request admission: the bounded FIFO queue and
 //!   lockstep batch composer (phase-bulk), and the event-driven
@@ -12,6 +16,7 @@ pub mod duoserve;
 pub mod engine;
 pub mod policy;
 pub mod scheduler;
+pub(crate) mod session;
 
 pub use duoserve::DuoServePolicy;
 pub use engine::{Ablation, Engine, ServeOptions, ServeOutcome};

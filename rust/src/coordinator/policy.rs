@@ -6,15 +6,24 @@
 //! *virtual-time* schedule: when transfers are issued, on which stream,
 //! what stays in the GPU expert cache, and therefore what the request's
 //! latency and the device's peak memory are.
+//!
+//! Policies never touch the raw device cache: expert residency is
+//! consulted through the [`crate::experts::ExpertProvider`] seam
+//! carried in [`SimCtx`], which also centralizes hit/miss/bytes
+//! accounting so every policy and both serving modes count the same
+//! way.
 
 use crate::config::PolicyKind;
-use crate::memory::{DeviceExpertCache, ExpertKey, MemoryMeter, OomError};
+use crate::experts::ExpertProvider;
+use crate::memory::{ExpertKey, MemoryMeter, OomError};
 use crate::simx::{CostModel, Streams};
 
 /// Everything a policy needs to schedule one phase of one layer.
 pub struct SimCtx<'a> {
     pub streams: &'a mut Streams,
-    pub cache: &'a mut DeviceExpertCache,
+    /// The expert-residency seam: simulated cache lookups/admissions
+    /// plus centralized accounting.
+    pub provider: &'a mut dyn ExpertProvider,
     pub meter: &'a mut MemoryMeter,
     pub cost: &'a CostModel,
     /// Paper-scale bytes of one routed expert (the transfer unit).
@@ -25,22 +34,33 @@ pub struct SimCtx<'a> {
 }
 
 impl SimCtx<'_> {
-    /// Reconcile the memory meter with the cache after mutations
-    /// (+`in_flight` transfers that occupy staging slots).
+    /// Reconcile the memory meter with the provider's residency after
+    /// mutations (+`in_flight` transfers that occupy staging slots).
     pub fn sync_expert_gauge(&mut self, in_flight: usize) -> Result<(), OomError> {
-        let resident = self.cache.resident_count() + in_flight;
+        let resident = self.provider.resident_count() + in_flight;
         self.meter.set_experts(resident as u64 * self.expert_bytes)
     }
 
     /// Convenience: simulated fetch of one expert on the comm stream.
-    /// Returns the transfer completion time and caches the expert.
+    /// Returns the transfer completion time and admits the expert into
+    /// the provider's cache (bytes counted centrally).
     pub fn fetch(&mut self, key: ExpertKey, ready_at: f64,
                  kind: crate::config::LinkKind) -> f64 {
         let dur = self.cost.expert_transfer(kind);
         let done = self.streams.run(crate::simx::StreamId::Comm, ready_at,
                                     dur, "fetch");
-        self.cache.insert(key, done);
+        self.provider.admit(key, done);
         done
+    }
+
+    /// Residency lookup at `now` (counts the hit/miss centrally).
+    pub fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
+        self.provider.touch(key, now)
+    }
+
+    /// Residency probe without accounting (is a prefetch in flight?).
+    pub fn resident(&self, key: ExpertKey) -> bool {
+        self.provider.contains(key)
     }
 }
 
@@ -91,7 +111,7 @@ pub fn serial_fetch_compute(cx: &mut SimCtx<'_>, layer: usize,
     let mut t = t_gate;
     for &(e, tokens) in groups {
         let key = ExpertKey::routed(layer, e);
-        let ready = match cx.cache.touch(key, t) {
+        let ready = match cx.touch(key, t) {
             Some(r) => r.max(t),
             None => cx.fetch(key, t, kind),
         };

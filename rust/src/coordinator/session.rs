@@ -1,0 +1,660 @@
+//! `ServeSession`: the phase-specialized serving core shared by the
+//! phase-bulk and continuous entry points.
+//!
+//! A session owns everything one serving run needs — virtual-time
+//! streams, the [`ExpertProvider`] (simulated residency + real staging
+//! + centralized accounting), the memory meter, the cost model, the
+//! scheduling policy, the sim dims and the per-request live states —
+//! and exposes exactly two step drivers:
+//!
+//! * [`ServeSession::prefill`] — one request's prefill pass
+//!   (embed -> L x (attention, gate, MoE) -> first token), with dense
+//!   layer-ahead staging hints to the prefetch worker;
+//! * [`ServeSession::decode`] — one lockstep decode iteration over the
+//!   active batch, with predictor-driven staging hints.
+//!
+//! `Engine::serve` and `Engine::serve_continuous` are thin loops over
+//! these drivers: all session setup, OOM bookkeeping, KV gauging and
+//! post-step bookkeeping live here once instead of being duplicated
+//! per serving mode.
+
+use anyhow::Result;
+
+use crate::config::SimDims;
+use crate::experts::ExpertProvider;
+use crate::memory::{ExpertKey, MemoryMeter, OomError};
+use crate::metrics::{summarize, RequestMetrics};
+use crate::predictor::StateConstructor;
+use crate::runtime::{ArgRef, Literal, Tensor};
+use crate::simx::{CostModel, StreamId, Streams};
+use crate::workload::Request;
+
+use super::engine::{Ablation, Engine, ServeOptions, ServeOutcome};
+use super::policy::{Policy, SimCtx};
+use super::scheduler::ContinuousScheduler;
+
+/// Paper-scale vocabulary for head-cost estimation (Mixtral's 32k).
+pub(crate) const PAPER_VOCAB: f64 = 32_000.0;
+
+/// Inner step verdict: the virtual completion time, or the simulated
+/// OOM that ended the run.
+pub(crate) type SimResult<T> = std::result::Result<T, OomError>;
+
+/// How a decode step's latency/e2e bookkeeping is anchored:
+/// phase-bulk measures every request against the global previous step
+/// end; continuous measures each request against its own last event
+/// and reports e2e relative to its arrival.
+#[derive(Clone, Copy)]
+pub(crate) enum StepAnchor {
+    Global(f64),
+    PerRequest,
+}
+
+/// Per-request live state.
+pub(crate) struct ReqState {
+    pub idx: usize,
+    pub dataset: String,
+    pub prompt: Vec<i32>,
+    pub n_decode: usize,
+    pub valid: usize,
+    pub pos: usize,
+    pub h: Tensor,
+    pub kcs: Vec<Literal>,
+    pub vcs: Vec<Literal>,
+    pub tokens: Vec<i32>,
+    pub done: bool,
+    pub state_con: StateConstructor,
+    /// DuoServe's live prediction per layer (accuracy bookkeeping):
+    /// pending[l] = predicted set for layer l of the current step.
+    pub pending_pred: Vec<Option<Vec<usize>>>,
+    pub ttft: f64,
+    pub e2e: f64,
+    pub step_latencies: Vec<f64>,
+    /// Current decode step's per-layer selections.
+    pub step_path: Vec<Vec<usize>>,
+    /// All completed decode steps' paths (tracer output).
+    pub all_paths: Vec<Vec<Vec<usize>>>,
+    /// Virtual arrival instant (continuous mode; 0 closed-loop).
+    pub arrival: f64,
+    /// Prefill issue instant minus arrival (continuous mode).
+    pub queue_delay: f64,
+    /// Whether the request ever got a serving slot (false for
+    /// admission-queue rejections in continuous mode).
+    pub served: bool,
+    /// Completion instant of this request's latest prefill/decode
+    /// event (per-request step-latency bookkeeping in continuous
+    /// mode, where requests join mid-stream).
+    pub last_event_t: f64,
+}
+
+impl ReqState {
+    fn new(engine: &Engine, i: usize, r: &Request, sim: &SimDims,
+           kv_shape: &[usize]) -> Self {
+        ReqState {
+            idx: i,
+            dataset: r.dataset.clone(),
+            prompt: r.prompt.clone(),
+            n_decode: r.n_decode,
+            valid: r.prompt.len(),
+            pos: r.prompt.len(),
+            h: Tensor::zeros(&[1, sim.d_model]),
+            // Literal == Tensor on the native backend: build the KV
+            // literals directly. Each serve step transfers these into
+            // the attention executable by ownership (ArgRef::Own) and
+            // takes them back from the outputs, so the caches are
+            // mutated in place — one KV row written per layer per
+            // decode step, never a full-cache copy.
+            kcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
+            vcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
+            tokens: Vec::new(),
+            done: false,
+            state_con: StateConstructor::new(&engine.man),
+            pending_pred: vec![None; sim.n_layers],
+            ttft: 0.0,
+            e2e: 0.0,
+            step_latencies: Vec::new(),
+            step_path: Vec::new(),
+            all_paths: Vec::new(),
+            arrival: r.arrival,
+            queue_delay: 0.0,
+            served: false,
+            last_event_t: 0.0,
+        }
+    }
+}
+
+/// Every key of one layer, routed and shared: the dense stage-ahead
+/// unit the prefill pass hints to the prefetch worker.
+fn layer_keys(sim: &SimDims, layer: usize) -> Vec<ExpertKey> {
+    (0..sim.n_experts)
+        .map(|e| ExpertKey::routed(layer, e))
+        .chain((0..sim.n_shared).map(|s| ExpertKey::shared(layer, s)))
+        .collect()
+}
+
+pub(crate) struct ServeSession<'e> {
+    pub engine: &'e Engine,
+    pub sim: SimDims,
+    pub streams: Streams,
+    pub provider: Box<dyn ExpertProvider>,
+    pub meter: MemoryMeter,
+    pub cost: CostModel,
+    pub policy: Box<dyn Policy>,
+    pub states: Vec<ReqState>,
+    pub expert_bytes: u64,
+    ablation: Option<Ablation>,
+    activation_bytes: u64,
+    record_streams: bool,
+}
+
+impl<'e> ServeSession<'e> {
+    /// Build a session over `requests`. `admit_all` marks every
+    /// request served up front (phase-bulk); the continuous loop
+    /// admits per scheduler decision instead.
+    pub fn open(engine: &'e Engine, requests: &[Request],
+                opts: &ServeOptions, admit_all: bool) -> Self {
+        let sys = crate::config::SystemConfig::for_policy(opts.policy);
+        let cost = CostModel::new(&engine.man, opts.device.clone());
+        let streams = if opts.record_streams {
+            Streams::recording()
+        } else {
+            Streams::new()
+        };
+        let meter = MemoryMeter::new(opts.device.vram_bytes);
+        let policy = engine.make_policy(opts.policy, &sys, opts.ablation);
+        let sim = engine.man.sim.clone();
+        let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+        let states: Vec<ReqState> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut st = ReqState::new(engine, i, r, &sim, &kv_shape);
+                st.served = admit_all;
+                st
+            })
+            .collect();
+        let expert_bytes =
+            (engine.man.paper.expert_bytes as f64 * engine.layer_scale()) as u64;
+        let provider = engine.make_provider(opts.policy, &sys, expert_bytes,
+                                            opts);
+        ServeSession {
+            engine,
+            sim,
+            streams,
+            provider,
+            meter,
+            cost,
+            policy,
+            states,
+            expert_bytes,
+            ablation: opts.ablation,
+            activation_bytes: sys.activation_bytes,
+            record_streams: opts.record_streams,
+        }
+    }
+
+    /// Fixed GPU residency charged at session start.
+    pub fn reserve_fixed(&mut self) -> Result<(), OomError> {
+        self.meter.set_fixed(self.engine.man.paper.nonmoe_bytes)?;
+        self.meter.set_activations(self.activation_bytes)
+    }
+
+    /// Policy hook before one request's prefill.
+    pub fn begin_request(&mut self) -> Result<(), OomError> {
+        let Self { streams, provider, meter, cost, policy, expert_bytes,
+                   sim, .. } = self;
+        let mut cx = SimCtx {
+            streams,
+            provider: provider.as_mut(),
+            meter,
+            cost,
+            expert_bytes: *expert_bytes,
+            n_layers: sim.n_layers,
+            n_experts: sim.n_experts,
+            top_k: sim.top_k,
+        };
+        policy.begin_request(&mut cx)
+    }
+
+    /// Indices of requests still decoding, in request order.
+    pub fn active(&self) -> Vec<usize> {
+        self.states.iter().filter(|s| !s.done).map(|s| s.idx).collect()
+    }
+
+    /// Reconcile the KV gauge with the live request set. Phase-bulk
+    /// (`release_done = false`) keeps finished requests' KV resident
+    /// until the run drains; continuous releases a request's KV when
+    /// it completes.
+    pub fn sync_kv(&mut self, release_done: bool) -> Result<(), OomError> {
+        let kv_total: u64 = self
+            .states
+            .iter()
+            .filter(|s| !s.tokens.is_empty() && (!release_done || !s.done))
+            .map(|s| self.cost.kv_bytes(self.engine.man.paper.n_layers, s.pos))
+            .sum();
+        self.meter.set_kv(kv_total)
+    }
+
+    /// Prefill one request: embed -> L x (attention, gate, MoE) ->
+    /// head. The first op is issued no earlier than `start_at`
+    /// (continuous mode anchors it at the admission instant so an idle
+    /// server does not back-date work before the request arrived).
+    /// Returns the virtual time of the first token (TTFT instant).
+    pub fn prefill(&mut self, ridx: usize, start_at: f64)
+                   -> Result<SimResult<f64>> {
+        let Self { engine, sim, streams, provider, meter, cost, policy,
+                   states, expert_bytes, .. } = self;
+        let engine: &Engine = *engine;
+        let provider: &mut dyn ExpertProvider = provider.as_mut();
+        let policy: &mut dyn Policy = policy.as_mut();
+        let expert_bytes = *expert_bytes;
+        let st = &mut states[ridx];
+
+        let nm = &engine.host.nonmoe;
+        let valid = st.valid;
+        let mut padded = vec![0i32; sim.max_seq];
+        padded[..valid].copy_from_slice(&st.prompt);
+
+        // ---- functional embed / timing: head-ish cost ----------------
+        let toks = Tensor::i32(padded, vec![sim.max_seq]);
+        let pos0 = Tensor::scalar_i32(0);
+        let out = engine.comps.embed_prefill.run_mixed(vec![
+            ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(), nm.pos_emb.arg(),
+        ])?;
+        let mut h = out.into_iter().next().unwrap();
+        let mut t_layer = streams.run(StreamId::Compute, start_at,
+                                      cost.head_compute(valid, PAPER_VOCAB),
+                                      "embed");
+
+        // Dense stage-ahead: warm layer 0 while the embed runs.
+        provider.prefetch(&layer_keys(sim, 0));
+
+        for l in 0..sim.n_layers {
+            // Prefill activates densely, so layer l+1's whole expert
+            // set is staged ahead while layer l computes — the
+            // two-stream overlap as real threads.
+            if l + 1 < sim.n_layers {
+                provider.prefetch(&layer_keys(sim, l + 1));
+            }
+            let lw = &engine.host.nonmoe.layers[l];
+            // functional attention. The KV literals transfer in by
+            // ownership and come back (mutated in place) as outputs:
+            // zero cache copies at the boundary.
+            let vlen = Tensor::scalar_i32(valid as i32);
+            let kc = std::mem::take(&mut st.kcs[l]);
+            let vc = std::mem::take(&mut st.vcs[l]);
+            let out = engine.comps.attn_prefill.run_mixed(vec![
+                ArgRef::T(&h), ArgRef::T(&vlen), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::Own(kc), ArgRef::Own(vc),
+            ])?;
+            let mut it = out.into_iter();
+            h = it.next().unwrap();
+            st.kcs[l] = it.next().unwrap();
+            st.vcs[l] = it.next().unwrap();
+
+            // functional gate
+            let out = engine.comps.gate_prefill.run_mixed(vec![
+                ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
+            let mut git = out.into_iter();
+            let probs_t = git.next().unwrap();
+            let hn_t = git.next().unwrap();
+
+            // timing: attention + gate on the compute stream
+            let t_layer_start = t_layer;
+            let t_gate = streams.run(StreamId::Compute, t_layer_start,
+                                     cost.attn_compute(valid, valid),
+                                     "prefill-nonmoe");
+
+            // host math: rows 0..valid
+            let hn: Vec<Vec<f32>> =
+                (0..valid).map(|i| hn_t.row(i).unwrap().to_vec()).collect();
+            let probs: Vec<Vec<f32>> =
+                (0..valid).map(|i| probs_t.row(i).unwrap().to_vec()).collect();
+            let (delta, groups, _sel) =
+                engine.moe_functional(&mut *provider, l, &hn, &probs)?;
+            {
+                let hd = h.as_f32_mut()?;
+                let d = sim.d_model;
+                for (i, dl) in delta.iter().enumerate() {
+                    for (j, v) in dl.iter().enumerate() {
+                        hd[i * d + j] += v;
+                    }
+                }
+            }
+
+            // timing: the policy schedules the MoE section
+            let mut cx = SimCtx {
+                streams: &mut *streams,
+                provider: &mut *provider,
+                meter: &mut *meter,
+                cost,
+                expert_bytes,
+                n_layers: sim.n_layers,
+                n_experts: sim.n_experts,
+                top_k: sim.top_k,
+            };
+            let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
+                                                 t_layer_start, t_gate) {
+                Ok(t) => t,
+                Err(oom) => return Ok(Err(oom)),
+            };
+            // shared experts run on the compute stream (always resident)
+            t_layer = if sim.n_shared > 0 {
+                let dur = sim.n_shared as f64 * cost.expert_compute(valid);
+                streams.run(StreamId::Compute, t_moe, dur, "shared")
+            } else {
+                t_moe
+            };
+        }
+
+        // ---- first token ---------------------------------------------
+        let h_last = Tensor::f32(h.row(valid - 1)?.to_vec(),
+                                 vec![1, sim.d_model]);
+        let out = engine.comps.lm_head.run_mixed(vec![
+            ArgRef::T(&h_last), nm.ln_final.arg(), nm.w_out.arg()])?;
+        let logits = out.into_iter().next().unwrap();
+        let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
+        st.tokens.push(tok);
+        st.h = h_last;
+        let t_first = streams.run(StreamId::Compute, t_layer,
+                                  cost.head_compute(1, PAPER_VOCAB),
+                                  "lm-head");
+        Ok(Ok(t_first))
+    }
+
+    /// One lockstep decode step over the active requests.
+    /// Returns the step's end time.
+    pub fn decode(&mut self, active: &[usize]) -> Result<SimResult<f64>> {
+        let Self { engine, sim, streams, provider, meter, cost, policy,
+                   states, expert_bytes, ablation, .. } = self;
+        let engine: &Engine = *engine;
+        let provider: &mut dyn ExpertProvider = provider.as_mut();
+        let policy: &mut dyn Policy = policy.as_mut();
+        let expert_bytes = *expert_bytes;
+        let ablation = *ablation;
+
+        let nm = &engine.host.nonmoe;
+        let b = active.len();
+
+        // functional embed per request
+        for &r in active {
+            let st = &mut states[r];
+            let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
+            let pos = Tensor::scalar_i32(st.pos as i32);
+            let out = engine.comps.embed_decode.run_mixed(vec![
+                ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
+                nm.pos_emb.arg(),
+            ])?;
+            st.h = out.into_iter().next().unwrap();
+        }
+
+        let ctx_max = active.iter().map(|&r| states[r].pos + 1).max().unwrap();
+        let mut t_layer = streams.free_at(StreamId::Compute);
+
+        for l in 0..sim.n_layers {
+            let lw = &engine.host.nonmoe.layers[l];
+            // functional: attention + gate per request
+            let mut hn: Vec<Vec<f32>> = Vec::with_capacity(b);
+            let mut probs: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for &r in active {
+                let st = &mut states[r];
+                let pos = Tensor::scalar_i32(st.pos as i32);
+                // KV ownership transfer: the attention executable
+                // writes one row in place (O(d_model) per layer) and
+                // hands the caches back — no full-cache copies.
+                let kc = std::mem::take(&mut st.kcs[l]);
+                let vc = std::mem::take(&mut st.vcs[l]);
+                let out = engine.comps.attn_decode.run_mixed(vec![
+                    ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
+                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                    ArgRef::Own(kc), ArgRef::Own(vc),
+                ])?;
+                let mut it = out.into_iter();
+                st.h = it.next().unwrap();
+                st.kcs[l] = it.next().unwrap();
+                st.vcs[l] = it.next().unwrap();
+                let out = engine.comps.gate_decode.run_mixed(vec![
+                    ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
+                probs.push(out[0].as_f32()?.to_vec());
+                hn.push(out[1].as_f32()?.to_vec());
+            }
+
+            // timing: non-MoE
+            let t_layer_start = t_layer;
+            let t_gate = streams.run(StreamId::Compute, t_layer_start,
+                                     cost.attn_compute(b, ctx_max),
+                                     "decode-nonmoe");
+
+            // host math + functional experts
+            let (delta, groups, sel) =
+                engine.moe_functional(&mut *provider, l, &hn, &probs)?;
+            for (bi, &r) in active.iter().enumerate() {
+                let st = &mut states[r];
+                {
+                    let hd = st.h.as_f32_mut()?;
+                    for (j, v) in delta[bi].iter().enumerate() {
+                        hd[j] += v;
+                    }
+                }
+                // accuracy: compare DuoServe's live prediction (if
+                // any) against the gate's actual selection —
+                // accounted centrally in the provider's ledger.
+                if let Some(pred) = st.pending_pred[l].take() {
+                    provider.observe_prediction(&pred, &sel[bi]);
+                }
+                st.state_con.record(l, &sel[bi]);
+                st.step_path.push(sel[bi].clone());
+            }
+
+            // timing: policy schedules the MoE; its predict() hook runs
+            // the real MLP per request and records the union.
+            let t_moe = {
+                let mlp = engine.mlp.as_ref();
+                let mats = &engine.mats;
+                // Split-borrow dance: the closure needs the states for
+                // pending_pred bookkeeping, while the policy owns cx.
+                let mut predictions: Vec<(usize, usize, Vec<usize>)> =
+                    Vec::new();
+                let t_moe = {
+                    let states_ref: Vec<&StateConstructor> = active
+                        .iter()
+                        .map(|&r| &states[r].state_con)
+                        .collect();
+                    let heuristic = crate::predictor::HeuristicPredictor::
+                        popularity_affinity(sim.top_k);
+                    let mut predict = |target: usize| -> Vec<usize> {
+                        let mut union: Vec<usize> = Vec::new();
+                        for (bi, sc) in states_ref.iter().enumerate() {
+                            let p = if ablation == Some(Ablation::NoPredictor) {
+                                // Challenge-#1 ablation: heuristic only.
+                                let prev = sc.history().last();
+                                heuristic.predict(
+                                    mats, target,
+                                    prev.map(|v| v.as_slice()).unwrap_or(&[]))
+                            } else {
+                                match mlp {
+                                    Some(m) => m
+                                        .predict(&sc.build(target, mats))
+                                        .unwrap_or_default(),
+                                    None => Vec::new(),
+                                }
+                            };
+                            predictions.push((bi, target, p.clone()));
+                            for e in p {
+                                if !union.contains(&e) {
+                                    union.push(e);
+                                }
+                            }
+                        }
+                        union.sort_unstable();
+                        union
+                    };
+                    let mut cx = SimCtx {
+                        streams: &mut *streams,
+                        provider: &mut *provider,
+                        meter: &mut *meter,
+                        cost,
+                        expert_bytes,
+                        n_layers: sim.n_layers,
+                        n_experts: sim.n_experts,
+                        top_k: sim.top_k,
+                    };
+                    match policy.decode_moe(&mut cx, l, &groups,
+                                            t_layer_start, t_gate,
+                                            &mut predict) {
+                        Ok(t) => t,
+                        Err(oom) => return Ok(Err(oom)),
+                    }
+                };
+                // Predictor-driven stage-ahead: hand the predicted
+                // next-layer experts (plus the always-needed shared
+                // experts, predicted or not) to the prefetch worker
+                // while this layer's bookkeeping continues.
+                let mut hint: Vec<ExpertKey> = Vec::new();
+                for (bi, target, p) in predictions {
+                    for &e in &p {
+                        let key = ExpertKey::routed(target, e);
+                        if !hint.contains(&key) {
+                            hint.push(key);
+                        }
+                    }
+                    states[active[bi]].pending_pred[target] = Some(p);
+                }
+                if l + 1 < sim.n_layers {
+                    for s in 0..sim.n_shared {
+                        hint.push(ExpertKey::shared(l + 1, s));
+                    }
+                    if !hint.is_empty() {
+                        provider.prefetch(&hint);
+                    }
+                }
+                t_moe
+            };
+
+            t_layer = if sim.n_shared > 0 {
+                let dur = sim.n_shared as f64 * cost.expert_compute(b);
+                streams.run(StreamId::Compute, t_moe, dur, "shared")
+            } else {
+                t_moe
+            };
+        }
+
+        // lm head per request (functional); one timing op for the batch
+        for &r in active {
+            let st = &mut states[r];
+            let out = engine.comps.lm_head.run_mixed(vec![
+                ArgRef::T(&st.h), nm.ln_final.arg(), nm.w_out.arg()])?;
+            let logits = out.into_iter().next().unwrap();
+            let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
+            st.tokens.push(tok);
+            st.pos += 1;
+        }
+        let t_end = streams.run(StreamId::Compute, t_layer,
+                                cost.head_compute(b, PAPER_VOCAB), "lm-head");
+        Ok(Ok(t_end))
+    }
+
+    /// Shared post-decode bookkeeping: the policy's end-of-step hook,
+    /// per-request latency/e2e accounting (per `anchor`), tracer path
+    /// capture, predictor-state reset and completion checks.
+    pub fn after_decode(&mut self, active: &[usize], t_end: f64,
+                        anchor: StepAnchor) {
+        {
+            let Self { streams, provider, meter, cost, policy,
+                       expert_bytes, sim, .. } = self;
+            let mut cx = SimCtx {
+                streams,
+                provider: provider.as_mut(),
+                meter,
+                cost,
+                expert_bytes: *expert_bytes,
+                n_layers: sim.n_layers,
+                n_experts: sim.n_experts,
+                top_k: sim.top_k,
+            };
+            policy.end_decode_step(&mut cx);
+        }
+        let kv_len = self.sim.kv_len;
+        for &r in active {
+            let st = &mut self.states[r];
+            let base = match anchor {
+                StepAnchor::Global(t) => t,
+                StepAnchor::PerRequest => st.last_event_t,
+            };
+            st.step_latencies.push(t_end - base);
+            st.last_event_t = t_end;
+            st.e2e = match anchor {
+                StepAnchor::Global(_) => t_end,
+                StepAnchor::PerRequest => t_end - st.arrival,
+            };
+            let path = std::mem::take(&mut st.step_path);
+            st.all_paths.push(path);
+            st.state_con.clear();
+            st.pending_pred.iter_mut().for_each(|p| *p = None);
+            if st.tokens.len() >= st.n_decode || st.pos >= kv_len {
+                st.done = true;
+            }
+        }
+    }
+
+    /// Assemble the run's outcome. `oom` ends the run with cleared
+    /// metrics (summary/episodes/tokens still reflect the work done);
+    /// `sched` attaches the continuous loop's rejection count and
+    /// event schedule.
+    pub fn outcome(&self, oom: Option<OomError>,
+                   sched: Option<&ContinuousScheduler>) -> ServeOutcome {
+        let mut metrics: Vec<RequestMetrics> = self
+            .states
+            .iter()
+            .filter(|s| s.served)
+            .map(|s| RequestMetrics {
+                req_id: s.idx,
+                ttft: s.ttft,
+                e2e: s.e2e,
+                tokens_out: s.tokens.len(),
+                prompt_len: s.valid,
+                step_latencies: s.step_latencies.clone(),
+                arrival: s.arrival,
+                queue_delay: s.queue_delay,
+            })
+            .collect();
+        let makespan = self.streams.sync_all();
+        let stats = self.provider.stats();
+        let (peak_bytes, hit_rate) = if oom.is_some() {
+            (0, 0.0)
+        } else {
+            (self.meter.peak_bytes(), stats.hit_rate())
+        };
+        let episodes = self
+            .states
+            .iter()
+            .map(|s| crate::predictor::Episode {
+                dataset: s.dataset.clone(),
+                steps: s.all_paths.clone(),
+            })
+            .collect();
+        let summary = summarize(&metrics, makespan);
+        if oom.is_some() {
+            metrics.clear();
+        }
+        ServeOutcome {
+            summary,
+            metrics,
+            peak_bytes,
+            hit_rate,
+            accuracy: stats.accuracy,
+            expert_stats: stats,
+            oom,
+            stream_trace: if self.record_streams {
+                Some(self.streams.trace().to_vec())
+            } else {
+                None
+            },
+            episodes,
+            tokens: self.states.iter().map(|s| s.tokens.clone()).collect(),
+            rejected: sched.map(|s| s.rejected()).unwrap_or(0),
+            events: sched.map(|s| s.events().to_vec()).unwrap_or_default(),
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Centralized expert-path accounting. Every counter the serving loop
+//! reports — cache hits/misses, transferred bytes, staging-path
+//! acquires, online predictor accuracy — lives in exactly one place
+//! (the provider's ledger), so the phase-bulk and continuous serving
+//! modes can never drift apart by wiring their own copies.
+
+use crate::metrics::PredictorAccuracy;
+
+/// Snapshot of the provider's accounting (also the live ledger type:
+/// the provider mutates one of these in place).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExpertStats {
+    /// Virtual-time residency lookups that found the expert cached.
+    pub hits: u64,
+    /// Residency lookups that missed (a fetch follows).
+    pub misses: u64,
+    /// Simulated host->device bytes admitted into the cache.
+    pub bytes_fetched: u64,
+    /// Functional acquires served from the prefetch worker's staged
+    /// table (host->device staging genuinely overlapped compute).
+    pub staged_acquires: u64,
+    /// Functional acquires that fell back to the synchronous host-pool
+    /// path (cold start, mispredicted expert, or the sync provider).
+    pub sync_acquires: u64,
+    /// Expert keys hinted to the prefetch worker.
+    pub prefetch_hints: u64,
+    /// Online decode-predictor accuracy (Table III's counters).
+    pub accuracy: PredictorAccuracy,
+}
+
+impl ExpertStats {
+    /// GPU expert-cache hit rate over the run.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Total residency lookups.
+    pub fn touches(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Total functional weight acquisitions.
+    pub fn acquires(&self) -> u64 {
+        self.staged_acquires + self.sync_acquires
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_empty_and_counts() {
+        let mut s = ExpertStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.hits = 3;
+        s.misses = 1;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.touches(), 4);
+    }
+
+    #[test]
+    fn acquires_sum_both_paths() {
+        let s = ExpertStats { staged_acquires: 2, sync_acquires: 5,
+                              ..Default::default() };
+        assert_eq!(s.acquires(), 7);
+    }
+}

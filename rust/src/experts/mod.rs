@@ -1,0 +1,90 @@
+//! The expert-residency subsystem: one seam over "which expert weights
+//! are where, and what did moving them cost".
+//!
+//! The paper's core claim is that expert residency should be managed
+//! by a single phase-aware component — two-stream prefetch during
+//! prefill, predictor-driven prefetch during decode — rather than
+//! smeared across the engine, the memory gauges and each policy.
+//! [`ExpertProvider`] is that seam:
+//!
+//! * **functional side** — `prefetch`/`acquire` deliver the actual
+//!   weight tensors (host pool bytes, including the pre-transposed
+//!   kernel layouts). In [`StagingMode::Threaded`] a real
+//!   [`PrefetchWorker`] thread stages hinted experts ahead of need, so
+//!   staging overlaps compute as actual concurrency; in
+//!   [`StagingMode::Sync`] every acquire is synchronous (the
+//!   `Ablation::NoOverlap` toggle and the determinism oracle).
+//! * **virtual-time side** — `touch`/`admit`/`contains` manage the
+//!   simulated GPU expert cache the scheduling policies consult
+//!   through `SimCtx` (they never poke the raw cache).
+//! * **accounting** — hit/miss, transferred bytes, staging-path and
+//!   predictor-accuracy counters all live in the provider's ledger
+//!   ([`ExpertStats`]), so the phase-bulk and continuous serving modes
+//!   can never count differently.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::memory::{CachedTensors, ExpertKey};
+
+mod ledger;
+mod provider;
+mod worker;
+
+pub use ledger::ExpertStats;
+pub use provider::StagedExpertProvider;
+pub use worker::PrefetchWorker;
+
+/// How the functional side of a provider delivers weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StagingMode {
+    /// Background [`PrefetchWorker`] thread stages hinted experts;
+    /// `acquire` falls back to the synchronous path on a staging miss.
+    #[default]
+    Threaded,
+    /// No worker: every acquire is a synchronous host-pool read
+    /// (deterministic single-stream behaviour; `Ablation::NoOverlap`).
+    Sync,
+}
+
+/// The expert-residency seam (see module docs). Every expert fetch —
+/// functional bytes and simulated residency alike — goes through this
+/// trait; a device-backed runtime would implement it over real
+/// host->device copies behind the same contract.
+pub trait ExpertProvider: Send {
+    /// Hint that these experts are likely needed soon (prefill: the
+    /// next layer's dense set; decode: the predictor's top-k). A
+    /// threaded provider stages them on its worker; a sync provider
+    /// ignores hints.
+    fn prefetch(&mut self, keys: &[ExpertKey]);
+
+    /// The weight tensors of one expert — staged if the worker already
+    /// delivered them, otherwise read synchronously. Always the host
+    /// pool's exact tensors: staging can never change a token.
+    fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>>;
+
+    /// Virtual-time residency lookup at `now`; refreshes LRU and
+    /// counts the hit/miss centrally. Returns the entry's `ready_at`.
+    fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64>;
+
+    /// Residency check without accounting (policies probing whether a
+    /// prefetch is already in flight).
+    fn contains(&self, key: ExpertKey) -> bool;
+
+    /// Admit a fetched expert whose simulated transfer completes at
+    /// `ready_at`; counts the transferred bytes centrally.
+    fn admit(&mut self, key: ExpertKey, ready_at: f64);
+
+    /// Experts currently resident in the simulated cache.
+    fn resident_count(&self) -> usize;
+
+    /// Per-layer slot budget of the simulated cache.
+    fn per_layer_capacity(&self) -> usize;
+
+    /// Record one online predictor observation (Table III counters).
+    fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]);
+
+    /// Snapshot of the centralized accounting.
+    fn stats(&self) -> ExpertStats;
+}

@@ -1,0 +1,177 @@
+//! The production [`ExpertProvider`]: host pool + device expert cache
+//! + prefetch staging behind one seam, with the centralized ledger.
+//!
+//! Two staging modes share one implementation:
+//!
+//! * [`StagingMode::Threaded`] — a [`PrefetchWorker`] background
+//!   thread stages hinted experts ahead of need; `acquire` reads the
+//!   staged table and falls back to the synchronous host-pool path on
+//!   a miss. This is the real-concurrency mirror of the paper's
+//!   comm-stream prefetch.
+//! * [`StagingMode::Sync`] — no worker, every acquire is synchronous.
+//!   `Ablation::NoOverlap` serves through this mode, making the
+//!   single-stream ablation a provider toggle instead of a policy
+//!   special case; it is also the determinism oracle the threaded
+//!   mode is tested against.
+//!
+//! Either way `acquire` returns the host pool's exact tensors, so the
+//! staging mode can never change a token.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::memory::{CachedTensors, DeviceExpertCache, ExpertKey, HostPool};
+
+use super::ledger::ExpertStats;
+use super::worker::PrefetchWorker;
+use super::{ExpertProvider, StagingMode};
+
+pub struct StagedExpertProvider {
+    /// `None` only for [`Self::detached`] (sim-side unit tests).
+    pool: Option<Arc<HostPool>>,
+    cache: DeviceExpertCache,
+    stats: ExpertStats,
+    /// Paper-scale bytes of one routed expert (the transfer unit the
+    /// byte accounting uses).
+    expert_bytes: u64,
+    worker: Option<PrefetchWorker>,
+}
+
+impl StagedExpertProvider {
+    pub fn new(pool: Arc<HostPool>, cache: DeviceExpertCache,
+               expert_bytes: u64, mode: StagingMode) -> Self {
+        let worker = match mode {
+            StagingMode::Threaded => Some(PrefetchWorker::spawn(pool.clone())),
+            StagingMode::Sync => None,
+        };
+        StagedExpertProvider {
+            pool: Some(pool),
+            cache,
+            stats: ExpertStats::default(),
+            expert_bytes,
+            worker,
+        }
+    }
+
+    /// A provider with no host pool and no worker: exercises the
+    /// virtual-time residency + accounting side without an artifact
+    /// tree (unit and property tests). `acquire` errors.
+    pub fn detached(cache: DeviceExpertCache, expert_bytes: u64) -> Self {
+        StagedExpertProvider {
+            pool: None,
+            cache,
+            stats: ExpertStats::default(),
+            expert_bytes,
+            worker: None,
+        }
+    }
+
+    /// The staging worker, when running in threaded mode (benches and
+    /// tests synchronise on it).
+    pub fn worker(&self) -> Option<&PrefetchWorker> {
+        self.worker.as_ref()
+    }
+
+    /// Drop staged entries of layers below `layer`.
+    pub fn retire_below(&self, layer: usize) {
+        if let Some(w) = &self.worker {
+            w.retire_below(layer);
+        }
+    }
+}
+
+impl ExpertProvider for StagedExpertProvider {
+    fn prefetch(&mut self, keys: &[ExpertKey]) {
+        if let Some(w) = &self.worker {
+            self.stats.prefetch_hints += keys.len() as u64;
+            w.stage(keys.to_vec());
+        }
+    }
+
+    fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
+        if let Some(w) = &self.worker {
+            if let Some(t) = w.staged_get(key) {
+                self.stats.staged_acquires += 1;
+                return Ok(t);
+            }
+        }
+        let pool = match &self.pool {
+            Some(p) => p,
+            None => bail!("detached expert provider cannot acquire {key:?}"),
+        };
+        self.stats.sync_acquires += 1;
+        pool.expert_tensors(key)
+    }
+
+    fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
+        let ready = self.cache.touch(key, now);
+        if ready.is_some() {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        ready
+    }
+
+    fn contains(&self, key: ExpertKey) -> bool {
+        self.cache.contains(key)
+    }
+
+    fn admit(&mut self, key: ExpertKey, ready_at: f64) {
+        self.stats.bytes_fetched += self.expert_bytes;
+        self.cache.insert(key, ready_at);
+    }
+
+    fn resident_count(&self) -> usize {
+        self.cache.resident_count()
+    }
+
+    fn per_layer_capacity(&self) -> usize {
+        self.cache.per_layer_capacity()
+    }
+
+    fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]) {
+        self.stats.accuracy.observe(predicted, actual);
+    }
+
+    fn stats(&self) -> ExpertStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detached_provider_counts_hits_misses_and_bytes() {
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(2, 0), 64);
+        let key = ExpertKey::routed(0, 1);
+        assert_eq!(p.touch(key, 1.0), None);
+        p.admit(key, 2.0);
+        assert_eq!(p.touch(key, 3.0), Some(2.0));
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_fetched, 64);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detached_provider_refuses_acquire() {
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(1, 0), 1);
+        assert!(p.acquire(ExpertKey::routed(0, 0)).is_err());
+    }
+
+    #[test]
+    fn accuracy_flows_through_the_ledger() {
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(1, 0), 1);
+        p.observe_prediction(&[1, 2], &[1, 2]); // exact
+        p.observe_prediction(&[3, 4], &[1, 2]); // miss
+        let a = p.stats().accuracy;
+        assert_eq!((a.exact, a.at_least_half, a.total), (1, 1, 2));
+    }
+}

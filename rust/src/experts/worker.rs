@@ -1,0 +1,116 @@
+//! The prefetch worker: a real background thread that stages expert
+//! weight tensors ahead of need, so host->device staging genuinely
+//! overlaps compute in the native runtime (the paper's two-stream
+//! pipeline, as actual concurrency rather than only virtual time).
+//!
+//! The engine hints upcoming experts (`stage`): layer *i+1*'s dense
+//! set during prefill, the MLP-predictor top-k during decode. The
+//! worker resolves each hint against the host pool — the `Arc`'d
+//! [`CachedTensors`] carry both weight layouts, including the
+//! pre-transposed kernel layout built at load — and publishes them
+//! into a shared staged table the provider's `acquire` reads.
+//! Staging is pure delivery: the worker hands out the host pool's
+//! exact tensors, so tokens are bit-identical with or without it
+//! (asserted by the `expert_provider` test suite).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::memory::{CachedTensors, ExpertKey, HostPool};
+
+enum Msg {
+    /// Resolve these keys from the host pool into the staged table.
+    Stage(Vec<ExpertKey>),
+    /// Drop staged entries of layers below `layer`.
+    RetireBelow(usize),
+    /// Ack once every previously queued message has been processed
+    /// (tests and benches synchronise on this).
+    Sync(Sender<()>),
+    Quit,
+}
+
+pub struct PrefetchWorker {
+    tx: Sender<Msg>,
+    staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PrefetchWorker {
+    pub fn spawn(pool: Arc<HostPool>) -> Self {
+        let staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = channel::<Msg>();
+        let table = staged.clone();
+        let handle = std::thread::Builder::new()
+            .name("expert-prefetch".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Stage(keys) => {
+                            for key in keys {
+                                if table.lock().unwrap().contains_key(&key) {
+                                    continue;
+                                }
+                                // Missing keys are simply not staged;
+                                // acquire falls back to the sync path
+                                // and surfaces the error there.
+                                if let Ok(w) = pool.expert_tensors(key) {
+                                    table.lock().unwrap().insert(key, w);
+                                }
+                            }
+                        }
+                        Msg::RetireBelow(layer) => {
+                            table.lock().unwrap()
+                                .retain(|k, _| k.layer >= layer);
+                        }
+                        Msg::Sync(ack) => {
+                            let _ = ack.send(());
+                        }
+                        Msg::Quit => break,
+                    }
+                }
+            })
+            .expect("spawning expert-prefetch worker");
+        PrefetchWorker { tx, staged, handle: Some(handle) }
+    }
+
+    /// Hint: these experts are likely needed soon.
+    pub fn stage(&self, keys: Vec<ExpertKey>) {
+        let _ = self.tx.send(Msg::Stage(keys));
+    }
+
+    /// Drop staged entries of layers below `layer` (bounds the staged
+    /// table; pass `usize::MAX` to clear it).
+    pub fn retire_below(&self, layer: usize) {
+        let _ = self.tx.send(Msg::RetireBelow(layer));
+    }
+
+    /// Block until every queued hint has been processed.
+    pub fn drain(&self) {
+        let (ack_tx, ack_rx) = channel();
+        if self.tx.send(Msg::Sync(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Staged tensors for `key`, if the worker has delivered them.
+    pub fn staged_get(&self, key: ExpertKey) -> Option<Arc<CachedTensors>> {
+        self.staged.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Number of experts currently staged (introspection).
+    pub fn staged_len(&self) -> usize {
+        self.staged.lock().unwrap().len()
+    }
+}
+
+impl Drop for PrefetchWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Quit);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

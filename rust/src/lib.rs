@@ -21,6 +21,7 @@ pub mod artifactgen;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod experts;
 pub mod memory;
 pub mod metrics;
 pub mod predictor;

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::coordinator::{Ablation, ContinuousConfig, Engine, ServeOptions};
 use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment, SloSpec, Table};
 use duoserve::util::args::Args;
 use duoserve::workload::{assign_arrivals, generate_requests, ArrivalProcess};
@@ -29,6 +29,9 @@ COMMANDS:
   run           --model M --policy P --device D --dataset DS
                 --requests N --batch B --seed S
                 --mode phase-bulk|continuous
+                --ablation none|no-overlap|no-predictor
+                (no-overlap: single-stream schedule + synchronous
+                 expert provider, no prefetch-worker thread)
                 (continuous mode: --rate R requests/s Poisson arrivals,
                  --max-in-flight K --queue-cap Q
                  --slo-ttft SECS --slo-e2e SECS)
@@ -51,6 +54,16 @@ fn device(name: &str) -> Result<DeviceProfile> {
 
 fn policy(name: &str) -> Result<PolicyKind> {
     name.parse().map_err(|e: String| anyhow::anyhow!(e))
+}
+
+fn ablation(name: &str) -> Result<Option<Ablation>> {
+    match name {
+        "none" => Ok(None),
+        "no-overlap" => Ok(Some(Ablation::NoOverlap)),
+        "no-predictor" => Ok(Some(Ablation::NoPredictor)),
+        other => bail!("unknown ablation {other:?} \
+                        (none|no-overlap|no-predictor)"),
+    }
 }
 
 fn main() -> Result<()> {
@@ -83,7 +96,8 @@ fn main() -> Result<()> {
                 max_in_flight: args.usize("max-in-flight", 4)?,
                 queue_capacity: args.usize("queue-cap", 64)?,
             };
-            let opts = ServeOptions::new(pol, dev);
+            let mut opts = ServeOptions::new(pol, dev);
+            opts.ablation = ablation(&args.str("ablation", "none"))?;
             let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
             if let Some(oom) = out.oom {
                 println!("{}: {oom}", pol.label());
@@ -138,6 +152,7 @@ fn main() -> Result<()> {
             let reqs = generate_requests(&engine.man, &dataset, requests, seed);
             let mut opts = ServeOptions::new(pol, dev);
             opts.record_streams = args.flag("trace-streams");
+            opts.ablation = ablation(&args.str("ablation", "none"))?;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
             let mut peak = 0u64;
             let mut hit = 0.0;

@@ -10,9 +10,18 @@
 //! * MIF: large capacity, unlimited window (its memory blowup).
 //!
 //! Entries are *metadata only*: function and time are split (DESIGN.md
-//! §1) — the functional path reads weight tensors from the host pool
-//! (identical bytes), while this cache decides whether a simulated
-//! transfer happens and what Table II's expert-residency component is.
+//! §1) — the functional path reads weight tensors through the
+//! [`crate::experts::ExpertProvider`] seam (identical bytes), while
+//! this cache decides whether a simulated transfer happens and what
+//! Table II's expert-residency component is. Hit/miss accounting lives
+//! in the provider's ledger, not here, so the two serving modes can
+//! never count differently.
+//!
+//! Eviction is fully deterministic: LRU by `last_used`, with exact
+//! timestamp ties broken by the lower `ExpertKey` (and the lower layer
+//! index for window eviction). Virtual times repeat across layers, so
+//! without the tie-break the victim would depend on `HashMap`
+//! iteration order — nondeterministic across processes.
 
 use std::collections::HashMap;
 
@@ -32,8 +41,6 @@ pub struct DeviceExpertCache {
     /// Max number of distinct layers resident at once (0 = unlimited).
     layer_window: usize,
     slots: HashMap<ExpertKey, CachedExpert>,
-    hits: u64,
-    misses: u64,
 }
 
 impl DeviceExpertCache {
@@ -43,8 +50,6 @@ impl DeviceExpertCache {
             per_layer_capacity,
             layer_window,
             slots: HashMap::new(),
-            hits: 0,
-            misses: 0,
         }
     }
 
@@ -52,19 +57,16 @@ impl DeviceExpertCache {
         self.slots.contains_key(&key)
     }
 
-    /// Look up an expert for use at virtual time `now`; counts hit/miss
-    /// statistics and refreshes LRU on hit. Returns `ready_at`.
+    /// Look up an expert for use at virtual time `now`; refreshes LRU
+    /// on hit. Returns `ready_at`. (The caller — the expert provider —
+    /// counts the hit/miss.)
     pub fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
         match self.slots.get_mut(&key) {
             Some(slot) => {
-                self.hits += 1;
                 slot.last_used = now;
                 Some(slot.ready_at)
             }
-            None => {
-                self.misses += 1;
-                None
-            }
+            None => None,
         }
     }
 
@@ -73,9 +75,10 @@ impl DeviceExpertCache {
     }
 
     /// Insert a fetched expert, evicting per policy:
-    /// 1. if the key's layer is full, evict that layer's LRU entry;
+    /// 1. if the key's layer is full, evict that layer's LRU entry
+    ///    (timestamp ties: the lower key);
     /// 2. if the layer window is exceeded, evict least-recently-used
-    ///    layers until it holds.
+    ///    layers until it holds (ties: the lower layer index).
     pub fn insert(&mut self, key: ExpertKey, ready_at: f64) {
         let layer_count =
             self.slots.keys().filter(|k| k.layer == key.layer).count();
@@ -84,7 +87,11 @@ impl DeviceExpertCache {
                 .slots
                 .iter()
                 .filter(|(k, _)| k.layer == key.layer)
-                .min_by(|a, b| a.1.last_used.total_cmp(&b.1.last_used))
+                .min_by(|a, b| {
+                    a.1.last_used
+                        .total_cmp(&b.1.last_used)
+                        .then_with(|| a.0.cmp(b.0))
+                })
                 .map(|(k, _)| k)
             {
                 self.slots.remove(&victim);
@@ -108,6 +115,7 @@ impl DeviceExpertCache {
                     .min_by(|&a, &b| {
                         self.layer_last_used(a)
                             .total_cmp(&self.layer_last_used(b))
+                            .then_with(|| a.cmp(&b))
                     })
                     .expect("window > 0 implies a victim layer exists");
                 self.evict_layer(victim_layer);
@@ -146,19 +154,6 @@ impl DeviceExpertCache {
         v
     }
 
-    pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            0.0
-        } else {
-            self.hits as f64 / total as f64
-        }
-    }
-
-    pub fn stats(&self) -> (u64, u64) {
-        (self.hits, self.misses)
-    }
-
     pub fn per_layer_capacity(&self) -> usize {
         self.per_layer_capacity
     }
@@ -192,12 +187,17 @@ mod tests {
     }
 
     #[test]
-    fn touch_tracks_hits_and_misses() {
+    fn touch_refreshes_lru_and_reports_readiness() {
         let mut c = DeviceExpertCache::new(2, 0);
         c.insert(ExpertKey::routed(0, 5), 1.5);
         assert_eq!(c.touch(ExpertKey::routed(0, 5), 2.0), Some(1.5));
         assert_eq!(c.touch(ExpertKey::routed(0, 6), 2.0), None);
-        assert_eq!(c.stats(), (1, 1));
+        // the touch at t=2.0 protects expert 5: inserting two more
+        // evicts the colder entry first
+        c.insert(ExpertKey::routed(0, 6), 0.5);
+        c.insert(ExpertKey::routed(0, 7), 3.0);
+        assert!(c.contains(ExpertKey::routed(0, 5)));
+        assert!(!c.contains(ExpertKey::routed(0, 6)));
     }
 
     #[test]
@@ -207,5 +207,66 @@ mod tests {
         c.insert(ExpertKey::routed(0, 2), 2.0);
         c.insert(ExpertKey::routed(0, 1), 3.0); // refresh, not new
         assert_eq!(c.resident_in_layer(0), vec![1, 2]);
+    }
+
+    #[test]
+    fn reinsert_at_capacity_refreshes_ready_at_in_place() {
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 1), 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0);
+        // layer is at capacity; re-fetching a resident expert must
+        // update its transfer tag without evicting anything
+        c.insert(ExpertKey::routed(0, 1), 5.0);
+        assert_eq!(c.resident_in_layer(0), vec![1, 2]);
+        assert_eq!(c.get(ExpertKey::routed(0, 1)).unwrap().ready_at, 5.0);
+        assert_eq!(c.get(ExpertKey::routed(0, 2)).unwrap().ready_at, 2.0);
+    }
+
+    #[test]
+    fn eviction_tie_breaks_on_lowest_key() {
+        // Two entries with the exact same last_used timestamp: the
+        // victim must be the lower expert index, independent of
+        // HashMap iteration order.
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 4), 1.0);
+        c.insert(ExpertKey::routed(0, 2), 1.0);
+        c.insert(ExpertKey::routed(0, 7), 2.0);
+        assert_eq!(c.resident_in_layer(0), vec![4, 7]);
+    }
+
+    #[test]
+    fn window_eviction_tie_breaks_on_lowest_layer() {
+        let mut c = DeviceExpertCache::new(2, 2);
+        c.insert(ExpertKey::routed(3, 0), 1.0);
+        c.insert(ExpertKey::routed(5, 0), 1.0); // same last_used as layer 3
+        c.insert(ExpertKey::routed(4, 0), 2.0);
+        assert!(!c.contains(ExpertKey::routed(3, 0)),
+                "tie must evict the lower layer index");
+        assert!(c.contains(ExpertKey::routed(5, 0)));
+        assert!(c.contains(ExpertKey::routed(4, 0)));
+    }
+
+    #[test]
+    fn window_boundary_insert_into_resident_layer_never_evicts() {
+        // The inserting key's layer is already resident: the window is
+        // not exceeded, so nothing may be evicted.
+        let mut c = DeviceExpertCache::new(4, 2);
+        c.insert(ExpertKey::routed(0, 0), 1.0);
+        c.insert(ExpertKey::routed(1, 0), 2.0);
+        c.insert(ExpertKey::routed(1, 1), 3.0);
+        assert!(c.contains(ExpertKey::routed(0, 0)));
+        assert_eq!(c.resident_count(), 3);
+    }
+
+    #[test]
+    fn window_eviction_never_removes_the_inserting_layer() {
+        // Even when the inserting layer is the least-recently-used,
+        // the window victim must be some *other* layer.
+        let mut c = DeviceExpertCache::new(2, 1);
+        c.insert(ExpertKey::routed(9, 0), 10.0);
+        c.insert(ExpertKey::routed(2, 0), 1.0); // older timestamp than layer 9
+        assert!(c.contains(ExpertKey::routed(2, 0)));
+        assert!(!c.contains(ExpertKey::routed(9, 0)));
+        assert_eq!(c.resident_count(), 1);
     }
 }

@@ -17,36 +17,8 @@ pub use mlp::MlpPredictor;
 pub use state::StateConstructor;
 pub use tracer::{Episode, Tracer};
 
-/// Deterministic top-k over expert scores: highest score wins, ties to
-/// the lower expert index (matches `ref.top_k_ref` / `T.predict_topk`
-/// on the python side). Returns sorted indices.
-pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
-    let mut order: Vec<usize> = (0..scores.len()).collect();
-    order.sort_by(|&a, &b| {
-        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut out: Vec<usize> = order.into_iter().take(k).collect();
-    out.sort_unstable();
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::top_k;
-
-    #[test]
-    fn top_k_basic() {
-        assert_eq!(top_k(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
-    }
-
-    #[test]
-    fn top_k_tie_breaks_low_index() {
-        assert_eq!(top_k(&[0.5, 0.5, 0.5, 0.1], 2), vec![0, 1]);
-    }
-
-    #[test]
-    fn top_k_k_equals_len() {
-        assert_eq!(top_k(&[0.2, 0.1], 2), vec![0, 1]);
-    }
-}
+/// Deterministic top-k selection (ties to the lower index) — the one
+/// shared definition lives in [`crate::util::math`]; re-exported here
+/// because routing/prediction callers have always imported it from the
+/// predictor stack.
+pub use crate::util::math::top_k;

@@ -24,6 +24,8 @@ use std::cell::RefCell;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::util::math::softmax_row;
+
 use super::kernels;
 use super::{ArgRef, Tensor};
 
@@ -180,19 +182,6 @@ fn rms_norm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
         }
     }
     out
-}
-
-/// In-place stable softmax over a row.
-fn softmax_row(row: &mut [f32]) {
-    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for v in row.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v;
-    }
-    for v in row.iter_mut() {
-        *v /= sum;
-    }
 }
 
 fn silu(x: f32) -> f32 {

@@ -1,0 +1,84 @@
+//! Shared numeric helpers used by the engine, the native runtime and
+//! the predictor stack. One definition each — the engine's token
+//! sampling (`argmax`), the gate/attention softmax (`softmax_row`) and
+//! the routing/prediction selection (`top_k`) are all goldens-critical,
+//! so their exact float semantics (tie-breaking, summation order) live
+//! here once instead of drifting across per-module copies.
+
+/// Index of the largest element; ties break to the *first* maximum
+/// (strict `>` comparison) — the token-sampling rule the reference
+/// model and the golden streams encode.
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// In-place numerically-stable softmax over one row (max-subtracted
+/// exponentials, single left-to-right accumulation — bit-identical to
+/// the python reference).
+pub fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Deterministic top-k over expert scores: highest score wins, ties to
+/// the lower expert index (matches `ref.top_k_ref` / `T.predict_topk`
+/// on the python side). Returns sorted indices.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<usize> = order.into_iter().take(k).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ties_break_to_first() {
+        assert_eq!(argmax(&[0.5, 0.5, 0.1]), 0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn softmax_row_sums_to_one_and_orders() {
+        let mut r = vec![0.1, 2.0, -1.0];
+        softmax_row(&mut r);
+        let s: f32 = r.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(r[1] > r[0] && r[0] > r[2]);
+    }
+
+    #[test]
+    fn top_k_basic() {
+        assert_eq!(top_k(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_tie_breaks_low_index() {
+        assert_eq!(top_k(&[0.5, 0.5, 0.5, 0.1], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_k_equals_len() {
+        assert_eq!(top_k(&[0.2, 0.1], 2), vec![0, 1]);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod args;
 pub mod json;
+pub mod math;
 pub mod rng;
 
 pub use json::Json;

@@ -1,0 +1,168 @@
+//! ExpertProvider subsystem tests:
+//!
+//! * **accounting parity** — hit/miss/bytes/accuracy counters live in
+//!   one ledger, so the phase-bulk and continuous serving modes must
+//!   report identical accounting for the same request set;
+//! * **prefetch-worker determinism** — the threaded staging pipeline
+//!   must produce bit-identical tokens, routing and virtual-time
+//!   results to the synchronous provider (staging is pure delivery);
+//! * **staging identity** — the worker must hand out the host pool's
+//!   exact tensors (`Arc` pointer equality), never a diverging copy.
+
+use std::sync::Arc;
+
+use duoserve::config::{DeviceProfile, Manifest, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::experts::{ExpertProvider, PrefetchWorker, StagedExpertProvider,
+                        StagingMode};
+use duoserve::memory::{DeviceExpertCache, ExpertKey, HostPool};
+use duoserve::runtime::Runtime;
+use duoserve::workload::generate_requests;
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+#[test]
+fn phase_bulk_and_continuous_accounting_parity() {
+    // Same request set, both serving modes: the centralized ledger
+    // must make every counter agree exactly (the drift the provider
+    // refactor is designed to rule out).
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 3, 17); // arrival 0
+    let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    let bulk = e.serve(&reqs, &opts).unwrap();
+    assert!(bulk.oom.is_none());
+
+    let ccfg = ContinuousConfig {
+        max_in_flight: reqs.len(),
+        queue_capacity: reqs.len() + 4,
+    };
+    let cont = e.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    assert!(cont.oom.is_none());
+    assert_eq!(cont.rejected, 0);
+
+    assert_eq!(bulk.tokens, cont.tokens, "token streams diverged");
+    let (b, c) = (bulk.expert_stats, cont.expert_stats);
+    assert_eq!(b.hits, c.hits, "cache hits diverged across modes");
+    assert_eq!(b.misses, c.misses, "cache misses diverged across modes");
+    assert_eq!(b.bytes_fetched, c.bytes_fetched,
+               "transferred bytes diverged across modes");
+    assert_eq!(b.accuracy.total, c.accuracy.total,
+               "accuracy observation counts diverged");
+    assert_eq!(b.accuracy.exact, c.accuracy.exact);
+    assert_eq!(b.accuracy.at_least_half, c.accuracy.at_least_half);
+    assert!((bulk.hit_rate - cont.hit_rate).abs() < 1e-12,
+            "hit rate diverged: {} vs {}", bulk.hit_rate, cont.hit_rate);
+    // The outcome's headline fields are the ledger's, not a second set
+    // of counters.
+    assert!((bulk.hit_rate - b.hit_rate()).abs() < 1e-12);
+    assert_eq!(bulk.accuracy.total, b.accuracy.total);
+}
+
+#[test]
+fn threaded_prefetch_matches_sync_provider_bit_exactly() {
+    // The PrefetchWorker thread only changes *when* weights are
+    // staged, never *which* weights: tokens, routing paths and the
+    // virtual-time schedule must be identical with and without it.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "orca", 3, 23);
+    let threaded = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    assert_eq!(threaded.staging, StagingMode::Threaded);
+    let mut sync = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    sync.staging = StagingMode::Sync;
+
+    let a = e.serve(&reqs, &threaded).unwrap();
+    let b = e.serve(&reqs, &sync).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "staging mode changed the tokens");
+    for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+        assert_eq!(ea.steps, eb.steps, "staging mode changed the routing");
+    }
+    assert_eq!(a.summary.makespan, b.summary.makespan,
+               "staging mode leaked into virtual time");
+    assert_eq!(a.expert_stats.hits, b.expert_stats.hits);
+    assert_eq!(a.expert_stats.misses, b.expert_stats.misses);
+
+    // Acquire accounting is exhaustive: every functional fetch is
+    // either staged or synchronous, and the total is mode-invariant.
+    assert_eq!(a.expert_stats.acquires(), b.expert_stats.acquires(),
+               "total weight acquisitions diverged");
+    assert_eq!(b.expert_stats.staged_acquires, 0,
+               "sync provider must never report staged acquires");
+    assert_eq!(b.expert_stats.prefetch_hints, 0,
+               "sync provider must ignore prefetch hints");
+    assert!(a.expert_stats.prefetch_hints > 0,
+            "threaded provider received no staging hints");
+}
+
+#[test]
+fn no_overlap_ablation_forces_the_sync_provider() {
+    use duoserve::coordinator::engine::Ablation;
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 1, 7);
+    let opts = ServeOptions::ablated(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000(),
+                                     Ablation::NoOverlap);
+    let out = e.serve(&reqs, &opts).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.expert_stats.staged_acquires, 0,
+               "NoOverlap must serve through the synchronous provider");
+    assert_eq!(out.expert_stats.prefetch_hints, 0);
+    assert!(out.expert_stats.sync_acquires > 0);
+}
+
+#[test]
+fn worker_stages_the_host_pools_exact_tensors() {
+    let dir = duoserve::testkit::ensure_tiny();
+    let man = Manifest::load(&dir, "mixtral-tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let pool = Arc::new(HostPool::load(&man, &rt).unwrap());
+    let w = PrefetchWorker::spawn(pool.clone());
+    let keys: Vec<ExpertKey> =
+        (0..man.sim.n_experts).map(|e| ExpertKey::routed(0, e)).collect();
+    w.stage(keys.clone());
+    w.drain();
+    assert_eq!(w.staged_len(), keys.len());
+    for key in keys {
+        let staged = w.staged_get(key).expect("key not staged after drain");
+        let direct = pool.expert_tensors(key).unwrap();
+        assert!(Arc::ptr_eq(&staged, &direct),
+                "worker delivered a diverging copy for {key:?}");
+    }
+    // retire drops staged layers below the watermark
+    w.retire_below(1);
+    w.drain();
+    assert_eq!(w.staged_len(), 0);
+}
+
+#[test]
+fn provider_acquire_counts_staged_and_sync_paths() {
+    let dir = duoserve::testkit::ensure_tiny();
+    let man = Manifest::load(&dir, "mixtral-tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let pool = Arc::new(HostPool::load(&man, &rt).unwrap());
+    let mut p = StagedExpertProvider::new(pool.clone(),
+                                          DeviceExpertCache::new(2, 2), 64,
+                                          StagingMode::Threaded);
+    let key = ExpertKey::routed(1, 0);
+    let direct = pool.expert_tensors(key).unwrap();
+
+    // cold acquire: synchronous fallback, same tensors
+    let a = p.acquire(key).unwrap();
+    assert!(Arc::ptr_eq(&a, &direct));
+
+    // staged acquire: hint -> worker delivery -> staged-table hit
+    p.prefetch(&[key]);
+    p.worker().unwrap().drain();
+    let b = p.acquire(key).unwrap();
+    assert!(Arc::ptr_eq(&b, &direct));
+
+    let s = p.stats();
+    assert_eq!(s.sync_acquires, 1);
+    assert_eq!(s.staged_acquires, 1);
+    assert_eq!(s.prefetch_hints, 1);
+}

@@ -3,6 +3,7 @@
 //! offline image — same discipline: many random cases, shrunk seeds
 //! reported on failure via the assert message).
 
+use duoserve::experts::{ExpertProvider, StagedExpertProvider};
 use duoserve::memory::{DeviceExpertCache, ExpertKey};
 use duoserve::metrics::percentile;
 use duoserve::predictor::top_k;
@@ -45,22 +46,31 @@ fn prop_cache_never_exceeds_capacity_or_window() {
 }
 
 #[test]
-fn prop_cache_hits_plus_misses_equals_touches() {
+fn prop_provider_hits_plus_misses_equals_touches() {
+    // Hit/miss accounting lives in the ExpertProvider's ledger (the
+    // cache itself no longer counts): every touch is exactly one hit
+    // or one miss, and admitted bytes track admissions.
+    let expert_bytes = 7u64;
     for seed in 0..CASES {
         let mut r = Rng::seed_from(seed ^ 0xABCD);
-        let mut c = DeviceExpertCache::new(4, 0);
-        let mut touches = 0;
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(4, 0), expert_bytes);
+        let mut touches = 0u64;
+        let mut admits = 0u64;
         for i in 0..200 {
             let key = ExpertKey::routed(r.below(4), r.below(8));
             if r.bool_with(0.5) {
-                c.touch(key, i as f64);
+                p.touch(key, i as f64);
                 touches += 1;
             } else {
-                c.insert(key, i as f64);
+                p.admit(key, i as f64);
+                admits += 1;
             }
         }
-        let (h, m) = c.stats();
-        assert_eq!(h + m, touches, "seed {seed}");
+        let s = p.stats();
+        assert_eq!(s.hits + s.misses, touches, "seed {seed}");
+        assert_eq!(s.touches(), touches, "seed {seed}");
+        assert_eq!(s.bytes_fetched, admits * expert_bytes, "seed {seed}");
     }
 }
 

@@ -176,6 +176,7 @@ use duoserve::config::{DeviceProfile, PolicyKind, SystemConfig};
 use duoserve::coordinator::engine::Ablation;
 use duoserve::coordinator::{ContinuousConfig, DuoServePolicy, Engine,
                             Policy, ServeOptions, SimCtx};
+use duoserve::experts::{ExpertProvider, StagedExpertProvider};
 use duoserve::memory::{DeviceExpertCache, MemoryMeter};
 use duoserve::simx::{CostModel, StreamId, Streams};
 use duoserve::workload::{assign_arrivals, generate_requests,
@@ -252,7 +253,8 @@ fn comm_backlog_does_not_delay_cache_hits() {
     let man = duoserve::config::Manifest::load(&dir, "mixtral-tiny").unwrap();
     let cost = CostModel::new(&man, DeviceProfile::a6000());
     let mut streams = Streams::recording();
-    let mut cache = DeviceExpertCache::new(man.sim.top_k, 2);
+    let mut provider = StagedExpertProvider::detached(
+        DeviceExpertCache::new(man.sim.top_k, 2), man.paper.expert_bytes);
     let mut meter = MemoryMeter::new(u64::MAX);
     let sys = SystemConfig::for_policy(PolicyKind::DuoServe);
     let mut policy = DuoServePolicy::new(sys);
@@ -264,11 +266,11 @@ fn comm_backlog_does_not_delay_cache_hits() {
     let t_gate = 1.0;
     let groups = [(0usize, 1usize), (1usize, 1usize)];
     for &(e, _) in &groups {
-        cache.insert(duoserve::memory::ExpertKey::routed(layer, e), 0.25);
+        provider.admit(duoserve::memory::ExpertKey::routed(layer, e), 0.25);
     }
     let mut cx = SimCtx {
         streams: &mut streams,
-        cache: &mut cache,
+        provider: &mut provider,
         meter: &mut meter,
         cost: &cost,
         expert_bytes: man.paper.expert_bytes,
