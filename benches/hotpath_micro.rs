@@ -123,6 +123,35 @@ fn config_fingerprint(engine: &Engine) -> Json {
     Json::Obj(c)
 }
 
+/// Decode-throughput summary derived from the decode-step rows:
+/// `tokens_per_sec` per configuration plus the headline speedup of the
+/// batched b16 step against 16 row-wise b1 steps (the "one GEMM per
+/// layer" win — >= 16x means batching is a strict improvement over
+/// serving the same 16 tokens row by row).
+fn decode_throughput(stats: &[Stat]) -> Json {
+    let mean = |name: &str| -> Option<f64> {
+        stats.iter().find(|s| s.name == name).map(|s| s.mean_us)
+    };
+    let mut m = BTreeMap::new();
+    for (key, row, b) in [
+        ("rowwise_b1_tokens_per_sec", "decode_step_rowwise_b1", 1.0),
+        ("rowwise_b16_tokens_per_sec", "decode_step_rowwise_b16", 16.0),
+        ("batched_b1_tokens_per_sec", "decode_step_batched_b1", 1.0),
+        ("batched_b4_tokens_per_sec", "decode_step_batched_b4", 4.0),
+        ("batched_b16_tokens_per_sec", "decode_step_batched_b16", 16.0),
+    ] {
+        if let Some(us) = mean(row) {
+            m.insert(key.to_string(), Json::from(b * 1e6 / us));
+        }
+    }
+    if let (Some(r1), Some(b16)) = (mean("decode_step_rowwise_b1"),
+                                    mean("decode_step_batched_b16")) {
+        m.insert("batched_b16_speedup_vs_16x_rowwise_b1".to_string(),
+                 Json::from(16.0 * r1 / b16));
+    }
+    Json::Obj(m)
+}
+
 fn write_artifact(engine: &Engine, stats: &[Stat]) -> anyhow::Result<()> {
     let path = std::env::var("DUOSERVE_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".into());
@@ -143,6 +172,7 @@ fn write_artifact(engine: &Engine, stats: &[Stat]) -> anyhow::Result<()> {
     top.insert("schema".to_string(), Json::from("duoserve-hotpath/v1"));
     top.insert("config".to_string(), config_fingerprint(engine));
     top.insert("benchmarks".to_string(), Json::Arr(rows));
+    top.insert("decode_throughput".to_string(), decode_throughput(stats));
     std::fs::write(&path, format!("{}\n", Json::Obj(top)))?;
     println!("\nwrote {path}");
     Ok(())
@@ -257,6 +287,24 @@ fn main() -> anyhow::Result<()> {
     bench(&mut stats, "top-k (E=128, k=8)", 10_000, || {
         let _ = top_k(&scores, 8);
     });
+
+    // --- decode step: one GEMM per layer vs row-at-a-time -------------
+    // Each row is one full lockstep decode iteration over b prefilled
+    // requests (embed -> L x (attention, gate, MoE) -> lm_head), with
+    // request state rolled back between iterations. The batched rows
+    // are the tentpole hot path; the rowwise rows are the pre-batching
+    // fallback (DUOSERVE_FORCE_ROWWISE=1) at the same batch sizes.
+    for &(b, rowwise) in &[(1usize, true), (16, true), (1, false),
+                           (4, false), (16, false)]
+    {
+        let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                      DeviceProfile::a6000());
+        o.force_rowwise = rowwise;
+        let mut db = engine.decode_step_bench(b, &o)?;
+        let name = format!("decode_step_{}_b{b}",
+                           if rowwise { "rowwise" } else { "batched" });
+        bench(&mut stats, &name, 60, || db.step().unwrap());
+    }
 
     // --- full engine steps --------------------------------------------
     let reqs = generate_requests(&man, "squad", 1, 5);

@@ -412,6 +412,10 @@ fn component_files(spec: &ModelSpec, root: &Path)
     put("embed_t1".to_string(), "embed")?;
     put("attn_prefill".to_string(), "attn_prefill")?;
     put("attn_decode".to_string(), "attn_decode")?;
+    // Batched-decode attention split: the (B, D) Q/K/V/O projection
+    // passes and the per-request score+update core.
+    put("attn_proj_batch".to_string(), "attn_proj_batch")?;
+    put("attn_core".to_string(), "attn_core")?;
     put(format!("gate_t{s}"), "gate")?;
     put("gate_t1".to_string(), "gate")?;
     put("lm_head".to_string(), "lm_head")?;

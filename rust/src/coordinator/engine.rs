@@ -65,6 +65,17 @@ pub struct ServeOptions {
     /// worker (default) or fully synchronous. `Ablation::NoOverlap`
     /// forces `Sync` regardless.
     pub staging: StagingMode,
+    /// Execute the decode step's batch-parallel work row-at-a-time
+    /// (B separate matvecs per layer) instead of as one GEMM per
+    /// layer over the stacked batch. The fallback is the bit-parity
+    /// oracle the batched hot path is tested against; defaults to the
+    /// `DUOSERVE_FORCE_ROWWISE=1` env toggle.
+    pub force_rowwise: bool,
+    /// Run independent expert groups (and shared experts) of one MoE
+    /// layer concurrently via scoped threads (weights pre-acquired on
+    /// the caller thread so ledger accounting is unchanged). Defaults
+    /// to on; `DUOSERVE_EXPERT_FANOUT=0` disables it process-wide.
+    pub expert_fanout: bool,
 }
 
 impl ServeOptions {
@@ -75,7 +86,25 @@ impl ServeOptions {
             record_streams: false,
             ablation: None,
             staging: StagingMode::Threaded,
+            force_rowwise: Self::rowwise_default(
+                std::env::var("DUOSERVE_FORCE_ROWWISE").ok().as_deref()),
+            expert_fanout: Self::fanout_default(
+                std::env::var("DUOSERVE_EXPERT_FANOUT").ok().as_deref()),
         }
+    }
+
+    /// `DUOSERVE_FORCE_ROWWISE` parsing: only "1" selects the
+    /// row-wise fallback (pure function — unit-testable without
+    /// mutating the process environment, which is racy under
+    /// multi-threaded `cargo test`).
+    fn rowwise_default(v: Option<&str>) -> bool {
+        v == Some("1")
+    }
+
+    /// `DUOSERVE_EXPERT_FANOUT` parsing: anything but "0" keeps the
+    /// threaded expert fan-out on.
+    fn fanout_default(v: Option<&str>) -> bool {
+        v != Some("0")
     }
 
     pub fn ablated(policy: PolicyKind, device: DeviceProfile,
@@ -123,6 +152,12 @@ pub(crate) struct Components {
     pub embed_decode: Arc<Executable>,
     pub attn_prefill: Arc<Executable>,
     pub attn_decode: Arc<Executable>,
+    /// Batched decode attention, Q/K/V (pre) and O+residual (post)
+    /// projection passes over the stacked `(B, D)` batch matrix.
+    pub attn_proj_batch: Arc<Executable>,
+    /// Batched decode attention, per-request score+update core
+    /// (in-place KV row write via ownership transfer).
+    pub attn_core: Arc<Executable>,
     pub gate_prefill: Arc<Executable>,
     pub gate_decode: Arc<Executable>,
     pub lm_head: Arc<Executable>,
@@ -175,6 +210,8 @@ impl Engine {
             embed_decode: comp("embed_t1")?,
             attn_prefill: comp("attn_prefill")?,
             attn_decode: comp("attn_decode")?,
+            attn_proj_batch: comp("attn_proj_batch")?,
+            attn_core: comp("attn_core")?,
             gate_prefill: comp(&format!("gate_t{s}"))?,
             gate_decode: comp("gate_t1")?,
             lm_head: comp("lm_head")?,
@@ -271,14 +308,13 @@ impl Engine {
     // Host math (the combine path; O(T*D) f32 work the coordinator owns)
     // -----------------------------------------------------------------
 
-    /// Run one expert over a token group (rows of h_norm), chunked and
-    /// zero-padded into the lowered bucket sizes. Weights come through
-    /// the provider seam: staged if the prefetch worker already
-    /// delivered them, synchronous otherwise.
-    fn run_expert(&self, provider: &mut dyn ExpertProvider, key: ExpertKey,
-                  rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// Run one expert's FFN over a token group (rows of h_norm) with
+    /// already-acquired weights, chunked and zero-padded into the
+    /// lowered bucket sizes. Pure math over shared state — safe to
+    /// call from the fan-out threads (scratch is per-thread).
+    fn expert_rows(&self, w: &crate::memory::CachedTensors, rows: &[&[f32]])
+                   -> Result<Vec<Vec<f32>>> {
         let d = self.man.sim.d_model;
-        let w = provider.acquire(key)?;
         let max_bucket = *self.man.expert_buckets.last().unwrap();
         let mut out = Vec::with_capacity(rows.len());
         let mut i = 0;
@@ -303,15 +339,25 @@ impl Engine {
         Ok(out)
     }
 
-    /// Functional MoE over rows of (h, h_norm, probs): groups tokens by
+    /// Functional MoE over rows of (h_norm, probs): groups tokens by
     /// expert, runs each expert once, applies the renormalised top-k
-    /// combine, adds shared experts. `rows` index into `h`/`hn`/`probs`.
-    /// Returns per-row output deltas and the (expert -> token count)
-    /// groups for the timing path, plus per-row selections.
+    /// combine, adds shared experts. Rows are borrowed slices (gate
+    /// output tensor rows — no per-layer copies). Returns per-row
+    /// output deltas, the (expert -> token count) groups for the
+    /// timing path, and per-row selections.
+    ///
+    /// With `fanout`, independent expert groups (and shared experts)
+    /// execute concurrently on scoped threads. Every group's weights
+    /// are pre-acquired on the caller thread first — in the exact
+    /// order the serial path acquires them — so the provider's ledger
+    /// (staged/sync acquire counts) cannot observe the difference; and
+    /// the combine applies group outputs serially in ascending-expert
+    /// (then shared) order with the same accumulation loops, so the
+    /// result is bit-identical to the serial path.
     #[allow(clippy::type_complexity)]
     pub(crate) fn moe_functional(&self, provider: &mut dyn ExpertProvider,
-                                 layer: usize, hn: &[Vec<f32>],
-                                 probs: &[Vec<f32>])
+                                 layer: usize, hn: &[&[f32]],
+                                 probs: &[&[f32]], fanout: bool)
                                  -> Result<(Vec<Vec<f32>>, Vec<(usize, usize)>,
                                             Vec<Vec<usize>>)> {
         let d = self.man.sim.d_model;
@@ -327,28 +373,75 @@ impl Engine {
             sel.push(s);
         }
 
-        let mut delta = vec![vec![0.0f32; d]; n_rows];
-        for (&e, rows_idx) in &groups {
-            let rows: Vec<&[f32]> =
-                rows_idx.iter().map(|&i| hn[i].as_slice()).collect();
-            let ys = self.run_expert(&mut *provider,
-                                     ExpertKey::routed(layer, e), &rows)?;
-            for (j, &i) in rows_idx.iter().enumerate() {
-                let denom: f32 = sel[i].iter().map(|&ee| probs[i][ee]).sum();
-                let wgt = probs[i][e] / denom;
-                for (dd, y) in delta[i].iter_mut().zip(&ys[j]) {
-                    *dd += wgt * y;
-                }
-            }
-        }
-        // Shared experts: every token, unweighted (DeepSeek-style).
+        // Job list: routed groups ascending by expert, then shared
+        // experts — the order the serial path ran (and acquired) them.
+        let mut jobs: Vec<(ExpertKey, Vec<usize>)> = groups
+            .iter()
+            .map(|(&e, v)| (ExpertKey::routed(layer, e), v.clone()))
+            .collect();
         for s in 0..self.man.sim.n_shared {
-            let rows: Vec<&[f32]> = hn.iter().map(|r| r.as_slice()).collect();
-            let ys = self.run_expert(&mut *provider,
-                                     ExpertKey::shared(layer, s), &rows)?;
-            for (i, y) in ys.iter().enumerate() {
-                for (dd, yv) in delta[i].iter_mut().zip(y) {
-                    *dd += yv;
+            jobs.push((ExpertKey::shared(layer, s), (0..n_rows).collect()));
+        }
+
+        // Pre-acquire on the caller thread (ledger stays exact).
+        let keys: Vec<ExpertKey> = jobs.iter().map(|(k, _)| *k).collect();
+        let weights = provider.acquire_many(&keys)?;
+
+        let run = |job_i: usize| -> Result<Vec<Vec<f32>>> {
+            let rows: Vec<&[f32]> =
+                jobs[job_i].1.iter().map(|&i| hn[i]).collect();
+            self.expert_rows(&weights[job_i], &rows)
+        };
+        let n_jobs = jobs.len();
+        let outputs: Vec<Result<Vec<Vec<f32>>>> = if fanout && n_jobs > 1 {
+            use crate::runtime::kernels;
+            let workers = kernels::n_threads().min(n_jobs);
+            let per = (n_jobs + workers - 1) / workers;
+            // Cap nested kernel parallelism: the fan-out already uses
+            // `workers` threads, so each worker's matmuls get a
+            // proportional share of the budget instead of spawning
+            // n_threads() more each (workers x n_threads
+            // oversubscription).
+            let inner = (kernels::n_threads() / workers).max(1);
+            let mut outs: Vec<Option<Result<Vec<Vec<f32>>>>> =
+                (0..n_jobs).map(|_| None).collect();
+            let run_ref = &run;
+            std::thread::scope(|s| {
+                for (ci, chunk) in outs.chunks_mut(per).enumerate() {
+                    s.spawn(move || {
+                        kernels::with_thread_cap(inner, || {
+                            for (j, slot) in chunk.iter_mut().enumerate() {
+                                *slot = Some(run_ref(ci * per + j));
+                            }
+                        });
+                    });
+                }
+            });
+            outs.into_iter().map(|o| o.expect("fan-out job ran")).collect()
+        } else {
+            (0..n_jobs).map(run).collect()
+        };
+
+        // Serial combine in job order: identical float-accumulation
+        // order to the pre-fan-out implementation.
+        let mut delta = vec![vec![0.0f32; d]; n_rows];
+        for ((key, rows_idx), ys) in jobs.iter().zip(outputs) {
+            let ys = ys?;
+            if key.shared {
+                for (i, y) in ys.iter().enumerate() {
+                    for (dd, yv) in delta[i].iter_mut().zip(y) {
+                        *dd += yv;
+                    }
+                }
+            } else {
+                let e = key.expert;
+                for (j, &i) in rows_idx.iter().enumerate() {
+                    let denom: f32 =
+                        sel[i].iter().map(|&ee| probs[i][ee]).sum();
+                    let wgt = probs[i][e] / denom;
+                    for (dd, y) in delta[i].iter_mut().zip(&ys[j]) {
+                        *dd += wgt * y;
+                    }
                 }
             }
         }
@@ -467,5 +560,24 @@ impl Engine {
         }
 
         Ok(sess.outcome(None, Some(&sched)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ServeOptions;
+
+    #[test]
+    fn decode_path_env_parsing_is_pure() {
+        // Parsed through pure helpers so tests never mutate the
+        // process environment (racy under multi-threaded cargo test).
+        assert!(!ServeOptions::rowwise_default(None));
+        assert!(!ServeOptions::rowwise_default(Some("0")));
+        assert!(!ServeOptions::rowwise_default(Some("true")));
+        assert!(ServeOptions::rowwise_default(Some("1")));
+
+        assert!(ServeOptions::fanout_default(None));
+        assert!(ServeOptions::fanout_default(Some("1")));
+        assert!(!ServeOptions::fanout_default(Some("0")));
     }
 }

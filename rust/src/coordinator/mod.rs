@@ -21,5 +21,6 @@ pub(crate) mod session;
 pub use duoserve::DuoServePolicy;
 pub use engine::{Ablation, Engine, ServeOptions, ServeOutcome};
 pub use policy::{Policy, SimCtx};
+pub use session::DecodeStepBench;
 pub use scheduler::{BatchComposer, ContinuousConfig, ContinuousScheduler,
                     Decision, RequestQueue, ServerEvent};

@@ -18,7 +18,7 @@
 //! post-step bookkeeping live here once instead of being duplicated
 //! per serving mode.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::SimDims;
 use crate::experts::ExpertProvider;
@@ -132,6 +132,153 @@ fn layer_keys(sim: &SimDims, layer: usize) -> Vec<ExpertKey> {
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// decode-step functional halves (batched default + row-wise fallback)
+// ---------------------------------------------------------------------
+
+/// All rows of a list of rank-2 tensors, in order: the batched path
+/// passes one `(B, _)` tensor, the row-wise path B `(1, _)` tensors —
+/// both yield B borrowed rows in active-request order.
+fn all_rows(ts: &[Tensor]) -> Result<Vec<&[f32]>> {
+    let mut out = Vec::new();
+    for t in ts {
+        for i in 0..t.shape()[0] {
+            out.push(t.row(i)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Row-at-a-time decode embed (the pre-batching path): one `(1, D)`
+/// lookup per request into `st.h`.
+fn embed_rowwise(engine: &Engine, states: &mut [ReqState], active: &[usize])
+                 -> Result<()> {
+    let nm = &engine.host.nonmoe;
+    for &r in active {
+        let st = &mut states[r];
+        let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
+        let pos = Tensor::scalar_i32(st.pos as i32);
+        let out = engine.comps.embed_decode.run_mixed(vec![
+            ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
+            nm.pos_emb.arg(),
+        ])?;
+        st.h = out.into_iter().next().unwrap();
+    }
+    Ok(())
+}
+
+/// Batched decode embed: gather the active batch's last tokens and
+/// per-request positions, embed them as one `(B, D)` lookup.
+fn embed_batched(engine: &Engine, states: &[ReqState], active: &[usize])
+                 -> Result<Tensor> {
+    let nm = &engine.host.nonmoe;
+    let b = active.len();
+    let toks: Vec<i32> =
+        active.iter().map(|&r| *states[r].tokens.last().unwrap()).collect();
+    let poss: Vec<i32> =
+        active.iter().map(|&r| states[r].pos as i32).collect();
+    let tok_t = Tensor::i32(toks, vec![b]);
+    let pos_t = Tensor::i32(poss, vec![b]);
+    let out = engine.comps.embed_decode.run_mixed(vec![
+        ArgRef::T(&tok_t), ArgRef::T(&pos_t), nm.emb.arg(),
+        nm.pos_emb.arg(),
+    ])?;
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// Batched non-MoE pass of one decode layer: Q/K/V projections as one
+/// GEMM each over the stacked `(B, D)` hidden matrix, the per-request
+/// attention core (in-place KV row writes via `ArgRef::Own` ownership
+/// transfer, exactly as the fused path), one batched output-projection
+/// + residual GEMM, and one batched gate. Returns the updated hidden
+/// matrix and the `(B, E)` / `(B, D)` gate outputs.
+fn layer_nonmoe_batched(engine: &Engine, states: &mut [ReqState],
+                        active: &[usize], l: usize, h: Tensor)
+                        -> Result<(Tensor, Tensor, Tensor)> {
+    let d = engine.man.sim.d_model;
+    let b = active.len();
+    let lw = &engine.host.nonmoe.layers[l];
+
+    let out = engine.comps.attn_proj_batch.run_mixed(vec![
+        ArgRef::T(&h), lw.ln_attn.arg(), lw.wq.arg(), lw.wk.arg(),
+        lw.wv.arg(),
+    ])?;
+    let mut it = out.into_iter();
+    let q = it.next().unwrap();
+    let k = it.next().unwrap();
+    let v = it.next().unwrap();
+
+    // Per-request score+update core: KV is per-request state, so this
+    // part stays row-at-a-time. One (1, D) attention row per request,
+    // scattered into the stacked (B, D) attention matrix.
+    let mut att = vec![0.0f32; b * d];
+    for (bi, &r) in active.iter().enumerate() {
+        let st = &mut states[r];
+        let row = Tensor::scalar_i32(bi as i32);
+        let pos = Tensor::scalar_i32(st.pos as i32);
+        let kc = std::mem::take(&mut st.kcs[l]);
+        let vc = std::mem::take(&mut st.vcs[l]);
+        let out = engine.comps.attn_core.run_mixed(vec![
+            ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v), ArgRef::T(&row),
+            ArgRef::T(&pos), ArgRef::Own(kc), ArgRef::Own(vc),
+        ])?;
+        let mut it = out.into_iter();
+        let arow = it.next().unwrap();
+        st.kcs[l] = it.next().unwrap();
+        st.vcs[l] = it.next().unwrap();
+        att[bi * d..(bi + 1) * d].copy_from_slice(arow.as_f32()?);
+    }
+    let att_t = Tensor::f32(att, vec![b, d]);
+
+    let out = engine.comps.attn_proj_batch.run_mixed(vec![
+        ArgRef::T(&att_t), ArgRef::T(&h), lw.wo.arg(),
+    ])?;
+    let h2 = out.into_iter().next().unwrap();
+
+    let out = engine.comps.gate_decode.run_mixed(vec![
+        ArgRef::T(&h2), lw.ln_moe.arg(), lw.wg.arg(),
+    ])?;
+    let mut it = out.into_iter();
+    let probs = it.next().unwrap();
+    let hn = it.next().unwrap();
+    Ok((h2, probs, hn))
+}
+
+/// Row-at-a-time non-MoE pass of one decode layer (the pre-batching
+/// path, kept as the bit-parity oracle): fused per-request attention +
+/// per-request gate, gate outputs returned as owned `(1, _)` tensors.
+fn layer_nonmoe_rowwise(engine: &Engine, states: &mut [ReqState],
+                        active: &[usize], l: usize)
+                        -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let lw = &engine.host.nonmoe.layers[l];
+    let mut probs_ts: Vec<Tensor> = Vec::with_capacity(active.len());
+    let mut hn_ts: Vec<Tensor> = Vec::with_capacity(active.len());
+    for &r in active {
+        let st = &mut states[r];
+        let pos = Tensor::scalar_i32(st.pos as i32);
+        // KV ownership transfer: the attention executable writes one
+        // row in place (O(d_model) per layer) and hands the caches
+        // back — no full-cache copies.
+        let kc = std::mem::take(&mut st.kcs[l]);
+        let vc = std::mem::take(&mut st.vcs[l]);
+        let out = engine.comps.attn_decode.run_mixed(vec![
+            ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
+            lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+            ArgRef::Own(kc), ArgRef::Own(vc),
+        ])?;
+        let mut it = out.into_iter();
+        st.h = it.next().unwrap();
+        st.kcs[l] = it.next().unwrap();
+        st.vcs[l] = it.next().unwrap();
+        let out = engine.comps.gate_decode.run_mixed(vec![
+            ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
+        let mut it = out.into_iter();
+        probs_ts.push(it.next().unwrap());
+        hn_ts.push(it.next().unwrap());
+    }
+    Ok((probs_ts, hn_ts))
+}
+
 pub(crate) struct ServeSession<'e> {
     pub engine: &'e Engine,
     pub sim: SimDims,
@@ -145,6 +292,16 @@ pub(crate) struct ServeSession<'e> {
     ablation: Option<Ablation>,
     activation_bytes: u64,
     record_streams: bool,
+    /// Row-at-a-time decode fallback (the batched path's parity
+    /// oracle; `ServeOptions::force_rowwise`).
+    force_rowwise: bool,
+    /// Concurrent expert-group execution inside one MoE layer.
+    expert_fanout: bool,
+    /// Virtual time the Compute stream spent inside decode steps.
+    decode_time: f64,
+    /// Tokens emitted by decode steps (one per active request per
+    /// step; prefill's first tokens are not counted here).
+    decode_tokens: u64,
 }
 
 impl<'e> ServeSession<'e> {
@@ -190,6 +347,10 @@ impl<'e> ServeSession<'e> {
             ablation: opts.ablation,
             activation_bytes: sys.activation_bytes,
             record_streams: opts.record_streams,
+            force_rowwise: opts.force_rowwise,
+            expert_fanout: opts.expert_fanout,
+            decode_time: 0.0,
+            decode_tokens: 0,
         }
     }
 
@@ -243,11 +404,12 @@ impl<'e> ServeSession<'e> {
     pub fn prefill(&mut self, ridx: usize, start_at: f64)
                    -> Result<SimResult<f64>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
-                   states, expert_bytes, .. } = self;
+                   states, expert_bytes, expert_fanout, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
         let expert_bytes = *expert_bytes;
+        let expert_fanout = *expert_fanout;
         let st = &mut states[ridx];
 
         let nm = &engine.host.nonmoe;
@@ -306,13 +468,14 @@ impl<'e> ServeSession<'e> {
                                      cost.attn_compute(valid, valid),
                                      "prefill-nonmoe");
 
-            // host math: rows 0..valid
-            let hn: Vec<Vec<f32>> =
-                (0..valid).map(|i| hn_t.row(i).unwrap().to_vec()).collect();
-            let probs: Vec<Vec<f32>> =
-                (0..valid).map(|i| probs_t.row(i).unwrap().to_vec()).collect();
-            let (delta, groups, _sel) =
-                engine.moe_functional(&mut *provider, l, &hn, &probs)?;
+            // host math: rows 0..valid, borrowed straight from the
+            // gate output tensors (no per-layer copies)
+            let hn: Vec<&[f32]> =
+                (0..valid).map(|i| hn_t.row(i)).collect::<Result<_>>()?;
+            let probs: Vec<&[f32]> =
+                (0..valid).map(|i| probs_t.row(i)).collect::<Result<_>>()?;
+            let (delta, groups, _sel) = engine.moe_functional(
+                &mut *provider, l, &hn, &probs, expert_fanout)?;
             {
                 let hd = h.as_f32_mut()?;
                 let d = sim.d_model;
@@ -365,60 +528,60 @@ impl<'e> ServeSession<'e> {
 
     /// One lockstep decode step over the active requests.
     /// Returns the step's end time.
+    ///
+    /// The default path executes all batch-parallel work as **one GEMM
+    /// per layer** over the stacked `(B, D)` hidden matrix: batched
+    /// embed, batched Q/K/V/O projections around the per-request
+    /// attention core (KV is per-request, written in place via
+    /// ownership transfer), batched gate, batched residual/combine and
+    /// a single `(B, D) x (D, V)` lm_head with per-row argmax. The
+    /// row-at-a-time fallback (`force_rowwise`) issues B separate
+    /// matvecs instead; both paths are bit-identical per row and share
+    /// the virtual-time schedule code verbatim.
     pub fn decode(&mut self, active: &[usize]) -> Result<SimResult<f64>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
-                   states, expert_bytes, ablation, .. } = self;
+                   states, expert_bytes, ablation, force_rowwise,
+                   expert_fanout, decode_time, decode_tokens, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
         let expert_bytes = *expert_bytes;
         let ablation = *ablation;
+        let force_rowwise = *force_rowwise;
+        let expert_fanout = *expert_fanout;
 
-        let nm = &engine.host.nonmoe;
         let b = active.len();
+        let t_step_begin = streams.free_at(StreamId::Compute);
 
-        // functional embed per request
-        for &r in active {
-            let st = &mut states[r];
-            let tok = Tensor::i32(vec![*st.tokens.last().unwrap()], vec![1]);
-            let pos = Tensor::scalar_i32(st.pos as i32);
-            let out = engine.comps.embed_decode.run_mixed(vec![
-                ArgRef::T(&tok), ArgRef::T(&pos), nm.emb.arg(),
-                nm.pos_emb.arg(),
-            ])?;
-            st.h = out.into_iter().next().unwrap();
-        }
+        // functional embed: one (B, D) lookup with per-row positions,
+        // or per-request (1, D) embeds into st.h (fallback)
+        let mut hb: Option<Tensor> = if force_rowwise {
+            embed_rowwise(engine, states, active)?;
+            None
+        } else {
+            Some(embed_batched(engine, states, active)?)
+        };
 
         let ctx_max = active.iter().map(|&r| states[r].pos + 1).max().unwrap();
-        let mut t_layer = streams.free_at(StreamId::Compute);
+        let mut t_layer = t_step_begin;
 
         for l in 0..sim.n_layers {
-            let lw = &engine.host.nonmoe.layers[l];
-            // functional: attention + gate per request
-            let mut hn: Vec<Vec<f32>> = Vec::with_capacity(b);
-            let mut probs: Vec<Vec<f32>> = Vec::with_capacity(b);
-            for &r in active {
-                let st = &mut states[r];
-                let pos = Tensor::scalar_i32(st.pos as i32);
-                // KV ownership transfer: the attention executable
-                // writes one row in place (O(d_model) per layer) and
-                // hands the caches back — no full-cache copies.
-                let kc = std::mem::take(&mut st.kcs[l]);
-                let vc = std::mem::take(&mut st.vcs[l]);
-                let out = engine.comps.attn_decode.run_mixed(vec![
-                    ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
-                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                    ArgRef::Own(kc), ArgRef::Own(vc),
-                ])?;
-                let mut it = out.into_iter();
-                st.h = it.next().unwrap();
-                st.kcs[l] = it.next().unwrap();
-                st.vcs[l] = it.next().unwrap();
-                let out = engine.comps.gate_decode.run_mixed(vec![
-                    ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
-                probs.push(out[0].as_f32()?.to_vec());
-                hn.push(out[1].as_f32()?.to_vec());
-            }
+            // functional: attention + gate. Batched: one executable
+            // call per projection over the stacked batch; fallback:
+            // per-request calls. Either way the gate outputs come back
+            // as owned tensors whose rows are *borrowed* below — no
+            // B x E + B x D copies per layer per step.
+            let (probs_ts, hn_ts) = match hb.take() {
+                Some(h) => {
+                    let (h2, probs_t, hn_t) =
+                        layer_nonmoe_batched(engine, states, active, l, h)?;
+                    hb = Some(h2);
+                    (vec![probs_t], vec![hn_t])
+                }
+                None => layer_nonmoe_rowwise(engine, states, active, l)?,
+            };
+            let probs = all_rows(&probs_ts)?;
+            let hn = all_rows(&hn_ts)?;
 
             // timing: non-MoE
             let t_layer_start = t_layer;
@@ -427,16 +590,31 @@ impl<'e> ServeSession<'e> {
                                      "decode-nonmoe");
 
             // host math + functional experts
-            let (delta, groups, sel) =
-                engine.moe_functional(&mut *provider, l, &hn, &probs)?;
-            for (bi, &r) in active.iter().enumerate() {
-                let st = &mut states[r];
-                {
-                    let hd = st.h.as_f32_mut()?;
-                    for (j, v) in delta[bi].iter().enumerate() {
-                        hd[j] += v;
+            let (delta, groups, sel) = engine.moe_functional(
+                &mut *provider, l, &hn, &probs, expert_fanout)?;
+            match hb.as_mut() {
+                // batched residual/combine: one in-place pass over the
+                // stacked hidden matrix
+                Some(h) => {
+                    let hd = h.as_f32_mut()?;
+                    let d = sim.d_model;
+                    for (bi, dl) in delta.iter().enumerate() {
+                        for (j, v) in dl.iter().enumerate() {
+                            hd[bi * d + j] += v;
+                        }
                     }
                 }
+                None => {
+                    for (bi, &r) in active.iter().enumerate() {
+                        let hd = states[r].h.as_f32_mut()?;
+                        for (j, v) in delta[bi].iter().enumerate() {
+                            hd[j] += v;
+                        }
+                    }
+                }
+            }
+            for (bi, &r) in active.iter().enumerate() {
+                let st = &mut states[r];
                 // accuracy: compare DuoServe's live prediction (if
                 // any) against the gate's actual selection —
                 // accounted centrally in the provider's ledger.
@@ -464,7 +642,7 @@ impl<'e> ServeSession<'e> {
                     let heuristic = crate::predictor::HeuristicPredictor::
                         popularity_affinity(sim.top_k);
                     let mut predict = |target: usize| -> Vec<usize> {
-                        let mut union: Vec<usize> = Vec::new();
+                        let start = predictions.len();
                         for (bi, sc) in states_ref.iter().enumerate() {
                             let p = if ablation == Some(Ablation::NoPredictor) {
                                 // Challenge-#1 ablation: heuristic only.
@@ -480,15 +658,14 @@ impl<'e> ServeSession<'e> {
                                     None => Vec::new(),
                                 }
                             };
-                            predictions.push((bi, target, p.clone()));
-                            for e in p {
-                                if !union.contains(&e) {
-                                    union.push(e);
-                                }
-                            }
+                            predictions.push((bi, target, p));
                         }
-                        union.sort_unstable();
-                        union
+                        // Bitmask union (was an O(B*k^2) contains scan):
+                        // ascending expert ids, order-independent.
+                        crate::util::math::sorted_union(
+                            predictions[start..].iter()
+                                .map(|(_, _, p)| p.as_slice()),
+                            sim.n_experts)
                     };
                     let mut cx = SimCtx {
                         streams: &mut *streams,
@@ -510,17 +687,17 @@ impl<'e> ServeSession<'e> {
                 // Predictor-driven stage-ahead: hand the predicted
                 // next-layer experts (plus the always-needed shared
                 // experts, predicted or not) to the prefetch worker
-                // while this layer's bookkeeping continues.
+                // while this layer's bookkeeping continues. Dedup by
+                // sort (ExpertKey is Ord) instead of a contains scan.
                 let mut hint: Vec<ExpertKey> = Vec::new();
                 for (bi, target, p) in predictions {
                     for &e in &p {
-                        let key = ExpertKey::routed(target, e);
-                        if !hint.contains(&key) {
-                            hint.push(key);
-                        }
+                        hint.push(ExpertKey::routed(target, e));
                     }
                     states[active[bi]].pending_pred[target] = Some(p);
                 }
+                hint.sort_unstable();
+                hint.dedup();
                 if l + 1 < sim.n_layers {
                     for s in 0..sim.n_shared {
                         hint.push(ExpertKey::shared(l + 1, s));
@@ -540,18 +717,40 @@ impl<'e> ServeSession<'e> {
             };
         }
 
-        // lm head per request (functional); one timing op for the batch
-        for &r in active {
-            let st = &mut states[r];
-            let out = engine.comps.lm_head.run_mixed(vec![
-                ArgRef::T(&st.h), nm.ln_final.arg(), nm.w_out.arg()])?;
-            let logits = out.into_iter().next().unwrap();
-            let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
-            st.tokens.push(tok);
-            st.pos += 1;
+        // lm head: one (B, D) x (D, V) GEMM + per-row argmax (batched)
+        // or B matvecs (fallback); one timing op for the batch either way
+        let nm = &engine.host.nonmoe;
+        match &hb {
+            Some(h) => {
+                let out = engine.comps.lm_head.run_mixed(vec![
+                    ArgRef::T(h), nm.ln_final.arg(), nm.w_out.arg()])?;
+                let logits = out.into_iter().next().unwrap();
+                for (bi, &r) in active.iter().enumerate() {
+                    let st = &mut states[r];
+                    let tok =
+                        crate::util::math::argmax(logits.row(bi)?) as i32;
+                    st.tokens.push(tok);
+                    st.pos += 1;
+                }
+            }
+            None => {
+                for &r in active {
+                    let st = &mut states[r];
+                    let out = engine.comps.lm_head.run_mixed(vec![
+                        ArgRef::T(&st.h), nm.ln_final.arg(),
+                        nm.w_out.arg()])?;
+                    let logits = out.into_iter().next().unwrap();
+                    let tok =
+                        crate::util::math::argmax(logits.as_f32()?) as i32;
+                    st.tokens.push(tok);
+                    st.pos += 1;
+                }
+            }
         }
         let t_end = streams.run(StreamId::Compute, t_layer,
                                 cost.head_compute(b, PAPER_VOCAB), "lm-head");
+        *decode_time += t_end - t_step_begin;
+        *decode_tokens += b as u64;
         Ok(Ok(t_end))
     }
 
@@ -634,7 +833,8 @@ impl<'e> ServeSession<'e> {
                 steps: s.all_paths.clone(),
             })
             .collect();
-        let summary = summarize(&metrics, makespan);
+        let summary = summarize(&metrics, makespan)
+            .with_decode_throughput(self.decode_tokens, self.decode_time);
         if oom.is_some() {
             metrics.clear();
         }
@@ -656,5 +856,76 @@ impl<'e> ServeSession<'e> {
             rejected: sched.map(|s| s.rejected()).unwrap_or(0),
             events: sched.map(|s| s.events().to_vec()).unwrap_or_default(),
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// decode-step bench driver (hot-path micro-bench hook)
+// ---------------------------------------------------------------------
+
+/// A repeatable single-decode-step driver for the hot-path
+/// micro-bench: `b` requests are prefilled once, then every
+/// [`DecodeStepBench::step`] runs exactly one lockstep decode
+/// iteration over the full batch and rolls the per-request state back,
+/// so each call does identical work (same positions, same tokens, same
+/// routing).
+pub struct DecodeStepBench<'e> {
+    sess: ServeSession<'e>,
+    active: Vec<usize>,
+    saved_pos: Vec<usize>,
+    saved_tokens: Vec<usize>,
+}
+
+impl Engine {
+    /// Build a [`DecodeStepBench`] over `b` synthetic requests.
+    /// `opts.force_rowwise` selects the row-at-a-time fallback, so the
+    /// bench can compare both decode paths on identical state.
+    pub fn decode_step_bench(&self, b: usize, opts: &ServeOptions)
+                             -> Result<DecodeStepBench<'_>> {
+        let reqs =
+            crate::workload::generate_requests(&self.man, "squad", b, 0x5eed);
+        let mut sess = ServeSession::open(self, &reqs, opts, true);
+        if let Err(oom) = sess.reserve_fixed() {
+            bail!("decode bench setup: {oom}");
+        }
+        for r in 0..reqs.len() {
+            if let Err(oom) = sess.begin_request() {
+                bail!("decode bench setup: {oom}");
+            }
+            let t0 = sess.streams.free_at(StreamId::Compute);
+            if let Err(oom) = sess.prefill(r, t0)? {
+                bail!("decode bench prefill: {oom}");
+            }
+            if let Err(oom) = sess.sync_kv(false) {
+                bail!("decode bench setup: {oom}");
+            }
+        }
+        let active = sess.active();
+        let saved_pos = sess.states.iter().map(|s| s.pos).collect();
+        let saved_tokens = sess.states.iter().map(|s| s.tokens.len()).collect();
+        Ok(DecodeStepBench { sess, active, saved_pos, saved_tokens })
+    }
+}
+
+impl DecodeStepBench<'_> {
+    /// One decode step over the full batch, then roll request state
+    /// back so the next call repeats identical work.
+    pub fn step(&mut self) -> Result<()> {
+        if let Err(oom) = self.sess.decode(&self.active)? {
+            bail!("decode bench step: {oom}");
+        }
+        for (i, st) in self.sess.states.iter_mut().enumerate() {
+            st.pos = self.saved_pos[i];
+            st.tokens.truncate(self.saved_tokens[i]);
+            st.step_path.clear();
+            st.state_con.clear();
+            st.pending_pred.iter_mut().for_each(|p| *p = None);
+        }
+        Ok(())
+    }
+
+    /// Tokens one step emits (the batch size).
+    pub fn batch(&self) -> usize {
+        self.active.len()
     }
 }

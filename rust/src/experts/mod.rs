@@ -64,6 +64,17 @@ pub trait ExpertProvider: Send {
     /// pool's exact tensors: staging can never change a token.
     fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>>;
 
+    /// Pre-acquire seam for threaded expert fan-out: resolve every
+    /// key's weights **on the calling thread, in order**, before the
+    /// caller fans the per-group compute out to worker threads. The
+    /// returned `Arc`s are `Send + Sync`, so the fan-out threads never
+    /// touch the provider — ledger accounting (staged vs sync acquire
+    /// counts) is byte-identical to serial execution by construction.
+    fn acquire_many(&mut self, keys: &[ExpertKey])
+                    -> Result<Vec<Arc<CachedTensors>>> {
+        keys.iter().map(|&k| self.acquire(k)).collect()
+    }
+
     /// Virtual-time residency lookup at `now`; refreshes LRU and
     /// counts the hit/miss centrally. Returns the entry's `ready_at`.
     fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64>;

@@ -166,6 +166,22 @@ mod tests {
     }
 
     #[test]
+    fn acquire_many_counts_like_sequential_acquires() {
+        // The pre-acquire seam is defined as "acquire each key in
+        // order on the calling thread": a detached provider errors on
+        // the first key exactly as a sequential acquire loop would,
+        // and an empty key list is a no-op on the ledger.
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(1, 0), 1);
+        assert!(p.acquire_many(&[ExpertKey::routed(0, 0)]).is_err());
+        let before = p.stats();
+        assert!(p.acquire_many(&[]).unwrap().is_empty());
+        let after = p.stats();
+        assert_eq!(before.sync_acquires, after.sync_acquires);
+        assert_eq!(before.staged_acquires, after.staged_acquires);
+    }
+
+    #[test]
     fn accuracy_flows_through_the_ledger() {
         let mut p = StagedExpertProvider::detached(
             DeviceExpertCache::new(1, 0), 1);

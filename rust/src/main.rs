@@ -119,13 +119,15 @@ fn main() -> Result<()> {
             let s = &out.summary;
             println!(
                 "policy={} mode=continuous rate={rate}/s served={} \
-                 rejected={} makespan={} p95-ttft={} p95-e2e={}",
+                 rejected={} makespan={} p95-ttft={} p95-e2e={} \
+                 decode-tok/s={:.1}",
                 pol.label(),
                 s.n_requests,
                 out.rejected,
                 fmt_secs(s.makespan),
                 fmt_secs(s.p95_ttft),
                 fmt_secs(s.p95_e2e),
+                s.decode_tokens_per_sec,
             );
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
             let slo_e2e = args.f64("slo-e2e", 0.0)?;
@@ -157,6 +159,8 @@ fn main() -> Result<()> {
             let mut peak = 0u64;
             let mut hit = 0.0;
             let mut makespan = 0.0;
+            let mut decode_tokens = 0u64;
+            let mut decode_time = 0.0f64;
             for chunk in reqs.chunks(batch) {
                 let out = engine.serve(chunk, &opts)?;
                 if let Some(oom) = out.oom {
@@ -175,6 +179,8 @@ fn main() -> Result<()> {
                 peak = peak.max(out.peak_bytes);
                 hit = out.hit_rate;
                 makespan += out.summary.makespan;
+                decode_tokens += out.summary.decode_tokens;
+                decode_time += out.summary.decode_time;
                 if let Some(trace) = &out.stream_trace {
                     let mut by_label: std::collections::BTreeMap<&str,
                         (usize, f64)> = Default::default();
@@ -192,12 +198,19 @@ fn main() -> Result<()> {
                 }
             }
             println!("{}", t.render());
+            let decode_tps = if decode_time > 0.0 {
+                decode_tokens as f64 / decode_time
+            } else {
+                0.0
+            };
             println!(
-                "policy={} hit-rate={:.1}% peak-mem={} makespan={}",
+                "policy={} hit-rate={:.1}% peak-mem={} makespan={} \
+                 decode-tok/s={:.1}",
                 pol.label(),
                 hit * 100.0,
                 fmt_gb(peak),
                 fmt_secs(makespan),
+                decode_tps,
             );
             Ok(())
         }

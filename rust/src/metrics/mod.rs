@@ -81,6 +81,26 @@ pub struct Summary {
     /// Total tokens / makespan (Fig. 7's "total throughput").
     pub tokens_per_sec: f64,
     pub makespan: f64,
+    /// Tokens emitted by decode steps (prefill first-tokens excluded).
+    pub decode_tokens: u64,
+    /// Virtual time the compute stream spent inside decode steps.
+    pub decode_time: f64,
+    /// Decode-step throughput: `decode_tokens / decode_time` — the
+    /// quantity the batched decode hot path optimises (0.0 when no
+    /// decode steps ran; filled by the serving session via
+    /// [`Summary::with_decode_throughput`]).
+    pub decode_tokens_per_sec: f64,
+}
+
+impl Summary {
+    /// Attach decode-step throughput measured by the serving session.
+    pub fn with_decode_throughput(mut self, tokens: u64, busy: f64) -> Self {
+        self.decode_tokens = tokens;
+        self.decode_time = busy;
+        self.decode_tokens_per_sec =
+            if busy > 0.0 { tokens as f64 / busy } else { 0.0 };
+        self
+    }
 }
 
 /// Nearest-rank percentile (p in [0, 100]).
@@ -117,6 +137,9 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
             0.0
         },
         makespan,
+        decode_tokens: 0,
+        decode_time: 0.0,
+        decode_tokens_per_sec: 0.0,
     }
 }
 
@@ -290,6 +313,19 @@ mod tests {
         assert!((rep.joint_attainment - 0.25).abs() < 1e-12);
         assert_eq!(slo_attainment(&[], &SloSpec { ttft: 1.0, e2e: 1.0 })
                    .n_requests, 0);
+    }
+
+    #[test]
+    fn decode_throughput_attaches_to_summary() {
+        let s = summarize(&[], 0.0);
+        assert_eq!(s.decode_tokens_per_sec, 0.0);
+        let s = s.with_decode_throughput(30, 2.0);
+        assert_eq!(s.decode_tokens, 30);
+        assert_eq!(s.decode_time, 2.0);
+        assert!((s.decode_tokens_per_sec - 15.0).abs() < 1e-12);
+        // zero busy time must not divide by zero
+        let z = summarize(&[], 0.0).with_decode_throughput(0, 0.0);
+        assert_eq!(z.decode_tokens_per_sec, 0.0);
     }
 
     #[test]

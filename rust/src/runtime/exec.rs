@@ -112,6 +112,8 @@ fn parse_spec(text: &str) -> Result<ComponentKind> {
         "embed" => ComponentKind::Embed,
         "attn_prefill" => ComponentKind::AttnPrefill,
         "attn_decode" => ComponentKind::AttnDecode,
+        "attn_proj_batch" => ComponentKind::AttnProjBatch,
+        "attn_core" => ComponentKind::AttnCore,
         "gate" => ComponentKind::Gate,
         "expert" => ComponentKind::Expert,
         "lm_head" => ComponentKind::LmHead,

@@ -14,10 +14,12 @@
 //!   (`memory::host_pool::Weight`), so the per-call cost is pure
 //!   FLOPs.
 //! * [`matmul_bt`] — the threaded wrapper: above [`PAR_FLOPS`] it
-//!   splits rows (or, for a single row, columns) across a
-//!   `std::thread::scope`. This is what prefill attention, `lm_head`
-//!   (T x D x V, the single largest matmul) and the expert FFN buckets
-//!   go through.
+//!   splits rows across a `std::thread::scope`, or — when the row
+//!   count is smaller than the thread budget (the batched-decode
+//!   `(B, D) x (D, V)` shape class) — row x column-chunk **tiles** so
+//!   small batches still fill every worker. This is what prefill
+//!   attention, `lm_head` (T x D x V, the single largest matmul) and
+//!   the expert FFN buckets go through.
 //!
 //! [`Scratch`] is the reusable temporary-buffer pool the native
 //! components allocate from (per engine thread), killing the per-step
@@ -46,6 +48,36 @@ pub fn n_threads() -> usize {
         .clamp(1, MAX_THREADS);
     N.store(n, Ordering::Relaxed);
     n
+}
+
+thread_local! {
+    /// Per-thread cap on [`matmul_bt`]'s worker count (0 = uncapped).
+    /// Set by callers that already fan work out across threads (the
+    /// MoE expert-group fan-out), so nested kernel parallelism cannot
+    /// oversubscribe the machine to `fanout x n_threads` OS threads.
+    static THREAD_CAP: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+
+/// Run `f` with [`matmul_bt`]'s thread budget capped at `cap` on this
+/// thread (restored afterwards). Threading never changes kernel
+/// results — every tier sums k-ascending — so this is purely a
+/// scheduling knob.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_CAP.with(|c| c.replace(cap));
+    let out = f();
+    THREAD_CAP.with(|c| c.set(prev));
+    out
+}
+
+/// The effective [`matmul_bt`] budget on this thread: [`n_threads`]
+/// clamped by the active [`with_thread_cap`] scope, if any.
+pub fn effective_threads() -> usize {
+    let cap = THREAD_CAP.with(|c| c.get());
+    if cap == 0 {
+        n_threads()
+    } else {
+        n_threads().min(cap)
+    }
 }
 
 /// (m,k) x (k,n) row-major matmul — the naive reference kernel.
@@ -137,8 +169,15 @@ pub fn matmul_bt_into(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize,
 
 /// Blocked matmul over transposed B with an explicit thread count
 /// (tests force the parallel path on small shapes through this).
-/// Rows are split across threads; a single row splits columns instead
-/// (the decode-time `lm_head` shape: 1 x D x V).
+///
+/// Work split by shape:
+/// * `m >= threads` — rows split across threads (prefill shapes);
+/// * `m < threads` — **tile split**: each row's columns are chunked so
+///   the row x column-chunk tiles together fill the thread budget.
+///   This is the batched-decode shape class: a small-batch
+///   `(B, D) x (D, V)` lm_head with `B < threads` would otherwise
+///   leave `threads - B` workers idle (and `m == 1` degenerates to the
+///   pure column split the single-request decode path always used).
 pub fn matmul_bt_threads(a: &[f32], m: usize, k: usize, bt: &[f32],
                          n: usize, out: &mut [f32], threads: usize) {
     if m == 0 || n == 0 {
@@ -153,7 +192,7 @@ pub fn matmul_bt_threads(a: &[f32], m: usize, k: usize, bt: &[f32],
         matmul_bt_into(a, m, k, bt, n, out);
         return;
     }
-    if m > 1 {
+    if m >= threads {
         let rows_per = (m + threads - 1) / threads;
         std::thread::scope(|s| {
             for (ach, och) in
@@ -165,25 +204,34 @@ pub fn matmul_bt_threads(a: &[f32], m: usize, k: usize, bt: &[f32],
             }
         });
     } else {
-        let cols_per = (n + threads - 1) / threads;
+        // floor(threads / m) column chunks per row: m * chunks tiles
+        // stay within the thread budget (never above it — spawns cost
+        // tens of microseconds each), leaving at most m - 1 workers
+        // idle.
+        let col_chunks = (threads / m).max(1).min(n);
+        let cols_per = (n + col_chunks - 1) / col_chunks;
         std::thread::scope(|s| {
-            for (bch, och) in
-                bt.chunks(cols_per * k).zip(out.chunks_mut(cols_per))
-            {
-                s.spawn(move || {
-                    matmul_bt_into(a, 1, k, bch, bch.len() / k, och);
-                });
+            for (i, orow) in out.chunks_mut(n).enumerate() {
+                let ar = &a[i * k..(i + 1) * k];
+                for (ci, och) in orow.chunks_mut(cols_per).enumerate() {
+                    let b0 = ci * cols_per * k;
+                    let bch = &bt[b0..b0 + och.len() * k];
+                    s.spawn(move || {
+                        matmul_bt_into(ar, 1, k, bch, och.len(), och);
+                    });
+                }
             }
         });
     }
 }
 
 /// The hot-path entry: blocked kernel over transposed B, threaded
-/// above [`PAR_FLOPS`].
+/// above [`PAR_FLOPS`] (budget = [`effective_threads`], so fan-out
+/// callers can bound nested parallelism via [`with_thread_cap`]).
 pub fn matmul_bt(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize,
                  out: &mut [f32]) {
     let flops = m.saturating_mul(k).saturating_mul(n);
-    let threads = if flops >= PAR_FLOPS { n_threads() } else { 1 };
+    let threads = if flops >= PAR_FLOPS { effective_threads() } else { 1 };
     matmul_bt_threads(a, m, k, bt, n, out, threads);
 }
 
@@ -260,6 +308,47 @@ mod tests {
             let want = matmul_naive(&a, m, k, &b, n);
             let bt = transpose(&b, k, n);
             for threads in [2, 3, 8] {
+                let mut got = vec![0.0f32; m * n];
+                matmul_bt_threads(&a, m, k, &bt, n, &mut got, threads);
+                assert_eq!(got, want, "shape ({m},{k},{n}) x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_cap_scopes_and_restores() {
+        assert_eq!(effective_threads(), n_threads());
+        with_thread_cap(1, || {
+            assert_eq!(effective_threads(), 1);
+            // nested caps stack; inner restores the outer
+            with_thread_cap(2, || {
+                assert_eq!(effective_threads(), n_threads().min(2));
+            });
+            assert_eq!(effective_threads(), 1);
+        });
+        assert_eq!(effective_threads(), n_threads());
+        // capped kernels still produce identical results
+        let a = seq(3 * 8, 0.5);
+        let b = seq(8 * 5, 0.25);
+        let bt = transpose(&b, 8, 5);
+        let want = matmul_naive(&a, 3, 8, &b, 5);
+        let mut got = vec![0.0f32; 3 * 5];
+        with_thread_cap(1, || matmul_bt(&a, 3, 8, &bt, 5, &mut got));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn small_m_tile_split_matches_naive_exactly() {
+        // 1 < m < threads: the tile split (row x column-chunk tasks)
+        // must stay bit-identical to the naive reference.
+        for &(m, k, n) in &[(2usize, 9usize, 31usize), (3, 16, 17),
+                            (4, 5, 8), (7, 3, 3)]
+        {
+            let a = seq(m * k, 0.5);
+            let b = seq(k * n, 0.25);
+            let want = matmul_naive(&a, m, k, &b, n);
+            let bt = transpose(&b, k, n);
+            for threads in [5usize, 8, 16] {
                 let mut got = vec![0.0f32; m * n];
                 matmul_bt_threads(&a, m, k, &bt, n, &mut got, threads);
                 assert_eq!(got, want, "shape ({m},{k},{n}) x{threads}");

@@ -35,6 +35,12 @@ pub enum ComponentKind {
     Embed,
     AttnPrefill,
     AttnDecode,
+    /// Batched decode attention, pre/post projections: one GEMM per
+    /// projection over the stacked `(B, D)` hidden matrix.
+    AttnProjBatch,
+    /// Batched decode attention, per-request core: in-place KV row
+    /// write + masked scores + weighted-V sum for one batch row.
+    AttnCore,
     Gate,
     Expert,
     LmHead,
@@ -192,22 +198,37 @@ fn silu(x: f32) -> f32 {
 // components
 // ---------------------------------------------------------------------
 
-/// embed(tok_ids (T,), pos0 scalar, emb (V,D), pos_emb (KV,D)) -> (h,)
+/// embed(tok_ids (T,), pos, emb (V,D), pos_emb (KV,D)) -> (h,)
+///
+/// `pos` is either a rank-0 scalar `pos0` (tokens sit at sequential
+/// positions `pos0..pos0+T` — the prefill / single-request layout) or
+/// a rank-1 `(T,)` vector of per-token positions (the batched-decode
+/// layout, where each row is a different request at its own position).
 fn embed(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let toks = arg_tensor(args, 0, "tok_ids")?.as_i32()?;
-    let pos0 = arg_tensor(args, 1, "pos0")?.scalar_i32_value()? as usize;
+    let pos_t = arg_tensor(args, 1, "pos")?;
     let (emb, es) = f32_arg(args, 2, "emb")?;
     let (pe, ps) = f32_arg(args, 3, "pos_emb")?;
     let (vocab, d) = (es[0], es[1]);
     let kv_len = ps[0];
     let t = toks.len();
+    let positions: Vec<usize> = if pos_t.shape().is_empty() {
+        let pos0 = pos_t.scalar_i32_value()? as usize;
+        (pos0..pos0 + t).collect()
+    } else {
+        let pv = pos_t.as_i32()?;
+        if pv.len() != t {
+            bail!("embed positions: {} entries for {t} tokens", pv.len());
+        }
+        pv.iter().map(|&p| p as usize).collect()
+    };
     let mut h = take_buf(t * d);
     for (i, &tok) in toks.iter().enumerate() {
         let tok = tok as usize;
         if tok >= vocab {
             bail!("token {tok} out of vocab {vocab}");
         }
-        let p = pos0 + i;
+        let p = positions[i];
         if p >= kv_len {
             bail!("position {p} out of range {kv_len}");
         }
@@ -333,6 +354,149 @@ fn attention(args: &mut [ArgRef<'_>], decode: bool) -> Result<Vec<Tensor>> {
     Ok(vec![Tensor::f32(out, vec![t, d]), kc_t, vc_t])
 }
 
+/// The batched halves of decode attention: the Q/K/V/O projections run
+/// as one GEMM each over the stacked `(B, D)` batch matrix, around the
+/// per-request [`attn_core`]. Two call shapes, told apart by arg count:
+///
+/// * **pre** (5 args): `(x (B,D), ln (D,), wq, wk, wv)` ->
+///   `(q (B,D), k (B,D), v (B,D))` — pre-norm QKV projections;
+/// * **post** (3 args): `(att (B,D), h (B,D), wo)` ->
+///   `(h + att @ wo,)` — output projection plus residual.
+///
+/// Each output row is bit-identical to what the fused `attn_decode`
+/// component computes for that row alone: the blocked kernel sums
+/// every element over k in ascending order regardless of row count.
+fn attn_proj_batch(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
+    match args.len() {
+        5 => {
+            let (x, xs) = f32_arg(args, 0, "x")?;
+            let (ln, _) = f32_arg(args, 1, "ln")?;
+            let wq = view(args, 2, "wq")?;
+            let wk = view(args, 3, "wk")?;
+            let wv = view(args, 4, "wv")?;
+            let (t, d) = (xs[0], xs[1]);
+            let hn = rms_norm(x, t, d, ln);
+            let q = mm(&hn, t, &wq, "attn wq")?;
+            let k = mm(&hn, t, &wk, "attn wk")?;
+            let v = mm(&hn, t, &wv, "attn wv")?;
+            put_buf(hn);
+            Ok(vec![
+                Tensor::f32(q, vec![t, d]),
+                Tensor::f32(k, vec![t, d]),
+                Tensor::f32(v, vec![t, d]),
+            ])
+        }
+        3 => {
+            let (att, ats) = f32_arg(args, 0, "att")?;
+            let (h, hs) = f32_arg(args, 1, "h")?;
+            let wo = view(args, 2, "wo")?;
+            if ats != hs {
+                bail!("attn_proj_batch post: att shape {ats:?} != h \
+                       shape {hs:?}");
+            }
+            let t = ats[0];
+            let proj = mm(att, t, &wo, "attn wo")?;
+            let mut out = take_buf(att.len());
+            out.copy_from_slice(h);
+            for (o, p) in out.iter_mut().zip(&proj) {
+                *o += p;
+            }
+            put_buf(proj);
+            Ok(vec![Tensor::f32(out, hs.to_vec())])
+        }
+        n => bail!("attn_proj_batch takes 5 args (pre: x, ln, wq, wk, wv) \
+                    or 3 (post: att, h, wo), got {n}"),
+    }
+}
+
+/// attn_core(q (B,D), k (B,D), v (B,D), row scalar, pos scalar,
+///           kc (KV,NH,HD), vc (KV,NH,HD)) -> (att (1,D), kc', vc')
+///
+/// The per-request half of batched decode attention: reads batch row
+/// `row` of the already-projected q/k/v, writes that request's KV
+/// cache row at `pos` **in place** (ownership transfer, exactly as the
+/// fused `attn_decode` path), and runs the masked score + weighted-V
+/// loop over this request's cache. No projections and no residual —
+/// those are the batched [`attn_proj_batch`] passes.
+fn attn_core(args: &mut [ArgRef<'_>]) -> Result<Vec<Tensor>> {
+    let mut kc_t = take_arg(args, 5, "kc")?;
+    let mut vc_t = take_arg(args, 6, "vc")?;
+    let (q, qs) = f32_arg(args, 0, "q")?;
+    let (kn, kns) = f32_arg(args, 1, "k")?;
+    let (vn, vns) = f32_arg(args, 2, "v")?;
+    let row = arg_tensor(args, 3, "row")?.scalar_i32_value()? as usize;
+    let pos = arg_tensor(args, 4, "pos")?.scalar_i32_value()? as usize;
+    if qs.len() != 2 {
+        bail!("attn_core q must be rank-2 (B, D), got {qs:?}");
+    }
+    if kns != qs || vns != qs {
+        bail!("attn_core k/v shapes {kns:?}/{vns:?} != q shape {qs:?}");
+    }
+    let (b, d) = (qs[0], qs[1]);
+    if row >= b {
+        bail!("attn_core row {row} out of batch {b}");
+    }
+    let ks: Vec<usize> = kc_t.shape().to_vec();
+    if ks.len() != 3 {
+        bail!("kv cache must be rank-3 (kv_len, n_heads, head_dim), \
+               got {ks:?}");
+    }
+    let (kv_len, n_heads, hd) = (ks[0], ks[1], ks[2]);
+    if n_heads * hd != d {
+        bail!("kv shape {ks:?} inconsistent with d_model {d}");
+    }
+    if vc_t.shape() != ks.as_slice() {
+        bail!("v cache shape {:?} != k cache shape {ks:?}", vc_t.shape());
+    }
+    if pos >= kv_len {
+        bail!("kv write position {pos} out of range {kv_len}");
+    }
+
+    // In-place KV row write from batch row `row`: O(d_model), never a
+    // cache clone (borrowed handles still copy-on-write).
+    {
+        let kc = kc_t.as_f32_mut()?;
+        let vc = vc_t.as_f32_mut()?;
+        kc[pos * d..(pos + 1) * d]
+            .copy_from_slice(&kn[row * d..(row + 1) * d]);
+        vc[pos * d..(pos + 1) * d]
+            .copy_from_slice(&vn[row * d..(row + 1) * d]);
+    }
+
+    let kc = kc_t.as_f32()?;
+    let vc = vc_t.as_f32()?;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let valid_bound = pos + 1;
+    let mut att_out = take_buf(d);
+    let mut scores = take_buf(kv_len);
+    for head in 0..n_heads {
+        let qrow = &q[row * d + head * hd..row * d + (head + 1) * hd];
+        for kp in 0..kv_len {
+            let masked = kp > pos || kp >= valid_bound;
+            scores[kp] = if masked {
+                -1e9
+            } else {
+                let krow = &kc[kp * d + head * hd..kp * d + (head + 1) * hd];
+                qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
+                    * scale
+            };
+        }
+        softmax_row(&mut scores);
+        let orow = &mut att_out[head * hd..(head + 1) * hd];
+        for (kp, &w) in scores.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let vrow = &vc[kp * d + head * hd..kp * d + (head + 1) * hd];
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+    put_buf(scores);
+    Ok(vec![Tensor::f32(att_out, vec![1, d]), kc_t, vc_t])
+}
+
 /// gate(h (T,D), ln (D,), wg (D,E)) -> (probs (T,E), h_norm (T,D))
 fn gate(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
     let (h, hs) = f32_arg(args, 0, "h")?;
@@ -439,6 +603,8 @@ pub fn execute(kind: &ComponentKind, args: &mut [ArgRef<'_>])
         ComponentKind::Embed => embed(args),
         ComponentKind::AttnPrefill => attention(args, false),
         ComponentKind::AttnDecode => attention(args, true),
+        ComponentKind::AttnProjBatch => attn_proj_batch(args),
+        ComponentKind::AttnCore => attn_core(args),
         ComponentKind::Gate => gate(args),
         ComponentKind::Expert => expert(args),
         ComponentKind::LmHead => lm_head(args),
@@ -508,6 +674,117 @@ mod tests {
         // ... while the caller's borrowed cache copy-on-wrote: the
         // original handle is untouched.
         assert!(kc.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn embed_accepts_per_token_positions() {
+        // Two tokens at non-sequential positions (the batched-decode
+        // layout) must equal two scalar-pos0 lookups row for row.
+        let (v, d, kv) = (4usize, 2usize, 8usize);
+        let emb = Tensor::f32((0..v * d).map(|i| i as f32 * 0.5).collect(),
+                              vec![v, d]);
+        let pe = Tensor::f32((0..kv * d).map(|i| i as f32 * 0.25).collect(),
+                             vec![kv, d]);
+        let toks = Tensor::i32(vec![3, 1], vec![2]);
+        let poss = Tensor::i32(vec![6, 2], vec![2]);
+        let got = embed(&[ArgRef::T(&toks), ArgRef::T(&poss),
+                          ArgRef::T(&emb), ArgRef::T(&pe)])
+            .unwrap();
+        for (i, &(tok, p)) in [(3i32, 6i32), (1, 2)].iter().enumerate() {
+            let one_tok = Tensor::i32(vec![tok], vec![1]);
+            let pos0 = Tensor::scalar_i32(p);
+            let want = embed(&[ArgRef::T(&one_tok), ArgRef::T(&pos0),
+                               ArgRef::T(&emb), ArgRef::T(&pe)])
+                .unwrap();
+            assert_eq!(got[0].row(i).unwrap(),
+                       want[0].row(0).unwrap(),
+                       "row {i} diverged from scalar-pos embed");
+        }
+    }
+
+    #[test]
+    fn batched_proj_plus_core_matches_fused_attn_decode() {
+        // attn_proj_batch (pre) -> attn_core -> attn_proj_batch (post)
+        // over a 2-row batch must reproduce the fused attn_decode
+        // component bit for bit, per row — including the in-place KV
+        // row writes.
+        let d = 4;
+        let kvs = [6usize, 2, 2]; // kv_len 6, 2 heads, head_dim 2
+        let mk = |salt: usize, n: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i * 31 + salt * 17) % 13) as f32 * 0.1 - 0.6)
+                .collect()
+        };
+        let h = Tensor::f32(mk(1, 2 * d), vec![2, d]);
+        let ln = Tensor::f32(vec![1.0, 0.5, 2.0, 1.5], vec![d]);
+        let wq = Tensor::f32(mk(2, d * d), vec![d, d]);
+        let wk = Tensor::f32(mk(3, d * d), vec![d, d]);
+        let wv = Tensor::f32(mk(4, d * d), vec![d, d]);
+        let wo = Tensor::f32(mk(5, d * d), vec![d, d]);
+        let caches: Vec<Tensor> =
+            (0..4).map(|s| Tensor::f32(mk(6 + s, 6 * d), kvs.to_vec()))
+                .collect();
+        let positions = [3usize, 5];
+
+        // fused reference, one request at a time
+        let mut want_h = Vec::new();
+        let mut want_kc = Vec::new();
+        let mut want_vc = Vec::new();
+        for (bi, &pos) in positions.iter().enumerate() {
+            let hrow = Tensor::f32(h.row(bi).unwrap().to_vec(), vec![1, d]);
+            let pos_t = Tensor::scalar_i32(pos as i32);
+            let mut args = [
+                ArgRef::T(&hrow), ArgRef::T(&pos_t), ArgRef::T(&ln),
+                ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv),
+                ArgRef::T(&wo),
+                ArgRef::Own(caches[bi * 2].clone()),
+                ArgRef::Own(caches[bi * 2 + 1].clone()),
+            ];
+            let out = attention(&mut args, true).unwrap();
+            let mut it = out.into_iter();
+            want_h.push(it.next().unwrap());
+            want_kc.push(it.next().unwrap());
+            want_vc.push(it.next().unwrap());
+        }
+
+        // batched split path
+        let pre = attn_proj_batch(&[ArgRef::T(&h), ArgRef::T(&ln),
+                                    ArgRef::T(&wq), ArgRef::T(&wk),
+                                    ArgRef::T(&wv)])
+            .unwrap();
+        let (q, k, v) = (&pre[0], &pre[1], &pre[2]);
+        let mut att = vec![0.0f32; 2 * d];
+        for (bi, &pos) in positions.iter().enumerate() {
+            let row = Tensor::scalar_i32(bi as i32);
+            let pos_t = Tensor::scalar_i32(pos as i32);
+            let mut args = [
+                ArgRef::T(q), ArgRef::T(k), ArgRef::T(v), ArgRef::T(&row),
+                ArgRef::T(&pos_t),
+                ArgRef::Own(caches[bi * 2].clone()),
+                ArgRef::Own(caches[bi * 2 + 1].clone()),
+            ];
+            let out = attn_core(&mut args).unwrap();
+            att[bi * d..(bi + 1) * d]
+                .copy_from_slice(out[0].as_f32().unwrap());
+            assert_eq!(out[1], want_kc[bi], "row {bi}: kc diverged");
+            assert_eq!(out[2], want_vc[bi], "row {bi}: vc diverged");
+        }
+        let att_t = Tensor::f32(att, vec![2, d]);
+        let post = attn_proj_batch(&[ArgRef::T(&att_t), ArgRef::T(&h),
+                                     ArgRef::T(&wo)])
+            .unwrap();
+        for bi in 0..2 {
+            assert_eq!(post[0].row(bi).unwrap(),
+                       want_h[bi].as_f32().unwrap(),
+                       "row {bi}: hidden diverged from fused attn_decode");
+        }
+    }
+
+    #[test]
+    fn attn_proj_batch_rejects_bad_arity() {
+        let x = Tensor::zeros(&[1, 2]);
+        let err =
+            attn_proj_batch(&[ArgRef::T(&x), ArgRef::T(&x)]).unwrap_err();
+        assert!(format!("{err:?}").contains("attn_proj_batch takes"));
     }
 
     #[test]

@@ -21,7 +21,15 @@ static GEN_LOCK: Mutex<()> = Mutex::new(());
 pub fn ensure_model(model: &str) -> PathBuf {
     let dir = artifacts_dir();
     let _guard = GEN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
-    if !dir.join(model).join(artifactgen::COMPLETE_MARKER).exists() {
+    let root = dir.join(model);
+    // Format freshness alongside completeness: trees generated before
+    // the batched-decode components existed lack `attn_core` in their
+    // manifest and must be regenerated (the generator is idempotent).
+    let fresh = root.join(artifactgen::COMPLETE_MARKER).exists()
+        && std::fs::read_to_string(root.join("manifest.json"))
+            .map(|t| t.contains("attn_core"))
+            .unwrap_or(false);
+    if !fresh {
         artifactgen::generate(&dir, model)
             .unwrap_or_else(|e| panic!("generating artifacts for {model}: {e:?}"));
     }

@@ -33,6 +33,30 @@ pub fn softmax_row(row: &mut [f32]) {
     }
 }
 
+/// Deterministic sorted union of expert-id lists: a bitmask keyed by
+/// expert id replaces the O(B·k²) `contains` scan the decode predict
+/// path used to run per step. `n` is the expected id bound (the mask
+/// grows if an id exceeds it). The result is ascending, so the union
+/// is independent of both list order and duplicate placement.
+pub fn sorted_union<'a>(lists: impl IntoIterator<Item = &'a [usize]>,
+                        n: usize) -> Vec<usize> {
+    let mut seen = vec![false; n];
+    let mut out = Vec::new();
+    for list in lists {
+        for &e in list {
+            if e >= seen.len() {
+                seen.resize(e + 1, false);
+            }
+            if !seen[e] {
+                seen[e] = true;
+                out.push(e);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
 /// Deterministic top-k over expert scores: highest score wins, ties to
 /// the lower expert index (matches `ref.top_k_ref` / `T.predict_topk`
 /// on the python side). Returns sorted indices.
@@ -80,5 +104,26 @@ mod tests {
     #[test]
     fn top_k_k_equals_len() {
         assert_eq!(top_k(&[0.2, 0.1], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn sorted_union_is_deterministic_across_list_orders() {
+        // Same member sets, shuffled list order and duplicates: the
+        // union must come out identical (ascending) either way.
+        let a: Vec<Vec<usize>> = vec![vec![5, 1], vec![3, 1], vec![7]];
+        let b: Vec<Vec<usize>> = vec![vec![7, 3], vec![1, 5], vec![1, 3]];
+        let ua = sorted_union(a.iter().map(|v| v.as_slice()), 8);
+        let ub = sorted_union(b.iter().map(|v| v.as_slice()), 8);
+        assert_eq!(ua, vec![1, 3, 5, 7]);
+        assert_eq!(ua, ub);
+    }
+
+    #[test]
+    fn sorted_union_handles_empty_and_out_of_hint_ids() {
+        assert!(sorted_union(std::iter::empty::<&[usize]>(), 4).is_empty());
+        let lists: Vec<Vec<usize>> = vec![vec![9, 0]];
+        // id 9 exceeds the n=4 hint: the mask grows instead of panicking
+        assert_eq!(sorted_union(lists.iter().map(|v| v.as_slice()), 4),
+                   vec![0, 9]);
     }
 }

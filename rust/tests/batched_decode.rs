@@ -1,0 +1,153 @@
+//! Batched lockstep decode parity suite: the "one GEMM per layer
+//! across the active batch" hot path must emit **bit-identical**
+//! per-request token streams (and routing, and virtual-time schedules)
+//! to the row-at-a-time fallback (`DUOSERVE_FORCE_ROWWISE=1` /
+//! `ServeOptions::force_rowwise`), across batch sizes, ragged request
+//! lifetimes (requests leaving at different steps), mid-run joins
+//! under `serve_continuous`, and with the threaded expert fan-out
+//! forced on and off.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServeOutcome};
+use duoserve::workload::{generate_requests, Request};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn opts(rowwise: bool, fanout: bool) -> ServeOptions {
+    let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                  DeviceProfile::a6000());
+    // set explicitly: the env-default test below mutates the
+    // process environment, and tests in this binary run in parallel
+    o.force_rowwise = rowwise;
+    o.expert_fanout = fanout;
+    o
+}
+
+fn assert_bit_identical(batched: &ServeOutcome, rowwise: &ServeOutcome,
+                        what: &str) {
+    assert!(batched.oom.is_none() && rowwise.oom.is_none(), "{what}: OOM");
+    assert_eq!(batched.tokens, rowwise.tokens,
+               "{what}: token streams diverged");
+    for (i, (eb, er)) in
+        batched.episodes.iter().zip(&rowwise.episodes).enumerate()
+    {
+        assert_eq!(eb.steps, er.steps, "{what}: request {i} routing diverged");
+    }
+    // the virtual-time schedule is shared code — makespan must agree
+    // exactly, not approximately
+    assert_eq!(batched.summary.makespan, rowwise.summary.makespan,
+               "{what}: virtual time diverged");
+    assert_eq!(batched.expert_stats.hits, rowwise.expert_stats.hits,
+               "{what}: cache hits diverged");
+    assert_eq!(batched.expert_stats.misses, rowwise.expert_stats.misses,
+               "{what}: cache misses diverged");
+}
+
+#[test]
+fn batched_matches_rowwise_across_batch_sizes_and_ragged_exits() {
+    let e = engine();
+    for &b in &[1usize, 3, 8] {
+        let mut reqs = generate_requests(&e.man, "squad", b, 7 + b as u64);
+        // ragged lifetimes: every request decodes a different number
+        // of tokens, so the active batch shrinks step by step and the
+        // gather/scatter runs over every intermediate batch size
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.n_decode = 3 + i;
+        }
+        for fanout in [false, true] {
+            let rowwise = e.serve(&reqs, &opts(true, fanout)).unwrap();
+            let batched = e.serve(&reqs, &opts(false, fanout)).unwrap();
+            assert_bit_identical(&batched, &rowwise,
+                                 &format!("b={b} fanout={fanout}"));
+            // the decode-throughput summary must be populated and
+            // identical (same tokens, same virtual busy time)
+            assert!(batched.summary.decode_tokens > 0);
+            assert_eq!(batched.summary.decode_tokens,
+                       rowwise.summary.decode_tokens);
+            assert_eq!(batched.summary.decode_time,
+                       rowwise.summary.decode_time);
+        }
+    }
+}
+
+#[test]
+fn continuous_ragged_join_and_leave_matches_rowwise() {
+    // Staggered arrivals under a max-in-flight budget: requests join
+    // the running batch between decode iterations and leave at
+    // different steps (varying n_decode), so batch membership changes
+    // nearly every step — the stress case for the batched
+    // gather/scatter and the per-request KV ownership transfer.
+    let e = engine();
+    let mut reqs: Vec<Request> = generate_requests(&e.man, "orca", 8, 23);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.arrival = i as f64 * 0.003;
+        r.n_decode = 2 + (i % 4);
+    }
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    for fanout in [false, true] {
+        let rowwise =
+            e.serve_continuous(&reqs, &opts(true, fanout), &ccfg).unwrap();
+        let batched =
+            e.serve_continuous(&reqs, &opts(false, fanout), &ccfg).unwrap();
+        assert_eq!(batched.rejected, rowwise.rejected);
+        assert_bit_identical(&batched, &rowwise,
+                             &format!("continuous fanout={fanout}"));
+        // identical virtual time implies identical admission schedules;
+        // make that explicit
+        assert_eq!(batched.events, rowwise.events,
+                   "continuous fanout={fanout}: event schedules diverged");
+    }
+}
+
+#[test]
+fn batched_decode_matches_frozen_goldens() {
+    // The batched path is the default: it must still reproduce the
+    // frozen golden token streams exactly (goldens were recorded by
+    // the row-at-a-time engine).
+    let e = engine();
+    let path = e.man.resolve(&e.man.goldens);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let goldens = duoserve::util::Json::parse(&text).unwrap();
+    let goldens = goldens.as_arr().unwrap();
+    assert!(!goldens.is_empty());
+    for (i, g) in goldens.iter().enumerate() {
+        let req = Request {
+            req_id: i,
+            dataset: g.get("dataset").unwrap().as_str().unwrap().to_string(),
+            cluster: 0,
+            prompt: g.get("prompt").unwrap().i32_vec().unwrap(),
+            n_decode: g.get("n_decode").unwrap().as_usize().unwrap(),
+            arrival: 0.0,
+        };
+        let out =
+            e.serve(std::slice::from_ref(&req), &opts(false, true)).unwrap();
+        let want: Vec<i32> = g.get("tokens").unwrap().i32_vec().unwrap();
+        assert_eq!(out.tokens[0], want, "golden {i} diverged (batched path)");
+    }
+}
+
+#[test]
+fn batched_path_is_the_default() {
+    // The env parsing itself ("1" -> rowwise, "0" -> no fan-out) is
+    // unit-tested in-crate through pure helpers; mutating the process
+    // environment here would race with the parallel tests above.
+    let o = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    assert!(!o.force_rowwise, "default must be the batched decode path");
+    assert!(o.expert_fanout, "default must fan expert groups out");
+}
+
+#[test]
+fn decode_step_bench_is_repeatable() {
+    // The micro-bench driver must do identical work every call:
+    // request state (pos, token count) is rolled back after each step.
+    let e = engine();
+    let mut db = e.decode_step_bench(4, &opts(false, true)).unwrap();
+    assert_eq!(db.batch(), 4);
+    db.step().unwrap();
+    db.step().unwrap();
+    db.step().unwrap();
+}

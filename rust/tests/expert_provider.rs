@@ -100,6 +100,44 @@ fn threaded_prefetch_matches_sync_provider_bit_exactly() {
 }
 
 #[test]
+fn expert_fanout_keeps_the_ledger_identical_to_serial() {
+    // Threaded expert-group execution pre-acquires every group's
+    // weights on the caller thread (in serial order) before fanning
+    // out, so the ledger must be *exactly* the serial ledger — every
+    // counter, not just totals. Sync staging makes the
+    // staged/sync-acquire split deterministic too, so the assertion
+    // can be complete.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "orca", 4, 41);
+    let mut serial = ServeOptions::new(PolicyKind::DuoServe,
+                                       DeviceProfile::a6000());
+    serial.staging = StagingMode::Sync;
+    serial.expert_fanout = false;
+    let mut fanned = serial.clone();
+    fanned.expert_fanout = true;
+
+    let a = e.serve(&reqs, &serial).unwrap();
+    let b = e.serve(&reqs, &fanned).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "expert fan-out changed the tokens");
+
+    let (sa, sb) = (a.expert_stats, b.expert_stats);
+    assert_eq!(sa.hits, sb.hits, "fan-out changed cache hits");
+    assert_eq!(sa.misses, sb.misses, "fan-out changed cache misses");
+    assert_eq!(sa.bytes_fetched, sb.bytes_fetched,
+               "fan-out changed transferred bytes");
+    assert_eq!(sa.staged_acquires, sb.staged_acquires,
+               "fan-out changed staged acquires");
+    assert_eq!(sa.sync_acquires, sb.sync_acquires,
+               "fan-out changed sync acquires");
+    assert_eq!(sa.prefetch_hints, sb.prefetch_hints,
+               "fan-out changed prefetch hints");
+    assert_eq!(sa.accuracy.total, sb.accuracy.total);
+    assert_eq!(sa.accuracy.exact, sb.accuracy.exact);
+    assert_eq!(sa.accuracy.at_least_half, sb.accuracy.at_least_half);
+}
+
+#[test]
 fn no_overlap_ablation_forces_the_sync_provider() {
     use duoserve::coordinator::engine::Ablation;
     let e = engine();
