@@ -27,7 +27,8 @@ fn main() -> Result<()> {
 
     let artifacts = duoserve::testkit::ensure_model(model);
     let engine = Engine::load(&artifacts, model)?;
-    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64 };
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64,
+                                  ..ContinuousConfig::default() };
 
     // Calibrate the SLO from an unloaded run: a single request served
     // on an idle engine defines the no-queueing baseline.

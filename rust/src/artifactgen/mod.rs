@@ -38,6 +38,16 @@ pub const HISTORY_WINDOW: usize = 4;
 /// tree is complete and consistent.
 pub const COMPLETE_MARKER: &str = ".complete";
 
+/// Version of the native component set this generator emits, recorded
+/// in the manifest as `components_version`. Bump it whenever a
+/// component's contract changes (new kinds, new argument forms) so
+/// `testkit::ensure_model` regenerates stale trees instead of keying
+/// on the presence of one specific component name. History:
+/// 1 = pre-batched-decode set, 2 = `attn_proj_batch`/`attn_core`
+/// batched-decode split, 3 = chunked-prefill positional-offset form
+/// of `attn_prefill`.
+pub const COMPONENTS_VERSION: u64 = 3;
+
 // ---------------------------------------------------------------------
 // model zoo (mirrors python/compile/configs.py)
 // ---------------------------------------------------------------------
@@ -471,6 +481,7 @@ fn build_manifest(spec: &ModelSpec, comps: BTreeMap<String, Json>,
     ]);
     jobj(vec![
         ("name", jstr(spec.name)),
+        ("components_version", jusize(COMPONENTS_VERSION as usize)),
         ("sim", sim),
         ("paper", paper),
         ("expert_buckets", jarr_usize(&spec.expert_buckets)),

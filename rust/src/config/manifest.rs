@@ -74,6 +74,11 @@ pub struct PredictorManifest {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub name: String,
+    /// Version of the native component set the tree was generated
+    /// with (`artifactgen::COMPONENTS_VERSION`); 0 for trees written
+    /// before the field existed. `testkit::ensure_model` regenerates
+    /// trees older than the current generator.
+    pub components_version: u64,
     pub sim: SimDims,
     pub paper: PaperDims,
     pub expert_buckets: Vec<usize>,
@@ -174,6 +179,13 @@ impl Manifest {
         };
         Ok(Manifest {
             name: j.get("name")?.as_str()?.to_string(),
+            // Lenient: absent in pre-versioning trees, which read as
+            // version 0 (always stale).
+            components_version: j
+                .get("components_version")
+                .ok()
+                .and_then(|v| v.as_u64().ok())
+                .unwrap_or(0),
             sim,
             paper,
             expert_buckets: j.get("expert_buckets")?.usize_vec()?,

@@ -36,7 +36,7 @@ use crate::workload::Request;
 use super::policy::Policy;
 use super::scheduler::{ContinuousConfig, ContinuousScheduler, Decision,
                        ServerEvent};
-use super::session::{ServeSession, StepAnchor};
+use super::session::{PrefillProgress, ServeSession, StepAnchor};
 
 /// Ablations of DuoServe's two mechanisms (DESIGN.md §4, ablation row):
 /// they answer "how much of the win is the pipeline vs the predictor?".
@@ -76,6 +76,15 @@ pub struct ServeOptions {
     /// the caller thread so ledger accounting is unchanged). Defaults
     /// to on; `DUOSERVE_EXPERT_FANOUT=0` disables it process-wide.
     pub expert_fanout: bool,
+    /// Prompt-token budget of one prefill scheduler iteration
+    /// (`--prefill-chunk`). `None` (or `Some(0)`) runs each prompt as
+    /// one monolithic prefill — the backward-compatible default. With
+    /// a budget, prefills are split into chunks the continuous
+    /// scheduler interleaves with decode steps, so in-flight decoders
+    /// stall chunk-sized units per iteration instead of whole
+    /// prompts; a chunk covering the whole prompt is bit-identical to
+    /// the monolithic pass.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl ServeOptions {
@@ -90,6 +99,7 @@ impl ServeOptions {
                 std::env::var("DUOSERVE_FORCE_ROWWISE").ok().as_deref()),
             expert_fanout: Self::fanout_default(
                 std::env::var("DUOSERVE_EXPERT_FANOUT").ok().as_deref()),
+            prefill_chunk: None,
         }
     }
 
@@ -463,13 +473,22 @@ impl Engine {
         check!(sess, None, sess.reserve_fixed());
 
         // ================= PREFILL (sequential) ======================
+        // With chunking, one request's chunks run back-to-back (no
+        // decoders exist yet to interleave with); TTFT is measured
+        // from the first chunk's issue instant either way.
         for ridx in 0..sess.states.len() {
             check!(sess, None, sess.begin_request());
-            let t0 = sess.streams.free_at(StreamId::Compute);
-            let res = sess.prefill(ridx, t0)?;
-            let t_first = check!(sess, None, res);
+            let t_start = sess.streams.free_at(StreamId::Compute);
+            let mut t_next = t_start;
+            let t_first = loop {
+                let res = sess.prefill_step(ridx, t_next)?;
+                match check!(sess, None, res) {
+                    PrefillProgress::Done(t) => break t,
+                    PrefillProgress::Pending(t) => t_next = t,
+                }
+            };
             let st = &mut sess.states[ridx];
-            st.ttft = t_first - t0;
+            st.ttft = t_first - t_start;
             st.e2e = t_first;
             check!(sess, None, sess.sync_kv(false));
         }
@@ -518,21 +537,15 @@ impl Engine {
                         st.served = true;
                         st.queue_delay = now - st.arrival;
                     }
-                    let res = sess.prefill(r, now)?;
-                    let t_first = check!(sess, Some(&sched), res);
-                    {
-                        let st = &mut sess.states[r];
-                        st.ttft = t_first - st.arrival;
-                        st.e2e = t_first - st.arrival;
-                        st.last_event_t = t_first;
-                    }
-                    // Completion (tokens >= n_decode) is evaluated only
-                    // after decode steps, exactly as in phase-bulk
-                    // serve(): both modes emit identical token streams
-                    // even for n_decode = 1.
-                    sched.record(ServerEvent::PrefillDone { req: r,
-                                                            at: t_first });
-                    now = t_first;
+                    let res = sess.prefill_step(r, now)?;
+                    let prog = check!(sess, Some(&sched), res);
+                    now = finish_prefill_step(&mut sess, &mut sched, r, prog);
+                    check!(sess, Some(&sched), sess.sync_kv(true));
+                }
+                Decision::PrefillChunk(r) => {
+                    let res = sess.prefill_step(r, now)?;
+                    let prog = check!(sess, Some(&sched), res);
+                    now = finish_prefill_step(&mut sess, &mut sched, r, prog);
                     check!(sess, Some(&sched), sess.sync_kv(true));
                 }
                 Decision::DecodeStep => {
@@ -560,6 +573,32 @@ impl Engine {
         }
 
         Ok(sess.outcome(None, Some(&sched)))
+    }
+}
+
+/// Book one prefill step's completion with the continuous scheduler:
+/// a finished prefill records its arrival-relative TTFT and joins the
+/// decode batch; an unfinished one stays in the pending-chunk set.
+/// Returns the new virtual time. Completion (tokens >= n_decode) is
+/// evaluated only after decode steps, exactly as in phase-bulk
+/// serve(): both modes emit identical token streams even for
+/// n_decode = 1.
+fn finish_prefill_step(sess: &mut ServeSession<'_>,
+                       sched: &mut ContinuousScheduler, r: usize,
+                       prog: PrefillProgress) -> f64 {
+    match prog {
+        PrefillProgress::Done(t_first) => {
+            let st = &mut sess.states[r];
+            st.ttft = t_first - st.arrival;
+            st.e2e = t_first - st.arrival;
+            st.last_event_t = t_first;
+            sched.prefill_done(r, t_first);
+            t_first
+        }
+        PrefillProgress::Pending(t_chunk) => {
+            sched.chunk_done(r, t_chunk);
+            t_chunk
+        }
     }
 }
 

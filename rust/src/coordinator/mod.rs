@@ -3,14 +3,15 @@
 //! * [`engine`] — functional execution + thin serving entry points
 //!   (phase-bulk `serve` and event-driven `serve_continuous`).
 //! * [`session`] — the shared `ServeSession` step-loop core both entry
-//!   points drive (prefill/decode passes, KV gauging, bookkeeping,
-//!   outcome assembly).
+//!   points drive (chunked/monolithic prefill steps, lockstep decode,
+//!   KV gauging, bookkeeping, outcome assembly).
 //! * [`policy`] — the scheduling-policy abstraction (timing side);
 //!   residency is consulted through the `experts::ExpertProvider` seam.
 //! * [`duoserve`] — the DuoServe-MoE dual-phase policy itself.
 //! * [`scheduler`] — request admission: the bounded FIFO queue and
 //!   lockstep batch composer (phase-bulk), and the event-driven
-//!   continuous-batching scheduler.
+//!   continuous-batching scheduler (which also multiplexes pending
+//!   prefill chunks with the decode batch under `--prefill-chunk`).
 
 pub mod duoserve;
 pub mod engine;

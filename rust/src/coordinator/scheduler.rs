@@ -11,13 +11,31 @@
 //!   virtual time. [`ContinuousScheduler`] consumes an arrival
 //!   timeline, admits requests FIFO under a max-in-flight budget, and
 //!   tells the engine — one [`Decision`] at a time — whether to run a
-//!   new prefill, advance the running batch by one decode iteration,
-//!   idle until the next arrival, or stop. New prefills are admitted
-//!   *between* decode iterations, so a late-arriving request joins
-//!   while earlier requests are mid-decode instead of waiting for the
-//!   batch to drain (stall-free scheduling, cf. Layered Prefill
-//!   2510.08055). Every transition is recorded as a [`ServerEvent`] —
-//!   the virtual-time schedule the determinism tests freeze.
+//!   new prefill (or the next *chunk* of one), advance the running
+//!   batch by one decode iteration, idle until the next arrival, or
+//!   stop. New prefills are admitted *between* decode iterations, so a
+//!   late-arriving request joins while earlier requests are mid-decode
+//!   instead of waiting for the batch to drain (stall-free scheduling,
+//!   cf. Layered Prefill 2510.08055). Every transition is recorded as
+//!   a [`ServerEvent`] — the virtual-time schedule the determinism
+//!   tests freeze.
+//!
+//! **Chunked prefill protocol.** When `--prefill-chunk` splits
+//! prefills, an admitted request sits in the scheduler's
+//! *pending-chunk* set until its last chunk completes. The engine runs
+//! exactly one chunk per [`Decision::AdmitPrefill`] /
+//! [`Decision::PrefillChunk`] and reports back with
+//! [`ContinuousScheduler::chunk_done`] (more chunks remain) or
+//! [`ContinuousScheduler::prefill_done`] (request joins the decode
+//! batch). With [`ContinuousConfig::decode_priority`] set (the
+//! default), a pending decode batch advances one step after every
+//! chunk — neither a continuation chunk nor a new admission may run
+//! while a pending chunk owes the batch a step — so a decoder's stall
+//! per scheduler iteration is bounded by chunk-sized units, never a
+//! whole prompt. (A newly admitted request's first chunk may still
+//! share a window with the previous request's *final* chunk:
+//! admission keeps its pre-chunking priority whenever no chunks are
+//! pending.)
 
 use std::collections::VecDeque;
 
@@ -32,6 +50,7 @@ pub struct RequestQueue<T = Request> {
 }
 
 impl<T> RequestQueue<T> {
+    /// An empty queue that rejects beyond `capacity` entries.
     pub fn new(capacity: usize) -> Self {
         RequestQueue { queue: VecDeque::new(), capacity, rejected: 0 }
     }
@@ -47,18 +66,22 @@ impl<T> RequestQueue<T> {
         true
     }
 
+    /// Dequeue the oldest admitted request (FIFO).
     pub fn pop(&mut self) -> Option<T> {
         self.queue.pop_front()
     }
 
+    /// Requests currently waiting in the queue.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// Requests dropped because the queue was full.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
@@ -71,6 +94,8 @@ pub struct BatchComposer {
 }
 
 impl BatchComposer {
+    /// A composer emitting batches of exactly `batch_size` requests
+    /// (the final batch may be smaller). Panics on a zero batch size.
     pub fn new(batch_size: usize) -> Self {
         assert!(batch_size >= 1);
         BatchComposer { batch_size }
@@ -106,11 +131,25 @@ pub struct ContinuousConfig {
     pub max_in_flight: usize,
     /// Admission-queue depth; arrivals beyond it are rejected.
     pub queue_capacity: usize,
+    /// Interleave decode with chunked prefill (the default): while a
+    /// prefill has pending chunks, a pending decode batch advances
+    /// one step after every chunk before any further prefill work
+    /// (continuation *or* new admission) runs, so in-flight decoders
+    /// stall at most one chunk per iteration instead of a whole
+    /// prompt. With `false`, an admitted prefill's remaining chunks
+    /// drain back-to-back — the monolithic stall profile, kept for
+    /// comparison. Irrelevant unless `ServeOptions::prefill_chunk`
+    /// splits prefills.
+    pub decode_priority: bool,
 }
 
 impl Default for ContinuousConfig {
     fn default() -> Self {
-        ContinuousConfig { max_in_flight: 8, queue_capacity: 256 }
+        ContinuousConfig {
+            max_in_flight: 8,
+            queue_capacity: 256,
+            decode_priority: true,
+        }
     }
 }
 
@@ -125,6 +164,9 @@ pub enum ServerEvent {
     Rejected { req: usize, at: f64 },
     /// Request left the queue and its prefill was issued.
     PrefillStart { req: usize, at: f64 },
+    /// One non-final prefill chunk finished (chunked prefill only;
+    /// the request's remaining chunks are still pending).
+    PrefillChunk { req: usize, at: f64 },
     /// Prefill finished — first token emitted (TTFT instant).
     PrefillDone { req: usize, at: f64 },
     /// One lockstep decode iteration over the running batch finished.
@@ -136,8 +178,13 @@ pub enum ServerEvent {
 /// What the engine should do next.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
-    /// Run request `0`'s prefill now (it was admitted from the queue).
+    /// Run the *first* prefill chunk of this request now (it was just
+    /// admitted from the queue). With chunking off, the engine runs
+    /// the whole prefill as that one chunk.
     AdmitPrefill(usize),
+    /// Run the next pending prefill chunk of this (already admitted)
+    /// request — issued only while chunked prefills are in flight.
+    PrefillChunk(usize),
     /// Advance the running batch by one decode iteration.
     DecodeStep,
     /// Nothing runnable; fast-forward virtual time to this instant.
@@ -153,8 +200,16 @@ pub struct ContinuousScheduler {
     arrivals: Vec<(f64, usize)>,
     next_arrival: usize,
     queue: RequestQueue<usize>,
+    /// Admitted requests whose prefill is still chunk-pending, FIFO:
+    /// the front request's chunks run before the next one starts.
+    prefilling: VecDeque<usize>,
+    /// Requests whose prefill completed and are decoding.
     running: Vec<usize>,
     max_in_flight: usize,
+    decode_priority: bool,
+    /// The last decision issued was a prefill chunk; with
+    /// `decode_priority`, the next one favours the decode batch.
+    just_chunked: bool,
     events: Vec<ServerEvent>,
 }
 
@@ -173,8 +228,11 @@ impl ContinuousScheduler {
             arrivals,
             next_arrival: 0,
             queue: RequestQueue::new(cfg.queue_capacity),
+            prefilling: VecDeque::new(),
             running: Vec::new(),
             max_in_flight: cfg.max_in_flight,
+            decode_priority: cfg.decode_priority,
+            just_chunked: false,
             events: Vec::new(),
         }
     }
@@ -196,19 +254,46 @@ impl ContinuousScheduler {
 
     /// Decide the next loop transition at virtual time `now`.
     /// Admission wins over decoding while slots are free (prefills are
-    /// slotted between decode iterations); with no admissible work the
-    /// running batch decodes; an empty system idles to the next
-    /// arrival.
+    /// slotted between decode iterations); pending prefill chunks then
+    /// alternate with decode steps (see `decode_priority`); with no
+    /// prefill work the running batch decodes; an empty system idles
+    /// to the next arrival.
     pub fn next_decision(&mut self, now: f64) -> Decision {
         self.pump_arrivals(now);
-        if self.running.len() < self.max_in_flight {
+        // Is the decode batch owed a step before more prefill work
+        // runs? Only while a *pending* chunk queue exists — i.e.
+        // prefills are actually splitting. With chunking off (or
+        // chunks covering whole prompts) `prefilling` is always empty
+        // at decision time, so admission stays unconditional: the
+        // pre-chunking discipline, bit for bit.
+        let owed_decode = self.decode_priority
+            && self.just_chunked
+            && !self.running.is_empty()
+            && !self.prefilling.is_empty();
+        if !owed_decode
+            && self.running.len() + self.prefilling.len() < self.max_in_flight
+        {
             if let Some(idx) = self.queue.pop() {
-                self.running.push(idx);
+                self.prefilling.push_back(idx);
                 self.events.push(ServerEvent::PrefillStart { req: idx, at: now });
+                self.just_chunked = true;
                 return Decision::AdmitPrefill(idx);
             }
         }
+        if let Some(&r) = self.prefilling.front() {
+            // With decode priority, a pending decode batch advances
+            // one step between chunks (decoders stall at most one
+            // chunk); otherwise — or with no decoders — the front
+            // request's chunks run back-to-back.
+            if self.running.is_empty()
+                || !(self.decode_priority && self.just_chunked)
+            {
+                self.just_chunked = true;
+                return Decision::PrefillChunk(r);
+            }
+        }
         if !self.running.is_empty() {
+            self.just_chunked = false;
             return Decision::DecodeStep;
         }
         if let Some(&(t, _)) = self.arrivals.get(self.next_arrival) {
@@ -217,9 +302,31 @@ impl ContinuousScheduler {
         Decision::Finished
     }
 
-    /// Requests currently holding slots, in admission order.
+    /// Requests currently decoding (prefill complete), in completion
+    /// order.
     pub fn running(&self) -> &[usize] {
         &self.running
+    }
+
+    /// Requests admitted whose prefill still has pending chunks.
+    pub fn prefilling_len(&self) -> usize {
+        self.prefilling.len()
+    }
+
+    /// Record one *non-final* prefill chunk's completion: the request
+    /// stays in the pending-chunk set.
+    pub fn chunk_done(&mut self, idx: usize, at: f64) {
+        debug_assert!(self.prefilling.contains(&idx),
+                      "chunk_done for request {idx} not mid-prefill");
+        self.events.push(ServerEvent::PrefillChunk { req: idx, at });
+    }
+
+    /// Record a request's prefill completion (TTFT instant): it leaves
+    /// the pending-chunk set and joins the decode batch.
+    pub fn prefill_done(&mut self, idx: usize, at: f64) {
+        self.prefilling.retain(|&r| r != idx);
+        self.running.push(idx);
+        self.events.push(ServerEvent::PrefillDone { req: idx, at });
     }
 
     /// Record a request's completion and release its slot.
@@ -248,6 +355,7 @@ impl ContinuousScheduler {
         &self.events
     }
 
+    /// Consume the scheduler, returning the recorded schedule.
     pub fn into_events(self) -> Vec<ServerEvent> {
         self.events
     }
@@ -291,14 +399,20 @@ mod tests {
         assert!(q.is_empty());
     }
 
+    fn cfg(max_in_flight: usize, queue_capacity: usize) -> ContinuousConfig {
+        ContinuousConfig { max_in_flight, queue_capacity,
+                           ..ContinuousConfig::default() }
+    }
+
     #[test]
     fn scheduler_admits_fifo_up_to_budget() {
-        let cfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 8 };
-        let mut s = ContinuousScheduler::new(&[0.0, 0.0, 0.0], &cfg);
+        let mut s = ContinuousScheduler::new(&[0.0, 0.0, 0.0], &cfg(2, 8));
         assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
-        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(1));
+        s.prefill_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.prefill_done(1, 0.2);
         // budget exhausted: the third request waits, batch decodes
-        assert_eq!(s.next_decision(0.0), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.2), Decision::DecodeStep);
         assert_eq!(s.queued(), 1);
         s.retire(0, 1.0);
         assert_eq!(s.next_decision(1.0), Decision::AdmitPrefill(2));
@@ -306,10 +420,10 @@ mod tests {
 
     #[test]
     fn scheduler_idles_to_next_arrival_then_finishes() {
-        let cfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8 };
-        let mut s = ContinuousScheduler::new(&[5.0], &cfg);
+        let mut s = ContinuousScheduler::new(&[5.0], &cfg(4, 8));
         assert_eq!(s.next_decision(0.0), Decision::IdleUntil(5.0));
         assert_eq!(s.next_decision(5.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 5.5);
         s.retire(0, 6.0);
         assert_eq!(s.next_decision(6.0), Decision::Finished);
     }
@@ -319,10 +433,11 @@ mod tests {
         // queue capacity 2, budget 1: a burst of 4 simultaneous
         // arrivals -> two enter the queue, two are dropped; the queued
         // pair then drains through the single slot FIFO.
-        let cfg = ContinuousConfig { max_in_flight: 1, queue_capacity: 2 };
-        let mut s = ContinuousScheduler::new(&[0.0, 0.0, 0.0, 0.0], &cfg);
+        let mut s = ContinuousScheduler::new(&[0.0, 0.0, 0.0, 0.0],
+                                             &cfg(1, 2));
         assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
-        assert_eq!(s.next_decision(0.0), Decision::DecodeStep);
+        s.prefill_done(0, 0.5);
+        assert_eq!(s.next_decision(0.5), Decision::DecodeStep);
         assert_eq!(s.rejected(), 2);
         let rejected: Vec<usize> = s
             .events()
@@ -336,6 +451,7 @@ mod tests {
         // draining the slot admits the queued request, not the dropped
         s.retire(0, 2.0);
         assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(1));
+        s.prefill_done(1, 2.5);
         s.retire(1, 3.0);
         assert_eq!(s.next_decision(3.0), Decision::Finished);
     }
@@ -347,5 +463,106 @@ mod tests {
         assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(2));
         assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(0));
         assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(1));
+    }
+
+    #[test]
+    fn pending_chunks_alternate_with_decode_steps() {
+        // Request 0 is decoding; request 1 arrives and prefills in
+        // chunks. With decode priority (default) each chunk is
+        // followed by one decode step, so the decoder never stalls
+        // longer than one chunk.
+        let mut s = ContinuousScheduler::new(&[0.0, 0.0], &cfg(2, 8));
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.chunk_done(1, 0.2); // first chunk did not finish the prefill
+        assert_eq!(s.next_decision(0.2), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.3), Decision::PrefillChunk(1));
+        s.chunk_done(1, 0.4);
+        assert_eq!(s.next_decision(0.4), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.5), Decision::PrefillChunk(1));
+        s.prefill_done(1, 0.6);
+        assert_eq!(s.prefilling_len(), 0);
+        // both requests now decode together
+        assert_eq!(s.next_decision(0.6), Decision::DecodeStep);
+        assert_eq!(s.running(), &[0, 1]);
+    }
+
+    #[test]
+    fn admission_defers_to_owed_decode_between_chunks() {
+        // Overlapping arrivals: A is decoding, B is mid-chunked-
+        // prefill, C is queued. C's admission (which runs C's first
+        // chunk) must not share an inter-decode window with B's chunk
+        // — the decode batch is owed a step first, so the one-chunk
+        // stall bound holds under admission bursts too.
+        let mut s = ContinuousScheduler::new(&[0.0, 0.0, 0.0], &cfg(3, 8));
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.1); // A decodes
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.chunk_done(1, 0.2); // B mid-prefill
+        // C is queued and budget is free, but decode comes first.
+        assert_eq!(s.next_decision(0.2), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.3), Decision::AdmitPrefill(2));
+        s.chunk_done(2, 0.4);
+        assert_eq!(s.next_decision(0.4), Decision::DecodeStep);
+        // FIFO: B's pending chunks continue before C's.
+        assert_eq!(s.next_decision(0.5), Decision::PrefillChunk(1));
+        s.prefill_done(1, 0.6);
+        assert_eq!(s.next_decision(0.6), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.7), Decision::PrefillChunk(2));
+        s.prefill_done(2, 0.8);
+        assert_eq!(s.next_decision(0.8), Decision::DecodeStep);
+        assert_eq!(s.running(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn chunks_drain_back_to_back_without_decode_priority() {
+        let mut s = ContinuousScheduler::new(
+            &[0.0, 0.0],
+            &ContinuousConfig { decode_priority: false, ..cfg(2, 8) });
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.chunk_done(1, 0.2);
+        // no alternation: request 1's chunks run until the prefill is
+        // done, the decoder stalls the whole time
+        assert_eq!(s.next_decision(0.2), Decision::PrefillChunk(1));
+        s.chunk_done(1, 0.3);
+        assert_eq!(s.next_decision(0.3), Decision::PrefillChunk(1));
+        s.prefill_done(1, 0.4);
+        assert_eq!(s.next_decision(0.4), Decision::DecodeStep);
+    }
+
+    #[test]
+    fn chunking_prefills_run_without_decoders() {
+        // A lone chunked prefill runs its chunks back-to-back (nothing
+        // to alternate with), regardless of the priority knob.
+        let mut s = ContinuousScheduler::new(&[0.0], &cfg(1, 4));
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.chunk_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::PrefillChunk(0));
+        s.chunk_done(0, 0.2);
+        assert_eq!(s.next_decision(0.2), Decision::PrefillChunk(0));
+        s.prefill_done(0, 0.3);
+        assert_eq!(s.next_decision(0.3), Decision::DecodeStep);
+        s.retire(0, 0.4);
+        assert_eq!(s.next_decision(0.4), Decision::Finished);
+    }
+
+    #[test]
+    fn mid_prefill_requests_hold_in_flight_slots() {
+        // A request mid-chunked-prefill occupies a budget slot, so a
+        // budget-1 scheduler queues the second arrival until the first
+        // request *completes* (not merely starts) its prefill.
+        let mut s = ContinuousScheduler::new(&[0.0, 0.0], &cfg(1, 4));
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.chunk_done(0, 0.1);
+        assert_eq!(s.queued(), 1);
+        assert_eq!(s.next_decision(0.1), Decision::PrefillChunk(0));
+        s.prefill_done(0, 0.2);
+        // slot still held by the now-decoding request
+        assert_eq!(s.next_decision(0.2), Decision::DecodeStep);
+        s.retire(0, 0.3);
+        assert_eq!(s.next_decision(0.3), Decision::AdmitPrefill(1));
     }
 }

@@ -7,11 +7,23 @@
 //! scheduling policy, the sim dims and the per-request live states —
 //! and exposes exactly two step drivers:
 //!
-//! * [`ServeSession::prefill`] — one request's prefill pass
-//!   (embed -> L x (attention, gate, MoE) -> first token), with dense
+//! * [`ServeSession::prefill_step`] — one request's prefill pass, or
+//!   one *chunk* of it when `ServeOptions::prefill_chunk` bounds the
+//!   per-iteration prompt budget (embed -> L x (attention, gate, MoE)
+//!   -> first token on the final chunk), with dense per-chunk
 //!   layer-ahead staging hints to the prefetch worker;
 //! * [`ServeSession::decode`] — one lockstep decode iteration over the
 //!   active batch, with predictor-driven staging hints.
+//!
+//! **Chunked prefill.** Each request carries a prefill cursor
+//! ([`ReqState::prefill_pos`]); a chunk embeds the next
+//! `prefill_chunk` prompt tokens at their absolute positions, causal-
+//! attends them over the `prefix + chunk` KV context (the prefix rows
+//! were appended in place by earlier chunks via the same
+//! `ArgRef::Own` ownership transfer), and runs the MoE over the
+//! chunk's rows only. A chunk covering the whole prompt reproduces
+//! the monolithic pass bit for bit — tokens, routing, ledger counters
+//! and virtual-time makespan (asserted by `tests/chunked_prefill.rs`).
 //!
 //! `Engine::serve` and `Engine::serve_continuous` are thin loops over
 //! these drivers: all session setup, OOM bookkeeping, KV gauging and
@@ -40,6 +52,17 @@ pub(crate) const PAPER_VOCAB: f64 = 32_000.0;
 /// OOM that ended the run.
 pub(crate) type SimResult<T> = std::result::Result<T, OomError>;
 
+/// Progress of one prefill step: the prefill either produced its
+/// first token (TTFT instant) or has more chunks pending (virtual
+/// time the finished chunk's last op completed).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PrefillProgress {
+    /// Prefill complete; the value is the first token's emission time.
+    Done(f64),
+    /// More prompt chunks remain; the value is this chunk's end time.
+    Pending(f64),
+}
+
 /// How a decode step's latency/e2e bookkeeping is anchored:
 /// phase-bulk measures every request against the global previous step
 /// end; continuous measures each request against its own last event
@@ -58,6 +81,10 @@ pub(crate) struct ReqState {
     pub n_decode: usize,
     pub valid: usize,
     pub pos: usize,
+    /// Prefill cursor: prompt tokens already embedded and appended
+    /// into the KV cache by completed prefill chunks (`== valid` once
+    /// the prefill is done; the monolithic path sets it in one jump).
+    pub prefill_pos: usize,
     pub h: Tensor,
     pub kcs: Vec<Literal>,
     pub vcs: Vec<Literal>,
@@ -97,6 +124,7 @@ impl ReqState {
             n_decode: r.n_decode,
             valid: r.prompt.len(),
             pos: r.prompt.len(),
+            prefill_pos: 0,
             h: Tensor::zeros(&[1, sim.d_model]),
             // Literal == Tensor on the native backend: build the KV
             // literals directly. Each serve step transfers these into
@@ -297,6 +325,11 @@ pub(crate) struct ServeSession<'e> {
     force_rowwise: bool,
     /// Concurrent expert-group execution inside one MoE layer.
     expert_fanout: bool,
+    /// Prompt-token budget of one prefill chunk (`None` = the whole
+    /// prompt in one monolithic pass, the pre-chunking path verbatim).
+    prefill_chunk: Option<usize>,
+    /// Prefill chunks executed (a monolithic prefill counts as one).
+    prefill_chunks: u64,
     /// Virtual time the Compute stream spent inside decode steps.
     decode_time: f64,
     /// Tokens emitted by decode steps (one per active request per
@@ -349,6 +382,9 @@ impl<'e> ServeSession<'e> {
             record_streams: opts.record_streams,
             force_rowwise: opts.force_rowwise,
             expert_fanout: opts.expert_fanout,
+            // A zero budget means "no chunking" (CLI convenience).
+            prefill_chunk: opts.prefill_chunk.filter(|&c| c > 0),
+            prefill_chunks: 0,
             decode_time: 0.0,
             decode_tokens: 0,
         }
@@ -385,26 +421,51 @@ impl<'e> ServeSession<'e> {
     /// Reconcile the KV gauge with the live request set. Phase-bulk
     /// (`release_done = false`) keeps finished requests' KV resident
     /// until the run drains; continuous releases a request's KV when
-    /// it completes.
+    /// it completes. A request mid-chunked-prefill is gauged at its
+    /// prefill cursor — the KV rows its finished chunks appended.
     pub fn sync_kv(&mut self, release_done: bool) -> Result<(), OomError> {
+        let paper_layers = self.engine.man.paper.n_layers;
         let kv_total: u64 = self
             .states
             .iter()
-            .filter(|s| !s.tokens.is_empty() && (!release_done || !s.done))
-            .map(|s| self.cost.kv_bytes(self.engine.man.paper.n_layers, s.pos))
+            .map(|s| {
+                if !s.tokens.is_empty() && (!release_done || !s.done) {
+                    self.cost.kv_bytes(paper_layers, s.pos)
+                } else if s.tokens.is_empty() && s.prefill_pos > 0 {
+                    self.cost.kv_bytes(paper_layers, s.prefill_pos)
+                } else {
+                    0
+                }
+            })
             .sum();
         self.meter.set_kv(kv_total)
     }
 
-    /// Prefill one request: embed -> L x (attention, gate, MoE) ->
-    /// head. The first op is issued no earlier than `start_at`
-    /// (continuous mode anchors it at the admission instant so an idle
-    /// server does not back-date work before the request arrived).
-    /// Returns the virtual time of the first token (TTFT instant).
-    pub fn prefill(&mut self, ridx: usize, start_at: f64)
-                   -> Result<SimResult<f64>> {
+    /// Advance one request's prefill by one step: the whole prompt in
+    /// one monolithic pass (`prefill_chunk == None`, the pre-chunking
+    /// path verbatim) or the next chunk of at most `prefill_chunk`
+    /// prompt tokens. The first op is issued no earlier than
+    /// `start_at` (continuous mode anchors it at the admission instant
+    /// so an idle server does not back-date work before the request
+    /// arrived).
+    pub fn prefill_step(&mut self, ridx: usize, start_at: f64)
+                        -> Result<SimResult<PrefillProgress>> {
+        match self.prefill_chunk {
+            None => Ok(self
+                .prefill(ridx, start_at)?
+                .map(PrefillProgress::Done)),
+            Some(budget) => self.prefill_chunked(ridx, start_at, budget),
+        }
+    }
+
+    /// Monolithic prefill of one request: embed -> L x (attention,
+    /// gate, MoE) -> head, whole prompt at once. Returns the virtual
+    /// time of the first token (TTFT instant).
+    fn prefill(&mut self, ridx: usize, start_at: f64)
+               -> Result<SimResult<f64>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
-                   states, expert_bytes, expert_fanout, .. } = self;
+                   states, expert_bytes, expert_fanout, prefill_chunks,
+                   .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -520,10 +581,154 @@ impl<'e> ServeSession<'e> {
         let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
         st.tokens.push(tok);
         st.h = h_last;
+        st.prefill_pos = valid;
+        *prefill_chunks += 1;
         let t_first = streams.run(StreamId::Compute, t_layer,
                                   cost.head_compute(1, PAPER_VOCAB),
                                   "lm-head");
         Ok(Ok(t_first))
+    }
+
+    /// One chunk of a chunked prefill: embed the next `budget` prompt
+    /// tokens at their absolute positions, causal-attend them over the
+    /// `prefix + chunk` context (earlier chunks' KV rows are already
+    /// in place), run the MoE over the chunk's rows, and — on the
+    /// final chunk — emit the first token. A chunk covering the whole
+    /// prompt is bit-identical to [`Self::prefill`]: same per-row
+    /// math, same virtual-time ops, same provider traffic.
+    fn prefill_chunked(&mut self, ridx: usize, start_at: f64, budget: usize)
+                       -> Result<SimResult<PrefillProgress>> {
+        let Self { engine, sim, streams, provider, meter, cost, policy,
+                   states, expert_bytes, expert_fanout, prefill_chunks,
+                   .. } = self;
+        let engine: &Engine = *engine;
+        let provider: &mut dyn ExpertProvider = provider.as_mut();
+        let policy: &mut dyn Policy = policy.as_mut();
+        let expert_bytes = *expert_bytes;
+        let expert_fanout = *expert_fanout;
+        let st = &mut states[ridx];
+
+        let nm = &engine.host.nonmoe;
+        let valid = st.valid;
+        let prefix = st.prefill_pos;
+        debug_assert!(prefix < valid, "prefill chunk on a finished prefill");
+        let chunk = (valid - prefix).min(budget);
+        let bound = prefix + chunk;
+        let last = bound == valid;
+
+        // ---- functional embed of this chunk at its offset ------------
+        let toks = Tensor::i32(st.prompt[prefix..bound].to_vec(),
+                               vec![chunk]);
+        let pos0 = Tensor::scalar_i32(prefix as i32);
+        let out = engine.comps.embed_prefill.run_mixed(vec![
+            ArgRef::T(&toks), ArgRef::T(&pos0), nm.emb.arg(),
+            nm.pos_emb.arg(),
+        ])?;
+        let mut h = out.into_iter().next().unwrap();
+        let mut t_layer = streams.run(StreamId::Compute, start_at,
+                                      cost.head_compute(chunk, PAPER_VOCAB),
+                                      "embed");
+
+        // Dense stage-ahead: warm layer 0 while the embed runs. The
+        // worker skips keys still staged from earlier chunks, so a
+        // re-hint costs one table probe.
+        provider.prefetch(&layer_keys(sim, 0));
+
+        for l in 0..sim.n_layers {
+            if l + 1 < sim.n_layers {
+                provider.prefetch(&layer_keys(sim, l + 1));
+            }
+            let lw = &engine.host.nonmoe.layers[l];
+            // functional attention over the chunk: queries sit at
+            // absolute positions prefix.., the causal bound covers the
+            // whole prefix + chunk context, and the chunk's KV rows
+            // are appended in place via ownership transfer.
+            let vbound = Tensor::scalar_i32(bound as i32);
+            let pfx = Tensor::scalar_i32(prefix as i32);
+            let kc = std::mem::take(&mut st.kcs[l]);
+            let vc = std::mem::take(&mut st.vcs[l]);
+            let out = engine.comps.attn_prefill.run_mixed(vec![
+                ArgRef::T(&h), ArgRef::T(&vbound), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::Own(kc), ArgRef::Own(vc), ArgRef::T(&pfx),
+            ])?;
+            let mut it = out.into_iter();
+            h = it.next().unwrap();
+            st.kcs[l] = it.next().unwrap();
+            st.vcs[l] = it.next().unwrap();
+
+            // functional gate over the chunk's rows
+            let out = engine.comps.gate_prefill.run_mixed(vec![
+                ArgRef::T(&h), lw.ln_moe.arg(), lw.wg.arg()])?;
+            let mut git = out.into_iter();
+            let probs_t = git.next().unwrap();
+            let hn_t = git.next().unwrap();
+
+            // timing: attention + gate on the compute stream, chunk
+            // tokens against the full visible context
+            let t_layer_start = t_layer;
+            let t_gate = streams.run(StreamId::Compute, t_layer_start,
+                                     cost.attn_compute(chunk, bound),
+                                     "prefill-nonmoe");
+
+            let hn: Vec<&[f32]> =
+                (0..chunk).map(|i| hn_t.row(i)).collect::<Result<_>>()?;
+            let probs: Vec<&[f32]> =
+                (0..chunk).map(|i| probs_t.row(i)).collect::<Result<_>>()?;
+            let (delta, groups, _sel) = engine.moe_functional(
+                &mut *provider, l, &hn, &probs, expert_fanout)?;
+            {
+                let hd = h.as_f32_mut()?;
+                let d = sim.d_model;
+                for (i, dl) in delta.iter().enumerate() {
+                    for (j, v) in dl.iter().enumerate() {
+                        hd[i * d + j] += v;
+                    }
+                }
+            }
+
+            let mut cx = SimCtx {
+                streams: &mut *streams,
+                provider: &mut *provider,
+                meter: &mut *meter,
+                cost,
+                expert_bytes,
+                n_layers: sim.n_layers,
+                n_experts: sim.n_experts,
+                top_k: sim.top_k,
+            };
+            let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
+                                                 t_layer_start, t_gate) {
+                Ok(t) => t,
+                Err(oom) => return Ok(Err(oom)),
+            };
+            t_layer = if sim.n_shared > 0 {
+                let dur = sim.n_shared as f64 * cost.expert_compute(chunk);
+                streams.run(StreamId::Compute, t_moe, dur, "shared")
+            } else {
+                t_moe
+            };
+        }
+
+        st.prefill_pos = bound;
+        *prefill_chunks += 1;
+        if !last {
+            return Ok(Ok(PrefillProgress::Pending(t_layer)));
+        }
+
+        // ---- first token (final chunk only) --------------------------
+        let h_last = Tensor::f32(h.row(chunk - 1)?.to_vec(),
+                                 vec![1, sim.d_model]);
+        let out = engine.comps.lm_head.run_mixed(vec![
+            ArgRef::T(&h_last), nm.ln_final.arg(), nm.w_out.arg()])?;
+        let logits = out.into_iter().next().unwrap();
+        let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
+        st.tokens.push(tok);
+        st.h = h_last;
+        let t_first = streams.run(StreamId::Compute, t_layer,
+                                  cost.head_compute(1, PAPER_VOCAB),
+                                  "lm-head");
+        Ok(Ok(PrefillProgress::Done(t_first)))
     }
 
     /// One lockstep decode step over the active requests.
@@ -834,7 +1039,8 @@ impl<'e> ServeSession<'e> {
             })
             .collect();
         let summary = summarize(&metrics, makespan)
-            .with_decode_throughput(self.decode_tokens, self.decode_time);
+            .with_decode_throughput(self.decode_tokens, self.decode_time)
+            .with_prefill_chunks(self.prefill_chunks);
         if oom.is_some() {
             metrics.clear();
         }
@@ -892,9 +1098,13 @@ impl Engine {
             if let Err(oom) = sess.begin_request() {
                 bail!("decode bench setup: {oom}");
             }
-            let t0 = sess.streams.free_at(StreamId::Compute);
-            if let Err(oom) = sess.prefill(r, t0)? {
-                bail!("decode bench prefill: {oom}");
+            let mut t0 = sess.streams.free_at(StreamId::Compute);
+            loop {
+                match sess.prefill_step(r, t0)? {
+                    Ok(PrefillProgress::Done(_)) => break,
+                    Ok(PrefillProgress::Pending(t)) => t0 = t,
+                    Err(oom) => bail!("decode bench prefill: {oom}"),
+                }
             }
             if let Err(oom) = sess.sync_kv(false) {
                 bail!("decode bench setup: {oom}");

@@ -22,6 +22,11 @@
 //!   ([`ExpertStats`]), so the phase-bulk and continuous serving modes
 //!   can never count differently.
 
+// First enforced documentation island (docs/ARCHITECTURE.md is the
+// prose companion): every public item in the expert-residency
+// subsystem must carry rustdoc.
+#![warn(missing_docs)]
+
 use std::sync::Arc;
 
 use anyhow::Result;

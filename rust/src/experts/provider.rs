@@ -27,6 +27,9 @@ use super::ledger::ExpertStats;
 use super::worker::PrefetchWorker;
 use super::{ExpertProvider, StagingMode};
 
+/// The production expert provider: host pool + simulated device cache
+/// + optional prefetch-worker staging, with the centralized ledger
+/// (see module docs).
 pub struct StagedExpertProvider {
     /// `None` only for [`Self::detached`] (sim-side unit tests).
     pool: Option<Arc<HostPool>>,
@@ -39,6 +42,8 @@ pub struct StagedExpertProvider {
 }
 
 impl StagedExpertProvider {
+    /// A provider over this host pool and simulated cache;
+    /// [`StagingMode::Threaded`] spawns the prefetch worker.
     pub fn new(pool: Arc<HostPool>, cache: DeviceExpertCache,
                expert_bytes: u64, mode: StagingMode) -> Self {
         let worker = match mode {

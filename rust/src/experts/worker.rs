@@ -3,12 +3,18 @@
 //! overlaps compute in the native runtime (the paper's two-stream
 //! pipeline, as actual concurrency rather than only virtual time).
 //!
-//! The engine hints upcoming experts (`stage`): layer *i+1*'s dense
-//! set during prefill, the MLP-predictor top-k during decode. The
-//! worker resolves each hint against the host pool — the `Arc`'d
+//! The engine hints upcoming experts (`stage`): the next layer's
+//! dense set during prefill — re-hinted per *chunk* under chunked
+//! prefill, so the staging schedule follows the scheduler's
+//! finer-grained chunk/decode interleaving instead of one
+//! whole-prompt burst — and the MLP-predictor top-k during decode.
+//! The worker resolves each hint against the host pool — the `Arc`'d
 //! [`CachedTensors`] carry both weight layouts, including the
 //! pre-transposed kernel layout built at load — and publishes them
-//! into a shared staged table the provider's `acquire` reads.
+//! into a shared staged table the provider's `acquire` reads. Hints
+//! repeated across chunks are deduplicated against the staged table
+//! under one lock per `Stage` message, so a re-hint costs one probe,
+//! not a host-pool walk.
 //! Staging is pure delivery: the worker hands out the host pool's
 //! exact tensors, so tokens are bit-identical with or without it
 //! (asserted by the `expert_provider` test suite).
@@ -31,6 +37,7 @@ enum Msg {
     Quit,
 }
 
+/// Background staging thread + shared staged table (see module docs).
 pub struct PrefetchWorker {
     tx: Sender<Msg>,
     staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>>,
@@ -38,6 +45,8 @@ pub struct PrefetchWorker {
 }
 
 impl PrefetchWorker {
+    /// Spawn the staging thread over this host pool. The worker joins
+    /// on drop.
     pub fn spawn(pool: Arc<HostPool>) -> Self {
         let staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>> =
             Arc::new(Mutex::new(HashMap::new()));
@@ -49,10 +58,18 @@ impl PrefetchWorker {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Stage(keys) => {
-                            for key in keys {
-                                if table.lock().unwrap().contains_key(&key) {
-                                    continue;
-                                }
+                            // One lock to drop already-staged keys
+                            // (per-chunk prefill re-hints the same
+                            // layer sets every chunk), then resolve
+                            // the misses outside the lock and publish
+                            // each as soon as it is ready.
+                            let missing: Vec<ExpertKey> = {
+                                let t = table.lock().unwrap();
+                                keys.into_iter()
+                                    .filter(|k| !t.contains_key(k))
+                                    .collect()
+                            };
+                            for key in missing {
                                 // Missing keys are simply not staged;
                                 // acquire falls back to the sync path
                                 // and surfaces the error there.

@@ -32,8 +32,14 @@ COMMANDS:
                 --ablation none|no-overlap|no-predictor
                 (no-overlap: single-stream schedule + synchronous
                  expert provider, no prefetch-worker thread)
+                --prefill-chunk T  (split each prompt into T-token
+                 prefill chunks; 0 = whole prompt at once, the default.
+                 In continuous mode chunks interleave with decode
+                 steps, bounding decoder stalls to chunk-sized units)
                 (continuous mode: --rate R requests/s Poisson arrivals,
                  --max-in-flight K --queue-cap Q
+                 --decode-priority on|off  (off: a prefill's chunks
+                  drain back-to-back, the monolithic stall profile)
                  --slo-ttft SECS --slo-e2e SECS)
   compare       --model M --device D --dataset DS --requests N --seed S
   trace         --model M --dataset DS --requests N --seed S
@@ -45,6 +51,11 @@ COMMANDS:
 DEFAULTS: model=mixtral8x7b-sim policy=duoserve device=a5000
           dataset=squad requests=8 batch=1 seed=42 artifacts=artifacts
           mode=phase-bulk rate=2.0 max-in-flight=4 queue-cap=64
+          prefill-chunk=0 decode-priority=on
+
+See docs/CLI.md for the full flag reference (including the
+DUOSERVE_FORCE_ROWWISE / DUOSERVE_EXPERT_FANOUT /
+DUOSERVE_BENCH_PROFILE environment toggles).
 ";
 
 fn device(name: &str) -> Result<DeviceProfile> {
@@ -63,6 +74,25 @@ fn ablation(name: &str) -> Result<Option<Ablation>> {
         "no-predictor" => Ok(Some(Ablation::NoPredictor)),
         other => bail!("unknown ablation {other:?} \
                         (none|no-overlap|no-predictor)"),
+    }
+}
+
+/// `--prefill-chunk` parsing: 0 (the default) keeps the monolithic
+/// whole-prompt prefill.
+fn prefill_chunk(args: &duoserve::util::args::Args)
+                 -> Result<Option<usize>> {
+    Ok(match args.usize("prefill-chunk", 0)? {
+        0 => None,
+        n => Some(n),
+    })
+}
+
+/// `--decode-priority on|off` parsing (continuous mode only).
+fn decode_priority(name: &str) -> Result<bool> {
+    match name {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => bail!("unknown decode-priority {other:?} (on|off)"),
     }
 }
 
@@ -95,9 +125,12 @@ fn main() -> Result<()> {
             let ccfg = ContinuousConfig {
                 max_in_flight: args.usize("max-in-flight", 4)?,
                 queue_capacity: args.usize("queue-cap", 64)?,
+                decode_priority: decode_priority(
+                    &args.str("decode-priority", "on"))?,
             };
             let mut opts = ServeOptions::new(pol, dev);
             opts.ablation = ablation(&args.str("ablation", "none"))?;
+            opts.prefill_chunk = prefill_chunk(&args)?;
             let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
             if let Some(oom) = out.oom {
                 println!("{}: {oom}", pol.label());
@@ -120,14 +153,16 @@ fn main() -> Result<()> {
             println!(
                 "policy={} mode=continuous rate={rate}/s served={} \
                  rejected={} makespan={} p95-ttft={} p95-e2e={} \
-                 decode-tok/s={:.1}",
+                 p95-itl={} decode-tok/s={:.1} prefill-chunks={}",
                 pol.label(),
                 s.n_requests,
                 out.rejected,
                 fmt_secs(s.makespan),
                 fmt_secs(s.p95_ttft),
                 fmt_secs(s.p95_e2e),
+                fmt_secs(s.p95_itl),
                 s.decode_tokens_per_sec,
+                s.prefill_chunks,
             );
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
             let slo_e2e = args.f64("slo-e2e", 0.0)?;
@@ -155,6 +190,7 @@ fn main() -> Result<()> {
             let mut opts = ServeOptions::new(pol, dev);
             opts.record_streams = args.flag("trace-streams");
             opts.ablation = ablation(&args.str("ablation", "none"))?;
+            opts.prefill_chunk = prefill_chunk(&args)?;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
             let mut peak = 0u64;
             let mut hit = 0.0;

@@ -12,14 +12,18 @@
 /// evaluation.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
+    /// The request's index in the workload.
     pub req_id: usize,
     /// Time to first token: prefill completion (virtual seconds).
     pub ttft: f64,
     /// End-to-end latency: last token emitted.
     pub e2e: f64,
+    /// Tokens generated (first token included).
     pub tokens_out: usize,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
-    /// Per-decode-step latencies.
+    /// Per-decode-step latencies — the request's inter-token
+    /// latencies (the stall a chunked prefill bounds).
     pub step_latencies: Vec<f64>,
     /// Virtual arrival instant (0 for closed-loop runs).
     pub arrival: f64,
@@ -90,6 +94,19 @@ pub struct Summary {
     /// decode steps ran; filled by the serving session via
     /// [`Summary::with_decode_throughput`]).
     pub decode_tokens_per_sec: f64,
+    /// Median inter-token latency over every decode step of every
+    /// served request (seconds; 0.0 with no decode steps). In
+    /// continuous mode each step latency is per-request
+    /// (arrival-relative bookkeeping), so a decoder stalled behind a
+    /// monolithic prefill shows up here — the tail chunked prefill
+    /// bounds.
+    pub p50_itl: f64,
+    /// p95 inter-token latency (see [`Summary::p50_itl`]).
+    pub p95_itl: f64,
+    /// Prefill chunks executed over the run (== number of prefills
+    /// when `--prefill-chunk` is off; filled by the serving session
+    /// via [`Summary::with_prefill_chunks`]).
+    pub prefill_chunks: u64,
 }
 
 impl Summary {
@@ -99,6 +116,12 @@ impl Summary {
         self.decode_time = busy;
         self.decode_tokens_per_sec =
             if busy > 0.0 { tokens as f64 / busy } else { 0.0 };
+        self
+    }
+
+    /// Attach the serving session's prefill-chunk count.
+    pub fn with_prefill_chunks(mut self, chunks: u64) -> Self {
+        self.prefill_chunks = chunks;
         self
     }
 }
@@ -121,6 +144,11 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
     e2e.sort_by(|a, b| a.total_cmp(b));
     let mut ttft: Vec<f64> = reqs.iter().map(|r| r.ttft).collect();
     ttft.sort_by(|a, b| a.total_cmp(b));
+    let mut itl: Vec<f64> = reqs
+        .iter()
+        .flat_map(|r| r.step_latencies.iter().copied())
+        .collect();
+    itl.sort_by(|a, b| a.total_cmp(b));
     let total_tokens: usize = reqs.iter().map(|r| r.tokens_out).sum();
     Summary {
         n_requests: n,
@@ -140,6 +168,9 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
         decode_tokens: 0,
         decode_time: 0.0,
         decode_tokens_per_sec: 0.0,
+        p50_itl: percentile(&itl, 50.0),
+        p95_itl: percentile(&itl, 95.0),
+        prefill_chunks: 0,
     }
 }
 
@@ -204,6 +235,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with these column headers and no rows.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -211,11 +243,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells);
     }
 
+    /// Render as an aligned fixed-width text table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> =
             self.headers.iter().map(|h| h.len()).collect();
@@ -243,6 +277,7 @@ impl Table {
         out
     }
 
+    /// Render as comma-separated values (figure benches' CSV output).
     pub fn to_csv(&self) -> String {
         let mut out = self.headers.join(",");
         out.push('\n');
@@ -313,6 +348,41 @@ mod tests {
         assert!((rep.joint_attainment - 0.25).abs() < 1e-12);
         assert_eq!(slo_attainment(&[], &SloSpec { ttft: 1.0, e2e: 1.0 })
                    .n_requests, 0);
+    }
+
+    #[test]
+    fn inter_token_latency_percentiles_pool_all_requests() {
+        let mk = |steps: Vec<f64>| RequestMetrics {
+            req_id: 0,
+            ttft: 0.1,
+            e2e: 1.0,
+            tokens_out: steps.len() + 1,
+            prompt_len: 4,
+            step_latencies: steps,
+            arrival: 0.0,
+            queue_delay: 0.0,
+        };
+        // 10 steps total: nine 10ms steps and one 500ms stall.
+        let mut a = vec![0.01; 5];
+        let b = vec![0.01; 4];
+        a.push(0.5);
+        let s = summarize(&[mk(a), mk(b)], 2.0);
+        assert!((s.p50_itl - 0.01).abs() < 1e-12, "p50 {}", s.p50_itl);
+        // Nearest-rank p95 over 10 samples is the 10th value — the
+        // stall lands in the tail.
+        assert!((s.p95_itl - 0.5).abs() < 1e-12, "p95 {}", s.p95_itl);
+        // No decode steps -> zero, not NaN.
+        let empty = summarize(&[mk(vec![])], 1.0);
+        assert_eq!(empty.p50_itl, 0.0);
+        assert_eq!(empty.p95_itl, 0.0);
+    }
+
+    #[test]
+    fn prefill_chunks_attach_to_summary() {
+        let s = summarize(&[], 0.0);
+        assert_eq!(s.prefill_chunks, 0);
+        let s = s.with_prefill_chunks(7);
+        assert_eq!(s.prefill_chunks, 7);
     }
 
     #[test]

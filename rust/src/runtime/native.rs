@@ -244,9 +244,13 @@ fn embed(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
 /// (key_pos <= query abs pos) + validity (key_pos < valid_bound) mask.
 ///
 /// args: h (T,D), scalar, ln (D,), wq wk wv wo (D,D),
-///       kc vc (KV, NH, HD). Prefill: scalar = valid_len, queries at
-///       absolute positions 0..T. Decode: scalar = pos, one query at
-///       `pos`, valid bound pos+1.
+///       kc vc (KV, NH, HD) [, prefix]. Prefill: scalar = valid bound
+///       (tokens visible so far); queries sit at absolute positions
+///       `prefix..prefix+T`, where the optional 10th arg `prefix` is
+///       the chunk's first absolute position (chunked prefill over a
+///       pre-existing KV prefix; legacy 9-arg calls prefill from
+///       position 0, so scalar = valid_len). Decode: scalar = pos,
+///       one query at `pos`, valid bound pos+1.
 ///
 /// The KV caches are taken by ownership transfer and mutated in
 /// place: T rows of D floats written per call, never a cache clone
@@ -279,7 +283,16 @@ fn attention(args: &mut [ArgRef<'_>], decode: bool) -> Result<Vec<Tensor>> {
     let (pos0, valid_bound) = if decode {
         (scalar, scalar + 1)
     } else {
-        (0usize, scalar)
+        let prefix = if args.len() > 9 {
+            arg_tensor(args, 9, "prefix")?.scalar_i32_value()? as usize
+        } else {
+            0
+        };
+        if prefix + t > kv_len {
+            bail!("prefill chunk rows {prefix}..{} out of kv range {kv_len}",
+                  prefix + t);
+        }
+        (prefix, scalar)
     };
 
     let hn = rms_norm(h, t, d, ln);
@@ -777,6 +790,86 @@ mod tests {
                        want_h[bi].as_f32().unwrap(),
                        "row {bi}: hidden diverged from fused attn_decode");
         }
+    }
+
+    #[test]
+    fn chunked_prefill_attention_matches_monolithic() {
+        // Splitting a 4-token prefill into two 2-token chunks (second
+        // chunk at prefix 2 over the first chunk's KV rows) must
+        // reproduce the monolithic pass bit for bit: per-row hidden
+        // outputs and the final KV cache contents.
+        let d = 4;
+        let kvs = [8usize, 2, 2]; // kv_len 8, 2 heads, head_dim 2
+        let mk = |salt: usize, n: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i * 29 + salt * 13) % 11) as f32 * 0.2 - 1.0)
+                .collect()
+        };
+        let h = Tensor::f32(mk(1, 4 * d), vec![4, d]);
+        let ln = Tensor::f32(vec![1.0, 0.5, 2.0, 1.5], vec![d]);
+        let wq = Tensor::f32(mk(2, d * d), vec![d, d]);
+        let wk = Tensor::f32(mk(3, d * d), vec![d, d]);
+        let wv = Tensor::f32(mk(4, d * d), vec![d, d]);
+        let wo = Tensor::f32(mk(5, d * d), vec![d, d]);
+
+        // monolithic reference: all 4 tokens, valid bound 4
+        let valid = Tensor::scalar_i32(4);
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&valid), ArgRef::T(&ln),
+            ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv), ArgRef::T(&wo),
+            ArgRef::Own(Tensor::zeros(&kvs)), ArgRef::Own(Tensor::zeros(&kvs)),
+        ];
+        let full = attention(&mut args, false).unwrap();
+
+        // chunked: rows 0..2 at prefix 0, then rows 2..4 at prefix 2
+        // over the first chunk's in-place KV rows
+        let mut kc = Tensor::zeros(&kvs);
+        let mut vc = Tensor::zeros(&kvs);
+        let mut got_rows: Vec<Vec<f32>> = Vec::new();
+        for (prefix, bound) in [(0usize, 2usize), (2, 4)] {
+            let hc = Tensor::f32(
+                [h.row(prefix).unwrap(), h.row(prefix + 1).unwrap()].concat(),
+                vec![2, d]);
+            let b = Tensor::scalar_i32(bound as i32);
+            let p = Tensor::scalar_i32(prefix as i32);
+            let mut args = [
+                ArgRef::T(&hc), ArgRef::T(&b), ArgRef::T(&ln),
+                ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv),
+                ArgRef::T(&wo), ArgRef::Own(kc), ArgRef::Own(vc),
+                ArgRef::T(&p),
+            ];
+            let out = attention(&mut args, false).unwrap();
+            let mut it = out.into_iter();
+            let ho = it.next().unwrap();
+            kc = it.next().unwrap();
+            vc = it.next().unwrap();
+            got_rows.push(ho.row(0).unwrap().to_vec());
+            got_rows.push(ho.row(1).unwrap().to_vec());
+        }
+        for (i, row) in got_rows.iter().enumerate() {
+            assert_eq!(row.as_slice(), full[0].row(i).unwrap(),
+                       "row {i} diverged from the monolithic prefill");
+        }
+        assert_eq!(&kc, &full[1], "chunked k cache diverged");
+        assert_eq!(&vc, &full[2], "chunked v cache diverged");
+    }
+
+    #[test]
+    fn chunked_prefill_rejects_out_of_range_prefix() {
+        let d = 2;
+        let h = Tensor::f32(vec![0.1, 0.2], vec![1, d]);
+        let bound = Tensor::scalar_i32(4);
+        let prefix = Tensor::scalar_i32(4); // kv_len is 4: row 4 invalid
+        let ln = Tensor::f32(vec![1.0, 1.0], vec![d]);
+        let id = Tensor::f32(vec![1.0, 0.0, 0.0, 1.0], vec![d, d]);
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&bound), ArgRef::T(&ln), ArgRef::T(&id),
+            ArgRef::T(&id), ArgRef::T(&id), ArgRef::T(&id),
+            ArgRef::Own(Tensor::zeros(&[4, 1, d])),
+            ArgRef::Own(Tensor::zeros(&[4, 1, d])),
+            ArgRef::T(&prefix),
+        ];
+        let err = attention(&mut args, false).unwrap_err();
+        assert!(format!("{err:?}").contains("out of kv range"));
     }
 
     #[test]

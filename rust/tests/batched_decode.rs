@@ -87,7 +87,8 @@ fn continuous_ragged_join_and_leave_matches_rowwise() {
         r.arrival = i as f64 * 0.003;
         r.n_decode = 2 + (i % 4);
     }
-    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     for fanout in [false, true] {
         let rowwise =
             e.serve_continuous(&reqs, &opts(true, fanout), &ccfg).unwrap();

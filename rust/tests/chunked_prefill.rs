@@ -1,0 +1,260 @@
+//! Chunked-prefill behaviour tests:
+//!
+//! * **bit parity at full chunk** — with `prefill_chunk >= prompt
+//!   length` the chunked driver must reproduce the monolithic path
+//!   *exactly*: tokens, decode routing, expert-ledger counters,
+//!   virtual-time makespan and (in continuous mode) the event
+//!   schedule;
+//! * **function invariance at any chunk** — smaller chunks change the
+//!   virtual-time schedule but may never change a token or a decode
+//!   routing decision, in either serving mode;
+//! * **stall bound** — in continuous mode with decode priority (the
+//!   default), the decode batch advances after every chunk while a
+//!   prefill has chunks pending, so no inter-decode-step window
+//!   contains more than one pending prefill chunk (new admissions
+//!   defer too — see `admission_defers_to_owed_decode_between_chunks`
+//!   in the scheduler's unit tests); with `decode_priority: false`
+//!   the monolithic stall profile returns (the knob's contrast case).
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServeOutcome, ServerEvent};
+use duoserve::experts::{ExpertStats, StagingMode};
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess, Request};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+/// Deterministic options: synchronous staging fixes the ledger's
+/// staged/sync-acquire split (the threaded worker races acquire, by
+/// design), so stats assertions can be exhaustive.
+fn opts(chunk: Option<usize>) -> ServeOptions {
+    let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                  DeviceProfile::a6000());
+    o.staging = StagingMode::Sync;
+    o.prefill_chunk = chunk;
+    o
+}
+
+fn requests(engine: &Engine, n: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = generate_requests(&engine.man, "squad", n, seed);
+    for r in reqs.iter_mut() {
+        r.n_decode = r.n_decode.min(5);
+    }
+    reqs
+}
+
+fn assert_stats_eq(a: &ExpertStats, b: &ExpertStats, what: &str) {
+    assert_eq!(a.hits, b.hits, "{what}: cache hits diverged");
+    assert_eq!(a.misses, b.misses, "{what}: cache misses diverged");
+    assert_eq!(a.bytes_fetched, b.bytes_fetched,
+               "{what}: transferred bytes diverged");
+    assert_eq!(a.staged_acquires, b.staged_acquires,
+               "{what}: staged acquires diverged");
+    assert_eq!(a.sync_acquires, b.sync_acquires,
+               "{what}: sync acquires diverged");
+    assert_eq!(a.prefetch_hints, b.prefetch_hints,
+               "{what}: prefetch hints diverged");
+    assert_eq!(a.accuracy.total, b.accuracy.total,
+               "{what}: accuracy totals diverged");
+    assert_eq!(a.accuracy.exact, b.accuracy.exact);
+    assert_eq!(a.accuracy.at_least_half, b.accuracy.at_least_half);
+}
+
+fn assert_bit_identical(a: &ServeOutcome, b: &ServeOutcome, what: &str) {
+    assert_eq!(a.tokens, b.tokens, "{what}: token streams diverged");
+    for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+        assert_eq!(ea.steps, eb.steps, "{what}: decode routing diverged");
+    }
+    assert_eq!(a.summary.makespan, b.summary.makespan,
+               "{what}: virtual-time makespan diverged");
+    let ta: Vec<(f64, f64)> =
+        a.metrics.iter().map(|m| (m.ttft, m.e2e)).collect();
+    let tb: Vec<(f64, f64)> =
+        b.metrics.iter().map(|m| (m.ttft, m.e2e)).collect();
+    assert_eq!(ta, tb, "{what}: per-request ttft/e2e diverged");
+    assert_stats_eq(&a.expert_stats, &b.expert_stats, what);
+}
+
+#[test]
+fn full_chunk_is_bit_identical_to_monolithic_phase_bulk() {
+    let e = engine();
+    let reqs = requests(&e, 3, 29);
+    let prompt_max = reqs.iter().map(|r| r.prompt.len()).max().unwrap();
+    let base = e.serve(&reqs, &opts(None)).unwrap();
+    assert!(base.oom.is_none());
+
+    for chunk in [prompt_max, usize::MAX] {
+        let out = e.serve(&reqs, &opts(Some(chunk))).unwrap();
+        assert!(out.oom.is_none());
+        assert_bit_identical(&base, &out, &format!("chunk={chunk}"));
+        // One chunk per prefill, exactly like the monolithic counter.
+        assert_eq!(out.summary.prefill_chunks, reqs.len() as u64);
+    }
+    assert_eq!(base.summary.prefill_chunks, reqs.len() as u64,
+               "a monolithic prefill counts as one chunk");
+}
+
+#[test]
+fn full_chunk_is_bit_identical_to_monolithic_continuous() {
+    let e = engine();
+    let mut reqs = requests(&e, 4, 37);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 5.0, seed: 11 });
+    let prompt_max = reqs.iter().map(|r| r.prompt.len()).max().unwrap();
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+
+    let base = e.serve_continuous(&reqs, &opts(None), &ccfg).unwrap();
+    assert!(base.oom.is_none());
+    let out = e
+        .serve_continuous(&reqs, &opts(Some(prompt_max)), &ccfg)
+        .unwrap();
+    assert!(out.oom.is_none());
+    assert_bit_identical(&base, &out, "continuous chunk=prompt_max");
+    assert_eq!(base.events, out.events,
+               "full-chunk mode must replay the monolithic schedule");
+    assert!(!out.events.iter().any(
+        |ev| matches!(ev, ServerEvent::PrefillChunk { .. })),
+        "a chunk covering the prompt must not emit chunk events");
+}
+
+#[test]
+fn small_chunks_preserve_tokens_and_routing_phase_bulk() {
+    let e = engine();
+    let reqs = requests(&e, 3, 43);
+    let base = e.serve(&reqs, &opts(None)).unwrap();
+    assert!(base.oom.is_none());
+
+    for chunk in [1usize, 3] {
+        let out = e.serve(&reqs, &opts(Some(chunk))).unwrap();
+        assert!(out.oom.is_none());
+        assert_eq!(base.tokens, out.tokens,
+                   "chunk={chunk}: prefill chunking changed the tokens");
+        for (eb, eo) in base.episodes.iter().zip(&out.episodes) {
+            assert_eq!(eb.steps, eo.steps,
+                       "chunk={chunk}: decode routing diverged");
+        }
+        let want_chunks: u64 = reqs
+            .iter()
+            .map(|r| ((r.prompt.len() + chunk - 1) / chunk) as u64)
+            .sum();
+        assert_eq!(out.summary.prefill_chunks, want_chunks,
+                   "chunk={chunk}: chunk counter wrong");
+    }
+}
+
+#[test]
+fn small_chunks_preserve_tokens_continuous() {
+    let e = engine();
+    let mut reqs = requests(&e, 4, 51);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 6.0, seed: 3 });
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+    let base = e.serve_continuous(&reqs, &opts(None), &ccfg).unwrap();
+    assert!(base.oom.is_none());
+    for chunk in [1usize, 3] {
+        let out = e
+            .serve_continuous(&reqs, &opts(Some(chunk)), &ccfg)
+            .unwrap();
+        assert!(out.oom.is_none());
+        assert_eq!(base.tokens, out.tokens,
+                   "chunk={chunk}: continuous chunking changed tokens");
+    }
+}
+
+/// Build the late-arrival scenario: request 0 decodes for a long
+/// stretch; request 1 arrives mid-decode with a long prompt.
+fn stall_scenario(e: &Engine) -> Vec<Request> {
+    let mut reqs = requests(e, 2, 61);
+    reqs[0].prompt.truncate(8);
+    reqs[0].n_decode = 24;
+    // Stretch request 1's prompt towards max_seq (repeat its tokens).
+    while reqs[1].prompt.len() < e.man.sim.max_seq - 4 {
+        let t = reqs[1].prompt[reqs[1].prompt.len() % 7];
+        reqs[1].prompt.push(t);
+    }
+    reqs[1].n_decode = 4;
+    // Place request 1's arrival mid-way through request 0's decode.
+    let probe = e.serve(&reqs[..1], &opts(None)).unwrap();
+    assert!(probe.oom.is_none());
+    let (t_first, t_end) = (probe.metrics[0].ttft, probe.metrics[0].e2e);
+    assert!(t_end > t_first);
+    reqs[0].arrival = 0.0;
+    reqs[1].arrival = (t_first + t_end) / 2.0;
+    reqs
+}
+
+/// Prefill chunk executions between consecutive decode steps, counted
+/// from the first StepDone (before it no decoder can stall). Each
+/// executed chunk emits exactly one of PrefillChunk / PrefillDone.
+fn max_chunks_between_steps(events: &[ServerEvent]) -> usize {
+    let mut seen_step = false;
+    let mut since_step = 0usize;
+    let mut worst = 0usize;
+    for ev in events {
+        match ev {
+            ServerEvent::StepDone { .. } => {
+                seen_step = true;
+                since_step = 0;
+            }
+            ServerEvent::PrefillChunk { .. }
+            | ServerEvent::PrefillDone { .. } if seen_step => {
+                since_step += 1;
+                worst = worst.max(since_step);
+            }
+            _ => {}
+        }
+    }
+    worst
+}
+
+#[test]
+fn decode_stall_is_bounded_by_one_chunk() {
+    let e = engine();
+    let reqs = stall_scenario(&e);
+    let chunk = 4usize;
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8,
+                                  ..ContinuousConfig::default() };
+
+    let mono = e.serve_continuous(&reqs, &opts(None), &ccfg).unwrap();
+    let chunked = e
+        .serve_continuous(&reqs, &opts(Some(chunk)), &ccfg)
+        .unwrap();
+    assert!(mono.oom.is_none() && chunked.oom.is_none());
+    assert_eq!(mono.tokens, chunked.tokens,
+               "chunking changed the function");
+
+    // The scheduling property this PR exists for: while request 0
+    // decodes, request 1's prefill advances at most one chunk per
+    // scheduler iteration — every inter-decode-step window holds at
+    // most one chunk.
+    assert_eq!(max_chunks_between_steps(&chunked.events), 1,
+               "a decoder stalled for more than one chunk");
+    let n_chunk_events = chunked
+        .events
+        .iter()
+        .filter(|ev| matches!(ev, ServerEvent::PrefillChunk { .. }))
+        .count();
+    let chunks_of = |plen: usize| (plen + chunk - 1) / chunk;
+    assert_eq!(n_chunk_events,
+               chunks_of(reqs[0].prompt.len()) - 1
+                   + chunks_of(reqs[1].prompt.len()) - 1,
+               "unexpected number of non-final chunks");
+
+    // Contrast knob: without decode priority the pending chunks drain
+    // back-to-back and the decoder eats a multi-chunk stall.
+    let no_prio = ContinuousConfig { decode_priority: false, ..ccfg };
+    let drained = e
+        .serve_continuous(&reqs, &opts(Some(chunk)), &no_prio)
+        .unwrap();
+    assert!(drained.oom.is_none());
+    assert_eq!(drained.tokens, chunked.tokens,
+               "the priority knob changed the function");
+    assert!(max_chunks_between_steps(&drained.events) > 1,
+            "decode_priority=off should drain chunks back-to-back");
+}

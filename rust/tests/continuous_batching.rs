@@ -31,7 +31,8 @@ fn opts(policy: PolicyKind) -> ServeOptions {
 #[test]
 fn same_seed_gives_identical_tokens_and_schedule() {
     let e = engine();
-    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     let mk = || {
         let mut reqs = short_requests(&e, 6, 17);
         assign_arrivals(&mut reqs,
@@ -54,7 +55,8 @@ fn same_seed_gives_identical_tokens_and_schedule() {
 #[test]
 fn backlog_is_served_fifo_with_distinct_queueing_delays() {
     let e = engine();
-    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     let mut reqs = short_requests(&e, 6, 23);
     assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
     let out = e
@@ -94,7 +96,8 @@ fn backlog_is_served_fifo_with_distinct_queueing_delays() {
 fn max_in_flight_budget_never_exceeded() {
     let e = engine();
     let max_in_flight = 3;
-    let ccfg = ContinuousConfig { max_in_flight, queue_capacity: 32 };
+    let ccfg = ContinuousConfig { max_in_flight, queue_capacity: 32,
+                                  ..ContinuousConfig::default() };
     let mut reqs = short_requests(&e, 8, 5);
     assign_arrivals(&mut reqs,
                     &ArrivalProcess::Poisson { rate: 50.0, seed: 2 });
@@ -137,7 +140,8 @@ fn continuous_mode_emits_the_same_tokens_as_phase_bulk() {
     let mut open = reqs.clone();
     assign_arrivals(&mut open,
                     &ArrivalProcess::Poisson { rate: 4.0, seed: 8 });
-    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     let cont = e
         .serve_continuous(&open, &opts(PolicyKind::DuoServe), &ccfg)
         .unwrap();
@@ -162,7 +166,8 @@ fn late_arrival_prefills_while_earlier_request_is_mid_decode() {
 
     reqs[0].arrival = 0.0;
     reqs[1].arrival = (t_first + t_end) / 2.0;
-    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8 };
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8,
+                                  ..ContinuousConfig::default() };
     let out = e
         .serve_continuous(&reqs, &opts(PolicyKind::DuoServe), &ccfg)
         .unwrap();
@@ -199,7 +204,8 @@ fn late_arrival_prefills_while_earlier_request_is_mid_decode() {
 #[test]
 fn admission_queue_rejections_are_counted_and_excluded() {
     let e = engine();
-    let ccfg = ContinuousConfig { max_in_flight: 1, queue_capacity: 2 };
+    let ccfg = ContinuousConfig { max_in_flight: 1, queue_capacity: 2,
+                                  ..ContinuousConfig::default() };
     let mut reqs = short_requests(&e, 8, 3);
     assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
     let out = e

@@ -38,6 +38,7 @@ fn phase_bulk_and_continuous_accounting_parity() {
     let ccfg = ContinuousConfig {
         max_in_flight: reqs.len(),
         queue_capacity: reqs.len() + 4,
+        ..ContinuousConfig::default()
     };
     let cont = e.serve_continuous(&reqs, &opts, &ccfg).unwrap();
     assert!(cont.oom.is_none());

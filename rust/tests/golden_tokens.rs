@@ -134,6 +134,7 @@ fn continuous_serve_matches_goldens_with_interleaved_requests() {
     let ccfg = ContinuousConfig {
         max_in_flight: 2,
         queue_capacity: goldens.len().max(4),
+        ..ContinuousConfig::default()
     };
     let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
     assert!(out.oom.is_none());

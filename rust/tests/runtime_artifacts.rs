@@ -195,7 +195,8 @@ fn per_stream_ops_never_overlap_in_real_serving_trace() {
     let mut opts = ServeOptions::new(PolicyKind::DuoServe,
                                      DeviceProfile::a6000());
     opts.record_streams = true;
-    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
     let trace = out.stream_trace.unwrap();
     assert!(!trace.is_empty());

@@ -47,7 +47,8 @@ fn run_at_spacing(engine: &Engine, reqs: &[Request], policy: PolicyKind,
     let mut reqs = reqs.to_vec();
     let times: Vec<f64> = (0..reqs.len()).map(|i| i as f64 * spacing).collect();
     assign_arrivals(&mut reqs, &ArrivalProcess::Trace(times));
-    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64 };
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 64,
+                                  ..ContinuousConfig::default() };
     let opts = ServeOptions::new(policy, DeviceProfile::a6000());
     let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
     assert!(out.oom.is_none());
@@ -116,6 +117,65 @@ fn duoserve_beats_odf_on_tail_latency_and_attainment_under_load() {
     // The first request runs unloaded, so DuoServe attains at least it.
     assert!(a_duo.joint_attainment > 0.0,
             "DuoServe should attain at least the unqueued request");
+}
+
+#[test]
+fn chunked_prefill_bounds_stalled_decoder_itl() {
+    // The QoS story of chunked prefill: a long prompt arriving while
+    // another request decodes no longer stalls the decoder for the
+    // whole prefill — its worst inter-token latency is bounded by one
+    // chunk, and the pooled p95 ITL can only improve.
+    let e = engine();
+    let mut reqs = requests(&e);
+    reqs.truncate(2);
+    reqs[0].prompt.truncate(8);
+    reqs[0].n_decode = 24;
+    while reqs[1].prompt.len() < e.man.sim.max_seq - 4 {
+        let t = reqs[1].prompt[reqs[1].prompt.len() % 5];
+        reqs[1].prompt.push(t);
+    }
+    reqs[1].n_decode = 4;
+    let opts = ServeOptions::new(PolicyKind::DuoServe,
+                                 DeviceProfile::a6000());
+    let probe = e.serve(&reqs[..1], &opts).unwrap();
+    assert!(probe.oom.is_none());
+    reqs[0].arrival = 0.0;
+    reqs[1].arrival =
+        (probe.metrics[0].ttft + probe.metrics[0].e2e) / 2.0;
+
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8,
+                                  ..ContinuousConfig::default() };
+    let mono = e.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    let mut chunked_opts = opts.clone();
+    chunked_opts.prefill_chunk = Some(2);
+    let chunked = e.serve_continuous(&reqs, &chunked_opts, &ccfg).unwrap();
+    assert!(mono.oom.is_none() && chunked.oom.is_none());
+    assert_eq!(mono.tokens, chunked.tokens);
+
+    let max_itl = |out: &ServeOutcome| -> f64 {
+        out.metrics
+            .iter()
+            .find(|m| m.req_id == 0)
+            .unwrap()
+            .step_latencies
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+    };
+    assert!(max_itl(&chunked) < max_itl(&mono),
+            "chunking did not shrink the stalled decoder's worst ITL: \
+             {} !< {}", max_itl(&chunked), max_itl(&mono));
+    // The whole-prompt stall dominates the monolithic run's tail: its
+    // worst step dwarfs even the chunked run's p95.
+    assert!(max_itl(&mono) > chunked.summary.p95_itl,
+            "monolithic stall should exceed the chunked tail");
+    // The ITL percentiles are live in the summary for both runs.
+    assert!(mono.summary.p50_itl > 0.0 && mono.summary.p95_itl > 0.0);
+    assert!(chunked.summary.p50_itl > 0.0
+            && chunked.summary.p95_itl > 0.0);
+    assert!(chunked.summary.p95_itl >= chunked.summary.p50_itl);
+    assert!(chunked.summary.prefill_chunks > mono.summary.prefill_chunks,
+            "chunked run should execute more prefill chunks");
 }
 
 #[test]

@@ -41,7 +41,8 @@ fn serving_performs_zero_kv_cache_deep_copies() {
     let mut reqs = generate_requests(&engine.man, "orca", 4, 13);
     assign_arrivals(&mut reqs,
                     &ArrivalProcess::Poisson { rate: 3.0, seed: 5 });
-    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16 };
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
     copy_stats::reset();
     let out = engine.serve_continuous(&reqs, &opts, &ccfg).unwrap();
     assert!(out.oom.is_none());

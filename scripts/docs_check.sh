@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Offline documentation checks (CI `docs` job / `make docs-check`):
+#
+#   1. every intra-repo markdown link in README.md and docs/*.md
+#      resolves to an existing file or directory;
+#   2. docs/CLI.md documents every CLI flag string the binary parses
+#      (the `args.str("name", ...)` / `args.usize(...)` / `args.flag`
+#      sites in rust/src/main.rs).
+#
+# No network, no toolchain: plain grep/sed over the tree.
+set -u
+cd "$(dirname "$0")/.."
+errors=0
+
+# --- 1. intra-repo markdown links ------------------------------------
+for f in README.md docs/*.md; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    # inline links: [text](target) — one per line via -o
+    for target in $(grep -oE '\]\([^) ]+\)' "$f" \
+                        | sed -E 's/^\]\(//; s/\)$//'); do
+        case "$target" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        path="${target%%#*}"
+        [ -z "$path" ] && continue
+        if [ ! -e "$dir/$path" ] && [ ! -e "$path" ]; then
+            echo "docs-check: $f: broken link -> $target"
+            errors=1
+        fi
+    done
+done
+
+# --- 2. CLI flag coverage --------------------------------------------
+if [ ! -f docs/CLI.md ]; then
+    echo "docs-check: docs/CLI.md is missing"
+    errors=1
+else
+    flags=$(grep -oE 'args\.(str|usize|u64|f64|flag|require)\("[a-z0-9-]+"' \
+                 rust/src/main.rs \
+                | sed -E 's/.*\("//; s/"$//' | sort -u)
+    if [ -z "$flags" ]; then
+        echo "docs-check: found no flags in rust/src/main.rs (pattern rot?)"
+        errors=1
+    fi
+    for fl in $flags; do
+        if ! grep -q -- "--$fl" docs/CLI.md; then
+            echo "docs-check: docs/CLI.md does not mention --$fl"
+            errors=1
+        fi
+    done
+fi
+
+if [ "$errors" -eq 0 ]; then
+    echo "docs-check OK"
+fi
+exit "$errors"
