@@ -29,7 +29,8 @@ use std::time::Instant;
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
-use duoserve::experts::{ExpertProvider, StagedExpertProvider, StagingMode};
+use duoserve::experts::{ExpertProvider, Placement, ShardedExpertProvider,
+                        StagedExpertProvider, StagingMode};
 use duoserve::memory::{DeviceExpertCache, ExpertKey};
 use duoserve::metrics::percentile;
 use duoserve::predictor::{top_k, StateConstructor};
@@ -273,12 +274,62 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // --- sharded provider: multi-device dispatch micro-ops ------------
+    // shard_local_hit: hash -> home shard -> cache touch (the per-key
+    // dispatch overhead sharding adds to every residency op);
+    // cross_shard_fetch: peer-residency probe over the other devices +
+    // admit into the home cache (the host side of a device-to-device
+    // fetch); replicated_hot_hit: touch of a broadcast-admitted hot
+    // key under replicate-hot placement.
+    {
+        let mk = || {
+            StagedExpertProvider::new(engine.host.clone(),
+                                      DeviceExpertCache::new(2, 2), 1,
+                                      StagingMode::Sync)
+        };
+        let local = ExpertKey::routed(0, 0);
+        let remote = ExpertKey::routed(0, 2);
+        // Learn the remote key's home so its weights can be planted on
+        // a *peer* device only (the hash needs just the shard count).
+        let probe = ShardedExpertProvider::new((0..4).map(|_| mk()).collect(),
+                                               Placement::Partition, vec![]);
+        let peer = (probe.compute_shard(remote) + 1) % 4;
+        let mut shards: Vec<StagedExpertProvider> =
+            (0..4).map(|_| mk()).collect();
+        shards[peer].admit(remote, 0.0, 0.0);
+        let mut part = ShardedExpertProvider::new(shards,
+                                                  Placement::Partition,
+                                                  vec![]);
+        part.admit(local, 0.0, 0.0);
+        let mut i = 0usize;
+        bench(&mut stats, "shard_local_hit", 10_000, || {
+            let _ = part.touch(local, i as f64);
+            i += 1;
+        });
+        bench(&mut stats, "cross_shard_fetch", 10_000, || {
+            if part.peer_resident(remote) {
+                part.admit(remote, i as f64, i as f64);
+            }
+            i += 1;
+        });
+
+        let hot = ExpertKey::routed(0, 1);
+        let mut repl = ShardedExpertProvider::new(
+            (0..4).map(|_| mk()).collect(), Placement::ReplicateHot,
+            vec![hot]);
+        repl.admit(hot, 0.0, 0.0); // broadcast to every device
+        bench(&mut stats, "replicated_hot_hit", 10_000, || {
+            let _ = repl.touch(hot, i as f64);
+            i += 1;
+        });
+    }
+
     // --- cache + top-k host ops ---------------------------------------
     let mut cache = DeviceExpertCache::new(2, 2);
     let mut i = 0usize;
     bench(&mut stats, "device-cache insert+touch", 10_000, || {
         let key = ExpertKey::routed(i % 4, i % 8);
-        cache.insert(key, i as f64);
+        cache.insert(key, i as f64, i as f64);
         let _ = cache.touch(key, i as f64);
         i += 1;
     });

@@ -131,7 +131,7 @@ impl Policy for MifPolicy {
                     }
                     let done = cx.streams.run(StreamId::Comm, t_gate, dur,
                                               "mif-miss-fetch");
-                    cx.provider.admit(key, done);
+                    cx.provider.admit(key, done, t_gate);
                     done
                 }
             };

@@ -26,6 +26,10 @@ pub struct DeviceProfile {
     pub pcie_pinned_bw: f64,
     /// PCIe effective bandwidth for pageable transfers, bytes/s.
     pub pcie_pageable_bw: f64,
+    /// Device-to-device (peer) bandwidth between shards, bytes/s.
+    /// Both testbed cards take an NVLink bridge, which moves expert
+    /// weights shard-to-shard well above host-upload PCIe rates.
+    pub p2p_bw: f64,
     /// Fixed per-transfer latency (driver + DMA setup), seconds.
     pub pcie_latency_s: f64,
 }
@@ -40,6 +44,7 @@ impl DeviceProfile {
             hbm_bw: 768.0e9,
             pcie_pinned_bw: 22.0e9,    // PCIe4 x16 achievable w/ pinned
             pcie_pageable_bw: 8.0e9,   // pageable staging penalty
+            p2p_bw: 50.0e9,            // NVLink3 bridge, one direction
             pcie_latency_s: 20e-6,
         }
     }
@@ -53,6 +58,7 @@ impl DeviceProfile {
             hbm_bw: 768.0e9,
             pcie_pinned_bw: 22.0e9,
             pcie_pageable_bw: 8.0e9,
+            p2p_bw: 50.0e9,            // NVLink3 bridge, one direction
             pcie_latency_s: 20e-6,
         }
     }
@@ -72,6 +78,12 @@ impl DeviceProfile {
             LinkKind::Pageable => self.pcie_pageable_bw,
         };
         self.pcie_latency_s + bytes as f64 / bw
+    }
+
+    /// Transfer time for `bytes` over the device-to-device (peer)
+    /// link between two shards.
+    pub fn p2p_transfer_time(&self, bytes: u64) -> f64 {
+        self.pcie_latency_s + bytes as f64 / self.p2p_bw
     }
 
     /// Roofline time for a compute op: max of FLOP-bound and

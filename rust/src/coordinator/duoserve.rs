@@ -34,6 +34,8 @@ use crate::simx::StreamId;
 
 use super::policy::{Groups, Policy, SimCtx};
 
+/// The dual-phase prefetch policy (see module docs): two-stream
+/// pipelined prefill, predictor-driven decode prefetch.
 pub struct DuoServePolicy {
     sys: SystemConfig,
     /// Ablation: serialise transfers behind compute (single-stream).
@@ -41,6 +43,7 @@ pub struct DuoServePolicy {
 }
 
 impl DuoServePolicy {
+    /// The full two-mechanism policy under this system config.
     pub fn new(sys: SystemConfig) -> Self {
         DuoServePolicy { sys, no_overlap: false }
     }

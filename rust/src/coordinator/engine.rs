@@ -24,7 +24,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::{DeviceProfile, Manifest, PolicyKind, SystemConfig};
-use crate::experts::{ExpertProvider, ExpertStats, StagedExpertProvider,
+use crate::experts::{ExpertProvider, ExpertStats, Placement,
+                     ShardedExpertProvider, StagedExpertProvider,
                      StagingMode};
 use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, OomError};
 use crate::metrics::{PredictorAccuracy, RequestMetrics, Summary};
@@ -53,9 +54,13 @@ pub enum Ablation {
     NoOverlap,
 }
 
+/// Everything configurable about one serving run (policy, device,
+/// staging, sharding, decode-path toggles).
 #[derive(Clone)]
 pub struct ServeOptions {
+    /// The expert-scheduling policy under test.
     pub policy: PolicyKind,
+    /// The simulated device profile (cost model + VRAM budget).
     pub device: DeviceProfile,
     /// Record per-op stream traces (tests, `--trace-streams`).
     pub record_streams: bool,
@@ -85,9 +90,25 @@ pub struct ServeOptions {
     /// prompts; a chunk covering the whole prompt is bit-identical to
     /// the monolithic pass.
     pub prefill_chunk: Option<usize>,
+    /// Shard the expert caches across this many simulated devices
+    /// behind a [`ShardedExpertProvider`] (`--shards`). `None` — the
+    /// default — keeps the unsharded single-device provider exactly as
+    /// before; `Some(1)` is the single-shard wrapper, pinned
+    /// bit-identical to `None` by the `expert_provider` test suite.
+    pub shards: Option<usize>,
+    /// Expert placement across shards (`--placement`); only consulted
+    /// when `shards` is set.
+    pub placement: Placement,
+    /// Test-only fault injection: poison every staging worker's staged
+    /// table right after spawn, so the whole run exercises the
+    /// poisoned-lock degradation path (staging miss → synchronous
+    /// host-pool fallback). Never set outside tests.
+    pub staging_fault: bool,
 }
 
 impl ServeOptions {
+    /// Defaults for this policy/device: threaded staging, no ablation,
+    /// no sharding, env-controlled decode-path toggles.
     pub fn new(policy: PolicyKind, device: DeviceProfile) -> Self {
         ServeOptions {
             policy,
@@ -100,6 +121,9 @@ impl ServeOptions {
             expert_fanout: Self::fanout_default(
                 std::env::var("DUOSERVE_EXPERT_FANOUT").ok().as_deref()),
             prefill_chunk: None,
+            shards: None,
+            placement: Placement::Partition,
+            staging_fault: false,
         }
     }
 
@@ -117,15 +141,20 @@ impl ServeOptions {
         v != Some("0")
     }
 
+    /// [`Self::new`] with one DuoServe mechanism ablated.
     pub fn ablated(policy: PolicyKind, device: DeviceProfile,
                    ablation: Ablation) -> Self {
         ServeOptions { ablation: Some(ablation), ..Self::new(policy, device) }
     }
 }
 
+/// Everything one serving run reports: per-request QoS metrics, the
+/// expert-path ledger, memory peaks, traces and the generated tokens.
 #[derive(Debug)]
 pub struct ServeOutcome {
+    /// Per-request latency/QoS measurements.
     pub metrics: Vec<RequestMetrics>,
+    /// Aggregate latency statistics over [`Self::metrics`].
     pub summary: Summary,
     /// Peak simulated GPU memory (Table II).
     pub peak_bytes: u64,
@@ -135,10 +164,20 @@ pub struct ServeOutcome {
     pub accuracy: PredictorAccuracy,
     /// Full expert-path accounting from the provider's ledger
     /// (hits/misses/bytes/staging counters; single source of truth
-    /// for both serving modes).
+    /// for both serving modes). Aggregated over shards when sharded.
     pub expert_stats: ExpertStats,
+    /// Per-shard ledger snapshots (length 1 unsharded; per-shard
+    /// hit-rates come from each entry's `hit_rate()`).
+    pub shard_stats: Vec<ExpertStats>,
+    /// Experts resident per shard at run end (the per-shard capacity
+    /// meters).
+    pub shard_resident: Vec<usize>,
+    /// Cross-shard load balance: least- over most-touched shard's
+    /// residency lookups (1.0 = perfectly even; also 1.0 unsharded).
+    pub shard_balance: f64,
     /// Set when the policy ran out of simulated GPU memory.
     pub oom: Option<OomError>,
+    /// Per-op virtual-time trace, when `record_streams` was set.
     pub stream_trace: Option<Vec<OpRecord>>,
     /// Decode activation paths per request (Experts Tracer output).
     pub episodes: Vec<Episode>,
@@ -152,6 +191,7 @@ pub struct ServeOutcome {
 }
 
 impl ServeOutcome {
+    /// Whether the run aborted on simulated out-of-memory.
     pub fn is_oom(&self) -> bool {
         self.oom.is_some()
     }
@@ -175,9 +215,15 @@ pub(crate) struct Components {
     pub experts: BTreeMap<usize, Arc<Executable>>,
 }
 
+/// One loaded model: AOT-lowered components, host weight pool, gate
+/// statistics and the optional decode predictor. See module docs.
 pub struct Engine {
+    /// The artifact manifest (sim + paper dimensions).
     pub man: Manifest,
+    /// CPU-resident expert weights (the offloaded tier).
     pub host: Arc<HostPool>,
+    /// Gate popularity/affinity statistics (predictor features and
+    /// the replicate-hot placement's hot-set source).
     pub mats: Matrices,
     pub(crate) comps: Components,
     pub(crate) mlp: Option<MlpPredictor>,
@@ -197,12 +243,14 @@ macro_rules! check {
 }
 
 impl Engine {
+    /// Load a model's artifact tree on the CPU PJRT runtime.
     pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
         let man = Manifest::load(artifacts_dir, model)?;
         let rt = Runtime::cpu()?;
         Self::with_runtime(man, rt)
     }
 
+    /// Load a model's components on an already-constructed runtime.
     pub fn with_runtime(man: Manifest, rt: Runtime) -> Result<Self> {
         let host =
             Arc::new(HostPool::load(&man, &rt).context("loading host pool")?);
@@ -231,10 +279,12 @@ impl Engine {
         Ok(Engine { man, host, mats, comps, mlp, rt })
     }
 
+    /// The PJRT runtime this engine executes on.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }
 
+    /// Whether the ExpertMLP predictor artifact was found and loaded.
     pub fn has_mlp(&self) -> bool {
         self.mlp.is_some()
     }
@@ -279,21 +329,69 @@ impl Engine {
         }
     }
 
+    /// The replication set for [`Placement::ReplicateHot`]: per layer,
+    /// the `top_k` most popular routed experts by the gate's
+    /// popularity statistics (popularity ties broken by the lower
+    /// expert index, for run-to-run determinism) plus every shared
+    /// expert.
+    fn hot_expert_set(&self) -> Vec<ExpertKey> {
+        let k = self.man.sim.top_k;
+        let mut hot = Vec::new();
+        for layer in 0..self.man.sim.n_layers {
+            let pop = self.mats.popularity(layer);
+            let mut idx: Vec<usize> = (0..pop.len()).collect();
+            idx.sort_by(|&a, &b| pop[b].total_cmp(&pop[a])
+                .then_with(|| a.cmp(&b)));
+            for &e in idx.iter().take(k) {
+                hot.push(ExpertKey::routed(layer, e));
+            }
+            for s in 0..self.man.sim.n_shared {
+                hot.push(ExpertKey::shared(layer, s));
+            }
+        }
+        hot
+    }
+
     /// The session's expert provider: policy-specific simulated cache
     /// + the host pool + the staging mode. `Ablation::NoOverlap` maps
     /// onto the synchronous provider (no prefetch-worker thread), so
     /// the single-stream ablation is deterministic by construction.
+    ///
+    /// With `opts.shards` set, each of the N simulated devices gets
+    /// its own identically-provisioned cache, ledger and staging
+    /// worker behind a [`ShardedExpertProvider`]; `None` keeps the
+    /// unsharded provider byte-for-byte as before.
     pub(crate) fn make_provider(&self, kind: PolicyKind, sys: &SystemConfig,
                                 expert_bytes: u64, opts: &ServeOptions)
                                 -> Box<dyn ExpertProvider> {
-        let cache = self.make_cache(kind, sys);
         let staging = if opts.ablation == Some(Ablation::NoOverlap) {
             StagingMode::Sync
         } else {
             opts.staging
         };
-        Box::new(StagedExpertProvider::new(self.host.clone(), cache,
-                                           expert_bytes, staging))
+        let mk_shard = || {
+            let p = StagedExpertProvider::new(self.host.clone(),
+                                              self.make_cache(kind, sys),
+                                              expert_bytes, staging);
+            if opts.staging_fault {
+                p.poison_staging_for_test();
+            }
+            p
+        };
+        match opts.shards {
+            None => Box::new(mk_shard()),
+            Some(n) => {
+                let n = n.max(1);
+                let hot = match opts.placement {
+                    Placement::ReplicateHot => self.hot_expert_set(),
+                    Placement::Partition => Vec::new(),
+                };
+                let shards: Vec<StagedExpertProvider> =
+                    (0..n).map(|_| mk_shard()).collect();
+                Box::new(ShardedExpertProvider::new(shards, opts.placement,
+                                                    hot))
+            }
+        }
     }
 
     pub(crate) fn make_policy(&self, kind: PolicyKind, sys: &SystemConfig,
@@ -403,7 +501,53 @@ impl Engine {
             self.expert_rows(&weights[job_i], &rows)
         };
         let n_jobs = jobs.len();
-        let outputs: Vec<Result<Vec<Vec<f32>>>> = if fanout && n_jobs > 1 {
+        let n_shards = provider.shard_count();
+        let outputs: Vec<Result<Vec<Vec<f32>>>> = if fanout && n_jobs > 1
+            && n_shards > 1
+        {
+            // Expert-parallel dispatch: each simulated device executes
+            // the expert groups it homes, one scoped thread per
+            // non-empty shard group (the multi-device extension of the
+            // contiguous-chunk fan-out below). Weights were
+            // pre-acquired above and outputs scatter back by job
+            // index, so the serial combine — and therefore every token
+            // — is bit-identical to the serial and single-device
+            // fan-out paths.
+            use crate::runtime::kernels;
+            let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+            for (ji, (key, _)) in jobs.iter().enumerate() {
+                by_shard[provider.compute_shard(*key)].push(ji);
+            }
+            let shard_jobs: Vec<Vec<usize>> =
+                by_shard.into_iter().filter(|g| !g.is_empty()).collect();
+            let workers = shard_jobs.len();
+            let inner = (kernels::n_threads() / workers).max(1);
+            let run_ref = &run;
+            let mut outs: Vec<Option<Result<Vec<Vec<f32>>>>> =
+                (0..n_jobs).map(|_| None).collect();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = shard_jobs
+                    .iter()
+                    .map(|g| {
+                        s.spawn(move || {
+                            kernels::with_thread_cap(inner, || {
+                                g.iter()
+                                    .map(|&ji| (ji, run_ref(ji)))
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (ji, r) in h.join().expect("shard fan-out thread") {
+                        outs[ji] = Some(r);
+                    }
+                }
+            });
+            outs.into_iter()
+                .map(|o| o.expect("shard fan-out job ran"))
+                .collect()
+        } else if fanout && n_jobs > 1 {
             use crate::runtime::kernels;
             let workers = kernels::n_threads().min(n_jobs);
             let per = (n_jobs + workers - 1) / workers;

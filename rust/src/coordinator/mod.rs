@@ -13,6 +13,11 @@
 //!   continuous-batching scheduler (which also multiplexes pending
 //!   prefill chunks with the decode batch under `--prefill-chunk`).
 
+// Enforced documentation island (ROADMAP maintenance item), extended
+// here from `experts/`: every public item in the serving coordinator
+// must carry rustdoc.
+#![warn(missing_docs)]
+
 pub mod duoserve;
 pub mod engine;
 pub mod policy;

@@ -20,16 +20,22 @@ use crate::simx::{CostModel, Streams};
 
 /// Everything a policy needs to schedule one phase of one layer.
 pub struct SimCtx<'a> {
+    /// The virtual-time stream timeline (compute / comm / predict).
     pub streams: &'a mut Streams,
     /// The expert-residency seam: simulated cache lookups/admissions
     /// plus centralized accounting.
     pub provider: &'a mut dyn ExpertProvider,
+    /// The device memory gauge (weights + KV + expert residency).
     pub meter: &'a mut MemoryMeter,
+    /// Per-op virtual-time costs on the active device profile.
     pub cost: &'a CostModel,
     /// Paper-scale bytes of one routed expert (the transfer unit).
     pub expert_bytes: u64,
+    /// Layer count of the simulated model.
     pub n_layers: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts the gate activates per token.
     pub top_k: usize,
 }
 
@@ -44,12 +50,23 @@ impl SimCtx<'_> {
     /// Convenience: simulated fetch of one expert on the comm stream.
     /// Returns the transfer completion time and admits the expert into
     /// the provider's cache (bytes counted centrally).
+    ///
+    /// When a peer shard already holds the expert (replicate-hot
+    /// placement, or a stale owner copy), the transfer rides the
+    /// device-to-device link instead of the host upload — policies
+    /// stay placement-oblivious, the provider and the cost model carry
+    /// the distinction. Single-device providers never report a peer,
+    /// so their schedules are untouched.
     pub fn fetch(&mut self, key: ExpertKey, ready_at: f64,
                  kind: crate::config::LinkKind) -> f64 {
-        let dur = self.cost.expert_transfer(kind);
+        let (dur, label) = if self.provider.peer_resident(key) {
+            (self.cost.cross_shard_transfer(), "fetch-peer")
+        } else {
+            (self.cost.expert_transfer(kind), "fetch")
+        };
         let done = self.streams.run(crate::simx::StreamId::Comm, ready_at,
-                                    dur, "fetch");
-        self.provider.admit(key, done);
+                                    dur, label);
+        self.provider.admit(key, done, ready_at);
         done
     }
 
@@ -70,6 +87,7 @@ pub type Groups = [(usize, usize)];
 
 /// One expert-scheduling policy (DuoServe or a baseline).
 pub trait Policy: Send {
+    /// Which policy this is (selects cache shape and reporting label).
     fn kind(&self) -> PolicyKind;
 
     /// Called before each request's prefill begins.

@@ -1051,6 +1051,10 @@ impl<'e> ServeSession<'e> {
             hit_rate,
             accuracy: stats.accuracy,
             expert_stats: stats,
+            shard_balance: crate::experts::shard_balance(
+                &self.provider.shard_stats()),
+            shard_stats: self.provider.shard_stats(),
+            shard_resident: self.provider.shard_resident(),
             oom,
             stream_trace: if self.record_streams {
                 Some(self.streams.trace().to_vec())

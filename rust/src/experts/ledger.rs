@@ -24,6 +24,11 @@ pub struct ExpertStats {
     pub sync_acquires: u64,
     /// Expert keys hinted to the prefetch worker.
     pub prefetch_hints: u64,
+    /// Staging probes that found the staged table's lock poisoned (a
+    /// staging-path thread panicked) and degraded to the synchronous
+    /// fallback instead of panicking the serving thread. Always 0 in a
+    /// healthy run.
+    pub staging_poisoned: u64,
     /// Online decode-predictor accuracy (Table III's counters).
     pub accuracy: PredictorAccuracy,
 }
@@ -48,6 +53,32 @@ impl ExpertStats {
     pub fn acquires(&self) -> u64 {
         self.staged_acquires + self.sync_acquires
     }
+
+    /// Fold another ledger into this one (the sharded provider's
+    /// aggregate view: counter-wise sum, accuracy observations merged).
+    pub fn absorb(&mut self, other: &ExpertStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.bytes_fetched += other.bytes_fetched;
+        self.staged_acquires += other.staged_acquires;
+        self.sync_acquires += other.sync_acquires;
+        self.prefetch_hints += other.prefetch_hints;
+        self.staging_poisoned += other.staging_poisoned;
+        self.accuracy.merge(&other.accuracy);
+    }
+}
+
+/// Load balance across shard ledgers: the ratio of the least- to the
+/// most-touched shard's residency lookups. 1.0 is perfectly even (and
+/// the defined value for a single shard or an idle run); values near
+/// 0.0 mean one shard is doing all the work.
+pub fn shard_balance(stats: &[ExpertStats]) -> f64 {
+    let max = stats.iter().map(ExpertStats::touches).max().unwrap_or(0);
+    if max == 0 || stats.len() <= 1 {
+        return 1.0;
+    }
+    let min = stats.iter().map(ExpertStats::touches).min().unwrap_or(0);
+    min as f64 / max as f64
 }
 
 #[cfg(test)]
@@ -69,5 +100,50 @@ mod tests {
         let s = ExpertStats { staged_acquires: 2, sync_acquires: 5,
                               ..Default::default() };
         assert_eq!(s.acquires(), 7);
+    }
+
+    #[test]
+    fn absorb_sums_every_counter() {
+        let mut a = ExpertStats {
+            hits: 1, misses: 2, bytes_fetched: 3, staged_acquires: 4,
+            sync_acquires: 5, prefetch_hints: 6, staging_poisoned: 7,
+            ..Default::default()
+        };
+        a.accuracy.observe(&[1], &[1]);
+        let mut b = ExpertStats {
+            hits: 10, misses: 20, bytes_fetched: 30, staged_acquires: 40,
+            sync_acquires: 50, prefetch_hints: 60, staging_poisoned: 70,
+            ..Default::default()
+        };
+        b.accuracy.observe(&[2], &[3]);
+        a.absorb(&b);
+        assert_eq!(a.hits, 11);
+        assert_eq!(a.misses, 22);
+        assert_eq!(a.bytes_fetched, 33);
+        assert_eq!(a.staged_acquires, 44);
+        assert_eq!(a.sync_acquires, 55);
+        assert_eq!(a.prefetch_hints, 66);
+        assert_eq!(a.staging_poisoned, 77);
+        assert_eq!(a.accuracy.total, 2);
+        assert_eq!(a.accuracy.exact, 1);
+    }
+
+    #[test]
+    fn shard_balance_ranges_from_even_to_skewed() {
+        let touched = |h: u64, m: u64| ExpertStats {
+            hits: h, misses: m, ..Default::default()
+        };
+        // idle and single-shard runs are balanced by definition
+        assert_eq!(shard_balance(&[]), 1.0);
+        assert_eq!(shard_balance(&[touched(5, 5)]), 1.0);
+        assert_eq!(shard_balance(&[touched(0, 0), touched(0, 0)]), 1.0);
+        // even split
+        assert!((shard_balance(&[touched(3, 1), touched(2, 2)]) - 1.0)
+                    .abs() < 1e-12);
+        // 1:4 skew
+        let b = shard_balance(&[touched(1, 0), touched(2, 2)]);
+        assert!((b - 0.25).abs() < 1e-12, "balance was {b}");
+        // a completely idle shard
+        assert_eq!(shard_balance(&[touched(0, 0), touched(9, 0)]), 0.0);
     }
 }

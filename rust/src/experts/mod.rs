@@ -35,11 +35,13 @@ use crate::memory::{CachedTensors, ExpertKey};
 
 mod ledger;
 mod provider;
+mod sharded;
 mod worker;
 
-pub use ledger::ExpertStats;
+pub use ledger::{shard_balance, ExpertStats};
 pub use provider::StagedExpertProvider;
-pub use worker::PrefetchWorker;
+pub use sharded::{Placement, ShardedExpertProvider};
+pub use worker::{PrefetchWorker, StagedLookup};
 
 /// How the functional side of a provider delivers weights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -89,18 +91,63 @@ pub trait ExpertProvider: Send {
     fn contains(&self, key: ExpertKey) -> bool;
 
     /// Admit a fetched expert whose simulated transfer completes at
-    /// `ready_at`; counts the transferred bytes centrally.
-    fn admit(&mut self, key: ExpertKey, ready_at: f64);
+    /// `ready_at`; `now` is the virtual time the fetch was issued (the
+    /// cache tags fresh entries' recency with it). Counts the
+    /// transferred bytes centrally.
+    fn admit(&mut self, key: ExpertKey, ready_at: f64, now: f64);
 
-    /// Experts currently resident in the simulated cache.
+    /// Experts currently resident in the simulated cache. A sharded
+    /// provider reports its most-loaded shard (each simulated device
+    /// has its own VRAM budget, so the busiest shard is the binding
+    /// constraint for the memory gauge).
     fn resident_count(&self) -> usize;
 
-    /// Per-layer slot budget of the simulated cache.
+    /// Per-layer slot budget of the simulated cache (per shard — every
+    /// shard is provisioned identically).
     fn per_layer_capacity(&self) -> usize;
 
     /// Record one online predictor observation (Table III counters).
     fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]);
 
-    /// Snapshot of the centralized accounting.
+    /// Snapshot of the centralized accounting (aggregated over shards
+    /// for a sharded provider).
     fn stats(&self) -> ExpertStats;
+
+    // --- sharding surface (single-device providers keep the
+    // defaults; only ShardedExpertProvider overrides) ----------------
+
+    /// Number of simulated devices the expert caches are sharded
+    /// across. 1 for every single-device provider.
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    /// Per-shard ledger snapshots, indexed by shard. Length equals
+    /// [`Self::shard_count`]; a single-device provider reports its one
+    /// ledger.
+    fn shard_stats(&self) -> Vec<ExpertStats> {
+        vec![self.stats()]
+    }
+
+    /// Per-shard resident expert counts (the per-shard capacity
+    /// meters), indexed by shard.
+    fn shard_resident(&self) -> Vec<usize> {
+        vec![self.resident_count()]
+    }
+
+    /// Whether `key` is resident on some shard *other than* its home
+    /// shard (a replica or a stale owner copy), making the next fetch
+    /// a device-to-device transfer instead of a host upload. Always
+    /// false for a single-device provider, so N=1 cost modeling is
+    /// untouched.
+    fn peer_resident(&self, _key: ExpertKey) -> bool {
+        false
+    }
+
+    /// The shard whose simulated device computes this expert's groups
+    /// (the engine fans one layer's expert groups out across shards).
+    /// Always 0 for a single-device provider.
+    fn compute_shard(&self, _key: ExpertKey) -> usize {
+        0
+    }
 }

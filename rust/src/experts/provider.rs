@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use crate::memory::{CachedTensors, DeviceExpertCache, ExpertKey, HostPool};
 
 use super::ledger::ExpertStats;
-use super::worker::PrefetchWorker;
+use super::worker::{PrefetchWorker, StagedLookup};
 use super::{ExpertProvider, StagingMode};
 
 /// The production expert provider: host pool + simulated device cache
@@ -84,6 +84,15 @@ impl StagedExpertProvider {
             w.retire_below(layer);
         }
     }
+
+    /// Test-only fault injection: poison the staging worker's staged
+    /// table, forcing every subsequent acquire through the
+    /// poisoned-lock degradation path (no-op in sync mode).
+    pub fn poison_staging_for_test(&self) {
+        if let Some(w) = &self.worker {
+            w.poison_for_test();
+        }
+    }
 }
 
 impl ExpertProvider for StagedExpertProvider {
@@ -96,9 +105,16 @@ impl ExpertProvider for StagedExpertProvider {
 
     fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
         if let Some(w) = &self.worker {
-            if let Some(t) = w.staged_get(key) {
-                self.stats.staged_acquires += 1;
-                return Ok(t);
+            match w.staged_lookup(key) {
+                StagedLookup::Hit(t) => {
+                    self.stats.staged_acquires += 1;
+                    return Ok(t);
+                }
+                StagedLookup::Miss => {}
+                // A panicked staging thread must never take the
+                // serving thread down with it: count the degradation
+                // and read the host pool synchronously.
+                StagedLookup::Poisoned => self.stats.staging_poisoned += 1,
             }
         }
         let pool = match &self.pool {
@@ -123,9 +139,9 @@ impl ExpertProvider for StagedExpertProvider {
         self.cache.contains(key)
     }
 
-    fn admit(&mut self, key: ExpertKey, ready_at: f64) {
+    fn admit(&mut self, key: ExpertKey, ready_at: f64, now: f64) {
         self.stats.bytes_fetched += self.expert_bytes;
-        self.cache.insert(key, ready_at);
+        self.cache.insert(key, ready_at, now);
     }
 
     fn resident_count(&self) -> usize {
@@ -155,7 +171,7 @@ mod tests {
             DeviceExpertCache::new(2, 0), 64);
         let key = ExpertKey::routed(0, 1);
         assert_eq!(p.touch(key, 1.0), None);
-        p.admit(key, 2.0);
+        p.admit(key, 2.0, 1.0);
         assert_eq!(p.touch(key, 3.0), Some(2.0));
         let s = p.stats();
         assert_eq!((s.hits, s.misses), (1, 1));

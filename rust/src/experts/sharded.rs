@@ -1,0 +1,323 @@
+//! Sharded multi-device expert parallelism behind the
+//! [`ExpertProvider`] seam.
+//!
+//! The single-GPU VRAM budget is the binding constraint on expert
+//! residency (ROADMAP north star): sharding the device expert caches
+//! across N simulated devices multiplies both cache capacity and
+//! decode FLOPs *without touching a single policy* — every policy
+//! keeps consulting residency through `SimCtx`, and the provider
+//! decides which device a key lives on.
+//!
+//! Structure: one [`StagedExpertProvider`] per shard, each owning its
+//! own [`crate::memory::DeviceExpertCache`], its own
+//! [`ExpertStats`] ledger and (in threaded staging mode) its own
+//! prefetch worker. Every expert key has a deterministic *home shard*
+//! (a hash over `(layer, expert, shared)`), and all functional and
+//! virtual-time traffic for the key routes there.
+//!
+//! Placement is where the QoS win lives (fMoE / Multi-MoE in
+//! PAPERS.md): [`Placement::Partition`] hash-partitions every expert,
+//! while [`Placement::ReplicateHot`] additionally *broadcasts* admits
+//! of popularity-hot and shared experts to every shard, so the hot
+//! working set is resident device-local everywhere and an evicted
+//! owner copy can be refilled by a device-to-device transfer
+//! ([`ExpertProvider::peer_resident`] → `simx::cost`'s cheaper
+//! cross-shard link) instead of a host upload.
+//!
+//! With one shard every method degenerates to a plain delegation to
+//! the single inner provider, which the `expert_provider` test suite
+//! pins as bit-identical to an unsharded [`StagedExpertProvider`] —
+//! tokens, routing, makespan and every ledger counter.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::memory::{CachedTensors, ExpertKey};
+
+use super::ledger::ExpertStats;
+use super::provider::StagedExpertProvider;
+use super::ExpertProvider;
+
+/// How experts are placed across shards (CLI `--placement`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Hash-partition every expert to its home shard; no replicas.
+    #[default]
+    Partition,
+    /// Partition cold experts, but broadcast admits of the
+    /// popularity-hot set (top-k per layer by gate popularity, plus
+    /// all shared experts) to every shard.
+    ReplicateHot,
+}
+
+impl Placement {
+    /// Parse a CLI placement name (`partition` | `replicate-hot`).
+    pub fn by_name(name: &str) -> Option<Placement> {
+        match name {
+            "partition" => Some(Placement::Partition),
+            "replicate-hot" => Some(Placement::ReplicateHot),
+            _ => None,
+        }
+    }
+}
+
+/// N simulated devices' expert caches behind one provider seam (see
+/// module docs).
+pub struct ShardedExpertProvider {
+    shards: Vec<StagedExpertProvider>,
+    placement: Placement,
+    /// Keys the placement replicates on every shard
+    /// ([`Placement::ReplicateHot`] only; empty under partition).
+    hot: HashSet<ExpertKey>,
+}
+
+impl ShardedExpertProvider {
+    /// A sharded provider over these per-shard providers (each brings
+    /// its own cache, ledger and staging worker). `hot_set` is the
+    /// replication set for [`Placement::ReplicateHot`]; it is ignored
+    /// under [`Placement::Partition`].
+    pub fn new(shards: Vec<StagedExpertProvider>, placement: Placement,
+               hot_set: Vec<ExpertKey>) -> Self {
+        assert!(!shards.is_empty(), "sharded provider needs >= 1 shard");
+        let hot = match placement {
+            Placement::ReplicateHot => hot_set.into_iter().collect(),
+            Placement::Partition => HashSet::new(),
+        };
+        ShardedExpertProvider { shards, placement, hot }
+    }
+
+    /// The configured placement policy.
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Deterministic home shard of a key: a multiplicative hash over
+    /// `(layer, expert, shared)`, stable across processes (no
+    /// `HashMap`-style randomized state), so per-shard ledgers are
+    /// reproducible run to run.
+    fn home(&self, key: ExpertKey) -> usize {
+        let mut h = key.layer.wrapping_mul(0x9E37_79B1);
+        h ^= key.expert.wrapping_mul(0x85EB_CA77);
+        if key.shared {
+            h = h.wrapping_add(0x27D4_EB2F);
+        }
+        h % self.shards.len()
+    }
+
+    /// Whether the placement keeps replicas of this key on every
+    /// shard.
+    fn replicated(&self, key: ExpertKey) -> bool {
+        self.placement == Placement::ReplicateHot && self.hot.contains(&key)
+    }
+
+    /// Drop staged entries of layers below `layer` on every shard's
+    /// worker (the sharded mirror of
+    /// [`StagedExpertProvider::retire_below`]).
+    pub fn retire_below(&self, layer: usize) {
+        for s in &self.shards {
+            s.retire_below(layer);
+        }
+    }
+}
+
+impl ExpertProvider for ShardedExpertProvider {
+    fn prefetch(&mut self, keys: &[ExpertKey]) {
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<ExpertKey>> = vec![Vec::new(); n];
+        for &k in keys {
+            groups[self.home(k)].push(k);
+        }
+        for (i, g) in groups.into_iter().enumerate() {
+            if !g.is_empty() {
+                self.shards[i].prefetch(&g);
+            }
+        }
+    }
+
+    fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
+        let h = self.home(key);
+        self.shards[h].acquire(key)
+    }
+
+    fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
+        let h = self.home(key);
+        self.shards[h].touch(key, now)
+    }
+
+    fn contains(&self, key: ExpertKey) -> bool {
+        self.shards[self.home(key)].contains(key)
+    }
+
+    fn admit(&mut self, key: ExpertKey, ready_at: f64, now: f64) {
+        if self.replicated(key) {
+            // Broadcast: every shard admits a replica and pays for its
+            // copy of the bytes (replication traffic is real traffic).
+            for s in &mut self.shards {
+                s.admit(key, ready_at, now);
+            }
+        } else {
+            let h = self.home(key);
+            self.shards[h].admit(key, ready_at, now);
+        }
+    }
+
+    fn resident_count(&self) -> usize {
+        // The busiest device is the binding VRAM constraint (every
+        // shard has its own budget of the same size) — see the trait
+        // docs.
+        self.shards
+            .iter()
+            .map(|s| s.resident_count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn per_layer_capacity(&self) -> usize {
+        self.shards[0].per_layer_capacity()
+    }
+
+    fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]) {
+        // The decode predictor is one engine-side component, not a
+        // per-device one: its accuracy ledger lives on shard 0.
+        self.shards[0].observe_prediction(predicted, actual);
+    }
+
+    fn stats(&self) -> ExpertStats {
+        let mut agg = ExpertStats::default();
+        for s in &self.shards {
+            agg.absorb(&s.stats());
+        }
+        agg
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_stats(&self) -> Vec<ExpertStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    fn shard_resident(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.resident_count()).collect()
+    }
+
+    fn peer_resident(&self, key: ExpertKey) -> bool {
+        let h = self.home(key);
+        self.shards
+            .iter()
+            .enumerate()
+            .any(|(i, s)| i != h && s.contains(key))
+    }
+
+    fn compute_shard(&self, key: ExpertKey) -> usize {
+        self.home(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::DeviceExpertCache;
+
+    fn detached_shards(n: usize) -> Vec<StagedExpertProvider> {
+        (0..n)
+            .map(|_| {
+                StagedExpertProvider::detached(DeviceExpertCache::new(2, 0),
+                                               64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn home_shard_is_deterministic_and_in_range() {
+        let a = ShardedExpertProvider::new(detached_shards(4),
+                                           Placement::Partition, vec![]);
+        let b = ShardedExpertProvider::new(detached_shards(4),
+                                           Placement::Partition, vec![]);
+        for layer in 0..6 {
+            for expert in 0..8 {
+                for key in [ExpertKey::routed(layer, expert),
+                            ExpertKey::shared(layer, expert)] {
+                    let h = a.compute_shard(key);
+                    assert!(h < 4);
+                    assert_eq!(h, b.compute_shard(key),
+                               "home shard not stable for {key:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_routes_all_traffic_to_the_home_shard() {
+        let mut p = ShardedExpertProvider::new(detached_shards(3),
+                                               Placement::Partition, vec![]);
+        let key = ExpertKey::routed(2, 5);
+        let h = p.compute_shard(key);
+        assert_eq!(p.touch(key, 1.0), None); // miss
+        p.admit(key, 2.0, 1.0);
+        assert_eq!(p.touch(key, 3.0), Some(2.0)); // hit
+        assert!(!p.peer_resident(key), "partition must not replicate");
+
+        let per = p.shard_stats();
+        for (i, s) in per.iter().enumerate() {
+            if i == h {
+                assert_eq!((s.hits, s.misses, s.bytes_fetched), (1, 1, 64));
+            } else {
+                assert_eq!((s.hits, s.misses, s.bytes_fetched), (0, 0, 0));
+            }
+        }
+        // the aggregate is the per-shard sum
+        let agg = p.stats();
+        assert_eq!((agg.hits, agg.misses, agg.bytes_fetched), (1, 1, 64));
+        assert_eq!(p.shard_resident().iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn replicate_hot_broadcasts_admits_and_exposes_peer_replicas() {
+        let key = ExpertKey::routed(1, 3);
+        let mut p = ShardedExpertProvider::new(detached_shards(3),
+                                               Placement::ReplicateHot,
+                                               vec![key]);
+        p.admit(key, 2.0, 1.0);
+        // every shard holds a replica and paid for its copy
+        assert_eq!(p.shard_resident(), vec![1, 1, 1]);
+        assert_eq!(p.stats().bytes_fetched, 3 * 64);
+        assert!(p.peer_resident(key),
+                "replicas on non-home shards must be visible as peers");
+        // a cold (non-hot) key still partitions
+        let cold = ExpertKey::routed(0, 0);
+        p.admit(cold, 3.0, 3.0);
+        assert_eq!(p.shard_resident().iter().sum::<usize>(), 4);
+        assert!(!p.peer_resident(cold));
+    }
+
+    #[test]
+    fn single_shard_matches_the_unsharded_provider_exactly() {
+        let mut raw = StagedExpertProvider::detached(
+            DeviceExpertCache::new(2, 0), 64);
+        let mut one = ShardedExpertProvider::new(detached_shards(1),
+                                                 Placement::ReplicateHot,
+                                                 vec![ExpertKey::routed(0, 1)]);
+        for p in [&mut raw as &mut dyn ExpertProvider,
+                  &mut one as &mut dyn ExpertProvider] {
+            p.touch(ExpertKey::routed(0, 1), 1.0);
+            p.admit(ExpertKey::routed(0, 1), 2.0, 1.0);
+            p.touch(ExpertKey::routed(0, 1), 3.0);
+            p.admit(ExpertKey::routed(0, 2), 4.0, 3.5);
+            p.observe_prediction(&[1, 2], &[1, 3]);
+        }
+        let (a, b) = (raw.stats(), one.stats());
+        assert_eq!(a.hits, b.hits);
+        assert_eq!(a.misses, b.misses);
+        assert_eq!(a.bytes_fetched, b.bytes_fetched);
+        assert_eq!(a.accuracy.total, b.accuracy.total);
+        assert_eq!(a.accuracy.at_least_half, b.accuracy.at_least_half);
+        assert_eq!(raw.resident_count(), one.resident_count());
+        assert_eq!(one.shard_count(), 1);
+        assert!(!one.peer_resident(ExpertKey::routed(0, 1)),
+                "one shard has no peers");
+    }
+}

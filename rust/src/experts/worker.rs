@@ -18,6 +18,14 @@
 //! Staging is pure delivery: the worker hands out the host pool's
 //! exact tensors, so tokens are bit-identical with or without it
 //! (asserted by the `expert_provider` test suite).
+//!
+//! Staging is also *optional* delivery: a panic inside the worker (or
+//! inside any thread holding the staged table's lock) poisons the
+//! mutex, and every lock site here degrades that to "nothing staged"
+//! instead of propagating the panic into the serving thread. The
+//! provider sees [`StagedLookup::Poisoned`], counts it, and falls back
+//! to the synchronous host-pool path — tokens still complete
+//! bit-identically because staging never changes which bytes are read.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
@@ -25,6 +33,21 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::memory::{CachedTensors, ExpertKey, HostPool};
+
+/// Outcome of probing the staged table for one expert's tensors.
+#[derive(Debug)]
+pub enum StagedLookup {
+    /// The worker already delivered this expert's tensors.
+    Hit(Arc<CachedTensors>),
+    /// Not staged (yet): the caller reads the host pool synchronously.
+    Miss,
+    /// The staged table's lock is poisoned (a staging-path thread
+    /// panicked while holding it). Functionally equivalent to a miss —
+    /// the caller must fall back synchronously — but counted
+    /// separately in the ledger because it means the prefetch pipeline
+    /// is dead for the rest of the run.
+    Poisoned,
+}
 
 enum Msg {
     /// Resolve these keys from the host pool into the staged table.
@@ -62,25 +85,33 @@ impl PrefetchWorker {
                             // (per-chunk prefill re-hints the same
                             // layer sets every chunk), then resolve
                             // the misses outside the lock and publish
-                            // each as soon as it is ready.
-                            let missing: Vec<ExpertKey> = {
-                                let t = table.lock().unwrap();
-                                keys.into_iter()
+                            // each as soon as it is ready. A poisoned
+                            // table means staging is dead: skip the
+                            // hint rather than panic the worker too.
+                            let missing: Vec<ExpertKey> = match table
+                                .lock()
+                            {
+                                Ok(t) => keys
+                                    .into_iter()
                                     .filter(|k| !t.contains_key(k))
-                                    .collect()
+                                    .collect(),
+                                Err(_) => continue,
                             };
                             for key in missing {
                                 // Missing keys are simply not staged;
                                 // acquire falls back to the sync path
                                 // and surfaces the error there.
                                 if let Ok(w) = pool.expert_tensors(key) {
-                                    table.lock().unwrap().insert(key, w);
+                                    if let Ok(mut t) = table.lock() {
+                                        t.insert(key, w);
+                                    }
                                 }
                             }
                         }
                         Msg::RetireBelow(layer) => {
-                            table.lock().unwrap()
-                                .retain(|k, _| k.layer >= layer);
+                            if let Ok(mut t) = table.lock() {
+                                t.retain(|k, _| k.layer >= layer);
+                            }
                         }
                         Msg::Sync(ack) => {
                             let _ = ack.send(());
@@ -112,14 +143,46 @@ impl PrefetchWorker {
         }
     }
 
-    /// Staged tensors for `key`, if the worker has delivered them.
-    pub fn staged_get(&self, key: ExpertKey) -> Option<Arc<CachedTensors>> {
-        self.staged.lock().unwrap().get(&key).cloned()
+    /// Probe the staged table for `key`, distinguishing a plain miss
+    /// from a poisoned lock (the provider counts the latter before
+    /// falling back synchronously — see [`StagedLookup`]).
+    pub fn staged_lookup(&self, key: ExpertKey) -> StagedLookup {
+        match self.staged.lock() {
+            Ok(t) => match t.get(&key) {
+                Some(w) => StagedLookup::Hit(w.clone()),
+                None => StagedLookup::Miss,
+            },
+            Err(_) => StagedLookup::Poisoned,
+        }
     }
 
-    /// Number of experts currently staged (introspection).
+    /// Staged tensors for `key`, if the worker has delivered them.
+    /// A poisoned table reads as "nothing staged".
+    pub fn staged_get(&self, key: ExpertKey) -> Option<Arc<CachedTensors>> {
+        match self.staged_lookup(key) {
+            StagedLookup::Hit(w) => Some(w),
+            StagedLookup::Miss | StagedLookup::Poisoned => None,
+        }
+    }
+
+    /// Number of experts currently staged (introspection). A poisoned
+    /// table reads as empty.
     pub fn staged_len(&self) -> usize {
-        self.staged.lock().unwrap().len()
+        self.staged.lock().map(|t| t.len()).unwrap_or(0)
+    }
+
+    /// Test-only fault injection: poison the staged table's lock by
+    /// panicking a throwaway thread while it holds the guard. After
+    /// this every staging probe reports [`StagedLookup::Poisoned`] and
+    /// the engine must serve through the synchronous fallback.
+    pub fn poison_for_test(&self) {
+        let table = self.staged.clone();
+        let h = std::thread::spawn(move || {
+            let _guard = table.lock().unwrap();
+            panic!("deliberate poison (test fault injection)");
+        });
+        // The panic is the point; swallow the propagated Err.
+        let _ = h.join();
     }
 }
 

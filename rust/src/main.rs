@@ -13,6 +13,7 @@ use anyhow::{bail, Result};
 
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Ablation, ContinuousConfig, Engine, ServeOptions};
+use duoserve::experts::{ExpertStats, Placement};
 use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment, SloSpec, Table};
 use duoserve::util::args::Args;
 use duoserve::workload::{assign_arrivals, generate_requests, ArrivalProcess};
@@ -36,6 +37,12 @@ COMMANDS:
                  prefill chunks; 0 = whole prompt at once, the default.
                  In continuous mode chunks interleave with decode
                  steps, bounding decoder stalls to chunk-sized units)
+                --shards N  (N>=2 shards the host pool and device
+                 expert cache across N simulated devices; 1 = the
+                 legacy single-device provider, the default)
+                --placement partition|replicate-hot  (replicate-hot
+                 broadcasts each layer's hottest experts to every
+                 shard so peer fetches hit a local replica)
                 (continuous mode: --rate R requests/s Poisson arrivals,
                  --max-in-flight K --queue-cap Q
                  --decode-priority on|off  (off: a prefill's chunks
@@ -96,6 +103,37 @@ fn decode_priority(name: &str) -> Result<bool> {
     }
 }
 
+/// `--shards N --placement P` parsing: N <= 1 keeps the legacy
+/// unsharded provider (`None`).
+fn sharding(args: &Args) -> Result<(Option<usize>, Placement)> {
+    let n = args.usize("shards", 1)?;
+    let shards = if n >= 2 { Some(n) } else { None };
+    let name = args.str("placement", "partition");
+    let placement = Placement::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown placement {name:?} \
+                         (partition|replicate-hot)")
+    })?;
+    Ok((shards, placement))
+}
+
+/// Per-shard hit-rate / balance report lines (sharded runs only).
+fn print_shard_report(stats: &[ExpertStats], resident: &[usize],
+                      balance: f64) {
+    if stats.len() <= 1 {
+        return;
+    }
+    for (i, s) in stats.iter().enumerate() {
+        println!(
+            "  shard {i}: hit-rate={:.1}% hits={} misses={} resident={}",
+            s.hit_rate() * 100.0,
+            s.hits,
+            s.misses,
+            resident.get(i).copied().unwrap_or(0),
+        );
+    }
+    println!("shard-balance={balance:.2}");
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["trace-streams", "all"])?;
     if args.positional.is_empty() {
@@ -131,6 +169,9 @@ fn main() -> Result<()> {
             let mut opts = ServeOptions::new(pol, dev);
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
+            let (shards, placement) = sharding(&args)?;
+            opts.shards = shards;
+            opts.placement = placement;
             let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
             if let Some(oom) = out.oom {
                 println!("{}: {oom}", pol.label());
@@ -164,6 +205,8 @@ fn main() -> Result<()> {
                 s.decode_tokens_per_sec,
                 s.prefill_chunks,
             );
+            print_shard_report(&out.shard_stats, &out.shard_resident,
+                               out.shard_balance);
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
             let slo_e2e = args.f64("slo-e2e", 0.0)?;
             if slo_ttft > 0.0 && slo_e2e > 0.0 {
@@ -191,12 +234,18 @@ fn main() -> Result<()> {
             opts.record_streams = args.flag("trace-streams");
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
+            let (shards, placement) = sharding(&args)?;
+            opts.shards = shards;
+            opts.placement = placement;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
             let mut peak = 0u64;
             let mut hit = 0.0;
             let mut makespan = 0.0;
             let mut decode_tokens = 0u64;
             let mut decode_time = 0.0f64;
+            let mut shard_stats: Vec<ExpertStats> = Vec::new();
+            let mut shard_resident: Vec<usize> = Vec::new();
+            let mut shard_balance = 1.0;
             for chunk in reqs.chunks(batch) {
                 let out = engine.serve(chunk, &opts)?;
                 if let Some(oom) = out.oom {
@@ -217,6 +266,9 @@ fn main() -> Result<()> {
                 makespan += out.summary.makespan;
                 decode_tokens += out.summary.decode_tokens;
                 decode_time += out.summary.decode_time;
+                shard_stats = out.shard_stats.clone();
+                shard_resident = out.shard_resident.clone();
+                shard_balance = out.shard_balance;
                 if let Some(trace) = &out.stream_trace {
                     let mut by_label: std::collections::BTreeMap<&str,
                         (usize, f64)> = Default::default();
@@ -248,6 +300,7 @@ fn main() -> Result<()> {
                 fmt_secs(makespan),
                 decode_tps,
             );
+            print_shard_report(&shard_stats, &shard_resident, shard_balance);
             Ok(())
         }
         "compare" => {

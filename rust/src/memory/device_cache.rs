@@ -79,7 +79,15 @@ impl DeviceExpertCache {
     ///    (timestamp ties: the lower key);
     /// 2. if the layer window is exceeded, evict least-recently-used
     ///    layers until it holds (ties: the lower layer index).
-    pub fn insert(&mut self, key: ExpertKey, ready_at: f64) {
+    ///
+    /// `ready_at` is when the simulated transfer completes; `now` is
+    /// the virtual time the fetch was issued. Recency is tagged with
+    /// `now` on a fresh insert (a prefetched-but-unused entry whose
+    /// transfer lands far in the future must not look most-recently
+    /// used), and a refresh keeps `max(old.last_used, ready_at)` (a
+    /// re-fetch completing before the entry's last use must not rewind
+    /// a hot entry to LRU victim).
+    pub fn insert(&mut self, key: ExpertKey, ready_at: f64, now: f64) {
         let layer_count =
             self.slots.keys().filter(|k| k.layer == key.layer).count();
         if !self.slots.contains_key(&key) && layer_count >= self.per_layer_capacity {
@@ -98,7 +106,12 @@ impl DeviceExpertCache {
             }
         }
         self.slots
-            .insert(key, CachedExpert { ready_at, last_used: ready_at });
+            .entry(key)
+            .and_modify(|slot| {
+                slot.ready_at = ready_at;
+                slot.last_used = slot.last_used.max(ready_at);
+            })
+            .or_insert(CachedExpert { ready_at, last_used: now });
 
         if self.layer_window > 0 {
             loop {
@@ -166,9 +179,9 @@ mod tests {
     #[test]
     fn capacity_enforced_per_layer() {
         let mut c = DeviceExpertCache::new(2, 0);
-        c.insert(ExpertKey::routed(0, 1), 1.0);
-        c.insert(ExpertKey::routed(0, 2), 2.0);
-        c.insert(ExpertKey::routed(0, 3), 3.0);
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
+        c.insert(ExpertKey::routed(0, 3), 3.0, 3.0);
         assert_eq!(c.resident_in_layer(0).len(), 2);
         // LRU: expert 1 (oldest) evicted
         assert!(!c.contains(ExpertKey::routed(0, 1)));
@@ -178,9 +191,9 @@ mod tests {
     #[test]
     fn layer_window_evicts_old_layers() {
         let mut c = DeviceExpertCache::new(2, 2);
-        c.insert(ExpertKey::routed(0, 0), 1.0);
-        c.insert(ExpertKey::routed(1, 0), 2.0);
-        c.insert(ExpertKey::routed(2, 0), 3.0);
+        c.insert(ExpertKey::routed(0, 0), 1.0, 1.0);
+        c.insert(ExpertKey::routed(1, 0), 2.0, 2.0);
+        c.insert(ExpertKey::routed(2, 0), 3.0, 3.0);
         assert!(!c.contains(ExpertKey::routed(0, 0)));
         assert!(c.contains(ExpertKey::routed(1, 0)));
         assert!(c.contains(ExpertKey::routed(2, 0)));
@@ -189,13 +202,13 @@ mod tests {
     #[test]
     fn touch_refreshes_lru_and_reports_readiness() {
         let mut c = DeviceExpertCache::new(2, 0);
-        c.insert(ExpertKey::routed(0, 5), 1.5);
+        c.insert(ExpertKey::routed(0, 5), 1.5, 1.0);
         assert_eq!(c.touch(ExpertKey::routed(0, 5), 2.0), Some(1.5));
         assert_eq!(c.touch(ExpertKey::routed(0, 6), 2.0), None);
-        // the touch at t=2.0 protects expert 5: inserting two more
-        // evicts the colder entry first
-        c.insert(ExpertKey::routed(0, 6), 0.5);
-        c.insert(ExpertKey::routed(0, 7), 3.0);
+        // the touch at t=2.0 protects expert 5: expert 6's insert-time
+        // recency (1.8) is colder, so it is the capacity victim
+        c.insert(ExpertKey::routed(0, 6), 2.2, 1.8);
+        c.insert(ExpertKey::routed(0, 7), 3.0, 2.5);
         assert!(c.contains(ExpertKey::routed(0, 5)));
         assert!(!c.contains(ExpertKey::routed(0, 6)));
     }
@@ -203,20 +216,20 @@ mod tests {
     #[test]
     fn reinsert_existing_key_does_not_evict() {
         let mut c = DeviceExpertCache::new(2, 0);
-        c.insert(ExpertKey::routed(0, 1), 1.0);
-        c.insert(ExpertKey::routed(0, 2), 2.0);
-        c.insert(ExpertKey::routed(0, 1), 3.0); // refresh, not new
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
+        c.insert(ExpertKey::routed(0, 1), 3.0, 3.0); // refresh, not new
         assert_eq!(c.resident_in_layer(0), vec![1, 2]);
     }
 
     #[test]
     fn reinsert_at_capacity_refreshes_ready_at_in_place() {
         let mut c = DeviceExpertCache::new(2, 0);
-        c.insert(ExpertKey::routed(0, 1), 1.0);
-        c.insert(ExpertKey::routed(0, 2), 2.0);
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
         // layer is at capacity; re-fetching a resident expert must
         // update its transfer tag without evicting anything
-        c.insert(ExpertKey::routed(0, 1), 5.0);
+        c.insert(ExpertKey::routed(0, 1), 5.0, 5.0);
         assert_eq!(c.resident_in_layer(0), vec![1, 2]);
         assert_eq!(c.get(ExpertKey::routed(0, 1)).unwrap().ready_at, 5.0);
         assert_eq!(c.get(ExpertKey::routed(0, 2)).unwrap().ready_at, 2.0);
@@ -228,18 +241,19 @@ mod tests {
         // victim must be the lower expert index, independent of
         // HashMap iteration order.
         let mut c = DeviceExpertCache::new(2, 0);
-        c.insert(ExpertKey::routed(0, 4), 1.0);
-        c.insert(ExpertKey::routed(0, 2), 1.0);
-        c.insert(ExpertKey::routed(0, 7), 2.0);
+        c.insert(ExpertKey::routed(0, 4), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 2), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 7), 2.0, 2.0);
         assert_eq!(c.resident_in_layer(0), vec![4, 7]);
     }
 
     #[test]
     fn window_eviction_tie_breaks_on_lowest_layer() {
         let mut c = DeviceExpertCache::new(2, 2);
-        c.insert(ExpertKey::routed(3, 0), 1.0);
-        c.insert(ExpertKey::routed(5, 0), 1.0); // same last_used as layer 3
-        c.insert(ExpertKey::routed(4, 0), 2.0);
+        c.insert(ExpertKey::routed(3, 0), 1.0, 1.0);
+        // same last_used as layer 3
+        c.insert(ExpertKey::routed(5, 0), 1.0, 1.0);
+        c.insert(ExpertKey::routed(4, 0), 2.0, 2.0);
         assert!(!c.contains(ExpertKey::routed(3, 0)),
                 "tie must evict the lower layer index");
         assert!(c.contains(ExpertKey::routed(5, 0)));
@@ -251,9 +265,9 @@ mod tests {
         // The inserting key's layer is already resident: the window is
         // not exceeded, so nothing may be evicted.
         let mut c = DeviceExpertCache::new(4, 2);
-        c.insert(ExpertKey::routed(0, 0), 1.0);
-        c.insert(ExpertKey::routed(1, 0), 2.0);
-        c.insert(ExpertKey::routed(1, 1), 3.0);
+        c.insert(ExpertKey::routed(0, 0), 1.0, 1.0);
+        c.insert(ExpertKey::routed(1, 0), 2.0, 2.0);
+        c.insert(ExpertKey::routed(1, 1), 3.0, 3.0);
         assert!(c.contains(ExpertKey::routed(0, 0)));
         assert_eq!(c.resident_count(), 3);
     }
@@ -263,10 +277,46 @@ mod tests {
         // Even when the inserting layer is the least-recently-used,
         // the window victim must be some *other* layer.
         let mut c = DeviceExpertCache::new(2, 1);
-        c.insert(ExpertKey::routed(9, 0), 10.0);
-        c.insert(ExpertKey::routed(2, 0), 1.0); // older timestamp than layer 9
+        c.insert(ExpertKey::routed(9, 0), 10.0, 10.0);
+        // older timestamp than layer 9
+        c.insert(ExpertKey::routed(2, 0), 1.0, 1.0);
         assert!(c.contains(ExpertKey::routed(2, 0)));
         assert!(!c.contains(ExpertKey::routed(9, 0)));
         assert_eq!(c.resident_count(), 1);
+    }
+
+    #[test]
+    fn refresh_with_earlier_completion_does_not_rewind_recency() {
+        // Regression: a re-fetch whose transfer completes *before* the
+        // entry's last use used to overwrite `last_used` with the new
+        // `ready_at`, rewinding a hot entry to LRU victim.
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
+        c.touch(ExpertKey::routed(0, 1), 5.0); // hot: last_used = 5.0
+        c.insert(ExpertKey::routed(0, 1), 0.5, 6.0); // early re-fetch
+        assert_eq!(c.get(ExpertKey::routed(0, 1)).unwrap().ready_at, 0.5);
+        // recency survived the refresh: the capacity victim is the
+        // colder expert 2, not the re-fetched hot expert 1
+        c.insert(ExpertKey::routed(0, 3), 7.0, 7.0);
+        assert!(c.contains(ExpertKey::routed(0, 1)));
+        assert!(!c.contains(ExpertKey::routed(0, 2)));
+    }
+
+    #[test]
+    fn future_dated_prefetch_is_not_most_recently_used() {
+        // Regression: a prefetched-but-unused entry whose transfer
+        // lands far in the future used to inherit `ready_at` as its
+        // recency, outranking genuinely hot entries at eviction time.
+        let mut c = DeviceExpertCache::new(2, 0);
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        c.touch(ExpertKey::routed(0, 1), 4.0); // hot: last_used = 4.0
+        // prefetch issued at t=2.0, transfer completes at t=9.0
+        c.insert(ExpertKey::routed(0, 2), 9.0, 2.0);
+        // capacity eviction: the unused prefetch (recency 2.0) goes,
+        // not the hot entry (recency 4.0)
+        c.insert(ExpertKey::routed(0, 3), 5.0, 5.0);
+        assert!(c.contains(ExpertKey::routed(0, 1)));
+        assert!(!c.contains(ExpertKey::routed(0, 2)));
     }
 }

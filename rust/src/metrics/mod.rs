@@ -3,6 +3,10 @@
 //! (Fig. 7), peak memory (Table II), predictor accuracy (Table III) —
 //! plus table/CSV reporters used by the figure-regeneration benches.
 
+// Enforced documentation island (ROADMAP maintenance item), extended
+// here from `experts/`: every public metrics item must carry rustdoc.
+#![warn(missing_docs)]
+
 /// Outcome of serving one request under one policy.
 ///
 /// In the continuous serving mode, `ttft` and `e2e` are measured from
@@ -34,12 +38,16 @@ pub struct RequestMetrics {
 /// Predictor accuracy counters (Table III's two metrics).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PredictorAccuracy {
+    /// Observations where the predicted set matched exactly.
     pub exact: u64,
+    /// Observations covering at least half of the activated experts.
     pub at_least_half: u64,
+    /// Total observations recorded.
     pub total: u64,
 }
 
 impl PredictorAccuracy {
+    /// Record one prediction against the gate's actual expert set.
     pub fn observe(&mut self, predicted: &[usize], actual: &[usize]) {
         let need = (actual.len() + 1) / 2;
         let inter = predicted.iter().filter(|e| actual.contains(e)).count();
@@ -52,10 +60,12 @@ impl PredictorAccuracy {
         }
     }
 
+    /// Fraction of observations predicted exactly.
     pub fn exact_rate(&self) -> f64 {
         if self.total == 0 { 0.0 } else { self.exact as f64 / self.total as f64 }
     }
 
+    /// Fraction of observations at least half-covered.
     pub fn half_rate(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -64,6 +74,7 @@ impl PredictorAccuracy {
         }
     }
 
+    /// Fold another accuracy ledger into this one.
     pub fn merge(&mut self, other: &PredictorAccuracy) {
         self.exact += other.exact;
         self.at_least_half += other.at_least_half;
@@ -74,16 +85,25 @@ impl PredictorAccuracy {
 /// Aggregate over a batch of request metrics.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Requests served (rejected arrivals excluded).
     pub n_requests: usize,
+    /// Mean time to first token.
     pub mean_ttft: f64,
+    /// Mean end-to-end latency.
     pub mean_e2e: f64,
+    /// Median end-to-end latency (nearest rank).
     pub p50_e2e: f64,
+    /// p95 end-to-end latency (nearest rank).
     pub p95_e2e: f64,
+    /// Median time to first token.
     pub p50_ttft: f64,
+    /// p95 time to first token.
     pub p95_ttft: f64,
+    /// Tokens emitted across all served requests.
     pub total_tokens: usize,
     /// Total tokens / makespan (Fig. 7's "total throughput").
     pub tokens_per_sec: f64,
+    /// Virtual time at which all streams drained.
     pub makespan: f64,
     /// Tokens emitted by decode steps (prefill first-tokens excluded).
     pub decode_tokens: u64,
@@ -135,6 +155,7 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// Aggregate a batch of per-request metrics into a [`Summary`].
 pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
     let n = reqs.len();
     let mean = |f: &dyn Fn(&RequestMetrics) -> f64| -> f64 {
@@ -190,6 +211,7 @@ pub struct SloSpec {
 /// Fraction of requests meeting their targets.
 #[derive(Debug, Clone, Copy)]
 pub struct SloReport {
+    /// Requests evaluated against the targets.
     pub n_requests: usize,
     /// Fraction with ttft <= spec.ttft.
     pub ttft_attainment: f64,

@@ -35,6 +35,14 @@ impl CostModel {
         self.device.transfer_time(self.expert_bytes, kind)
     }
 
+    /// Device-to-device transfer of one expert's weights between two
+    /// shards (the fetch path when a peer shard already holds the
+    /// expert — see `ExpertProvider::peer_resident`). Rides the
+    /// NVLink-bridge peer link, so it undercuts the host upload.
+    pub fn cross_shard_transfer(&self) -> f64 {
+        self.device.p2p_transfer_time(self.expert_bytes)
+    }
+
     /// Expert FFN over `tokens` tokens (roofline: weight streaming from
     /// HBM bounds small batches, FLOPs bound large ones).
     pub fn expert_compute(&self, tokens: usize) -> f64 {
@@ -93,6 +101,18 @@ mod tests {
         let d = DeviceProfile::a5000();
         assert!(d.transfer_time(88 << 20, LinkKind::Pageable)
                 > d.transfer_time(88 << 20, LinkKind::Pinned));
+    }
+
+    #[test]
+    fn peer_link_beats_the_host_upload() {
+        // A cross-shard refill must be strictly cheaper than pulling
+        // the expert from host memory again, for both testbeds — this
+        // ordering is what makes replicate-hot placement pay off.
+        for d in [DeviceProfile::a5000(), DeviceProfile::a6000()] {
+            assert!(d.p2p_transfer_time(88 << 20)
+                    < d.transfer_time(88 << 20, LinkKind::Pinned),
+                    "{}: p2p not faster than pinned PCIe", d.name);
+        }
     }
 
     #[test]

@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use duoserve::config::{DeviceProfile, Manifest, PolicyKind};
 use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
-use duoserve::experts::{ExpertProvider, PrefetchWorker, StagedExpertProvider,
-                        StagingMode};
+use duoserve::experts::{ExpertProvider, ExpertStats, Placement,
+                        PrefetchWorker, StagedExpertProvider, StagingMode};
 use duoserve::memory::{DeviceExpertCache, ExpertKey, HostPool};
 use duoserve::runtime::Runtime;
 use duoserve::workload::generate_requests;
@@ -203,5 +203,178 @@ fn provider_acquire_counts_staged_and_sync_paths() {
     let s = p.stats();
     assert_eq!(s.sync_acquires, 1);
     assert_eq!(s.staged_acquires, 1);
+    assert_eq!(s.prefetch_hints, 1);
+}
+
+/// Every ledger counter, compared field by field.
+fn assert_stats_eq(a: &ExpertStats, b: &ExpertStats, what: &str) {
+    assert_eq!(a.hits, b.hits, "{what}: hits diverged");
+    assert_eq!(a.misses, b.misses, "{what}: misses diverged");
+    assert_eq!(a.bytes_fetched, b.bytes_fetched,
+               "{what}: transferred bytes diverged");
+    assert_eq!(a.staged_acquires, b.staged_acquires,
+               "{what}: staged acquires diverged");
+    assert_eq!(a.sync_acquires, b.sync_acquires,
+               "{what}: sync acquires diverged");
+    assert_eq!(a.prefetch_hints, b.prefetch_hints,
+               "{what}: prefetch hints diverged");
+    assert_eq!(a.staging_poisoned, b.staging_poisoned,
+               "{what}: poisoned-lock counts diverged");
+    assert_eq!(a.accuracy.total, b.accuracy.total,
+               "{what}: accuracy observations diverged");
+    assert_eq!(a.accuracy.exact, b.accuracy.exact);
+    assert_eq!(a.accuracy.at_least_half, b.accuracy.at_least_half);
+}
+
+#[test]
+fn single_shard_serving_is_bit_identical_to_unsharded() {
+    // `--shards 1` routes everything through ShardedExpertProvider's
+    // dispatch, hashing and aggregation paths, so this is the
+    // end-to-end proof that the sharding layer is a pure pass-through:
+    // tokens, routing, virtual time and *every* ledger counter must
+    // match the legacy provider exactly. Sync staging keeps the
+    // staged/sync acquire split deterministic so the comparison can
+    // be complete.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 3, 29);
+    let mut flat = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    flat.staging = StagingMode::Sync;
+    assert_eq!(flat.shards, None, "unsharded must be the default");
+    let mut one = flat.clone();
+    one.shards = Some(1);
+
+    let a = e.serve(&reqs, &flat).unwrap();
+    let b = e.serve(&reqs, &one).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "sharding layer changed the tokens");
+    for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+        assert_eq!(ea.steps, eb.steps, "sharding layer changed the routing");
+    }
+    assert_eq!(a.summary.makespan, b.summary.makespan,
+               "sharding layer leaked into virtual time");
+    assert_eq!(a.peak_bytes, b.peak_bytes,
+               "sharding layer changed the memory profile");
+    assert_stats_eq(&a.expert_stats, &b.expert_stats, "N=1 parity");
+
+    // The sharded outcome also reports its per-shard view: one shard,
+    // carrying the whole aggregate, perfectly balanced.
+    assert_eq!(b.shard_stats.len(), 1);
+    assert_eq!(b.shard_resident.len(), 1);
+    assert_stats_eq(&b.expert_stats, &b.shard_stats[0],
+                    "aggregate vs only shard");
+    assert_eq!(b.shard_balance, 1.0);
+    // The unsharded outcome reports the same shape (one ledger).
+    assert_eq!(a.shard_stats.len(), 1);
+    assert_eq!(a.shard_balance, 1.0);
+}
+
+#[test]
+fn multi_shard_serving_is_deterministic_and_aggregates_exactly() {
+    // Same seed, same placement: two runs must agree on tokens,
+    // virtual time and the per-shard ledgers, and the aggregate
+    // ledger must be exactly the fold of the shard ledgers.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "orca", 3, 31);
+    let mut opts = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    opts.staging = StagingMode::Sync;
+    opts.shards = Some(3);
+    opts.placement = Placement::ReplicateHot;
+
+    let a = e.serve(&reqs, &opts).unwrap();
+    let b = e.serve(&reqs, &opts).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "sharded run is not deterministic");
+    assert_eq!(a.summary.makespan, b.summary.makespan);
+    assert_eq!(a.shard_stats.len(), 3);
+    assert_eq!(a.shard_resident, b.shard_resident);
+    assert_eq!(a.shard_balance, b.shard_balance);
+    for (i, (sa, sb)) in a.shard_stats.iter()
+        .zip(&b.shard_stats).enumerate() {
+        assert_stats_eq(sa, sb, &format!("shard {i} rerun"));
+    }
+
+    // Aggregate = fold of the shards, counter by counter.
+    let mut folded = ExpertStats::default();
+    for s in &a.shard_stats {
+        folded.absorb(s);
+    }
+    assert_stats_eq(&a.expert_stats, &folded, "aggregate vs shard fold");
+    assert!(a.shard_balance > 0.0 && a.shard_balance <= 1.0,
+            "balance must be a min/max ratio, got {}", a.shard_balance);
+}
+
+#[test]
+fn poisoned_staging_lock_degrades_to_sync_without_changing_tokens() {
+    // A panicked staging thread poisons the staged-table mutex. The
+    // provider must treat that as a permanent staging miss — counted,
+    // never unwrapped — and serve every acquire through the
+    // synchronous host-pool fallback with bit-identical results.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 2, 37);
+    let mut sync = ServeOptions::new(PolicyKind::DuoServe,
+                                     DeviceProfile::a6000());
+    sync.staging = StagingMode::Sync;
+    let mut faulty = ServeOptions::new(PolicyKind::DuoServe,
+                                       DeviceProfile::a6000());
+    assert_eq!(faulty.staging, StagingMode::Threaded);
+    faulty.staging_fault = true;
+
+    let a = e.serve(&reqs, &sync).unwrap();
+    let b = e.serve(&reqs, &faulty).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "poisoned staging changed the tokens");
+    for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+        assert_eq!(ea.steps, eb.steps,
+                   "poisoned staging changed the routing");
+    }
+    assert_eq!(a.summary.makespan, b.summary.makespan,
+               "poisoned staging leaked into virtual time");
+    let (sa, sb) = (a.expert_stats, b.expert_stats);
+    assert_eq!(sa.hits, sb.hits);
+    assert_eq!(sa.misses, sb.misses);
+    assert_eq!(sa.bytes_fetched, sb.bytes_fetched);
+    // Degradation is visible in the ledger, not hidden.
+    assert_eq!(sb.staged_acquires, 0,
+               "nothing can be staged through a poisoned lock");
+    assert!(sb.staging_poisoned > 0,
+            "poisoned-lock fallbacks must be counted");
+    assert_eq!(sb.staging_poisoned, sb.sync_acquires,
+               "every acquire must have fallen back synchronously");
+    assert_eq!(sa.staging_poisoned, 0,
+               "healthy runs must never report poisoned locks");
+}
+
+#[test]
+fn provider_survives_a_poisoned_staging_table() {
+    // Unit-level version of the degradation contract: after the lock
+    // is poisoned, staged lookups report empty, hints are still
+    // counted, and acquire falls back to the host pool's exact
+    // tensors while tallying the poisoned observation.
+    let dir = duoserve::testkit::ensure_tiny();
+    let man = Manifest::load(&dir, "mixtral-tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let pool = Arc::new(HostPool::load(&man, &rt).unwrap());
+    let mut p = StagedExpertProvider::new(pool.clone(),
+                                          DeviceExpertCache::new(2, 2), 64,
+                                          StagingMode::Threaded);
+    p.poison_staging_for_test();
+    let key = ExpertKey::routed(2, 1);
+
+    p.prefetch(&[key]);
+    let w = p.worker().unwrap();
+    w.drain();
+    assert_eq!(w.staged_len(), 0, "poisoned table must read as empty");
+    assert!(w.staged_get(key).is_none());
+
+    let got = p.acquire(key).unwrap();
+    let direct = pool.expert_tensors(key).unwrap();
+    assert!(Arc::ptr_eq(&got, &direct),
+            "fallback must deliver the host pool's exact tensors");
+    let s = p.stats();
+    assert_eq!(s.staging_poisoned, 1);
+    assert_eq!(s.sync_acquires, 1);
+    assert_eq!(s.staged_acquires, 0);
     assert_eq!(s.prefetch_hints, 1);
 }

@@ -51,7 +51,8 @@ fn cache_window_bounds_residency() {
     let mut c = DeviceExpertCache::new(2, 2);
     for layer in 0..10 {
         for e in 0..5 {
-            c.insert(ExpertKey::routed(layer, e), layer as f64 + e as f64);
+            let t = layer as f64 + e as f64;
+            c.insert(ExpertKey::routed(layer, e), t, t);
         }
         assert!(c.resident_count() <= 4,
                 "window violated: {} resident", c.resident_count());
@@ -64,7 +65,7 @@ fn unlimited_window_accumulates() {
     let mut c = DeviceExpertCache::new(4, 0);
     for layer in 0..6 {
         for e in 0..4 {
-            c.insert(ExpertKey::routed(layer, e), 1.0);
+            c.insert(ExpertKey::routed(layer, e), 1.0, 1.0);
         }
     }
     assert_eq!(c.resident_count(), 24);

@@ -24,7 +24,7 @@ fn prop_cache_never_exceeds_capacity_or_window() {
         for step in 0..100 {
             let key = ExpertKey::routed(r.below(12), r.below(16));
             if r.bool_with(0.7) {
-                c.insert(key, step as f64);
+                c.insert(key, step as f64, step as f64);
             } else {
                 c.touch(key, step as f64);
             }
@@ -63,7 +63,7 @@ fn prop_provider_hits_plus_misses_equals_touches() {
                 p.touch(key, i as f64);
                 touches += 1;
             } else {
-                p.admit(key, i as f64);
+                p.admit(key, i as f64, i as f64);
                 admits += 1;
             }
         }

@@ -267,7 +267,8 @@ fn comm_backlog_does_not_delay_cache_hits() {
     let t_gate = 1.0;
     let groups = [(0usize, 1usize), (1usize, 1usize)];
     for &(e, _) in &groups {
-        provider.admit(duoserve::memory::ExpertKey::routed(layer, e), 0.25);
+        provider.admit(duoserve::memory::ExpertKey::routed(layer, e), 0.25,
+                       0.25);
     }
     let mut cx = SimCtx {
         streams: &mut streams,
