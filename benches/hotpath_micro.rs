@@ -27,12 +27,14 @@ mod harness;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{Engine, ServeOptions};
+use duoserve::config::{DeviceProfile, LinkKind, PolicyKind};
+use duoserve::coordinator::{Engine, ServeOptions, SimCtx};
 use duoserve::experts::{ExpertProvider, Placement, ShardedExpertProvider,
                         StagedExpertProvider, StagingMode};
-use duoserve::memory::{DeviceExpertCache, ExpertKey};
+use duoserve::faults::{FaultPlan, FaultState, FetchFail, LinkSel, Window};
+use duoserve::memory::{DeviceExpertCache, ExpertKey, MemoryMeter};
 use duoserve::metrics::percentile;
+use duoserve::simx::{CostModel, Streams};
 use duoserve::predictor::{top_k, StateConstructor};
 use duoserve::runtime::{kernels, ArgRef, Tensor};
 use duoserve::util::Json;
@@ -321,6 +323,69 @@ fn main() -> anyhow::Result<()> {
         bench(&mut stats, "replicated_hot_hit", 10_000, || {
             let _ = repl.touch(hot, i as f64);
             i += 1;
+        });
+    }
+
+    // --- fault-path micro-ops -----------------------------------------
+    // retry_backoff_fetch: one SimCtx::fetch under a sure-fail plan —
+    // the host-side cost of the bounded retry loop (max_retries costed
+    // comm attempts + backoff arithmetic + per-attempt fault hashing)
+    // before the fetch degrades to its final slowed success.
+    // failover_fetch: residency ops on a 4-shard provider whose home
+    // shard is down — the rehome walk to the next live shard plus the
+    // failover-admit ledger path.
+    {
+        let cost = CostModel::new(&man, DeviceProfile::a6000());
+        let mut streams = Streams::new();
+        let mut provider = StagedExpertProvider::detached(
+            DeviceExpertCache::new(man.sim.top_k, 2),
+            man.paper.expert_bytes);
+        let mut meter = MemoryMeter::new(u64::MAX);
+        let plan = FaultPlan {
+            fetch_fails: vec![FetchFail {
+                prob: 1.0,
+                link: LinkSel::All,
+                window: Window { start: 0.0, end: f64::INFINITY },
+            }],
+            ..FaultPlan::default()
+        };
+        let mut fault_state = FaultState::default();
+        let mut cx = SimCtx {
+            streams: &mut streams,
+            provider: &mut provider,
+            meter: &mut meter,
+            cost: &cost,
+            expert_bytes: man.paper.expert_bytes,
+            n_layers: man.sim.n_layers,
+            n_experts: man.sim.n_experts,
+            top_k: man.sim.top_k,
+            faults: Some(&plan),
+            fault_state: &mut fault_state,
+        };
+        let key = ExpertKey::routed(0, 3);
+        let mut t = 0.0f64;
+        bench(&mut stats, "retry_backoff_fetch", 10_000, || {
+            cx.fault_state.step_retries = 0; // fresh per-step budget
+            t = cx.fetch(key, t, LinkKind::Pinned);
+        });
+
+        let mk = || {
+            StagedExpertProvider::new(engine.host.clone(),
+                                      DeviceExpertCache::new(2, 2), 1,
+                                      StagingMode::Sync)
+        };
+        let key = ExpertKey::routed(0, 2);
+        let probe = ShardedExpertProvider::new((0..4).map(|_| mk()).collect(),
+                                               Placement::Partition, vec![]);
+        let home = probe.compute_shard(key);
+        let mut part = ShardedExpertProvider::new(
+            (0..4).map(|_| mk()).collect(), Placement::Partition, vec![]);
+        part.set_shard_down(home, true);
+        let mut j = 0usize;
+        bench(&mut stats, "failover_fetch", 10_000, || {
+            part.admit(key, j as f64, j as f64);
+            let _ = part.touch(key, j as f64);
+            j += 1;
         });
     }
 

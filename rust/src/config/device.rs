@@ -9,12 +9,16 @@
 /// which historically sustains only a fraction of link bandwidth.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinkKind {
+    /// CUDA pinned staging buffers (~full PCIe bandwidth).
     Pinned,
+    /// Pageable host memory (fraction of link bandwidth).
     Pageable,
 }
 
+/// One testbed GPU, reduced to the quantities the cost model needs.
 #[derive(Debug, Clone)]
 pub struct DeviceProfile {
+    /// Marketing name ("A5000" | "A6000").
     pub name: String,
     /// GPU memory capacity in bytes (Table II's OOM threshold).
     pub vram_bytes: u64,
@@ -63,6 +67,7 @@ impl DeviceProfile {
         }
     }
 
+    /// Look up a profile by case-insensitive name; `None` if unknown.
     pub fn by_name(name: &str) -> Option<Self> {
         match name.to_ascii_lowercase().as_str() {
             "a5000" => Some(Self::a5000()),

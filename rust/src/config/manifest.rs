@@ -10,32 +10,55 @@ use anyhow::{Context, Result};
 
 use crate::util::Json;
 
+/// Dimensions of the scaled-down model that actually executes on CPU.
 #[derive(Debug, Clone)]
 pub struct SimDims {
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Hidden (residual-stream) width.
     pub d_model: usize,
+    /// Expert FFN inner width.
     pub d_ff: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts activated per token by the gate.
     pub top_k: usize,
+    /// Always-active shared experts per layer.
     pub n_shared: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum prompt length the artifacts were lowered for.
     pub max_seq: usize,
+    /// Maximum decode steps per request.
     pub max_decode: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// KV-cache context window length.
     pub kv_len: usize,
 }
 
+/// Dimensions of the *paper-scale* backbone the cost model prices.
 #[derive(Debug, Clone)]
 pub struct PaperDims {
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Hidden (residual-stream) width.
     pub d_model: usize,
+    /// Expert FFN inner width.
     pub d_ff: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts activated per token by the gate.
     pub top_k: usize,
+    /// Always-active shared experts per layer.
     pub n_shared: usize,
+    /// Bytes per parameter at the deployed quantisation.
     pub bytes_per_param: f64,
+    /// Total parameters, billions (Table I).
     pub total_params_b: f64,
+    /// Activated parameters per token, billions (Table I).
     pub active_params_b: f64,
     /// Bytes of one routed expert at the deployed quantisation — the
     /// unit the transfer engine moves.
@@ -43,51 +66,80 @@ pub struct PaperDims {
     /// Bytes of everything that is not a routed expert (resident on GPU
     /// from engine start, per the paper's ~10% observation).
     pub nonmoe_bytes: u64,
+    /// Bytes of all routed experts across all layers.
     pub total_expert_bytes: u64,
 }
 
+/// One serialised weight tensor referenced by the manifest.
 #[derive(Debug, Clone)]
 pub struct WeightEntry {
+    /// Manifest-relative file path.
     pub path: String,
+    /// Tensor shape, outermost dimension first.
     pub shape: Vec<usize>,
 }
 
+/// Held-out decode-predictor accuracy for one dataset.
 #[derive(Debug, Clone, Copy)]
 pub struct AccuracyEntry {
+    /// Fraction of steps where the predicted top-k set was exact.
     pub topk_exact: f64,
+    /// Fraction of steps where at least half the set was predicted.
     pub at_least_half: f64,
 }
 
+/// The decode-phase expert predictor's artifact set and metadata.
 #[derive(Debug, Clone)]
 pub struct PredictorManifest {
+    /// Manifest-relative path of the lowered predictor program.
     pub hlo: String,
+    /// Predictor input feature width.
     pub input_dim: usize,
+    /// Gate-history steps fed to the predictor.
     pub history_window: usize,
+    /// MLP hidden-layer widths.
     pub hidden_dims: Vec<usize>,
+    /// Manifest-relative path of the popularity table.
     pub popularity: String,
+    /// Manifest-relative path of the layer-affinity table.
     pub affinity: String,
+    /// Manifest-relative path of held-out evaluation traces.
     pub eval_traces: String,
+    /// Held-out accuracy per dataset.
     pub accuracy: HashMap<String, AccuracyEntry>,
+    /// Training episodes the predictor saw.
     pub train_episodes: usize,
 }
 
+/// Deserialised `manifest.json` for one model's artifact tree.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name (the artifact directory's basename).
     pub name: String,
     /// Version of the native component set the tree was generated
     /// with (`artifactgen::COMPONENTS_VERSION`); 0 for trees written
     /// before the field existed. `testkit::ensure_model` regenerates
     /// trees older than the current generator.
     pub components_version: u64,
+    /// Dimensions of the executable scaled-down model.
     pub sim: SimDims,
+    /// Dimensions of the paper-scale backbone (cost-model input).
     pub paper: PaperDims,
+    /// Token-count buckets expert programs were lowered for.
     pub expert_buckets: Vec<usize>,
+    /// Cross-layer gate affinity correlation used at generation time.
     pub gate_affinity_rho: f64,
+    /// Popularity skew strength used at generation time.
     pub gate_popularity_scale: f64,
+    /// Seed the artifact tree was generated from.
     pub seed: u64,
+    /// Component name -> manifest-relative lowered-program path.
     pub components: HashMap<String, String>,
+    /// Weight name -> serialised tensor entry.
     pub weights: HashMap<String, WeightEntry>,
+    /// Decode-predictor artifacts and metadata.
     pub predictor: PredictorManifest,
+    /// Manifest-relative path of the golden-token file.
     pub goldens: String,
     /// Directory the manifest was loaded from; all artifact paths are
     /// relative to it.
@@ -205,6 +257,7 @@ impl Manifest {
         self.root.join(rel)
     }
 
+    /// Absolute path of the named lowered component.
     pub fn component_path(&self, name: &str) -> Result<PathBuf> {
         let rel = self
             .components
@@ -213,6 +266,7 @@ impl Manifest {
         Ok(self.resolve(rel))
     }
 
+    /// The named weight's manifest entry.
     pub fn weight_entry(&self, name: &str) -> Result<&WeightEntry> {
         self.weights
             .get(name)

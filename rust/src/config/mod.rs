@@ -1,6 +1,8 @@
 //! Configuration: artifact manifests (written by `python -m compile.aot`),
 //! device profiles (the paper's two testbeds), and system-level knobs.
 
+#![warn(missing_docs)]
+
 mod device;
 mod manifest;
 mod system;

@@ -23,6 +23,7 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// All four policies, in the paper's comparison order.
     pub const ALL: [PolicyKind; 4] = [
         PolicyKind::Odf,
         PolicyKind::Lfp,
@@ -30,6 +31,7 @@ impl PolicyKind {
         PolicyKind::DuoServe,
     ];
 
+    /// Display label used in tables and reports.
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::DuoServe => "DuoServe",
@@ -61,8 +63,10 @@ impl FromStr for PolicyKind {
     }
 }
 
+/// Per-policy system knobs (cache sizing, predictor overheads).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
+    /// Which expert-scheduling policy these knobs configure.
     pub policy: PolicyKind,
     /// MIF's expert-cache capacity per layer, as a fraction of the
     /// expert pool for small pools; see `baselines::mif`.
@@ -81,6 +85,7 @@ pub struct SystemConfig {
 }
 
 impl SystemConfig {
+    /// The paper-calibrated defaults for `policy`.
     pub fn for_policy(policy: PolicyKind) -> Self {
         SystemConfig {
             policy,

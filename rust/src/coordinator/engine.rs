@@ -104,6 +104,12 @@ pub struct ServeOptions {
     /// poisoned-lock degradation path (staging miss → synchronous
     /// host-pool fallback). Never set outside tests.
     pub staging_fault: bool,
+    /// Seeded fault plan (`--faults`): simulated shard outages,
+    /// fetch failures with retry/backoff, link slowdowns and
+    /// prefetch-worker stalls, all perturbing only the virtual-time
+    /// schedule — tokens stay bit-identical under any plan. `None`
+    /// (the default) runs zero fault code.
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl ServeOptions {
@@ -124,6 +130,7 @@ impl ServeOptions {
             shards: None,
             placement: Placement::Partition,
             staging_fault: false,
+            faults: None,
         }
     }
 
@@ -185,6 +192,15 @@ pub struct ServeOutcome {
     pub tokens: Vec<Vec<i32>>,
     /// Arrivals dropped at the admission queue (continuous mode).
     pub rejected: u64,
+    /// Queued requests swept past their queue deadline (continuous
+    /// mode with `--queue-deadline`; otherwise 0).
+    pub expired: u64,
+    /// Arrivals dropped at the door by load shedding (continuous mode
+    /// with `--shed-above`; otherwise 0).
+    pub shed: u64,
+    /// In-flight requests cancelled past their hard deadline
+    /// (continuous mode with `--hard-deadline`; otherwise 0).
+    pub cancelled: u64,
     /// The virtual-time schedule of the continuous serving loop
     /// (empty in phase-bulk mode).
     pub events: Vec<ServerEvent>,
@@ -369,11 +385,13 @@ impl Engine {
         } else {
             opts.staging
         };
+        let poison = opts.staging_fault
+            || matches!(&opts.faults, Some(f) if f.worker_poison);
         let mk_shard = || {
             let p = StagedExpertProvider::new(self.host.clone(),
                                               self.make_cache(kind, sys),
                                               expert_bytes, staging);
-            if opts.staging_fault {
+            if poison {
                 p.poison_staging_for_test();
             }
             p
@@ -673,6 +691,16 @@ impl Engine {
 
         let mut now = 0.0f64;
         loop {
+            // Hard-deadline sweep before every decision: cancelled
+            // requests free their slot (scheduler side) and their KV
+            // rows (session side) at the current virtual time.
+            let late = sched.sweep_cancelled(now);
+            if !late.is_empty() {
+                for r in late {
+                    sess.cancel(r);
+                }
+                check!(sess, Some(&sched), sess.sync_kv(true));
+            }
             match sched.next_decision(now) {
                 Decision::AdmitPrefill(r) => {
                     check!(sess, Some(&sched), sess.begin_request());

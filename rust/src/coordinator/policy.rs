@@ -15,6 +15,7 @@
 
 use crate::config::PolicyKind;
 use crate::experts::ExpertProvider;
+use crate::faults::{FaultPlan, FaultState};
 use crate::memory::{ExpertKey, MemoryMeter, OomError};
 use crate::simx::{CostModel, Streams};
 
@@ -37,6 +38,12 @@ pub struct SimCtx<'a> {
     pub n_experts: usize,
     /// Experts the gate activates per token.
     pub top_k: usize,
+    /// Active fault plan (`None` in a fault-free run, which keeps
+    /// [`SimCtx::fetch`] on the untouched non-fault code path).
+    pub faults: Option<&'a FaultPlan>,
+    /// Mutable per-step fault bookkeeping (the retry budget spent so
+    /// far; reset by the session at every step boundary).
+    pub fault_state: &'a mut FaultState,
 }
 
 impl SimCtx<'_> {
@@ -59,15 +66,52 @@ impl SimCtx<'_> {
     /// so their schedules are untouched.
     pub fn fetch(&mut self, key: ExpertKey, ready_at: f64,
                  kind: crate::config::LinkKind) -> f64 {
-        let (dur, label) = if self.provider.peer_resident(key) {
+        let peer = self.provider.peer_resident(key);
+        let (dur, label) = if peer {
             (self.cost.cross_shard_transfer(), "fetch-peer")
         } else {
             (self.cost.expert_transfer(kind), "fetch")
         };
+        if let Some(plan) = self.faults {
+            return self.fetch_faulty(plan, key, ready_at, dur, label, peer);
+        }
         let done = self.streams.run(crate::simx::StreamId::Comm, ready_at,
                                     dur, label);
         self.provider.admit(key, done, ready_at);
         done
+    }
+
+    /// The fetch path under an active fault plan: each attempt is a
+    /// costed comm op (slowed by any active `link-slow` window); a
+    /// failed attempt retries with exponential backoff, bounded per
+    /// fetch (`retries`) and per step (`retry-budget`). Once the
+    /// bounds are exhausted the final attempt completes as a slowed
+    /// success — degradation, never a lost weight: the functional
+    /// tensors are untouched by construction. With an active but idle
+    /// plan every factor is exactly 1.0 and no attempt fails, so the
+    /// schedule is bit-identical to the fault-free path (pinned by the
+    /// `chaos` suite).
+    fn fetch_faulty(&mut self, plan: &FaultPlan, key: ExpertKey,
+                    ready_at: f64, dur: f64, label: &'static str,
+                    peer: bool) -> f64 {
+        let mut t = ready_at;
+        let mut attempt: u32 = 0;
+        loop {
+            let d = dur * plan.slow_factor(peer, t);
+            let end = self.streams.run(crate::simx::StreamId::Comm, t, d,
+                                       label);
+            let can_retry = attempt < plan.max_retries
+                && self.fault_state.step_retries < plan.step_retry_budget;
+            if can_retry && plan.fetch_fails(key, attempt, peer, t) {
+                attempt += 1;
+                self.fault_state.step_retries += 1;
+                self.provider.note_fetch_retry(key);
+                t = end + plan.backoff(attempt);
+                continue;
+            }
+            self.provider.admit(key, end, ready_at);
+            return end;
+        }
     }
 
     /// Residency lookup at `now` (counts the hit/miss centrally).

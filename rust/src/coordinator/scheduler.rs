@@ -85,6 +85,11 @@ impl<T> RequestQueue<T> {
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
+
+    /// Keep only the queued entries satisfying `f` (deadline sweeps).
+    pub fn retain(&mut self, f: impl FnMut(&T) -> bool) {
+        self.queue.retain(f);
+    }
 }
 
 /// Groups requests into fixed-size serving batches (Fig. 7's sweep).
@@ -141,6 +146,21 @@ pub struct ContinuousConfig {
     /// comparison. Irrelevant unless `ServeOptions::prefill_chunk`
     /// splits prefills.
     pub decode_priority: bool,
+    /// Queue deadline in virtual seconds: a request still *queued*
+    /// longer than this past its arrival expires (swept before
+    /// admission, counted, never served). `0.0` disables — the
+    /// default, which keeps the schedule bit-identical to the
+    /// pre-deadline scheduler.
+    pub queue_deadline: f64,
+    /// Hard deadline in virtual seconds: an *in-flight* request older
+    /// than this is cancelled — its slot and KV are released, its
+    /// partial output kept but unmeasured. `0.0` disables (default).
+    pub hard_deadline: f64,
+    /// Load shedding: arrivals are dropped at the door while the
+    /// admission queue already holds at least this many requests
+    /// (sustained overload), keeping queue delay — and thus surviving
+    /// requests' TTFT — bounded. `0` disables (default).
+    pub shed_threshold: usize,
 }
 
 impl Default for ContinuousConfig {
@@ -149,6 +169,9 @@ impl Default for ContinuousConfig {
             max_in_flight: 8,
             queue_capacity: 256,
             decode_priority: true,
+            queue_deadline: 0.0,
+            hard_deadline: 0.0,
+            shed_threshold: 0,
         }
     }
 }
@@ -173,6 +196,12 @@ pub enum ServerEvent {
     StepDone { batch: Vec<usize>, at: f64 },
     /// Request emitted its last token and released its slot.
     Complete { req: usize, at: f64 },
+    /// Queued past its queue deadline; swept without being served.
+    Expired { req: usize, at: f64 },
+    /// Dropped at the door by load shedding (queue over threshold).
+    Shed { req: usize, at: f64 },
+    /// In-flight past its hard deadline; cancelled, slot + KV freed.
+    Cancelled { req: usize, at: f64 },
 }
 
 /// What the engine should do next.
@@ -211,6 +240,13 @@ pub struct ContinuousScheduler {
     /// `decode_priority`, the next one favours the decode batch.
     just_chunked: bool,
     events: Vec<ServerEvent>,
+    /// Request i's arrival instant (deadline sweeps key off it).
+    arrival_of: Vec<f64>,
+    queue_deadline: f64,
+    hard_deadline: f64,
+    shed_threshold: usize,
+    expired: u64,
+    shed: u64,
 }
 
 impl ContinuousScheduler {
@@ -234,22 +270,80 @@ impl ContinuousScheduler {
             decode_priority: cfg.decode_priority,
             just_chunked: false,
             events: Vec::new(),
+            arrival_of: arrival_times.to_vec(),
+            queue_deadline: cfg.queue_deadline,
+            hard_deadline: cfg.hard_deadline,
+            shed_threshold: cfg.shed_threshold,
+            expired: 0,
+            shed: 0,
         }
     }
 
     /// Move every arrival with time <= now into the admission queue.
+    /// With load shedding on, arrivals hitting an over-threshold queue
+    /// are dropped at the door (counted separately from capacity
+    /// rejections — shedding is a policy choice, not backpressure).
     fn pump_arrivals(&mut self, now: f64) {
         while let Some(&(t, idx)) = self.arrivals.get(self.next_arrival) {
             if t > now {
                 break;
             }
             self.next_arrival += 1;
-            if self.queue.push(idx) {
+            if self.shed_threshold > 0 && self.queue.len() >= self.shed_threshold {
+                self.shed += 1;
+                self.events.push(ServerEvent::Shed { req: idx, at: t });
+            } else if self.queue.push(idx) {
                 self.events.push(ServerEvent::Arrival { req: idx, at: t });
             } else {
                 self.events.push(ServerEvent::Rejected { req: idx, at: t });
             }
         }
+    }
+
+    /// Sweep queued requests past the queue deadline (before any
+    /// admission at `now`): they leave the queue counted but unserved.
+    fn sweep_expired(&mut self, now: f64) {
+        if self.queue_deadline <= 0.0 {
+            return;
+        }
+        let deadline = self.queue_deadline;
+        let arrival_of = &self.arrival_of;
+        let mut gone: Vec<usize> = Vec::new();
+        self.queue.retain(|&idx| {
+            if now > arrival_of[idx] + deadline {
+                gone.push(idx);
+                false
+            } else {
+                true
+            }
+        });
+        for idx in gone {
+            self.expired += 1;
+            self.events.push(ServerEvent::Expired { req: idx, at: now });
+        }
+    }
+
+    /// Cancel every in-flight request (prefilling or decoding) past
+    /// the hard deadline at `now`: slots are freed here, and the
+    /// returned indices tell the engine to release each request's
+    /// session state (KV rows, pending output). Empty without a hard
+    /// deadline.
+    pub fn sweep_cancelled(&mut self, now: f64) -> Vec<usize> {
+        if self.hard_deadline <= 0.0 {
+            return Vec::new();
+        }
+        let deadline = self.hard_deadline;
+        let arrival_of = &self.arrival_of;
+        let late = |&idx: &usize| now > arrival_of[idx] + deadline;
+        let mut gone: Vec<usize> =
+            self.running.iter().copied().filter(late).collect();
+        gone.extend(self.prefilling.iter().copied().filter(late));
+        self.running.retain(|idx| !late(idx));
+        self.prefilling.retain(|idx| !late(idx));
+        for &idx in &gone {
+            self.events.push(ServerEvent::Cancelled { req: idx, at: now });
+        }
+        gone
     }
 
     /// Decide the next loop transition at virtual time `now`.
@@ -260,6 +354,7 @@ impl ContinuousScheduler {
     /// to the next arrival.
     pub fn next_decision(&mut self, now: f64) -> Decision {
         self.pump_arrivals(now);
+        self.sweep_expired(now);
         // Is the decode batch owed a step before more prefill work
         // runs? Only while a *pending* chunk queue exists — i.e.
         // prefills are actually splitting. With chunking off (or
@@ -343,6 +438,16 @@ impl ContinuousScheduler {
     /// Arrivals dropped at the admission queue.
     pub fn rejected(&self) -> u64 {
         self.queue.rejected()
+    }
+
+    /// Queued requests swept past their queue deadline.
+    pub fn expired(&self) -> u64 {
+        self.expired
+    }
+
+    /// Arrivals dropped at the door by load shedding.
+    pub fn shed(&self) -> u64 {
+        self.shed
     }
 
     /// Requests admitted but still waiting for a slot.
@@ -547,6 +652,70 @@ mod tests {
         assert_eq!(s.next_decision(0.3), Decision::DecodeStep);
         s.retire(0, 0.4);
         assert_eq!(s.next_decision(0.4), Decision::Finished);
+    }
+
+    #[test]
+    fn expired_requests_are_swept_before_admission() {
+        // Budget 1: request 0 holds the slot while 1 and 2 queue. By
+        // the time the slot frees, request 1 is past the 1s queue
+        // deadline — it expires instead of being admitted; request 2
+        // (arrived later) is still live and takes the slot.
+        let mut s = ContinuousScheduler::new(
+            &[0.0, 0.0, 1.5],
+            &ContinuousConfig { queue_deadline: 1.0, ..cfg(1, 8) });
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.1);
+        s.retire(0, 2.0);
+        assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(2));
+        assert_eq!(s.expired(), 1);
+        assert!(s.events().contains(
+            &ServerEvent::Expired { req: 1, at: 2.0 }));
+    }
+
+    #[test]
+    fn flash_crowd_sheds_above_threshold() {
+        // Five simultaneous arrivals against a shed threshold of 2:
+        // two enter the queue, three are dropped at the door. Shedding
+        // is counted apart from capacity rejections.
+        let mut s = ContinuousScheduler::new(
+            &[0.0; 5],
+            &ContinuousConfig { shed_threshold: 2, ..cfg(1, 64) });
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        assert_eq!(s.shed(), 3);
+        assert_eq!(s.rejected(), 0);
+        let shed: Vec<usize> = s
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                ServerEvent::Shed { req, .. } => Some(*req),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(shed, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn hard_deadline_cancels_in_flight_requests() {
+        // Request 0 decodes, request 1 is mid-chunked-prefill. Both
+        // blow the 1s hard deadline: the sweep frees both slots and
+        // reports them for session-side cleanup, and the queued
+        // request 2 can then take a slot.
+        let mut s = ContinuousScheduler::new(
+            &[0.0, 0.0, 0.0],
+            &ContinuousConfig { hard_deadline: 1.0, ..cfg(2, 8) });
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.chunk_done(1, 0.2);
+        assert!(s.sweep_cancelled(0.5).is_empty());
+        let mut gone = s.sweep_cancelled(2.0);
+        gone.sort_unstable();
+        assert_eq!(gone, vec![0, 1]);
+        assert!(s.running().is_empty());
+        assert_eq!(s.prefilling_len(), 0);
+        assert!(s.events().contains(
+            &ServerEvent::Cancelled { req: 0, at: 2.0 }));
+        assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(2));
     }
 
     #[test]

@@ -34,6 +34,7 @@ use anyhow::{bail, Result};
 
 use crate::config::SimDims;
 use crate::experts::ExpertProvider;
+use crate::faults::{FaultPlan, FaultState};
 use crate::memory::{ExpertKey, MemoryMeter, OomError};
 use crate::metrics::{summarize, RequestMetrics};
 use crate::predictor::StateConstructor;
@@ -335,6 +336,12 @@ pub(crate) struct ServeSession<'e> {
     /// Tokens emitted by decode steps (one per active request per
     /// step; prefill's first tokens are not counted here).
     decode_tokens: u64,
+    /// Active fault plan (`None` = fault-free: no fault code runs).
+    faults: Option<FaultPlan>,
+    /// Per-step fault bookkeeping (retry budget; reset every step).
+    fault_state: FaultState,
+    /// Requests cancelled past their hard deadline (continuous mode).
+    cancelled: u64,
 }
 
 impl<'e> ServeSession<'e> {
@@ -387,7 +394,41 @@ impl<'e> ServeSession<'e> {
             prefill_chunks: 0,
             decode_time: 0.0,
             decode_tokens: 0,
+            faults: opts.faults.clone(),
+            fault_state: FaultState::default(),
+            cancelled: 0,
         }
+    }
+
+    /// Step-boundary fault sync: toggle the provider's shard outages
+    /// and worker stall to match the plan at virtual time `now`, and
+    /// reset the per-step retry budget. A fault-free session (`faults
+    /// == None`) returns immediately without touching the provider.
+    fn sync_faults(&mut self, now: f64) {
+        if let Some(plan) = &self.faults {
+            for s in 0..self.provider.shard_count() {
+                self.provider.set_shard_down(s, plan.shard_down(s, now));
+            }
+            self.provider.set_worker_stalled(plan.worker_stalled(now));
+            self.fault_state.step_retries = 0;
+        }
+    }
+
+    /// Cancel an in-flight request past its hard deadline: marked done
+    /// (the next `sync_kv(true)` releases its KV rows) but *not*
+    /// served, so it is excluded from the latency summary — a
+    /// cancelled request has no completion to measure. Its tokens so
+    /// far stay in the outcome's token dump.
+    pub fn cancel(&mut self, ridx: usize) {
+        let st = &mut self.states[ridx];
+        st.done = true;
+        st.served = false;
+        self.cancelled += 1;
+    }
+
+    /// Requests cancelled past their hard deadline so far.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
     }
 
     /// Fixed GPU residency charged at session start.
@@ -399,7 +440,7 @@ impl<'e> ServeSession<'e> {
     /// Policy hook before one request's prefill.
     pub fn begin_request(&mut self) -> Result<(), OomError> {
         let Self { streams, provider, meter, cost, policy, expert_bytes,
-                   sim, .. } = self;
+                   sim, faults, fault_state, .. } = self;
         let mut cx = SimCtx {
             streams,
             provider: provider.as_mut(),
@@ -409,6 +450,8 @@ impl<'e> ServeSession<'e> {
             n_layers: sim.n_layers,
             n_experts: sim.n_experts,
             top_k: sim.top_k,
+            faults: faults.as_ref(),
+            fault_state,
         };
         policy.begin_request(&mut cx)
     }
@@ -431,7 +474,12 @@ impl<'e> ServeSession<'e> {
             .map(|s| {
                 if !s.tokens.is_empty() && (!release_done || !s.done) {
                     self.cost.kv_bytes(paper_layers, s.pos)
-                } else if s.tokens.is_empty() && s.prefill_pos > 0 {
+                } else if s.tokens.is_empty() && s.prefill_pos > 0
+                    && (!release_done || !s.done)
+                {
+                    // A request can be done with no tokens only when it
+                    // was cancelled mid-prefill: its chunk KV rows are
+                    // released like a completed request's.
                     self.cost.kv_bytes(paper_layers, s.prefill_pos)
                 } else {
                     0
@@ -450,6 +498,7 @@ impl<'e> ServeSession<'e> {
     /// arrived).
     pub fn prefill_step(&mut self, ridx: usize, start_at: f64)
                         -> Result<SimResult<PrefillProgress>> {
+        self.sync_faults(start_at);
         match self.prefill_chunk {
             None => Ok(self
                 .prefill(ridx, start_at)?
@@ -465,7 +514,7 @@ impl<'e> ServeSession<'e> {
                -> Result<SimResult<f64>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, expert_fanout, prefill_chunks,
-                   .. } = self;
+                   faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -557,6 +606,8 @@ impl<'e> ServeSession<'e> {
                 n_layers: sim.n_layers,
                 n_experts: sim.n_experts,
                 top_k: sim.top_k,
+                faults: faults.as_ref(),
+                fault_state: &mut *fault_state,
             };
             let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
                                                  t_layer_start, t_gate) {
@@ -600,7 +651,7 @@ impl<'e> ServeSession<'e> {
                        -> Result<SimResult<PrefillProgress>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, expert_fanout, prefill_chunks,
-                   .. } = self;
+                   faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -696,6 +747,8 @@ impl<'e> ServeSession<'e> {
                 n_layers: sim.n_layers,
                 n_experts: sim.n_experts,
                 top_k: sim.top_k,
+                faults: faults.as_ref(),
+                fault_state: &mut *fault_state,
             };
             let t_moe = match policy.prefill_moe(&mut cx, l, &groups,
                                                  t_layer_start, t_gate) {
@@ -744,9 +797,14 @@ impl<'e> ServeSession<'e> {
     /// matvecs instead; both paths are bit-identical per row and share
     /// the virtual-time schedule code verbatim.
     pub fn decode(&mut self, active: &[usize]) -> Result<SimResult<f64>> {
+        // Fault toggles follow virtual time: sync them to where this
+        // step will begin on the compute stream.
+        let t_sync = self.streams.free_at(StreamId::Compute);
+        self.sync_faults(t_sync);
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, ablation, force_rowwise,
-                   expert_fanout, decode_time, decode_tokens, .. } = self;
+                   expert_fanout, decode_time, decode_tokens,
+                   faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -881,6 +939,8 @@ impl<'e> ServeSession<'e> {
                         n_layers: sim.n_layers,
                         n_experts: sim.n_experts,
                         top_k: sim.top_k,
+                        faults: faults.as_ref(),
+                        fault_state: &mut *fault_state,
                     };
                     match policy.decode_moe(&mut cx, l, &groups,
                                             t_layer_start, t_gate,
@@ -966,7 +1026,7 @@ impl<'e> ServeSession<'e> {
                         anchor: StepAnchor) {
         {
             let Self { streams, provider, meter, cost, policy,
-                       expert_bytes, sim, .. } = self;
+                       expert_bytes, sim, faults, fault_state, .. } = self;
             let mut cx = SimCtx {
                 streams,
                 provider: provider.as_mut(),
@@ -976,6 +1036,8 @@ impl<'e> ServeSession<'e> {
                 n_layers: sim.n_layers,
                 n_experts: sim.n_experts,
                 top_k: sim.top_k,
+                faults: faults.as_ref(),
+                fault_state,
             };
             policy.end_decode_step(&mut cx);
         }
@@ -1038,9 +1100,18 @@ impl<'e> ServeSession<'e> {
                 steps: s.all_paths.clone(),
             })
             .collect();
+        let robustness = crate::metrics::Robustness {
+            expired: sched.map(|s| s.expired()).unwrap_or(0),
+            shed: sched.map(|s| s.shed()).unwrap_or(0),
+            cancelled: self.cancelled,
+            fetch_retries: stats.fetch_retries,
+            failover_fetches: stats.failover_fetches,
+            degraded_acquires: stats.degraded_acquires,
+        };
         let summary = summarize(&metrics, makespan)
             .with_decode_throughput(self.decode_tokens, self.decode_time)
-            .with_prefill_chunks(self.prefill_chunks);
+            .with_prefill_chunks(self.prefill_chunks)
+            .with_robustness(robustness);
         if oom.is_some() {
             metrics.clear();
         }
@@ -1064,6 +1135,9 @@ impl<'e> ServeSession<'e> {
             episodes,
             tokens: self.states.iter().map(|s| s.tokens.clone()).collect(),
             rejected: sched.map(|s| s.rejected()).unwrap_or(0),
+            expired: robustness.expired,
+            shed: robustness.shed,
+            cancelled: robustness.cancelled,
             events: sched.map(|s| s.events().to_vec()).unwrap_or_default(),
         }
     }

@@ -29,6 +29,17 @@ pub struct ExpertStats {
     /// fallback instead of panicking the serving thread. Always 0 in a
     /// healthy run.
     pub staging_poisoned: u64,
+    /// Functional acquires that degraded to the synchronous path for
+    /// *any* robustness reason — a poisoned staging lock or a stalled
+    /// prefetch worker (fault injection). Superset of
+    /// `staging_poisoned`; always 0 in a healthy run.
+    pub degraded_acquires: u64,
+    /// Extra simulated transfer attempts paid for by retry-with-backoff
+    /// after an injected fetch failure. Always 0 without a fault plan.
+    pub fetch_retries: u64,
+    /// Simulated fetches admitted on a failover shard because the key's
+    /// home shard was down. Always 0 without a fault plan.
+    pub failover_fetches: u64,
     /// Online decode-predictor accuracy (Table III's counters).
     pub accuracy: PredictorAccuracy,
 }
@@ -64,6 +75,9 @@ impl ExpertStats {
         self.sync_acquires += other.sync_acquires;
         self.prefetch_hints += other.prefetch_hints;
         self.staging_poisoned += other.staging_poisoned;
+        self.degraded_acquires += other.degraded_acquires;
+        self.fetch_retries += other.fetch_retries;
+        self.failover_fetches += other.failover_fetches;
         self.accuracy.merge(&other.accuracy);
     }
 }
@@ -107,12 +121,14 @@ mod tests {
         let mut a = ExpertStats {
             hits: 1, misses: 2, bytes_fetched: 3, staged_acquires: 4,
             sync_acquires: 5, prefetch_hints: 6, staging_poisoned: 7,
+            degraded_acquires: 8, fetch_retries: 9, failover_fetches: 10,
             ..Default::default()
         };
         a.accuracy.observe(&[1], &[1]);
         let mut b = ExpertStats {
             hits: 10, misses: 20, bytes_fetched: 30, staged_acquires: 40,
             sync_acquires: 50, prefetch_hints: 60, staging_poisoned: 70,
+            degraded_acquires: 80, fetch_retries: 90, failover_fetches: 100,
             ..Default::default()
         };
         b.accuracy.observe(&[2], &[3]);
@@ -124,6 +140,9 @@ mod tests {
         assert_eq!(a.sync_acquires, 55);
         assert_eq!(a.prefetch_hints, 66);
         assert_eq!(a.staging_poisoned, 77);
+        assert_eq!(a.degraded_acquires, 88);
+        assert_eq!(a.fetch_retries, 99);
+        assert_eq!(a.failover_fetches, 110);
         assert_eq!(a.accuracy.total, 2);
         assert_eq!(a.accuracy.exact, 1);
     }

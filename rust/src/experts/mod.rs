@@ -150,4 +150,23 @@ pub trait ExpertProvider: Send {
     fn compute_shard(&self, _key: ExpertKey) -> usize {
         0
     }
+
+    // --- fault-injection surface (rust/src/faults): the session syncs
+    // these from the FaultPlan at every step boundary; without a plan
+    // they are never called, so fault-free runs are untouched ---------
+
+    /// Mark one simulated shard down/up. While down, the shard's home
+    /// experts deterministically rehome to the next live shard
+    /// (failover); routing is restored on recovery. Single-device
+    /// providers ignore it — there is no peer to fail over to.
+    fn set_shard_down(&mut self, _shard: usize, _down: bool) {}
+
+    /// Mark the prefetch worker stalled/recovered. While stalled,
+    /// staged lookups degrade to the synchronous acquire path (counted
+    /// as `degraded_acquires` in the ledger).
+    fn set_worker_stalled(&mut self, _stalled: bool) {}
+
+    /// Count one retry of a failed simulated fetch against the key's
+    /// ledger (`fetch_retries`).
+    fn note_fetch_retry(&mut self, _key: ExpertKey) {}
 }

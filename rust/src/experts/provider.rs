@@ -39,6 +39,10 @@ pub struct StagedExpertProvider {
     /// byte accounting uses).
     expert_bytes: u64,
     worker: Option<PrefetchWorker>,
+    /// Fault injection: while true (a `worker-stall` window is
+    /// active), staged lookups are skipped and every acquire degrades
+    /// to the synchronous path, counted as `degraded_acquires`.
+    stalled: bool,
 }
 
 impl StagedExpertProvider {
@@ -56,6 +60,7 @@ impl StagedExpertProvider {
             stats: ExpertStats::default(),
             expert_bytes,
             worker,
+            stalled: false,
         }
     }
 
@@ -69,7 +74,15 @@ impl StagedExpertProvider {
             stats: ExpertStats::default(),
             expert_bytes,
             worker: None,
+            stalled: false,
         }
+    }
+
+    /// Count one failover admit on this shard's ledger (called by the
+    /// sharded provider when a key rehomed here because its home shard
+    /// is down).
+    pub(crate) fn note_failover(&mut self) {
+        self.stats.failover_fetches += 1;
     }
 
     /// The staging worker, when running in threaded mode (benches and
@@ -105,16 +118,27 @@ impl ExpertProvider for StagedExpertProvider {
 
     fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
         if let Some(w) = &self.worker {
-            match w.staged_lookup(key) {
-                StagedLookup::Hit(t) => {
-                    self.stats.staged_acquires += 1;
-                    return Ok(t);
+            if self.stalled {
+                // Injected worker stall: the staged table is treated
+                // as unavailable, the acquire degrades to the
+                // synchronous path below. Counted, never a panic.
+                self.stats.degraded_acquires += 1;
+            } else {
+                match w.staged_lookup(key) {
+                    StagedLookup::Hit(t) => {
+                        self.stats.staged_acquires += 1;
+                        return Ok(t);
+                    }
+                    StagedLookup::Miss => {}
+                    // A panicked staging thread must never take the
+                    // serving thread down with it: count the
+                    // degradation and read the host pool
+                    // synchronously.
+                    StagedLookup::Poisoned => {
+                        self.stats.staging_poisoned += 1;
+                        self.stats.degraded_acquires += 1;
+                    }
                 }
-                StagedLookup::Miss => {}
-                // A panicked staging thread must never take the
-                // serving thread down with it: count the degradation
-                // and read the host pool synchronously.
-                StagedLookup::Poisoned => self.stats.staging_poisoned += 1,
             }
         }
         let pool = match &self.pool {
@@ -158,6 +182,14 @@ impl ExpertProvider for StagedExpertProvider {
 
     fn stats(&self) -> ExpertStats {
         self.stats
+    }
+
+    fn set_worker_stalled(&mut self, stalled: bool) {
+        self.stalled = stalled;
+    }
+
+    fn note_fetch_retry(&mut self, _key: ExpertKey) {
+        self.stats.fetch_retries += 1;
     }
 }
 

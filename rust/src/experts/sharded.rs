@@ -71,6 +71,11 @@ pub struct ShardedExpertProvider {
     /// Keys the placement replicates on every shard
     /// ([`Placement::ReplicateHot`] only; empty under partition).
     hot: HashSet<ExpertKey>,
+    /// Fault injection: per-shard outage flags, synced from the
+    /// `FaultPlan` at step boundaries. A down shard's home keys
+    /// deterministically rehome to the next live shard (see
+    /// [`Self::route`]); all false in a fault-free run.
+    down: Vec<bool>,
 }
 
 impl ShardedExpertProvider {
@@ -85,7 +90,8 @@ impl ShardedExpertProvider {
             Placement::ReplicateHot => hot_set.into_iter().collect(),
             Placement::Partition => HashSet::new(),
         };
-        ShardedExpertProvider { shards, placement, hot }
+        let down = vec![false; shards.len()];
+        ShardedExpertProvider { shards, placement, hot, down }
     }
 
     /// The configured placement policy.
@@ -112,6 +118,27 @@ impl ShardedExpertProvider {
         self.placement == Placement::ReplicateHot && self.hot.contains(&key)
     }
 
+    /// The shard that *currently* serves this key: the home shard when
+    /// it is live, otherwise the next live shard scanning upward from
+    /// the home index (deterministic failover, restored the moment the
+    /// home recovers). With every shard down there is no failover
+    /// target, so routing stays at home — serving degrades, it never
+    /// dead-ends.
+    fn route(&self, key: ExpertKey) -> usize {
+        let n = self.shards.len();
+        let h = self.home(key);
+        if !self.down[h] {
+            return h;
+        }
+        for off in 1..n {
+            let s = (h + off) % n;
+            if !self.down[s] {
+                return s;
+            }
+        }
+        h
+    }
+
     /// Drop staged entries of layers below `layer` on every shard's
     /// worker (the sharded mirror of
     /// [`StagedExpertProvider::retire_below`]).
@@ -127,7 +154,7 @@ impl ExpertProvider for ShardedExpertProvider {
         let n = self.shards.len();
         let mut groups: Vec<Vec<ExpertKey>> = vec![Vec::new(); n];
         for &k in keys {
-            groups[self.home(k)].push(k);
+            groups[self.route(k)].push(k);
         }
         for (i, g) in groups.into_iter().enumerate() {
             if !g.is_empty() {
@@ -137,29 +164,41 @@ impl ExpertProvider for ShardedExpertProvider {
     }
 
     fn acquire(&mut self, key: ExpertKey) -> Result<Arc<CachedTensors>> {
-        let h = self.home(key);
-        self.shards[h].acquire(key)
+        let r = self.route(key);
+        self.shards[r].acquire(key)
     }
 
     fn touch(&mut self, key: ExpertKey, now: f64) -> Option<f64> {
-        let h = self.home(key);
-        self.shards[h].touch(key, now)
+        let r = self.route(key);
+        self.shards[r].touch(key, now)
     }
 
     fn contains(&self, key: ExpertKey) -> bool {
-        self.shards[self.home(key)].contains(key)
+        self.shards[self.route(key)].contains(key)
     }
 
     fn admit(&mut self, key: ExpertKey, ready_at: f64, now: f64) {
+        let dst = self.route(key);
+        if dst != self.home(key) {
+            // The key's home shard is down: this transfer lands on the
+            // failover shard (ledger: failover_fetches).
+            self.shards[dst].note_failover();
+        }
         if self.replicated(key) {
-            // Broadcast: every shard admits a replica and pays for its
-            // copy of the bytes (replication traffic is real traffic).
-            for s in &mut self.shards {
-                s.admit(key, ready_at, now);
+            // Broadcast: every live shard admits a replica and pays
+            // for its copy of the bytes (replication traffic is real
+            // traffic). Down shards are skipped — unless every shard
+            // is down, in which case the outage degrades to plain
+            // broadcast rather than dropping the admit.
+            let any_live = self.down.iter().any(|&d| !d);
+            for i in 0..self.shards.len() {
+                if any_live && self.down[i] {
+                    continue;
+                }
+                self.shards[i].admit(key, ready_at, now);
             }
         } else {
-            let h = self.home(key);
-            self.shards[h].admit(key, ready_at, now);
+            self.shards[dst].admit(key, ready_at, now);
         }
     }
 
@@ -205,15 +244,34 @@ impl ExpertProvider for ShardedExpertProvider {
     }
 
     fn peer_resident(&self, key: ExpertKey) -> bool {
-        let h = self.home(key);
+        // A down shard's replica is unreachable: it can neither serve
+        // a device-to-device transfer nor count as a peer copy.
+        let r = self.route(key);
         self.shards
             .iter()
             .enumerate()
-            .any(|(i, s)| i != h && s.contains(key))
+            .any(|(i, s)| i != r && !self.down[i] && s.contains(key))
     }
 
     fn compute_shard(&self, key: ExpertKey) -> usize {
-        self.home(key)
+        self.route(key)
+    }
+
+    fn set_shard_down(&mut self, shard: usize, down: bool) {
+        if shard < self.down.len() {
+            self.down[shard] = down;
+        }
+    }
+
+    fn set_worker_stalled(&mut self, stalled: bool) {
+        for s in &mut self.shards {
+            s.set_worker_stalled(stalled);
+        }
+    }
+
+    fn note_fetch_retry(&mut self, key: ExpertKey) {
+        let r = self.route(key);
+        self.shards[r].note_fetch_retry(key);
     }
 }
 
@@ -292,6 +350,55 @@ mod tests {
         p.admit(cold, 3.0, 3.0);
         assert_eq!(p.shard_resident().iter().sum::<usize>(), 4);
         assert!(!p.peer_resident(cold));
+    }
+
+    #[test]
+    fn failover_rehomes_to_next_live_shard_and_restores_on_recovery() {
+        let mut p = ShardedExpertProvider::new(detached_shards(4),
+                                               Placement::Partition, vec![]);
+        let key = ExpertKey::routed(2, 5);
+        let home = p.compute_shard(key);
+        // kill the home shard: traffic deterministically rehomes
+        p.set_shard_down(home, true);
+        let failover = p.compute_shard(key);
+        assert_ne!(failover, home, "down shard still routed");
+        assert_eq!(p.touch(key, 1.0), None);
+        p.admit(key, 2.0, 1.0);
+        assert_eq!(p.touch(key, 3.0), Some(2.0));
+        let per = p.shard_stats();
+        assert_eq!(per[failover].failover_fetches, 1);
+        assert_eq!(per[home].touches(), 0, "down shard saw traffic");
+        assert_eq!(p.stats().failover_fetches, 1);
+        // recovery: routing snaps back to the home shard
+        p.set_shard_down(home, false);
+        assert_eq!(p.compute_shard(key), home);
+        // the failover copy is now a peer replica of the live home
+        assert!(p.peer_resident(key));
+    }
+
+    #[test]
+    fn down_shard_replicas_are_not_peers_and_total_outage_keeps_home() {
+        let key = ExpertKey::routed(1, 3);
+        let mut p = ShardedExpertProvider::new(detached_shards(2),
+                                               Placement::ReplicateHot,
+                                               vec![key]);
+        p.admit(key, 1.0, 0.5); // replica on both shards
+        let home = p.compute_shard(key);
+        let peer = 1 - home;
+        assert!(p.peer_resident(key));
+        // the peer's replica becomes unreachable while it is down
+        p.set_shard_down(peer, true);
+        assert!(!p.peer_resident(key));
+        // a replicated admit during the outage skips the down shard
+        let bytes_before = p.shard_stats()[peer].bytes_fetched;
+        p.admit(key, 2.0, 1.5);
+        assert_eq!(p.shard_stats()[peer].bytes_fetched, bytes_before);
+        // total outage: no live failover target, routing stays home
+        p.set_shard_down(home, true);
+        assert_eq!(p.compute_shard(key), home);
+        p.admit(key, 3.0, 2.5); // degrades to plain broadcast, no panic
+        // out-of-range shard indices are ignored, not a panic
+        p.set_shard_down(99, true);
     }
 
     #[test]

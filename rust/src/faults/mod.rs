@@ -1,0 +1,521 @@
+#![warn(missing_docs)]
+//! Deterministic fault injection over the virtual-time schedule.
+//!
+//! A [`FaultPlan`] is a seeded description of *when* the simulated
+//! serving fabric misbehaves: shard outages (transient or permanent),
+//! host->device and peer-link transfer failures and slowdowns, and
+//! prefetch-worker stalls/poisoning. Every query is a pure function of
+//! the plan and the *virtual* clock — no wall time, no shared RNG
+//! stream — so a faulty run is exactly reproducible and faults can
+//! only perturb the schedule, never the functional weights: token
+//! streams stay bit-identical to the fault-free run (the `chaos` suite
+//! pins this).
+//!
+//! Degradation, not failure: a failed fetch retries with exponential
+//! backoff (each attempt a costed comm op) up to [`FaultPlan::
+//! max_retries`] per fetch and a per-step retry budget; once the
+//! bounds are exhausted the final attempt completes as a slowed
+//! success. A down shard's home experts deterministically rehome to
+//! the next live shard ([`crate::experts::ShardedExpertProvider`]);
+//! a stalled worker degrades acquires to the synchronous host-pool
+//! path. All of it is counted in the [`crate::experts::ExpertStats`]
+//! ledger (`fetch_retries`, `failover_fetches`, `degraded_acquires`).
+//!
+//! The CLI form (`--faults <spec>`) is a comma-separated clause list,
+//! parsed by [`FaultPlan::parse`]; `none` (or an empty string) means
+//! "no plan at all" — the serving loop takes the exact fault-free code
+//! path, bit-identical to a build without this module.
+
+use crate::memory::ExpertKey;
+use anyhow::{bail, Context, Result};
+
+/// A half-open virtual-time interval `[start, end)`; `end` may be
+/// `inf` for a permanent fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Window {
+    /// Virtual time the fault begins (inclusive, seconds).
+    pub start: f64,
+    /// Virtual time the fault clears (exclusive; `f64::INFINITY` for
+    /// a permanent fault).
+    pub end: f64,
+}
+
+impl Window {
+    /// Does the window cover virtual time `t`?
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start && t < self.end
+    }
+
+    fn parse(s: &str) -> Result<Window> {
+        let (a, b) = s
+            .split_once('-')
+            .with_context(|| format!("window {s:?} is not START-END"))?;
+        let start: f64 = a
+            .trim()
+            .parse()
+            .with_context(|| format!("bad window start {a:?}"))?;
+        let b = b.trim();
+        let end = if b.eq_ignore_ascii_case("inf") {
+            f64::INFINITY
+        } else {
+            b.parse::<f64>()
+                .with_context(|| format!("bad window end {b:?}"))?
+        };
+        if !start.is_finite() || start < 0.0 || end.is_nan() || end < start {
+            bail!("window {s:?} must satisfy 0 <= start <= end");
+        }
+        Ok(Window { start, end })
+    }
+}
+
+/// Which transfer link a fetch fault applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkSel {
+    /// Both the host upload and the device-to-device link.
+    All,
+    /// Host->device uploads only (`fetch` ops).
+    Host,
+    /// Peer device-to-device transfers only (`fetch-peer` ops).
+    Peer,
+}
+
+impl LinkSel {
+    fn applies(self, peer: bool) -> bool {
+        match self {
+            LinkSel::All => true,
+            LinkSel::Host => !peer,
+            LinkSel::Peer => peer,
+        }
+    }
+}
+
+/// One simulated device shard unavailable during a window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardOutage {
+    /// Shard index (out of `--shards N`).
+    pub shard: usize,
+    /// Outage window (`end = inf` makes it permanent).
+    pub window: Window,
+}
+
+/// Transfer attempts on a link fail with probability `prob` during a
+/// window (decided deterministically per `(key, attempt)` from the
+/// plan seed — see [`FaultPlan::fetch_fails`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FetchFail {
+    /// Per-attempt failure probability in `[0, 1]`.
+    pub prob: f64,
+    /// Which link the clause applies to.
+    pub link: LinkSel,
+    /// When the clause is active.
+    pub window: Window,
+}
+
+/// Transfers on a link are slowed by a multiplicative factor during a
+/// window (overlapping clauses multiply).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSlow {
+    /// Duration multiplier (`>= 1` slows, `< 1` would speed up).
+    pub factor: f64,
+    /// Which link the clause applies to.
+    pub link: LinkSel,
+    /// When the clause is active.
+    pub window: Window,
+}
+
+/// A seeded, simulated-time fault schedule (see the module docs).
+///
+/// Immutable once parsed: every query is a pure function of
+/// `(plan, virtual time, key, attempt)`, which is what makes faulty
+/// runs exactly reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the deterministic per-attempt failure decisions.
+    pub seed: u64,
+    /// Retry bound per individual fetch (`retries:N`).
+    pub max_retries: u32,
+    /// Retry bound per serving step across all fetches
+    /// (`retry-budget:N`) — the cap on extra comm ops one step may pay.
+    pub step_retry_budget: u64,
+    /// Exponential-backoff base in virtual seconds (`backoff:SECS`);
+    /// attempt `k` waits `base * 2^(k-1)` before re-issuing.
+    pub backoff_base: f64,
+    /// Shard outage clauses (`shard-down:S@A-B`).
+    pub outages: Vec<ShardOutage>,
+    /// Transfer-failure clauses (`fetch-fail:[host:|peer:]P@A-B`).
+    pub fetch_fails: Vec<FetchFail>,
+    /// Transfer-slowdown clauses (`link-slow:[host:|peer:]F@A-B`).
+    pub link_slows: Vec<LinkSlow>,
+    /// Prefetch-worker stall windows (`worker-stall:A-B`): staged
+    /// lookups degrade to the synchronous path while active.
+    pub worker_stalls: Vec<Window>,
+    /// Poison the staging-table lock at startup (`worker-poison`) —
+    /// the persistent-fault twin of PR 6's `staging_fault` test hook.
+    pub worker_poison: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            max_retries: 3,
+            step_retry_budget: 32,
+            backoff_base: 2e-4,
+            outages: Vec::new(),
+            fetch_fails: Vec::new(),
+            link_slows: Vec::new(),
+            worker_stalls: Vec::new(),
+            worker_poison: false,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the CLI spec. `none` / empty means "no plan" (`Ok(None)`)
+    /// — the serving loop then takes the untouched fault-free path.
+    ///
+    /// Grammar: comma-separated clauses, windows are `START-END` in
+    /// virtual seconds with `inf` as an open end. Numbers are plain
+    /// decimals (no exponent form — `-` separates the window bounds).
+    ///
+    /// ```text
+    /// seed:7,shard-down:1@0.0-0.25,fetch-fail:0.3@0-inf,
+    /// link-slow:peer:2.0@0.1-inf,worker-stall:0-0.05,worker-poison,
+    /// retries:4,retry-budget:16,backoff:0.0005
+    /// ```
+    pub fn parse(spec: &str) -> Result<Option<FaultPlan>> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("none") {
+            return Ok(None);
+        }
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if clause == "worker-poison" {
+                plan.worker_poison = true;
+                continue;
+            }
+            let (name, rest) = clause.split_once(':').with_context(|| {
+                format!("fault clause {clause:?} is not NAME:ARGS")
+            })?;
+            match name {
+                "seed" => plan.seed = rest.parse().context("bad seed")?,
+                "retries" => {
+                    plan.max_retries = rest.parse().context("bad retries")?
+                }
+                "retry-budget" => {
+                    plan.step_retry_budget =
+                        rest.parse().context("bad retry-budget")?
+                }
+                "backoff" => {
+                    plan.backoff_base = rest.parse().context("bad backoff")?;
+                    if plan.backoff_base < 0.0 {
+                        bail!("backoff must be >= 0");
+                    }
+                }
+                "shard-down" => {
+                    let (s, w) = rest.split_once('@').with_context(|| {
+                        format!("shard-down clause {rest:?} is not SHARD@A-B")
+                    })?;
+                    plan.outages.push(ShardOutage {
+                        shard: s.parse().context("bad shard index")?,
+                        window: Window::parse(w)?,
+                    });
+                }
+                "fetch-fail" => {
+                    let (link, rest) = split_link(rest);
+                    let (p, w) = rest.split_once('@').with_context(|| {
+                        format!("fetch-fail clause {rest:?} is not P@A-B")
+                    })?;
+                    let prob: f64 =
+                        p.parse().context("bad fetch-fail probability")?;
+                    if !(0.0..=1.0).contains(&prob) {
+                        bail!("fetch-fail probability {prob} not in [0,1]");
+                    }
+                    plan.fetch_fails.push(FetchFail {
+                        prob,
+                        link,
+                        window: Window::parse(w)?,
+                    });
+                }
+                "link-slow" => {
+                    let (link, rest) = split_link(rest);
+                    let (f, w) = rest.split_once('@').with_context(|| {
+                        format!("link-slow clause {rest:?} is not F@A-B")
+                    })?;
+                    let factor: f64 =
+                        f.parse().context("bad link-slow factor")?;
+                    if factor <= 0.0 {
+                        bail!("link-slow factor must be > 0");
+                    }
+                    plan.link_slows.push(LinkSlow {
+                        factor,
+                        link,
+                        window: Window::parse(w)?,
+                    });
+                }
+                "worker-stall" => {
+                    plan.worker_stalls.push(Window::parse(rest)?)
+                }
+                other => bail!(
+                    "unknown fault clause {other:?} (clauses: seed, retries, \
+                     retry-budget, backoff, shard-down, fetch-fail, \
+                     link-slow, worker-stall, worker-poison)"
+                ),
+            }
+        }
+        Ok(Some(plan))
+    }
+
+    /// Is `shard` inside any of its outage windows at virtual time
+    /// `now`?
+    pub fn shard_down(&self, shard: usize, now: f64) -> bool {
+        self.outages
+            .iter()
+            .any(|o| o.shard == shard && o.window.contains(now))
+    }
+
+    /// Is the prefetch worker stalled at virtual time `now`?
+    pub fn worker_stalled(&self, now: f64) -> bool {
+        self.worker_stalls.iter().any(|w| w.contains(now))
+    }
+
+    /// Combined slowdown factor for a transfer issued at `now` on the
+    /// host (`peer = false`) or device-to-device (`peer = true`) link.
+    /// 1.0 when no clause is active — and `dur * 1.0 == dur` exactly,
+    /// so an active-but-idle plan cannot move the schedule.
+    pub fn slow_factor(&self, peer: bool, now: f64) -> f64 {
+        let mut f = 1.0;
+        for s in &self.link_slows {
+            if s.link.applies(peer) && s.window.contains(now) {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+
+    /// Does attempt number `attempt` (0-based) of fetching `key` at
+    /// virtual time `now` fail? Decided by comparing a splitmix64 hash
+    /// of `(seed, key, attempt)` against the strongest active failure
+    /// probability — deterministic per run, independent per attempt
+    /// (so retries can succeed), and drawing from no shared RNG stream.
+    pub fn fetch_fails(
+        &self,
+        key: ExpertKey,
+        attempt: u32,
+        peer: bool,
+        now: f64,
+    ) -> bool {
+        let mut prob = 0.0f64;
+        for f in &self.fetch_fails {
+            if f.link.applies(peer) && f.window.contains(now) {
+                prob = prob.max(f.prob);
+            }
+        }
+        if prob <= 0.0 {
+            return false;
+        }
+        let u = hash01(
+            self.seed,
+            key.layer as u64,
+            ((key.expert as u64) << 1) | key.shared as u64,
+            attempt as u64,
+        );
+        u < prob
+    }
+
+    /// Backoff delay (virtual seconds) before retry `attempt`
+    /// (1-based): `backoff_base * 2^(attempt-1)`.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        self.backoff_base * f64::from(1u32 << (attempt - 1).min(20))
+    }
+
+    /// Does any clause exist at all? (An active-but-empty plan takes
+    /// the degraded code path yet must not move the schedule.)
+    pub fn is_empty(&self) -> bool {
+        self.outages.is_empty()
+            && self.fetch_fails.is_empty()
+            && self.link_slows.is_empty()
+            && self.worker_stalls.is_empty()
+            && !self.worker_poison
+    }
+}
+
+/// Mutable per-run fault bookkeeping threaded through `SimCtx`: the
+/// per-step retry budget spent so far (reset at every step boundary by
+/// the session's fault sync).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultState {
+    /// Retries already paid for in the current serving step.
+    pub step_retries: u64,
+}
+
+fn split_link(rest: &str) -> (LinkSel, &str) {
+    if let Some(r) = rest.strip_prefix("host:") {
+        (LinkSel::Host, r)
+    } else if let Some(r) = rest.strip_prefix("peer:") {
+        (LinkSel::Peer, r)
+    } else {
+        (LinkSel::All, rest)
+    }
+}
+
+/// splitmix64-based hash of four words onto `[0, 1)`.
+fn hash01(seed: u64, a: u64, b: u64, c: u64) -> f64 {
+    let mut x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(a)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        .wrapping_add(b)
+        .wrapping_mul(0x94D0_49BB_1331_11EB)
+        .wrapping_add(c);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_and_empty_parse_to_no_plan() {
+        assert_eq!(FaultPlan::parse("none").unwrap(), None);
+        assert_eq!(FaultPlan::parse("").unwrap(), None);
+        assert_eq!(FaultPlan::parse("  NONE ").unwrap(), None);
+    }
+
+    #[test]
+    fn full_spec_round_trips_every_clause() {
+        let plan = FaultPlan::parse(
+            "seed:7,retries:4,retry-budget:16,backoff:0.0005,\
+             shard-down:1@0.0-0.25,shard-down:2@1-inf,\
+             fetch-fail:0.3@0-inf,fetch-fail:peer:1.0@0-2,\
+             link-slow:2.0@0.5-inf,link-slow:host:1.5@0-1,\
+             worker-stall:0-0.05,worker-poison",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.max_retries, 4);
+        assert_eq!(plan.step_retry_budget, 16);
+        assert!((plan.backoff_base - 5e-4).abs() < 1e-12);
+        assert_eq!(plan.outages.len(), 2);
+        assert_eq!(plan.outages[1].window.end, f64::INFINITY);
+        assert_eq!(plan.fetch_fails.len(), 2);
+        assert_eq!(plan.fetch_fails[1].link, LinkSel::Peer);
+        assert_eq!(plan.link_slows.len(), 2);
+        assert!(plan.worker_poison);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn malformed_specs_fail_with_context() {
+        for bad in [
+            "bogus:1",
+            "shard-down:x@0-1",
+            "shard-down:1",
+            "fetch-fail:1.5@0-1",
+            "fetch-fail:0.5",
+            "link-slow:0@0-1",
+            "worker-stall:5-1",
+            "worker-stall:-1-2",
+            "backoff:-1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn windows_are_half_open_and_permanent_with_inf() {
+        let w = Window::parse("0.5-1.5").unwrap();
+        assert!(!w.contains(0.4999));
+        assert!(w.contains(0.5));
+        assert!(w.contains(1.4999));
+        assert!(!w.contains(1.5));
+        let p = Window::parse("2-inf").unwrap();
+        assert!(p.contains(1e12));
+    }
+
+    #[test]
+    fn shard_down_and_worker_stall_follow_their_windows() {
+        let plan = FaultPlan::parse("shard-down:1@1-2,worker-stall:0-1")
+            .unwrap()
+            .unwrap();
+        assert!(!plan.shard_down(1, 0.5));
+        assert!(plan.shard_down(1, 1.5));
+        assert!(!plan.shard_down(0, 1.5));
+        assert!(plan.worker_stalled(0.5));
+        assert!(!plan.worker_stalled(1.0));
+    }
+
+    #[test]
+    fn slow_factor_multiplies_and_is_exactly_one_when_idle() {
+        let plan =
+            FaultPlan::parse("link-slow:2.0@0-10,link-slow:peer:3.0@0-10")
+                .unwrap()
+                .unwrap();
+        assert_eq!(plan.slow_factor(false, 50.0), 1.0);
+        assert!((plan.slow_factor(false, 5.0) - 2.0).abs() < 1e-12);
+        assert!((plan.slow_factor(true, 5.0) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fetch_failures_are_deterministic_and_seed_sensitive() {
+        let p1 = FaultPlan {
+            fetch_fails: vec![FetchFail {
+                prob: 0.5,
+                link: LinkSel::All,
+                window: Window { start: 0.0, end: f64::INFINITY },
+            }],
+            ..Default::default()
+        };
+        let p2 = FaultPlan { seed: 99, ..p1.clone() };
+        let key = ExpertKey::routed(3, 5);
+        // pure: same inputs, same answer
+        assert_eq!(
+            p1.fetch_fails(key, 0, false, 1.0),
+            p1.fetch_fails(key, 0, false, 1.0)
+        );
+        // a prob-0.5 plan fails some attempt of some key
+        let any_fail = |p: &FaultPlan| {
+            (0..16).any(|e| {
+                p.fetch_fails(ExpertKey::routed(0, e), 0, false, 1.0)
+            })
+        };
+        assert!(any_fail(&p1));
+        assert!(any_fail(&p2));
+        // seeds decorrelate the decisions
+        let differs = (0..64).any(|e| {
+            let k = ExpertKey::routed(1, e);
+            p1.fetch_fails(k, 0, false, 1.0)
+                != p2.fetch_fails(k, 0, false, 1.0)
+        });
+        assert!(differs, "seed had no effect on failure decisions");
+        // probability 1.0 always fails, 0.0 never
+        let sure = FaultPlan {
+            fetch_fails: vec![FetchFail {
+                prob: 1.0,
+                link: LinkSel::All,
+                window: Window { start: 0.0, end: f64::INFINITY },
+            }],
+            ..Default::default()
+        };
+        assert!(sure.fetch_fails(key, 7, true, 0.0));
+        assert!(!p1.fetch_fails(key, 0, false, -1.0), "outside window");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let plan = FaultPlan { backoff_base: 1e-3, ..Default::default() };
+        assert!((plan.backoff(1) - 1e-3).abs() < 1e-15);
+        assert!((plan.backoff(2) - 2e-3).abs() < 1e-15);
+        assert!((plan.backoff(3) - 4e-3).abs() < 1e-15);
+    }
+}

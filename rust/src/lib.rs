@@ -22,6 +22,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod experts;
+pub mod faults;
 pub mod memory;
 pub mod metrics;
 pub mod predictor;

@@ -43,10 +43,20 @@ COMMANDS:
                 --placement partition|replicate-hot  (replicate-hot
                  broadcasts each layer's hottest experts to every
                  shard so peer fetches hit a local replica)
+                --faults SPEC  (seeded fault injection, e.g.
+                 \"seed:7,shard-down:1@2-6,fetch-fail:0.2@0-inf\";
+                 none = disabled, the default. Faults perturb the
+                 virtual-time schedule only; tokens stay bit-identical)
                 (continuous mode: --rate R requests/s Poisson arrivals,
                  --max-in-flight K --queue-cap Q
                  --decode-priority on|off  (off: a prefill's chunks
                   drain back-to-back, the monolithic stall profile)
+                 --queue-deadline SECS  (expire queued requests that
+                  wait longer; 0 = never, the default)
+                 --hard-deadline SECS  (cancel in-flight requests past
+                  arrival+SECS and release their KV; 0 = never)
+                 --shed-above N  (shed new arrivals while the queue
+                  holds >= N requests; 0 = never)
                  --slo-ttft SECS --slo-e2e SECS)
   compare       --model M --device D --dataset DS --requests N --seed S
   trace         --model M --dataset DS --requests N --seed S
@@ -103,10 +113,19 @@ fn decode_priority(name: &str) -> Result<bool> {
     }
 }
 
-/// `--shards N --placement P` parsing: N <= 1 keeps the legacy
-/// unsharded provider (`None`).
+/// `--faults SPEC` parsing: "none" (the default) disables injection
+/// entirely — the fault-free hot path runs zero new code.
+fn faults(args: &Args) -> Result<Option<duoserve::faults::FaultPlan>> {
+    duoserve::faults::FaultPlan::parse(&args.str("faults", "none"))
+}
+
+/// `--shards N --placement P` parsing: N == 1 keeps the legacy
+/// unsharded provider (`None`); N == 0 is rejected as malformed.
 fn sharding(args: &Args) -> Result<(Option<usize>, Placement)> {
     let n = args.usize("shards", 1)?;
+    if n == 0 {
+        bail!("--shards must be >= 1 (got 0)");
+    }
     let shards = if n >= 2 { Some(n) } else { None };
     let name = args.str("placement", "partition");
     let placement = Placement::by_name(&name).ok_or_else(|| {
@@ -114,6 +133,20 @@ fn sharding(args: &Args) -> Result<(Option<usize>, Placement)> {
                          (partition|replicate-hot)")
     })?;
     Ok((shards, placement))
+}
+
+/// Degradation-counter report line, printed only when any counter is
+/// nonzero so fault-free output stays byte-identical.
+fn print_robustness(r: &duoserve::metrics::Robustness) {
+    if *r == duoserve::metrics::Robustness::default() {
+        return;
+    }
+    println!(
+        "robustness: expired={} shed={} cancelled={} fetch-retries={} \
+         failovers={} degraded-acquires={}",
+        r.expired, r.shed, r.cancelled, r.fetch_retries,
+        r.failover_fetches, r.degraded_acquires,
+    );
 }
 
 /// Per-shard hit-rate / balance report lines (sharded runs only).
@@ -134,12 +167,32 @@ fn print_shard_report(stats: &[ExpertStats], resident: &[usize],
     println!("shard-balance={balance:.2}");
 }
 
-fn main() -> Result<()> {
+/// Every `--key value` option any command accepts. Typos fail with a
+/// one-line error instead of being silently ignored.
+const KNOWN_OPTS: &[&str] = &[
+    "artifacts", "model", "dataset", "requests", "seed", "policy",
+    "device", "mode", "batch", "ablation", "prefill-chunk", "shards",
+    "placement", "rate", "max-in-flight", "queue-cap", "decode-priority",
+    "slo-ttft", "slo-e2e", "faults", "queue-deadline", "hard-deadline",
+    "shed-above",
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("(run `duoserve` with no arguments for usage; \
+                   see docs/CLI.md for the full flag reference)");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["trace-streams", "all"])?;
     if args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
     }
+    args.check_known(KNOWN_OPTS)?;
     let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
     let model = args.str("model", "mixtral8x7b-sim");
     let dataset = args.str("dataset", "squad");
@@ -165,10 +218,14 @@ fn main() -> Result<()> {
                 queue_capacity: args.usize("queue-cap", 64)?,
                 decode_priority: decode_priority(
                     &args.str("decode-priority", "on"))?,
+                queue_deadline: args.f64("queue-deadline", 0.0)?,
+                hard_deadline: args.f64("hard-deadline", 0.0)?,
+                shed_threshold: args.usize("shed-above", 0)?,
             };
             let mut opts = ServeOptions::new(pol, dev);
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
+            opts.faults = faults(&args)?;
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
@@ -205,6 +262,7 @@ fn main() -> Result<()> {
                 s.decode_tokens_per_sec,
                 s.prefill_chunks,
             );
+            print_robustness(&s.robustness);
             print_shard_report(&out.shard_stats, &out.shard_resident,
                                out.shard_balance);
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
@@ -234,10 +292,12 @@ fn main() -> Result<()> {
             opts.record_streams = args.flag("trace-streams");
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
+            opts.faults = faults(&args)?;
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
+            let mut robust = duoserve::metrics::Robustness::default();
             let mut peak = 0u64;
             let mut hit = 0.0;
             let mut makespan = 0.0;
@@ -269,6 +329,11 @@ fn main() -> Result<()> {
                 shard_stats = out.shard_stats.clone();
                 shard_resident = out.shard_resident.clone();
                 shard_balance = out.shard_balance;
+                let r = &out.summary.robustness;
+                robust.cancelled += r.cancelled;
+                robust.fetch_retries += r.fetch_retries;
+                robust.failover_fetches += r.failover_fetches;
+                robust.degraded_acquires += r.degraded_acquires;
                 if let Some(trace) = &out.stream_trace {
                     let mut by_label: std::collections::BTreeMap<&str,
                         (usize, f64)> = Default::default();
@@ -300,6 +365,7 @@ fn main() -> Result<()> {
                 fmt_secs(makespan),
                 decode_tps,
             );
+            print_robustness(&robust);
             print_shard_report(&shard_stats, &shard_resident, shard_balance);
             Ok(())
         }

@@ -127,6 +127,30 @@ pub struct Summary {
     /// when `--prefill-chunk` is off; filled by the serving session
     /// via [`Summary::with_prefill_chunks`]).
     pub prefill_chunks: u64,
+    /// Degradation counters (fault injection, deadlines, shedding);
+    /// all zero in a fault-free run with no deadline/shedding knobs.
+    pub robustness: Robustness,
+}
+
+/// Robustness counters attached to a [`Summary`]: how much the run
+/// degraded gracefully instead of failing. Every field is 0 in a
+/// fault-free run with deadlines and shedding disabled — pinned by the
+/// chaos suite's bit-identity test.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Robustness {
+    /// Queued requests swept past their queue deadline (never served).
+    pub expired: u64,
+    /// Arrivals dropped at the door by load shedding.
+    pub shed: u64,
+    /// In-flight requests cancelled past their hard deadline.
+    pub cancelled: u64,
+    /// Extra simulated transfer attempts paid to retry failed fetches.
+    pub fetch_retries: u64,
+    /// Fetches rehomed to a live shard because the home shard was down.
+    pub failover_fetches: u64,
+    /// Acquires degraded to the synchronous path (poisoned staging
+    /// lock or stalled prefetch worker).
+    pub degraded_acquires: u64,
 }
 
 impl Summary {
@@ -142,6 +166,12 @@ impl Summary {
     /// Attach the serving session's prefill-chunk count.
     pub fn with_prefill_chunks(mut self, chunks: u64) -> Self {
         self.prefill_chunks = chunks;
+        self
+    }
+
+    /// Attach the run's degradation counters.
+    pub fn with_robustness(mut self, r: Robustness) -> Self {
+        self.robustness = r;
         self
     }
 }
@@ -192,6 +222,7 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
         p50_itl: percentile(&itl, 50.0),
         p95_itl: percentile(&itl, 95.0),
         prefill_chunks: 0,
+        robustness: Robustness::default(),
     }
 }
 
@@ -405,6 +436,17 @@ mod tests {
         assert_eq!(s.prefill_chunks, 0);
         let s = s.with_prefill_chunks(7);
         assert_eq!(s.prefill_chunks, 7);
+    }
+
+    #[test]
+    fn robustness_counters_attach_and_default_to_zero() {
+        let s = summarize(&[], 0.0);
+        assert_eq!(s.robustness, Robustness::default());
+        let r = Robustness { expired: 1, shed: 2, cancelled: 3,
+                             fetch_retries: 4, failover_fetches: 5,
+                             degraded_acquires: 6 };
+        let s = s.with_robustness(r);
+        assert_eq!(s.robustness, r);
     }
 
     #[test]

@@ -140,7 +140,10 @@ impl Runtime {
     /// loads are cold-path (once per component per process) and the
     /// single scope guarantees exactly-once construction.
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
-        let mut cache = self.cache.lock().unwrap();
+        // A panic mid-insert leaves the map structurally sound (worst
+        // case: a cached entry that parsed fine), so recover the
+        // poisoned lock instead of cascading the panic to every loader.
+        let mut cache = self.cache.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(exe) = cache.get(path) {
             return Ok(exe.clone());
         }
@@ -159,6 +162,7 @@ impl Runtime {
 
     /// Number of loaded executables currently cached.
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        // Read-only observer: poisoning cannot corrupt a count.
+        self.cache.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }

@@ -5,6 +5,7 @@
 
 use crate::config::{DeviceProfile, LinkKind, Manifest};
 
+/// Calibrated per-op virtual-time costs for one device profile.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     device: DeviceProfile,
@@ -16,6 +17,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Build from a model manifest's paper-scale dims and a device.
     pub fn new(man: &Manifest, device: DeviceProfile) -> Self {
         CostModel {
             expert_flops_1: man.paper_expert_flops(1),
@@ -26,6 +28,7 @@ impl CostModel {
         }
     }
 
+    /// The device profile this model was built for.
     pub fn device(&self) -> &DeviceProfile {
         &self.device
     }

@@ -11,6 +11,8 @@
 //! structure itself (e.g. "during prefill, the comm stream is busy
 //! while the compute stream runs the previous expert").
 
+#![warn(missing_docs)]
+
 mod cost;
 mod streams;
 

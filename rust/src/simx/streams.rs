@@ -23,11 +23,16 @@ pub enum StreamId {
     Predict,
 }
 
+/// One scheduled op in a recorded stream trace.
 #[derive(Debug, Clone)]
 pub struct OpRecord {
+    /// Stream the op ran on.
     pub stream: StreamId,
+    /// Human-readable op label (e.g. "expert_fetch").
     pub label: String,
+    /// Virtual start time.
     pub start: f64,
+    /// Virtual completion time.
     pub end: f64,
 }
 
@@ -48,6 +53,7 @@ fn idx(s: StreamId) -> usize {
 }
 
 impl Streams {
+    /// Fresh timeline with all streams free at t = 0, not recording.
     pub fn new() -> Self {
         Streams { free: [0.0; 3], trace: Vec::new(), record: false }
     }
@@ -87,6 +93,7 @@ impl Streams {
         self.free.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Recorded ops (empty unless constructed via `recording()`).
     pub fn trace(&self) -> &[OpRecord] {
         &self.trace
     }

@@ -83,6 +83,19 @@ impl Args {
             None => bail!("missing required --{name}"),
         }
     }
+
+    /// Reject unknown option names: every parsed `--key value` must
+    /// appear in `known` (flags are already restricted at parse time).
+    /// A typo'd flag fails with a one-line error instead of being
+    /// silently ignored.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.opts.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +126,14 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(vec!["--model".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_options_are_rejected_by_check_known() {
+        let a = args(&["--model", "m1", "--rate", "2.0"]);
+        assert!(a.check_known(&["model", "rate"]).is_ok());
+        let err = a.check_known(&["model"]).unwrap_err().to_string();
+        assert!(err.contains("--rate"), "error was: {err}");
     }
 
     #[test]

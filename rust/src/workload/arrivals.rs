@@ -12,9 +12,13 @@ use crate::workload::Request;
 pub enum ArrivalProcess {
     /// All requests present at t = 0 (closed-loop benchmarks).
     Closed,
-    /// Poisson process with `rate` requests/second (virtual seconds),
-    /// drawn reproducibly from `seed`.
-    Poisson { rate: f64, seed: u64 },
+    /// Poisson process drawn reproducibly from a seed.
+    Poisson {
+        /// Mean arrival rate in requests per virtual second.
+        rate: f64,
+        /// RNG seed for the exponential inter-arrival gaps.
+        seed: u64,
+    },
     /// Explicit arrival instants (trace-driven replay). Must be
     /// non-decreasing and at least as long as the request slice.
     Trace(Vec<f64>),

@@ -4,6 +4,8 @@
 //! SQuAD (long prompt, short answer) and Orca-Math (mid prompt, long
 //! reasoning output).
 
+#![warn(missing_docs)]
+
 mod arrivals;
 
 pub use arrivals::{assign_arrivals, poisson_times, ArrivalProcess};
@@ -16,11 +18,17 @@ pub const N_CLUSTERS: usize = 8;
 /// Must match `python/compile/workload.py::TOPIC_PURITY`.
 pub const TOPIC_PURITY: f64 = 0.8;
 
+/// One synthetic serving request: a clustered prompt plus the decode
+/// budget and (for continuous mode) an arrival instant.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Stable request id (index in generation order).
     pub req_id: usize,
+    /// Source dataset name ("squad" | "orca").
     pub dataset: String,
+    /// Topic cluster the prompt tokens are drawn from.
     pub cluster: usize,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
     /// Output tokens to generate (including the prefill's first token).
     pub n_decode: usize,
@@ -60,6 +68,8 @@ pub fn sample_tokens(man: &Manifest, cluster: usize, n: usize,
         .collect()
 }
 
+/// Generate `n_requests` seeded requests for `dataset`, mirroring the
+/// python workload generator's length distributions.
 pub fn generate_requests(man: &Manifest, dataset: &str, n_requests: usize,
                          seed: u64) -> Vec<Request> {
     let ds_salt: u64 = dataset.bytes().map(|b| b as u64).sum();

@@ -1,0 +1,378 @@
+//! Chaos suite: fault injection may bend *time*, never *function*.
+//!
+//! Every test here drives the serving loop under a [`FaultPlan`] and
+//! checks the degradation contract: no panic under any plan, token
+//! streams bit-identical to the fault-free run, SLOs degrade
+//! monotonically with fault severity, bounded retry/failover instead
+//! of dead-ends, and full recovery once fault windows close. The
+//! deadline/shedding tests pin the request-lifecycle half: overload is
+//! shed at the door, stale queue entries expire, and in-flight
+//! requests past their hard deadline are cancelled with KV released.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServerEvent};
+use duoserve::faults::{FaultPlan, FetchFail, LinkSel, LinkSlow,
+                       ShardOutage, Window};
+use duoserve::util::Rng;
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess, Request};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn short_requests(engine: &Engine, n: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = generate_requests(&engine.man, "squad", n, seed);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.n_decode = 3 + (i % 3);
+    }
+    reqs
+}
+
+fn opts(policy: PolicyKind) -> ServeOptions {
+    ServeOptions::new(policy, DeviceProfile::a6000())
+}
+
+const ALWAYS: Window = Window { start: 0.0, end: f64::INFINITY };
+
+#[test]
+fn active_but_empty_plan_is_bit_identical_to_no_plan() {
+    // `--faults none` maps to `None` and runs the untouched code path
+    // by construction; the stronger claim is that an *active* plan
+    // with no clauses also cannot move the schedule: slow factor is
+    // exactly 1.0 and no attempt ever fails.
+    let e = engine();
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+    let mk = || {
+        let mut reqs = short_requests(&e, 6, 17);
+        assign_arrivals(&mut reqs,
+                        &ArrivalProcess::Poisson { rate: 3.0, seed: 9 });
+        reqs
+    };
+    let base_opts = opts(PolicyKind::DuoServe);
+    let mut empty_opts = base_opts.clone();
+    empty_opts.faults = Some(FaultPlan::default());
+    assert!(empty_opts.faults.as_ref().unwrap().is_empty());
+
+    let a = e.serve_continuous(&mk(), &base_opts, &ccfg).unwrap();
+    let b = e.serve_continuous(&mk(), &empty_opts, &ccfg).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "empty plan changed the function");
+    assert_eq!(a.events, b.events, "empty plan moved the schedule");
+    assert_eq!(a.summary.makespan, b.summary.makespan);
+    assert_eq!(format!("{:?}", a.expert_stats),
+               format!("{:?}", b.expert_stats),
+               "empty plan perturbed the expert ledger");
+    assert_eq!(format!("{:?}", a.summary.robustness),
+               format!("{:?}", b.summary.robustness));
+}
+
+#[test]
+fn fetch_failures_retry_with_backoff_then_degrade_to_success() {
+    let e = engine();
+    let reqs = short_requests(&e, 4, 29);
+    let base_opts = opts(PolicyKind::DuoServe);
+    let base = e.serve(&reqs, &base_opts).unwrap();
+
+    // Every attempt fails; bounded retries must still land every
+    // fetch (the final attempt completes as a slowed success).
+    let mut faulty_opts = base_opts.clone();
+    let mut plan = FaultPlan::default();
+    plan.fetch_fails.push(FetchFail {
+        prob: 1.0,
+        link: LinkSel::All,
+        window: ALWAYS,
+    });
+    faulty_opts.faults = Some(plan);
+    let out = e.serve(&reqs, &faulty_opts).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.tokens, base.tokens, "retries changed the function");
+    assert!(out.expert_stats.fetch_retries > 0,
+            "sure-fail plan produced no retries");
+    assert!(out.summary.makespan > base.summary.makespan,
+            "retry/backoff comm ops did not cost virtual time");
+    assert_eq!(out.summary.robustness.fetch_retries,
+               out.expert_stats.fetch_retries,
+               "summary and ledger disagree on retry count");
+}
+
+#[test]
+fn link_slowdowns_degrade_latency_monotonically_tokens_identical() {
+    // ODF fetches experts on demand, so the host link sits on the
+    // critical path: slowing it must slow the run, monotonically in
+    // the factor, without touching a single token.
+    let e = engine();
+    let reqs = short_requests(&e, 4, 43);
+    let run = |factor: f64| {
+        let mut o = opts(PolicyKind::Odf);
+        if factor > 1.0 {
+            let mut plan = FaultPlan::default();
+            plan.link_slows.push(LinkSlow {
+                factor,
+                link: LinkSel::All,
+                window: ALWAYS,
+            });
+            o.faults = Some(plan);
+        }
+        e.serve(&reqs, &o).unwrap()
+    };
+    let base = run(1.0);
+    let slow2 = run(2.0);
+    let slow4 = run(4.0);
+    assert_eq!(base.tokens, slow2.tokens);
+    assert_eq!(base.tokens, slow4.tokens);
+    let (m1, m2, m4) = (base.summary.makespan, slow2.summary.makespan,
+                        slow4.summary.makespan);
+    assert!(m2 > m1, "2x link slowdown did not slow the run");
+    assert!(m4 > m2, "slowdown not monotone: 4x {m4} vs 2x {m2}");
+}
+
+#[test]
+fn shard_outage_fails_over_and_recovers_mid_serve() {
+    let e = engine();
+    let reqs = short_requests(&e, 8, 57);
+    let mut base_opts = opts(PolicyKind::DuoServe);
+    base_opts.shards = Some(4);
+    let base = e.serve(&reqs, &base_opts).unwrap();
+    assert!(base.oom.is_none());
+    let m = base.summary.makespan;
+    assert!(m > 0.0);
+
+    // Kill shard 1 for the middle third of the (fault-free) run.
+    let mut faulty_opts = base_opts.clone();
+    let mut plan = FaultPlan::default();
+    plan.outages.push(ShardOutage {
+        shard: 1,
+        window: Window { start: 0.25 * m, end: 0.60 * m },
+    });
+    faulty_opts.faults = Some(plan);
+    let out = e.serve(&reqs, &faulty_opts).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.metrics.len(), reqs.len(),
+               "an outage must not lose requests");
+    assert_eq!(out.tokens, base.tokens, "failover changed the function");
+    assert!(out.expert_stats.failover_fetches > 0,
+            "no fetch rehomed off the downed shard");
+
+    // A near-instant outage leaves almost the whole run fault-free:
+    // the cache must recover to its fault-free hit-rate.
+    let mut brief_opts = base_opts.clone();
+    let mut brief = FaultPlan::default();
+    brief.outages.push(ShardOutage {
+        shard: 1,
+        window: Window { start: 0.0, end: 0.02 * m },
+    });
+    brief_opts.faults = Some(brief);
+    let rec = e.serve(&reqs, &brief_opts).unwrap();
+    assert_eq!(rec.tokens, base.tokens);
+    assert!((rec.hit_rate - base.hit_rate).abs() < 0.1,
+            "hit-rate did not recover after the outage cleared: \
+             faulty {} vs fault-free {}", rec.hit_rate, base.hit_rate);
+}
+
+#[test]
+fn worker_poison_degrades_acquires_but_keeps_tokens() {
+    let e = engine();
+    let reqs = short_requests(&e, 3, 61);
+    let base_opts = opts(PolicyKind::DuoServe);
+    let base = e.serve(&reqs, &base_opts).unwrap();
+
+    let mut poison_opts = base_opts.clone();
+    poison_opts.faults =
+        Some(FaultPlan::parse("worker-poison").unwrap().unwrap());
+    let out = e.serve(&reqs, &poison_opts).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.tokens, base.tokens, "poisoned worker changed tokens");
+    assert!(out.expert_stats.degraded_acquires > 0,
+            "poisoned staging lock did not degrade acquires");
+    assert!(out.expert_stats.degraded_acquires
+            <= out.expert_stats.touches());
+}
+
+#[test]
+fn flash_crowd_sheds_and_expires_with_better_survivor_tail() {
+    let e = engine();
+    let mut reqs = short_requests(&e, 10, 11);
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let base_opts = opts(PolicyKind::DuoServe);
+    // Time scale: one request served alone.
+    let solo = e.serve(&reqs[..1], &base_opts).unwrap();
+    let scale = solo.metrics[0].e2e;
+    assert!(scale > 0.0);
+
+    // Unprotected: every request queues and is eventually served.
+    let open = ContinuousConfig { max_in_flight: 1, queue_capacity: 64,
+                                  ..ContinuousConfig::default() };
+    let a = e.serve_continuous(&reqs, &base_opts, &open).unwrap();
+    assert_eq!(a.metrics.len(), reqs.len());
+    assert_eq!(a.shed + a.expired, 0);
+
+    // Protected: shed the burst beyond 3 queued, expire queued
+    // requests older than half a solo service time.
+    let guarded = ContinuousConfig {
+        max_in_flight: 1,
+        queue_capacity: 64,
+        queue_deadline: 0.5 * scale,
+        shed_threshold: 3,
+        ..ContinuousConfig::default()
+    };
+    let b = e.serve_continuous(&reqs, &base_opts, &guarded).unwrap();
+    assert_eq!(b.shed, 7, "burst beyond the 3-deep queue must shed");
+    assert_eq!(b.expired, 2, "queued survivors past deadline must expire");
+    assert_eq!(b.rejected, 0, "shedding is policy, not queue overflow");
+    assert_eq!(b.metrics.len(), 1);
+    assert!(b.summary.p95_ttft < a.summary.p95_ttft,
+            "shedding did not improve the survivors' tail: {} vs {}",
+            b.summary.p95_ttft, a.summary.p95_ttft);
+    // Events mirror the counters.
+    let count = |pred: &dyn Fn(&ServerEvent) -> bool| {
+        b.events.iter().filter(|ev| pred(ev)).count() as u64
+    };
+    assert_eq!(count(&|ev| matches!(ev, ServerEvent::Shed { .. })), b.shed);
+    assert_eq!(count(&|ev| matches!(ev, ServerEvent::Expired { .. })),
+               b.expired);
+    assert_eq!(b.summary.robustness.shed, b.shed);
+    assert_eq!(b.summary.robustness.expired, b.expired);
+}
+
+#[test]
+fn hard_deadline_cancels_in_flight_and_accounts_every_request() {
+    let e = engine();
+    let mut reqs = short_requests(&e, 6, 13);
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let base_opts = opts(PolicyKind::DuoServe);
+    let solo = e.serve(&reqs[..1], &base_opts).unwrap();
+    let scale = solo.metrics[0].e2e;
+
+    let ccfg = ContinuousConfig {
+        max_in_flight: 2,
+        queue_capacity: 64,
+        hard_deadline: 1.5 * scale,
+        ..ContinuousConfig::default()
+    };
+    let out = e.serve_continuous(&reqs, &base_opts, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert!(out.cancelled > 0, "late in-flight requests must cancel");
+    assert_eq!(out.metrics.len() + out.cancelled as usize, reqs.len(),
+               "every request must end served or cancelled");
+    assert_eq!(out.summary.robustness.cancelled, out.cancelled);
+    // Cancelled requests were admitted (they are in-flight casualties,
+    // not queue drops) and report no QoS metrics.
+    let cancelled_ids: Vec<usize> = out
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            ServerEvent::Cancelled { req, .. } => Some(*req),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(cancelled_ids.len() as u64, out.cancelled);
+    for id in &cancelled_ids {
+        assert!(out.events.iter().any(|ev| matches!(ev,
+            ServerEvent::PrefillStart { req, .. } if req == id)));
+        assert!(!out.metrics.iter().any(|m| m.req_id == *id),
+                "cancelled request {id} reported QoS metrics");
+    }
+    // Served requests still emit their full, fault-free token streams.
+    let bulk = e.serve(&reqs, &base_opts).unwrap();
+    for m in &out.metrics {
+        assert_eq!(out.tokens[m.req_id], bulk.tokens[m.req_id],
+                   "cancellation disturbed request {}", m.req_id);
+    }
+}
+
+#[test]
+fn random_fault_plans_never_panic_and_preserve_goldens() {
+    const CASES: u64 = 6;
+    let e = engine();
+    let reqs = short_requests(&e, 4, 71);
+    let base_bulk = e.serve(&reqs, &opts(PolicyKind::DuoServe)).unwrap();
+    let mut open = reqs.clone();
+    assign_arrivals(&mut open,
+                    &ArrivalProcess::Poisson { rate: 4.0, seed: 5 });
+    let ccfg = ContinuousConfig { max_in_flight: 3, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(case ^ 0xC0A5_7A11);
+        let plan = random_plan(&mut rng);
+        for sharded in [false, true] {
+            let mut o = opts(PolicyKind::DuoServe);
+            o.shards = if sharded { Some(2) } else { None };
+            let base_tokens = if sharded {
+                e.serve(&reqs, &o).unwrap().tokens
+            } else {
+                base_bulk.tokens.clone()
+            };
+            o.faults = Some(plan.clone());
+
+            let bulk = e.serve(&reqs, &o).unwrap();
+            assert!(bulk.oom.is_none(), "case {case} sharded={sharded}");
+            assert_eq!(bulk.tokens, base_tokens,
+                       "case {case} sharded={sharded}: plan {plan:?} \
+                        changed phase-bulk tokens");
+            ledger_invariants(&bulk.expert_stats, case);
+
+            let cont = e.serve_continuous(&open, &o, &ccfg).unwrap();
+            assert!(cont.oom.is_none(), "case {case} sharded={sharded}");
+            assert_eq!(cont.tokens, base_tokens,
+                       "case {case} sharded={sharded}: plan {plan:?} \
+                        changed continuous tokens");
+            ledger_invariants(&cont.expert_stats, case);
+        }
+    }
+}
+
+fn ledger_invariants(stats: &duoserve::experts::ExpertStats, case: u64) {
+    assert_eq!(stats.touches(), stats.hits + stats.misses,
+               "case {case}: touch accounting broke");
+    assert!(stats.degraded_acquires <= stats.touches(),
+            "case {case}: degraded {} > touches {}",
+            stats.degraded_acquires, stats.touches());
+    assert!(stats.staging_poisoned <= stats.degraded_acquires,
+            "case {case}: poisoned acquires not counted as degraded");
+}
+
+/// A small random plan: 1-3 clauses over windows inside the first few
+/// virtual seconds (tiny-model runs finish well within that).
+fn random_plan(rng: &mut Rng) -> FaultPlan {
+    let window = |rng: &mut Rng| {
+        let start = rng.f64() * 0.2;
+        let end = if rng.bool_with(0.2) {
+            f64::INFINITY
+        } else {
+            start + rng.f64() * 2.0
+        };
+        Window { start, end }
+    };
+    let mut plan = FaultPlan { seed: rng.below(1000) as u64,
+                               ..FaultPlan::default() };
+    for _ in 0..rng.range(1, 3) {
+        match rng.below(5) {
+            0 => plan.outages.push(ShardOutage {
+                shard: rng.below(2),
+                window: window(rng),
+            }),
+            1 => plan.fetch_fails.push(FetchFail {
+                prob: rng.f64(),
+                link: LinkSel::All,
+                window: window(rng),
+            }),
+            2 => plan.link_slows.push(LinkSlow {
+                factor: 1.0 + 3.0 * rng.f64(),
+                link: if rng.bool_with(0.5) {
+                    LinkSel::Host
+                } else {
+                    LinkSel::Peer
+                },
+                window: window(rng),
+            }),
+            3 => plan.worker_stalls.push(window(rng)),
+            _ => plan.worker_poison = true,
+        }
+    }
+    plan
+}

@@ -270,6 +270,7 @@ fn comm_backlog_does_not_delay_cache_hits() {
         provider.admit(duoserve::memory::ExpertKey::routed(layer, e), 0.25,
                        0.25);
     }
+    let mut fault_state = duoserve::faults::FaultState::default();
     let mut cx = SimCtx {
         streams: &mut streams,
         provider: &mut provider,
@@ -279,6 +280,8 @@ fn comm_backlog_does_not_delay_cache_hits() {
         n_layers: man.sim.n_layers,
         n_experts: man.sim.n_experts,
         top_k: man.sim.top_k,
+        faults: None,
+        fault_state: &mut fault_state,
     };
     let mut predict = |_: usize| -> Vec<usize> { Vec::new() };
     let t_end = policy
