@@ -422,6 +422,56 @@ fn main() -> anyhow::Result<()> {
         bench(&mut stats, &name, 60, || db.step().unwrap());
     }
 
+    // --- paged KV: decode append through the page table ---------------
+    // The same lockstep decode iteration as decode_step_batched_b4, but
+    // with the KV cache in 4-token pages — the row measures the paged
+    // append path (page-table indexing + tail-page ownership transfer)
+    // against its contiguous twin above.
+    {
+        let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                      DeviceProfile::a6000());
+        o.kv_page = Some(4);
+        let mut db = engine.decode_step_bench(4, &o)?;
+        bench(&mut stats, "paged_kv_append", 60, || db.step().unwrap());
+    }
+
+    // --- prefix cache: warm vs cold TTFT -------------------------------
+    // One phase-bulk serve of two identical-prompt requests with the
+    // prefix cache on: request 0 prefills cold and publishes its pages,
+    // request 1 maps the shared prefix and prefills only the suffix.
+    // Reported as two single-iteration rows (virtual-time TTFT in us)
+    // so the artifact tracks the O(suffix) win across commits.
+    {
+        let mut reqs = generate_requests(&man, "squad", 1, 5);
+        let mut twin = reqs[0].clone();
+        twin.req_id = 1;
+        reqs.push(twin);
+        let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                      DeviceProfile::a6000());
+        o.kv_page = Some(4);
+        o.prefill_chunk = Some(4);
+        o.prefix_cache = true;
+        let out = engine.serve(&reqs, &o)?;
+        anyhow::ensure!(out.oom.is_none(), "prefix bench hit OOM");
+        anyhow::ensure!(out.summary.kv_paging.prefix_hits == 1,
+                        "prefix bench expected a warm hit");
+        for (name, ttft) in [("prefix_cold_ttft", out.metrics[0].ttft),
+                             ("prefix_warm_ttft", out.metrics[1].ttft)] {
+            let us = ttft * 1e6;
+            println!("{name:<40} mean {us:>9.1}us  min {us:>9.1}us  \
+                      p50 {us:>9.1}us  p95 {us:>9.1}us  (1 iters, \
+                      virtual time)");
+            stats.push(Stat {
+                name: name.to_string(),
+                iters: 1,
+                mean_us: us,
+                min_us: us,
+                p50_us: us,
+                p95_us: us,
+            });
+        }
+    }
+
     // --- full engine steps --------------------------------------------
     let reqs = generate_requests(&man, "squad", 1, 5);
     let opts = ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());

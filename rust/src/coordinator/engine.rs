@@ -104,6 +104,20 @@ pub struct ServeOptions {
     /// poisoned-lock degradation path (staging miss → synchronous
     /// host-pool fallback). Never set outside tests.
     pub staging_fault: bool,
+    /// Paged KV cache (`--kv-page`): page size in tokens. `None` (or
+    /// `Some(0)`) keeps the legacy per-request contiguous KV tensors —
+    /// the backward-compatible default, bit-identical to pre-paging
+    /// behavior. With a page size, each request's KV lives in
+    /// fixed-size refcounted pages from a global
+    /// [`crate::memory::KvPagePool`] and the memory meter charges
+    /// allocated pages instead of the preallocated window.
+    pub kv_page: Option<usize>,
+    /// Cross-request prefix reuse (`--prefix-cache`; requires
+    /// `kv_page`): completed prefills publish their full KV pages
+    /// keyed by prompt-prefix hash; a new request whose prompt shares
+    /// a cached prefix maps those pages into its table and prefills
+    /// only the suffix (O(suffix) TTFT).
+    pub prefix_cache: bool,
     /// Seeded fault plan (`--faults`): simulated shard outages,
     /// fetch failures with retry/backoff, link slowdowns and
     /// prefetch-worker stalls, all perturbing only the virtual-time
@@ -127,6 +141,8 @@ impl ServeOptions {
             expert_fanout: Self::fanout_default(
                 std::env::var("DUOSERVE_EXPERT_FANOUT").ok().as_deref()),
             prefill_chunk: None,
+            kv_page: None,
+            prefix_cache: false,
             shards: None,
             placement: Placement::Partition,
             staging_fault: false,
@@ -165,6 +181,14 @@ pub struct ServeOutcome {
     pub summary: Summary,
     /// Peak simulated GPU memory (Table II).
     pub peak_bytes: u64,
+    /// Peak of the KV gauge alone — the paged-vs-contiguous
+    /// comparison number (paging charges allocated pages; the legacy
+    /// path charges written context).
+    pub peak_kv_bytes: u64,
+    /// KV pages still refcount-live at run end (paged path; 0 on the
+    /// contiguous path and, with the prefix cache off, after every
+    /// request completes or is cancelled — the leak check).
+    pub kv_pages_live: u64,
     /// GPU expert-cache hit rate over the run.
     pub hit_rate: f64,
     /// DuoServe predictor accuracy observed online.
@@ -640,6 +664,7 @@ impl Engine {
         // from the first chunk's issue instant either way.
         for ridx in 0..sess.states.len() {
             check!(sess, None, sess.begin_request());
+            let _ = sess.seed_prefix(ridx);
             let t_start = sess.streams.free_at(StreamId::Compute);
             let mut t_next = t_start;
             let t_first = loop {
@@ -708,6 +733,13 @@ impl Engine {
                         let st = &mut sess.states[r];
                         st.served = true;
                         st.queue_delay = now - st.arrival;
+                    }
+                    if let Some(tokens) = sess.seed_prefix(r) {
+                        sched.record(ServerEvent::PrefixHit {
+                            req: r,
+                            tokens,
+                            at: now,
+                        });
                     }
                     let res = sess.prefill_step(r, now)?;
                     let prog = check!(sess, Some(&sched), res);

@@ -202,6 +202,10 @@ pub enum ServerEvent {
     Shed { req: usize, at: f64 },
     /// In-flight past its hard deadline; cancelled, slot + KV freed.
     Cancelled { req: usize, at: f64 },
+    /// Admission-time prefix-cache hit: `tokens` prompt tokens were
+    /// mapped from cached KV pages, so the request's chunked-prefill
+    /// cursor starts past them (only the suffix is prefilled).
+    PrefixHit { req: usize, tokens: usize, at: f64 },
 }
 
 /// What the engine should do next.

@@ -35,7 +35,8 @@ use anyhow::{bail, Result};
 use crate::config::SimDims;
 use crate::experts::ExpertProvider;
 use crate::faults::{FaultPlan, FaultState};
-use crate::memory::{ExpertKey, MemoryMeter, OomError};
+use crate::memory::{ExpertKey, KvPagePool, KvPageTable, MemoryMeter,
+                    OomError, DEFAULT_PREFIX_CACHE_PAGES};
 use crate::metrics::{summarize, RequestMetrics};
 use crate::predictor::StateConstructor;
 use crate::runtime::{ArgRef, Literal, Tensor};
@@ -89,6 +90,10 @@ pub(crate) struct ReqState {
     pub h: Tensor,
     pub kcs: Vec<Literal>,
     pub vcs: Vec<Literal>,
+    /// Paged KV: this request's page table (`--kv-page`). `Some` iff
+    /// the session has a [`KvPagePool`]; `kcs`/`vcs` stay empty then —
+    /// the KV rows live in the table's page tensors instead.
+    pub pages: Option<KvPageTable>,
     pub tokens: Vec<i32>,
     pub done: bool,
     pub state_con: StateConstructor,
@@ -117,7 +122,8 @@ pub(crate) struct ReqState {
 
 impl ReqState {
     fn new(engine: &Engine, i: usize, r: &Request, sim: &SimDims,
-           kv_shape: &[usize]) -> Self {
+           kv_shape: &[usize], page_tokens: Option<usize>) -> Self {
+        let paged = page_tokens.is_some();
         ReqState {
             idx: i,
             dataset: r.dataset.clone(),
@@ -132,9 +138,20 @@ impl ReqState {
             // the attention executable by ownership (ArgRef::Own) and
             // takes them back from the outputs, so the caches are
             // mutated in place — one KV row written per layer per
-            // decode step, never a full-cache copy.
-            kcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
-            vcs: (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect(),
+            // decode step, never a full-cache copy. On the paged path
+            // the window tensors are not built at all: KV rows live in
+            // pool pages the table allocates as tokens are written.
+            kcs: if paged {
+                Vec::new()
+            } else {
+                (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect()
+            },
+            vcs: if paged {
+                Vec::new()
+            } else {
+                (0..sim.n_layers).map(|_| Tensor::zeros(kv_shape)).collect()
+            },
+            pages: page_tokens.map(KvPageTable::new),
             tokens: Vec::new(),
             done: false,
             state_con: StateConstructor::new(&engine.man),
@@ -245,17 +262,51 @@ fn layer_nonmoe_batched(engine: &Engine, states: &mut [ReqState],
         let st = &mut states[r];
         let row = Tensor::scalar_i32(bi as i32);
         let pos = Tensor::scalar_i32(st.pos as i32);
-        let kc = std::mem::take(&mut st.kcs[l]);
-        let vc = std::mem::take(&mut st.vcs[l]);
-        let out = engine.comps.attn_core.run_mixed(vec![
-            ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v), ArgRef::T(&row),
-            ArgRef::T(&pos), ArgRef::Own(kc), ArgRef::Own(vc),
-        ])?;
-        let mut it = out.into_iter();
-        let arow = it.next().unwrap();
-        st.kcs[l] = it.next().unwrap();
-        st.vcs[l] = it.next().unwrap();
-        att[bi * d..(bi + 1) * d].copy_from_slice(arow.as_f32()?);
+        let out = if let Some(table) = st.pages.as_mut() {
+            // Paged core: the append row lives in the last mapped
+            // page (decode's prepare_write guarantees the table ends
+            // at pos's page) — only that page pair transfers by
+            // ownership; earlier pages (shared prefix included) are
+            // borrowed read-only.
+            let np = table.n_pages();
+            let pt_t = Tensor::scalar_i32(table.page_tokens as i32);
+            let np_t = Tensor::scalar_i32(np as i32);
+            let kc_t = std::mem::take(&mut table.slots[np - 1].kc[l]);
+            let vc_t = std::mem::take(&mut table.slots[np - 1].vc[l]);
+            let mut args: Vec<ArgRef> = vec![
+                ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v),
+                ArgRef::T(&row), ArgRef::T(&pos), ArgRef::T(&pt_t),
+                ArgRef::T(&np_t),
+            ];
+            for p in 0..np - 1 {
+                args.push(ArgRef::T(&table.slots[p].kc[l]));
+            }
+            args.push(ArgRef::Own(kc_t));
+            for p in 0..np - 1 {
+                args.push(ArgRef::T(&table.slots[p].vc[l]));
+            }
+            args.push(ArgRef::Own(vc_t));
+            let out = engine.comps.attn_core.run_mixed(args)?;
+            let mut it = out.into_iter();
+            let arow = it.next().unwrap();
+            table.slots[np - 1].kc[l] = it.next().unwrap();
+            table.slots[np - 1].vc[l] = it.next().unwrap();
+            arow
+        } else {
+            let kc = std::mem::take(&mut st.kcs[l]);
+            let vc = std::mem::take(&mut st.vcs[l]);
+            let out = engine.comps.attn_core.run_mixed(vec![
+                ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v),
+                ArgRef::T(&row), ArgRef::T(&pos), ArgRef::Own(kc),
+                ArgRef::Own(vc),
+            ])?;
+            let mut it = out.into_iter();
+            let arow = it.next().unwrap();
+            st.kcs[l] = it.next().unwrap();
+            st.vcs[l] = it.next().unwrap();
+            arow
+        };
+        att[bi * d..(bi + 1) * d].copy_from_slice(out.as_f32()?);
     }
     let att_t = Tensor::f32(att, vec![b, d]);
 
@@ -285,20 +336,51 @@ fn layer_nonmoe_rowwise(engine: &Engine, states: &mut [ReqState],
     for &r in active {
         let st = &mut states[r];
         let pos = Tensor::scalar_i32(st.pos as i32);
-        // KV ownership transfer: the attention executable writes one
-        // row in place (O(d_model) per layer) and hands the caches
-        // back — no full-cache copies.
-        let kc = std::mem::take(&mut st.kcs[l]);
-        let vc = std::mem::take(&mut st.vcs[l]);
-        let out = engine.comps.attn_decode.run_mixed(vec![
-            ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
-            lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-            ArgRef::Own(kc), ArgRef::Own(vc),
-        ])?;
-        let mut it = out.into_iter();
-        st.h = it.next().unwrap();
-        st.kcs[l] = it.next().unwrap();
-        st.vcs[l] = it.next().unwrap();
+        if let Some(table) = st.pages.as_mut() {
+            // Paged fused attention: the append row's page is the
+            // last mapped one (owned); earlier pages are borrowed.
+            let np = table.n_pages();
+            let wp = st.pos / table.page_tokens;
+            let pt_t = Tensor::scalar_i32(table.page_tokens as i32);
+            let ws_t = Tensor::scalar_i32(st.pos as i32);
+            let np_t = Tensor::scalar_i32(np as i32);
+            let kc_t = std::mem::take(&mut table.slots[np - 1].kc[l]);
+            let vc_t = std::mem::take(&mut table.slots[np - 1].vc[l]);
+            debug_assert_eq!(wp, np - 1, "append lands in the tail page");
+            let mut args: Vec<ArgRef> = vec![
+                ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::T(&pt_t), ArgRef::T(&ws_t), ArgRef::T(&np_t),
+            ];
+            for p in 0..np - 1 {
+                args.push(ArgRef::T(&table.slots[p].kc[l]));
+            }
+            args.push(ArgRef::Own(kc_t));
+            for p in 0..np - 1 {
+                args.push(ArgRef::T(&table.slots[p].vc[l]));
+            }
+            args.push(ArgRef::Own(vc_t));
+            let out = engine.comps.attn_decode.run_mixed(args)?;
+            let mut it = out.into_iter();
+            st.h = it.next().unwrap();
+            table.slots[np - 1].kc[l] = it.next().unwrap();
+            table.slots[np - 1].vc[l] = it.next().unwrap();
+        } else {
+            // KV ownership transfer: the attention executable writes
+            // one row in place (O(d_model) per layer) and hands the
+            // caches back — no full-cache copies.
+            let kc = std::mem::take(&mut st.kcs[l]);
+            let vc = std::mem::take(&mut st.vcs[l]);
+            let out = engine.comps.attn_decode.run_mixed(vec![
+                ArgRef::T(&st.h), ArgRef::T(&pos), lw.ln_attn.arg(),
+                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                ArgRef::Own(kc), ArgRef::Own(vc),
+            ])?;
+            let mut it = out.into_iter();
+            st.h = it.next().unwrap();
+            st.kcs[l] = it.next().unwrap();
+            st.vcs[l] = it.next().unwrap();
+        }
         let out = engine.comps.gate_decode.run_mixed(vec![
             ArgRef::T(&st.h), lw.ln_moe.arg(), lw.wg.arg()])?;
         let mut it = out.into_iter();
@@ -329,6 +411,14 @@ pub(crate) struct ServeSession<'e> {
     /// Prompt-token budget of one prefill chunk (`None` = the whole
     /// prompt in one monolithic pass, the pre-chunking path verbatim).
     prefill_chunk: Option<usize>,
+    /// Paged KV allocator (`--kv-page`): `Some` routes every KV
+    /// access through per-request page tables; `None` keeps the
+    /// contiguous per-request window tensors verbatim.
+    pager: Option<KvPagePool>,
+    /// Cross-request prefix reuse (`--prefix-cache`): probe the
+    /// pool's prefix cache at admission and publish completed
+    /// prefills' full pages.
+    prefix_cache: bool,
     /// Prefill chunks executed (a monolithic prefill counts as one).
     prefill_chunks: u64,
     /// Virtual time the Compute stream spent inside decode steps.
@@ -361,11 +451,21 @@ impl<'e> ServeSession<'e> {
         let policy = engine.make_policy(opts.policy, &sys, opts.ablation);
         let sim = engine.man.sim.clone();
         let kv_shape = vec![sim.kv_len, sim.n_heads, sim.head_dim];
+        // A zero page size means "no paging" (CLI convenience, the
+        // same convention as prefill_chunk).
+        let pager = opts.kv_page.filter(|&n| n > 0).map(|pt| {
+            let page_bytes =
+                cost.kv_bytes(engine.man.paper.n_layers, pt);
+            KvPagePool::new(pt, sim.n_layers, sim.n_heads, sim.head_dim,
+                            page_bytes, DEFAULT_PREFIX_CACHE_PAGES)
+        });
+        let page_tokens = pager.as_ref().map(|p| p.page_tokens());
         let states: Vec<ReqState> = requests
             .iter()
             .enumerate()
             .map(|(i, r)| {
-                let mut st = ReqState::new(engine, i, r, &sim, &kv_shape);
+                let mut st = ReqState::new(engine, i, r, &sim, &kv_shape,
+                                           page_tokens);
                 st.served = admit_all;
                 st
             })
@@ -391,6 +491,8 @@ impl<'e> ServeSession<'e> {
             expert_fanout: opts.expert_fanout,
             // A zero budget means "no chunking" (CLI convenience).
             prefill_chunk: opts.prefill_chunk.filter(|&c| c > 0),
+            pager,
+            prefix_cache: opts.prefix_cache,
             prefill_chunks: 0,
             decode_time: 0.0,
             decode_tokens: 0,
@@ -461,12 +563,54 @@ impl<'e> ServeSession<'e> {
         self.states.iter().filter(|s| !s.done).map(|s| s.idx).collect()
     }
 
+    /// Admission-time prefix-cache probe (`--prefix-cache`): map the
+    /// longest cached full-page prefix of this request's prompt into
+    /// its page table and advance the prefill cursor past it, so the
+    /// chunked prefill runs only the suffix. The final prompt token is
+    /// never reused — its live prefill emits the first output token.
+    /// Returns the number of reused prompt tokens on a hit.
+    pub fn seed_prefix(&mut self, ridx: usize) -> Option<usize> {
+        if !self.prefix_cache {
+            return None;
+        }
+        let pool = self.pager.as_mut()?;
+        let st = &mut self.states[ridx];
+        let slots = pool.lookup_prefix(&st.prompt, st.valid - 1);
+        if slots.is_empty() {
+            return None;
+        }
+        let reused = slots.len() * pool.page_tokens();
+        let table = st.pages.as_mut().expect("paged request has a table");
+        debug_assert!(table.slots.is_empty(), "prefix seeded twice");
+        table.slots = slots;
+        st.prefill_pos = reused;
+        Some(reused)
+    }
+
     /// Reconcile the KV gauge with the live request set. Phase-bulk
     /// (`release_done = false`) keeps finished requests' KV resident
     /// until the run drains; continuous releases a request's KV when
     /// it completes. A request mid-chunked-prefill is gauged at its
     /// prefill cursor — the KV rows its finished chunks appended.
     pub fn sync_kv(&mut self, release_done: bool) -> Result<(), OomError> {
+        // Paged path: completed/cancelled requests drop their page
+        // references (pages shared with the prefix cache or another
+        // request stay live), then the gauge charges exactly the live
+        // pages — not the preallocated window.
+        if self.pager.is_some() {
+            let Self { pager, states, meter, .. } = self;
+            let pool = pager.as_mut().unwrap();
+            if release_done {
+                for s in states.iter_mut() {
+                    if s.done {
+                        if let Some(t) = s.pages.as_mut() {
+                            t.release_all(pool);
+                        }
+                    }
+                }
+            }
+            return meter.set_kv(pool.gauge_bytes());
+        }
         let paper_layers = self.engine.man.paper.n_layers;
         let kv_total: u64 = self
             .states
@@ -499,11 +643,19 @@ impl<'e> ServeSession<'e> {
     pub fn prefill_step(&mut self, ridx: usize, start_at: f64)
                         -> Result<SimResult<PrefillProgress>> {
         self.sync_faults(start_at);
-        match self.prefill_chunk {
-            None => Ok(self
+        // The paged path always routes through the chunked driver —
+        // an unbounded budget runs the whole (remaining) prompt as one
+        // chunk, which PR 5 pinned bit-identical to the monolithic
+        // pass — because only the chunked driver understands a prefill
+        // cursor seeded past a reused prefix.
+        match (self.prefill_chunk, self.pager.is_some()) {
+            (None, false) => Ok(self
                 .prefill(ridx, start_at)?
                 .map(PrefillProgress::Done)),
-            Some(budget) => self.prefill_chunked(ridx, start_at, budget),
+            (budget, _) => {
+                self.prefill_chunked(ridx, start_at,
+                                     budget.unwrap_or(usize::MAX))
+            }
         }
     }
 
@@ -651,7 +803,7 @@ impl<'e> ServeSession<'e> {
                        -> Result<SimResult<PrefillProgress>> {
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, expert_fanout, prefill_chunks,
-                   faults, fault_state, .. } = self;
+                   pager, prefix_cache, faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -666,6 +818,18 @@ impl<'e> ServeSession<'e> {
         let chunk = (valid - prefix).min(budget);
         let bound = prefix + chunk;
         let last = bound == valid;
+
+        // Paged KV: make the chunk's rows writable before the layer
+        // loop — allocate missing tail pages once (every layer writes
+        // the same positions) and COW-fork any shared page in the
+        // range. On the serving path shared prefix pages are always
+        // *before* the write cursor, so no fork fires.
+        if let Some(pool) = pager.as_mut() {
+            st.pages
+                .as_mut()
+                .expect("paged request has a page table")
+                .prepare_write(pool, prefix, bound);
+        }
 
         // ---- functional embed of this chunk at its offset ------------
         let toks = Tensor::i32(st.prompt[prefix..bound].to_vec(),
@@ -695,18 +859,65 @@ impl<'e> ServeSession<'e> {
             // whole prefix + chunk context, and the chunk's KV rows
             // are appended in place via ownership transfer.
             let vbound = Tensor::scalar_i32(bound as i32);
-            let pfx = Tensor::scalar_i32(prefix as i32);
-            let kc = std::mem::take(&mut st.kcs[l]);
-            let vc = std::mem::take(&mut st.vcs[l]);
-            let out = engine.comps.attn_prefill.run_mixed(vec![
-                ArgRef::T(&h), ArgRef::T(&vbound), lw.ln_attn.arg(),
-                lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
-                ArgRef::Own(kc), ArgRef::Own(vc), ArgRef::T(&pfx),
-            ])?;
-            let mut it = out.into_iter();
-            h = it.next().unwrap();
-            st.kcs[l] = it.next().unwrap();
-            st.vcs[l] = it.next().unwrap();
+            if let Some(table) = st.pages.as_mut() {
+                // Paged attention: pages before the write cursor's
+                // page (shared-prefix pages among them) are passed
+                // borrowed and never written; the write range's pages
+                // transfer by ownership and come back mutated in
+                // place — the contiguous path's zero-copy discipline,
+                // page by page.
+                let pt = table.page_tokens;
+                let np = table.n_pages();
+                let wp = prefix / pt;
+                let pt_t = Tensor::scalar_i32(pt as i32);
+                let ws_t = Tensor::scalar_i32(prefix as i32);
+                let np_t = Tensor::scalar_i32(np as i32);
+                let kc_own: Vec<Tensor> = (wp..np)
+                    .map(|p| std::mem::take(&mut table.slots[p].kc[l]))
+                    .collect();
+                let vc_own: Vec<Tensor> = (wp..np)
+                    .map(|p| std::mem::take(&mut table.slots[p].vc[l]))
+                    .collect();
+                let mut args: Vec<ArgRef> = vec![
+                    ArgRef::T(&h), ArgRef::T(&vbound), lw.ln_attn.arg(),
+                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                    ArgRef::T(&pt_t), ArgRef::T(&ws_t), ArgRef::T(&np_t),
+                ];
+                for p in 0..wp {
+                    args.push(ArgRef::T(&table.slots[p].kc[l]));
+                }
+                for t in kc_own {
+                    args.push(ArgRef::Own(t));
+                }
+                for p in 0..wp {
+                    args.push(ArgRef::T(&table.slots[p].vc[l]));
+                }
+                for t in vc_own {
+                    args.push(ArgRef::Own(t));
+                }
+                let out = engine.comps.attn_prefill.run_mixed(args)?;
+                let mut it = out.into_iter();
+                h = it.next().unwrap();
+                for p in wp..np {
+                    table.slots[p].kc[l] = it.next().unwrap();
+                }
+                for p in wp..np {
+                    table.slots[p].vc[l] = it.next().unwrap();
+                }
+            } else {
+                let pfx = Tensor::scalar_i32(prefix as i32);
+                let kc = std::mem::take(&mut st.kcs[l]);
+                let vc = std::mem::take(&mut st.vcs[l]);
+                let out = engine.comps.attn_prefill.run_mixed(vec![
+                    ArgRef::T(&h), ArgRef::T(&vbound), lw.ln_attn.arg(),
+                    lw.wq.arg(), lw.wk.arg(), lw.wv.arg(), lw.wo.arg(),
+                    ArgRef::Own(kc), ArgRef::Own(vc), ArgRef::T(&pfx),
+                ])?;
+                let mut it = out.into_iter();
+                h = it.next().unwrap();
+                st.kcs[l] = it.next().unwrap();
+                st.vcs[l] = it.next().unwrap();
+            }
 
             // functional gate over the chunk's rows
             let out = engine.comps.gate_prefill.run_mixed(vec![
@@ -778,6 +989,16 @@ impl<'e> ServeSession<'e> {
         let tok = crate::util::math::argmax(logits.as_f32()?) as i32;
         st.tokens.push(tok);
         st.h = h_last;
+        // Publish the finished prompt's full KV pages for reuse by
+        // later arrivals sharing the prefix. Only complete pages are
+        // cached — the partial tail page keeps taking decode appends.
+        if *prefix_cache {
+            if let Some(pool) = pager.as_mut() {
+                pool.insert_prefix(
+                    &st.prompt,
+                    st.pages.as_ref().expect("paged request has a table"));
+            }
+        }
         let t_first = streams.run(StreamId::Compute, t_layer,
                                   cost.head_compute(1, PAPER_VOCAB),
                                   "lm-head");
@@ -803,7 +1024,7 @@ impl<'e> ServeSession<'e> {
         self.sync_faults(t_sync);
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, ablation, force_rowwise,
-                   expert_fanout, decode_time, decode_tokens,
+                   expert_fanout, decode_time, decode_tokens, pager,
                    faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
@@ -815,6 +1036,22 @@ impl<'e> ServeSession<'e> {
 
         let b = active.len();
         let t_step_begin = streams.free_at(StreamId::Compute);
+
+        // Paged KV: each active request appends one row at its `pos`
+        // this step — allocate the tail page up front (once per step,
+        // not per layer). The write position is always at or past the
+        // request's own prefill, never inside a shared prefix page, so
+        // no COW fork fires here.
+        if let Some(pool) = pager.as_mut() {
+            for &r in active.iter() {
+                let pos = states[r].pos;
+                states[r]
+                    .pages
+                    .as_mut()
+                    .expect("paged request has a page table")
+                    .prepare_write(pool, pos, pos + 1);
+            }
+        }
 
         // functional embed: one (B, D) lookup with per-row positions,
         // or per-request (1, D) embeds into st.h (fallback)
@@ -1108,10 +1345,22 @@ impl<'e> ServeSession<'e> {
             failover_fetches: stats.failover_fetches,
             degraded_acquires: stats.degraded_acquires,
         };
+        let kv_paging = self
+            .pager
+            .as_ref()
+            .map(|p| crate::metrics::KvPagingSummary {
+                kv_pages_allocated: p.stats.pages_allocated,
+                kv_pages_shared: p.stats.pages_shared,
+                prefix_lookups: p.stats.prefix_lookups,
+                prefix_hits: p.stats.prefix_hits,
+                prefix_reused_tokens: p.stats.prefix_reused_tokens,
+            })
+            .unwrap_or_default();
         let summary = summarize(&metrics, makespan)
             .with_decode_throughput(self.decode_tokens, self.decode_time)
             .with_prefill_chunks(self.prefill_chunks)
-            .with_robustness(robustness);
+            .with_robustness(robustness)
+            .with_kv_paging(kv_paging);
         if oom.is_some() {
             metrics.clear();
         }
@@ -1119,6 +1368,16 @@ impl<'e> ServeSession<'e> {
             summary,
             metrics,
             peak_bytes,
+            peak_kv_bytes: if oom.is_some() {
+                0
+            } else {
+                self.meter.peak_kv_bytes()
+            },
+            kv_pages_live: self
+                .pager
+                .as_ref()
+                .map(|p| p.live_pages() as u64)
+                .unwrap_or(0),
             hit_rate,
             accuracy: stats.accuracy,
             expert_stats: stats,

@@ -7,6 +7,12 @@
 //!
 //! Request:  {"prompt": [1,2,3], "n_decode": 8, "dataset": "squad"}
 //! Response: {"req_id": 0, "tokens": [...], "ttft": 0.12, "e2e": 0.51}
+//!
+//! Malformed lines are answered in-band with a one-line JSON error
+//! carrying the offending (1-based) stdin line number:
+//! `{"error": "...", "line": 3}` — they never vanish silently.
+//! With `--kv-page` the per-request responses also carry the paged-KV
+//! prefix-cache hit stats for that serve call.
 
 use std::collections::BTreeMap;
 use std::io::BufRead;
@@ -35,8 +41,18 @@ fn parse_request(line: &str, id: usize) -> Result<Request> {
     })
 }
 
+/// One-line JSON error response for a stdin line that failed to parse,
+/// keyed by its 1-based line number so clients can correlate.
+fn error_line(err: &anyhow::Error, lineno: usize) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("error".into(), Json::from(format!("{err:#}").as_str()));
+    obj.insert("line".into(), Json::from(lineno));
+    Json::Obj(obj).to_string()
+}
+
 pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
-                   device: DeviceProfile) -> Result<()> {
+                   device: DeviceProfile, kv_page: Option<usize>,
+                   prefix_cache: bool) -> Result<()> {
     let engine = Engine::load(artifacts, model)?;
     eprintln!("duoserve: serving {model} with {} on {} \
                (one JSON request per line; EOF to stop)",
@@ -49,7 +65,8 @@ pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
     let reader = std::thread::spawn(move || {
         let stdin = std::io::stdin();
         let mut id = 0usize;
-        for line in stdin.lock().lines() {
+        for (n, line) in stdin.lock().lines().enumerate() {
+            let lineno = n + 1;
             let Ok(line) = line else { break };
             if line.trim().is_empty() {
                 continue;
@@ -61,12 +78,16 @@ pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
                     }
                     id += 1;
                 }
-                Err(e) => eprintln!("bad request: {e}"),
+                // In-band one-line JSON error (stdout, like every other
+                // response) so malformed input never vanishes silently.
+                Err(e) => println!("{}", error_line(&e, lineno)),
             }
         }
     });
 
-    let opts = ServeOptions::new(policy, device);
+    let mut opts = ServeOptions::new(policy, device);
+    opts.kv_page = kv_page;
+    opts.prefix_cache = prefix_cache;
     while let Ok((id, req)) = rx.recv() {
         let out = engine.serve(std::slice::from_ref(&req), &opts)?;
         let mut obj = BTreeMap::new();
@@ -82,6 +103,17 @@ pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
             obj.insert("ttft".into(), Json::from(m.ttft));
             obj.insert("e2e".into(), Json::from(m.e2e));
             obj.insert("hit_rate".into(), Json::from(out.hit_rate));
+            // Paged-KV runs report their prefix-cache stats; the legacy
+            // contiguous path keeps the exact historical response shape.
+            if opts.kv_page.is_some() {
+                let k = &out.summary.kv_paging;
+                obj.insert("prefix_hits".into(),
+                           Json::from(k.prefix_hits as usize));
+                obj.insert("prefix_reused_tokens".into(),
+                           Json::from(k.prefix_reused_tokens as usize));
+                obj.insert("prefix_hit_rate".into(),
+                           Json::from(k.prefix_hit_rate()));
+            }
         }
         println!("{}", Json::Obj(obj));
     }

@@ -37,6 +37,12 @@ COMMANDS:
                  prefill chunks; 0 = whole prompt at once, the default.
                  In continuous mode chunks interleave with decode
                  steps, bounding decoder stalls to chunk-sized units)
+                --kv-page N  (page the KV cache in N-token pages from
+                 a shared refcounted pool; 0 = the legacy contiguous
+                 per-request tensors, the default — bit-identical)
+                --prefix-cache  (reuse cached KV pages for repeated
+                 prompt prefixes, skipping their prefill; needs
+                 --kv-page N)
                 --shards N  (N>=2 shards the host pool and device
                  expert cache across N simulated devices; 1 = the
                  legacy single-device provider, the default)
@@ -63,6 +69,7 @@ COMMANDS:
   bench-figure  <fig2|fig5|fig6|fig7|table2|table3|ablation|all>
                 [--requests N] [--seed S]
   serve         --model M --policy P --device D
+                [--kv-page N --prefix-cache]
   gen-artifacts --model M | --all     (rust-native artifact build)
 
 DEFAULTS: model=mixtral8x7b-sim policy=duoserve device=a5000
@@ -102,6 +109,28 @@ fn prefill_chunk(args: &duoserve::util::args::Args)
         0 => None,
         n => Some(n),
     })
+}
+
+/// `--kv-page N` parsing: 0 (the default) keeps the legacy contiguous
+/// per-request KV tensors; N > 0 turns on the paged KV pool with
+/// N-token pages.
+fn kv_page(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.usize("kv-page", 0)? {
+        0 => None,
+        n => Some(n),
+    })
+}
+
+/// `--kv-page` / `--prefix-cache` parsing and validation: the prefix
+/// cache stores page-granular KV, so it requires paging to be on.
+fn kv_paging_opts(args: &Args) -> Result<(Option<usize>, bool)> {
+    let page = kv_page(args)?;
+    let prefix = args.flag("prefix-cache");
+    if prefix && page.is_none() {
+        bail!("--prefix-cache requires --kv-page N (N > 0): the prefix \
+               cache shares page-granular KV between requests");
+    }
+    Ok((page, prefix))
 }
 
 /// `--decode-priority on|off` parsing (continuous mode only).
@@ -149,6 +178,22 @@ fn print_robustness(r: &duoserve::metrics::Robustness) {
     );
 }
 
+/// Paged-KV report line, printed only when paging was on (the
+/// counters are all-zero otherwise) so legacy output stays
+/// byte-identical.
+fn print_kv_paging(k: &duoserve::metrics::KvPagingSummary) {
+    if *k == duoserve::metrics::KvPagingSummary::default() {
+        return;
+    }
+    println!(
+        "kv-paging: kv_pages_allocated={} kv_pages_shared={} \
+         prefix_hit_rate={:.1}%",
+        k.kv_pages_allocated,
+        k.kv_pages_shared,
+        k.prefix_hit_rate() * 100.0,
+    );
+}
+
 /// Per-shard hit-rate / balance report lines (sharded runs only).
 fn print_shard_report(stats: &[ExpertStats], resident: &[usize],
                       balance: f64) {
@@ -174,7 +219,7 @@ const KNOWN_OPTS: &[&str] = &[
     "device", "mode", "batch", "ablation", "prefill-chunk", "shards",
     "placement", "rate", "max-in-flight", "queue-cap", "decode-priority",
     "slo-ttft", "slo-e2e", "faults", "queue-deadline", "hard-deadline",
-    "shed-above",
+    "shed-above", "kv-page",
 ];
 
 fn main() {
@@ -187,7 +232,8 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["trace-streams", "all"])?;
+    let args = Args::parse(std::env::args().skip(1),
+                           &["trace-streams", "all", "prefix-cache"])?;
     if args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -226,6 +272,9 @@ fn run() -> Result<()> {
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
             opts.faults = faults(&args)?;
+            let (kv_page, prefix_cache) = kv_paging_opts(&args)?;
+            opts.kv_page = kv_page;
+            opts.prefix_cache = prefix_cache;
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
@@ -263,6 +312,7 @@ fn run() -> Result<()> {
                 s.prefill_chunks,
             );
             print_robustness(&s.robustness);
+            print_kv_paging(&s.kv_paging);
             print_shard_report(&out.shard_stats, &out.shard_resident,
                                out.shard_balance);
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
@@ -293,11 +343,15 @@ fn run() -> Result<()> {
             opts.ablation = ablation(&args.str("ablation", "none"))?;
             opts.prefill_chunk = prefill_chunk(&args)?;
             opts.faults = faults(&args)?;
+            let (kv_page, prefix_cache) = kv_paging_opts(&args)?;
+            opts.kv_page = kv_page;
+            opts.prefix_cache = prefix_cache;
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
             let mut robust = duoserve::metrics::Robustness::default();
+            let mut kv_paging = duoserve::metrics::KvPagingSummary::default();
             let mut peak = 0u64;
             let mut hit = 0.0;
             let mut makespan = 0.0;
@@ -334,6 +388,12 @@ fn run() -> Result<()> {
                 robust.fetch_retries += r.fetch_retries;
                 robust.failover_fetches += r.failover_fetches;
                 robust.degraded_acquires += r.degraded_acquires;
+                let k = &out.summary.kv_paging;
+                kv_paging.kv_pages_allocated += k.kv_pages_allocated;
+                kv_paging.kv_pages_shared += k.kv_pages_shared;
+                kv_paging.prefix_lookups += k.prefix_lookups;
+                kv_paging.prefix_hits += k.prefix_hits;
+                kv_paging.prefix_reused_tokens += k.prefix_reused_tokens;
                 if let Some(trace) = &out.stream_trace {
                     let mut by_label: std::collections::BTreeMap<&str,
                         (usize, f64)> = Default::default();
@@ -366,6 +426,7 @@ fn run() -> Result<()> {
                 decode_tps,
             );
             print_robustness(&robust);
+            print_kv_paging(&kv_paging);
             print_shard_report(&shard_stats, &shard_resident, shard_balance);
             Ok(())
         }
@@ -454,7 +515,9 @@ fn run() -> Result<()> {
         "serve" => {
             let pol = policy(&args.str("policy", "duoserve"))?;
             let dev = device(&args.str("device", "a5000"))?;
-            duoserve_server::serve_stdin(&artifacts, &model, pol, dev)
+            let (kv_page, prefix_cache) = kv_paging_opts(&args)?;
+            duoserve_server::serve_stdin(&artifacts, &model, pol, dev,
+                                         kv_page, prefix_cache)
         }
         "gen-artifacts" => {
             if args.flag("all") {

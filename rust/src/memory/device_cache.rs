@@ -27,14 +27,20 @@ use std::collections::HashMap;
 
 use crate::memory::ExpertKey;
 
+/// One resident cache entry: the virtual-time metadata of a fetched
+/// expert (the weight bytes themselves live in the host pool).
 #[derive(Debug, Clone, Copy)]
 pub struct CachedExpert {
     /// Virtual time at which the transfer that produced this entry
     /// completes; compute that uses it must start at/after this.
     pub ready_at: f64,
+    /// Virtual time of the entry's most recent use — the LRU key.
     pub last_used: f64,
 }
 
+/// The GPU expert cache: bounded per-layer slots with LRU eviction and
+/// an optional layer window (see the module docs for the per-policy
+/// configurations).
 #[derive(Debug)]
 pub struct DeviceExpertCache {
     per_layer_capacity: usize,
@@ -44,6 +50,8 @@ pub struct DeviceExpertCache {
 }
 
 impl DeviceExpertCache {
+    /// A cache with `per_layer_capacity` slots per layer and at most
+    /// `layer_window` distinct resident layers (0 = unlimited).
     pub fn new(per_layer_capacity: usize, layer_window: usize) -> Self {
         assert!(per_layer_capacity > 0, "cache capacity must be positive");
         DeviceExpertCache {
@@ -53,6 +61,8 @@ impl DeviceExpertCache {
         }
     }
 
+    /// Whether `key` is resident (no LRU refresh — use [`Self::touch`]
+    /// on the serving path).
     pub fn contains(&self, key: ExpertKey) -> bool {
         self.slots.contains_key(&key)
     }
@@ -70,6 +80,7 @@ impl DeviceExpertCache {
         }
     }
 
+    /// Read-only view of a resident entry's metadata (no LRU refresh).
     pub fn get(&self, key: ExpertKey) -> Option<&CachedExpert> {
         self.slots.get(&key)
     }
@@ -144,18 +155,24 @@ impl DeviceExpertCache {
             .fold(0.0, f64::max)
     }
 
+    /// Drop every entry of one layer (ODF's after-layer eviction and
+    /// the window victim path).
     pub fn evict_layer(&mut self, layer: usize) {
         self.slots.retain(|k, _| k.layer != layer);
     }
 
+    /// Drop every entry (engine reset between serve calls).
     pub fn clear(&mut self) {
         self.slots.clear();
     }
 
+    /// Total resident entries across all layers.
     pub fn resident_count(&self) -> usize {
         self.slots.len()
     }
 
+    /// Sorted routed-expert indices resident in `layer` (shared
+    /// experts excluded — they are always resident by construction).
     pub fn resident_in_layer(&self, layer: usize) -> Vec<usize> {
         let mut v: Vec<usize> = self
             .slots
@@ -167,6 +184,7 @@ impl DeviceExpertCache {
         v
     }
 
+    /// The configured per-layer slot count.
     pub fn per_layer_capacity(&self) -> usize {
         self.per_layer_capacity
     }

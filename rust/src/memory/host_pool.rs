@@ -20,6 +20,8 @@ use crate::runtime::{kernels, ArgRef, Runtime, Tensor};
 /// the native backend this is simply the host tensor (+ transpose); a
 /// device-backed runtime would pre-stage buffers here.
 pub struct Weight {
+    /// The canonical artifact-contract tensor, handed to executables
+    /// as-is.
     pub t: Tensor,
     /// Cached transpose for matmul right-hand sides (None for rank-1
     /// norms and for lookup tables constructed via [`Weight::lhs`]).
@@ -52,6 +54,8 @@ impl Weight {
         Ok(Weight { t, bt: None })
     }
 
+    /// Borrow this weight as an executable argument, carrying the
+    /// cached transpose when one exists.
     pub fn arg(&self) -> ArgRef<'_> {
         match &self.bt {
             Some(bt) => ArgRef::WT { t: &self.t, bt },
@@ -63,15 +67,20 @@ impl Weight {
 /// Identifies one routed or shared expert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ExpertKey {
+    /// Transformer layer index.
     pub layer: usize,
+    /// Expert index within the layer (routed) or shared-expert slot.
     pub expert: usize,
+    /// Whether this is a shared (always-active) expert.
     pub shared: bool,
 }
 
 impl ExpertKey {
+    /// Key of a routed (top-k gated) expert.
     pub fn routed(layer: usize, expert: usize) -> Self {
         ExpertKey { layer, expert, shared: false }
     }
+    /// Key of a shared (always-active) expert.
     pub fn shared(layer: usize, expert: usize) -> Self {
         ExpertKey { layer, expert, shared: true }
     }
@@ -79,20 +88,34 @@ impl ExpertKey {
 
 /// Non-MoE weights (resident on GPU from engine start).
 pub struct NonMoeWeights {
+    /// Token embedding table.
     pub emb: Weight,
+    /// Position embedding table.
     pub pos_emb: Weight,
+    /// Final layer norm before the LM head.
     pub ln_final: Weight,
+    /// LM-head projection.
     pub w_out: Weight,
+    /// Per-layer attention/gating weights.
     pub layers: Vec<LayerNonMoe>,
 }
 
+/// One layer's always-resident weights: attention projections plus the
+/// MoE router gate.
 pub struct LayerNonMoe {
+    /// Pre-attention layer norm.
     pub ln_attn: Weight,
+    /// Query projection.
     pub wq: Weight,
+    /// Key projection.
     pub wk: Weight,
+    /// Value projection.
     pub wv: Weight,
+    /// Attention output projection.
     pub wo: Weight,
+    /// Pre-MoE layer norm.
     pub ln_moe: Weight,
+    /// Router gate (token → expert logits).
     pub wg: Weight,
 }
 
@@ -102,6 +125,7 @@ pub struct LayerNonMoe {
 /// is the device cache's business.
 pub struct HostPool {
     experts: HashMap<ExpertKey, Arc<CachedTensors>>,
+    /// The always-resident non-MoE weights.
     pub nonmoe: NonMoeWeights,
 }
 
@@ -118,6 +142,9 @@ fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
 }
 
 impl HostPool {
+    /// Load every weight named by the manifest from the artifact tree
+    /// (raw little-endian f32 `.bin` files), splitting each expert
+    /// blob into its `w1|w3|w2` tensors.
     pub fn load(man: &Manifest, rt: &Runtime) -> Result<Self> {
         let raw = |name: &str| -> Result<Tensor> {
             let entry = man.weight_entry(name)?;
@@ -198,6 +225,7 @@ impl HostPool {
             .with_context(|| format!("host pool missing {key:?}"))
     }
 
+    /// Total loaded expert blobs (routed + shared, across all layers).
     pub fn n_experts(&self) -> usize {
         self.experts.len()
     }
@@ -205,7 +233,10 @@ impl HostPool {
 
 /// The three weight tensors of one expert, as stored in a GPU-cache slot.
 pub struct CachedTensors {
+    /// Up-projection (gate branch input).
     pub w1: Weight,
+    /// Up-projection (linear branch input).
     pub w3: Weight,
+    /// Down-projection back to the model dimension.
     pub w2: Weight,
 }

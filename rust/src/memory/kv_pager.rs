@@ -1,0 +1,501 @@
+//! Paged KV cache with cross-request prefix sharing.
+//!
+//! Instead of one contiguous `(kv_len, n_heads, head_dim)` tensor per
+//! layer per request, the KV cache is split into fixed-size **pages**
+//! of `page_tokens` rows. A [`KvPagePool`] hands out refcounted page
+//! ids and tracks how many bytes of pages are actually live — so the
+//! memory meter charges allocated pages, not the preallocated window —
+//! while each request's [`KvPageTable`] owns the page *tensors* (one
+//! `(page_tokens, n_heads, head_dim)` K and V tensor per layer per
+//! page) so the session's layer loops can move them through the
+//! executable boundary with `ArgRef::Own` exactly like the contiguous
+//! path.
+//!
+//! Sharing is Arc-backed and full-page-only: a prefix-cache hit hands
+//! the new request shallow clones of *complete* prompt pages (the data
+//! `Arc` is shared, never copied), and the reuse cap guarantees a
+//! request never appends into a page it shares — appends always land
+//! in fresh unique pages, so the PR 2 zero-copy discipline
+//! (`runtime::copy_stats`) holds on the sharing path. If a shared page
+//! ever *is* written (only reachable through the pager API directly),
+//! [`KvPageTable::prepare_write`] forks it first: the writer gets a
+//! fresh page id, the tensor data copy happens lazily at the first row
+//! write via `Arc::make_mut` (counted by `copy_stats`), and the other
+//! holders are untouched.
+//!
+//! The prefix cache is a hash chain over whole prompt pages: page `k`
+//! of a prompt is keyed by `h_k = fnv1a(h_{k-1} || tokens of page k)`,
+//! and every entry stores its page's tokens so a lookup verifies the
+//! chain inductively (hash collisions degrade to a miss, never to
+//! wrong KV). Entries hold one pool reference per cached page and are
+//! bounded by an LRU watermark: least-recently-used chains (ties
+//! broken by lower key, mirroring `DeviceExpertCache`) are dropped —
+//! together with their now-unreachable descendants — until the cache
+//! is back under its page cap, so the pool stays bounded even under an
+//! adversarial stream of distinct prefixes.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Tensor;
+
+/// Default bound on pages pinned by the prefix cache (LRU beyond it).
+pub const DEFAULT_PREFIX_CACHE_PAGES: usize = 1024;
+
+/// Cumulative pager counters, surfaced in `metrics::KvPagingSummary`
+/// and the paged-KV tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPagerStats {
+    /// Pages ever allocated (fresh zero pages plus COW forks).
+    pub pages_allocated: u64,
+    /// Page references handed out by prefix-cache hits.
+    pub pages_shared: u64,
+    /// Prefix-cache lookups performed at admission.
+    pub prefix_lookups: u64,
+    /// Lookups that reused at least one full page.
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via reused pages.
+    pub prefix_reused_tokens: u64,
+    /// Copy-on-write forks of a shared page about to be written.
+    pub cow_forks: u64,
+    /// Pages dropped from the prefix cache by the LRU watermark.
+    pub evicted_pages: u64,
+}
+
+/// One page table slot: the pool's refcounted page id plus the
+/// per-layer K/V tensors (`n_layers` each, `(page_tokens, n_heads,
+/// head_dim)`). Cloning a slot is O(layers) `Arc` bumps — the page
+/// data itself is shared, which is exactly how prefix reuse works.
+#[derive(Debug, Clone, Default)]
+pub struct PageSlot {
+    /// Pool page id (refcounted in [`KvPagePool`]).
+    pub id: u64,
+    /// Per-layer key pages.
+    pub kc: Vec<Tensor>,
+    /// Per-layer value pages.
+    pub vc: Vec<Tensor>,
+}
+
+/// One request's logical-to-physical page map: slot `p` holds KV rows
+/// for absolute positions `[p * page_tokens, (p+1) * page_tokens)`.
+#[derive(Debug, Default)]
+pub struct KvPageTable {
+    /// Tokens per page (the pool's page size).
+    pub page_tokens: usize,
+    /// Pages in position order; the tail page receives appends.
+    pub slots: Vec<PageSlot>,
+}
+
+impl KvPageTable {
+    /// An empty table for a request entering a `page_tokens` pool.
+    pub fn new(page_tokens: usize) -> Self {
+        KvPageTable { page_tokens, slots: Vec::new() }
+    }
+
+    /// Number of mapped pages.
+    pub fn n_pages(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Make positions `[start, end)` writable: allocate missing tail
+    /// pages and fork any shared page in the write range (COW — the
+    /// fork takes a fresh id; the data copy is deferred to the first
+    /// row write, where `Arc::make_mut` performs and `copy_stats`
+    /// counts it). On the normal serving path shared pages are always
+    /// *before* the write range, so no fork fires.
+    pub fn prepare_write(&mut self, pool: &mut KvPagePool, start: usize,
+                         end: usize) {
+        debug_assert!(end > start, "empty write range {start}..{end}");
+        let pt = self.page_tokens;
+        let last = (end - 1) / pt;
+        while self.slots.len() <= last {
+            self.slots.push(pool.alloc());
+        }
+        for p in start / pt..=last {
+            if pool.refcount(self.slots[p].id) > 1 {
+                let old = self.slots[p].id;
+                self.slots[p].id = pool.fork();
+                pool.release(old);
+                pool.stats.cow_forks += 1;
+            }
+        }
+    }
+
+    /// Drop every page reference this table holds (request completion
+    /// or cancellation). Pages also pinned by the prefix cache or
+    /// another request stay live; the rest are freed in the pool's
+    /// gauge.
+    pub fn release_all(&mut self, pool: &mut KvPagePool) {
+        for slot in self.slots.drain(..) {
+            pool.release(slot.id);
+        }
+    }
+}
+
+/// A cached full prompt page: one link of a prefix hash chain.
+#[derive(Debug)]
+struct PrefixEntry {
+    /// Chain hash of the parent link (`0` for the first page).
+    parent: u64,
+    /// 1-based chain depth: this entry caches prompt page `depth - 1`.
+    depth: usize,
+    /// The page's prompt tokens, stored for collision-proof verify.
+    tokens: Vec<i32>,
+    /// Shallow clone of the cached page (holds one pool reference).
+    slot: PageSlot,
+    /// LRU stamp (pool clock at last hit or insert).
+    last_used: u64,
+}
+
+/// The global page allocator: refcounted page ids, byte gauging for
+/// the memory meter, and the prompt-prefix cache. One pool per
+/// serving session; every request's [`KvPageTable`] allocates and
+/// releases through it.
+#[derive(Debug)]
+pub struct KvPagePool {
+    page_tokens: usize,
+    n_layers: usize,
+    page_shape: [usize; 3],
+    page_bytes: u64,
+    next_id: u64,
+    refs: BTreeMap<u64, usize>,
+    prefix: BTreeMap<u64, PrefixEntry>,
+    cache_cap_pages: usize,
+    clock: u64,
+    /// Cumulative counters (see [`KvPagerStats`]).
+    pub stats: KvPagerStats,
+}
+
+impl KvPagePool {
+    /// A pool of `page_tokens`-row pages for an `n_layers` model with
+    /// `(n_heads, head_dim)` KV rows. `page_bytes` is what one live
+    /// page charges against the memory meter (paper-scale bytes);
+    /// `cache_cap_pages` bounds the prefix cache.
+    pub fn new(page_tokens: usize, n_layers: usize, n_heads: usize,
+               head_dim: usize, page_bytes: u64, cache_cap_pages: usize)
+               -> Self {
+        assert!(page_tokens > 0, "page size must be positive");
+        KvPagePool {
+            page_tokens,
+            n_layers,
+            page_shape: [page_tokens, n_heads, head_dim],
+            page_bytes,
+            next_id: 1,
+            refs: BTreeMap::new(),
+            prefix: BTreeMap::new(),
+            cache_cap_pages,
+            clock: 0,
+            stats: KvPagerStats::default(),
+        }
+    }
+
+    /// Tokens per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Allocate a fresh zero page (refcount 1).
+    pub fn alloc(&mut self) -> PageSlot {
+        let id = self.fork();
+        let zeros = || -> Vec<Tensor> {
+            (0..self.n_layers).map(|_| Tensor::zeros(&self.page_shape))
+                .collect()
+        };
+        PageSlot { id, kc: zeros(), vc: zeros() }
+    }
+
+    /// Allocate a bare page id (refcount 1) without tensors — the COW
+    /// half of [`KvPageTable::prepare_write`], which keeps the shared
+    /// tensors and lets the first row write perform the data copy.
+    pub fn fork(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.refs.insert(id, 1);
+        self.stats.pages_allocated += 1;
+        id
+    }
+
+    /// Add a reference to a live page.
+    pub fn retain(&mut self, id: u64) {
+        *self.refs.get_mut(&id).expect("retain of freed kv page") += 1;
+    }
+
+    /// Drop a reference; the page's bytes leave the gauge at zero.
+    pub fn release(&mut self, id: u64) {
+        let rc = self.refs.get_mut(&id).expect("release of freed kv page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.refs.remove(&id);
+        }
+    }
+
+    /// Current references on a page (0 if freed).
+    pub fn refcount(&self, id: u64) -> usize {
+        self.refs.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Pages currently live (held by any table or the prefix cache).
+    pub fn live_pages(&self) -> usize {
+        self.refs.len()
+    }
+
+    /// Pages currently pinned by the prefix cache.
+    pub fn cached_pages(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Bytes the live pages charge against the memory meter.
+    pub fn gauge_bytes(&self) -> u64 {
+        self.refs.len() as u64 * self.page_bytes
+    }
+
+    /// FNV-1a over the parent hash and one page of prompt tokens.
+    fn chain_hash(prev: u64, toks: &[i32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in prev.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        for &t in toks {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Look up the longest cached full-page prefix of `prompt`, capped
+    /// at `max_tokens` (the caller passes `prompt_len - 1` so the
+    /// final prompt token is always prefilled live and emits the first
+    /// output token). Returns shallow page clones in position order;
+    /// each carries one fresh pool reference. Every matched link is
+    /// token-verified, so a hash collision is a miss, never bad KV.
+    pub fn lookup_prefix(&mut self, prompt: &[i32], max_tokens: usize)
+                         -> Vec<PageSlot> {
+        self.stats.prefix_lookups += 1;
+        let pt = self.page_tokens;
+        let max_pages = (max_tokens.min(prompt.len())) / pt;
+        let mut out: Vec<PageSlot> = Vec::new();
+        let mut h = 0u64;
+        for k in 0..max_pages {
+            let toks = &prompt[k * pt..(k + 1) * pt];
+            h = Self::chain_hash(h, toks);
+            match self.prefix.get_mut(&h) {
+                Some(e) if e.depth == k + 1 && e.tokens == toks => {
+                    e.last_used = self.clock;
+                    out.push(e.slot.clone());
+                }
+                _ => break,
+            }
+        }
+        self.clock += 1;
+        for slot in &out {
+            self.retain(slot.id);
+        }
+        if !out.is_empty() {
+            self.stats.prefix_hits += 1;
+            self.stats.pages_shared += out.len() as u64;
+            self.stats.prefix_reused_tokens += (out.len() * pt) as u64;
+        }
+        out
+    }
+
+    /// Cache `prompt`'s complete pages out of `table` (called once the
+    /// prompt is fully prefilled). Only *full* pages are cached — the
+    /// partial tail page keeps receiving decode appends and must stay
+    /// private. Each newly cached page takes one pool reference; the
+    /// LRU watermark then evicts cold chains back under the cap.
+    pub fn insert_prefix(&mut self, prompt: &[i32], table: &KvPageTable) {
+        let pt = self.page_tokens;
+        let full = (prompt.len() / pt).min(table.slots.len());
+        let mut h = 0u64;
+        let mut parent = 0u64;
+        for k in 0..full {
+            let toks = &prompt[k * pt..(k + 1) * pt];
+            h = Self::chain_hash(parent, toks);
+            match self.prefix.get_mut(&h) {
+                Some(e) if e.depth == k + 1 && e.tokens == toks => {
+                    e.last_used = self.clock;
+                }
+                Some(_) => break, // collision: keep the incumbent chain
+                None => {
+                    let slot = table.slots[k].clone();
+                    self.retain(slot.id);
+                    self.prefix.insert(h, PrefixEntry {
+                        parent,
+                        depth: k + 1,
+                        tokens: toks.to_vec(),
+                        slot,
+                        last_used: self.clock,
+                    });
+                }
+            }
+            parent = h;
+        }
+        self.clock += 1;
+        self.evict_to_cap();
+    }
+
+    /// Drop least-recently-used chains (ties to the lower key) until
+    /// the cache holds at most `cache_cap_pages` pages. Evicting a
+    /// link also drops its now-unreachable descendants.
+    fn evict_to_cap(&mut self) {
+        while self.prefix.len() > self.cache_cap_pages {
+            let victim = self
+                .prefix
+                .iter()
+                .min_by_key(|&(k, e)| (e.last_used, *k))
+                .map(|(k, _)| *k)
+                .expect("non-empty cache over cap");
+            self.evict_chain(victim);
+        }
+    }
+
+    /// Remove entry `key` and, transitively, every entry whose parent
+    /// chain runs through it.
+    fn evict_chain(&mut self, key: u64) {
+        let mut doomed = vec![key];
+        while let Some(k) = doomed.pop() {
+            if let Some(e) = self.prefix.remove(&k) {
+                self.release(e.slot.id);
+                self.stats.evicted_pages += 1;
+                let children: Vec<u64> = self
+                    .prefix
+                    .iter()
+                    .filter(|(_, c)| c.parent == k)
+                    .map(|(ck, _)| *ck)
+                    .collect();
+                doomed.extend(children);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: usize) -> KvPagePool {
+        // page 4 tokens, 2 layers, 1 head, dim 2, 100 bytes/page
+        KvPagePool::new(4, 2, 1, 2, 100, cap)
+    }
+
+    #[test]
+    fn alloc_retain_release_gauge() {
+        let mut p = pool(16);
+        let a = p.alloc();
+        let b = p.alloc();
+        assert_eq!(p.live_pages(), 2);
+        assert_eq!(p.gauge_bytes(), 200);
+        assert_eq!(p.stats.pages_allocated, 2);
+        p.retain(a.id);
+        p.release(a.id);
+        assert_eq!(p.refcount(a.id), 1, "still one holder");
+        p.release(a.id);
+        p.release(b.id);
+        assert_eq!(p.live_pages(), 0);
+        assert_eq!(p.gauge_bytes(), 0);
+    }
+
+    #[test]
+    fn table_prepare_write_allocates_and_bounds() {
+        let mut p = pool(16);
+        let mut t = KvPageTable::new(4);
+        t.prepare_write(&mut p, 0, 6); // tokens 0..6 -> pages 0,1
+        assert_eq!(t.n_pages(), 2);
+        t.prepare_write(&mut p, 6, 7); // still page 1
+        assert_eq!(t.n_pages(), 2);
+        assert_eq!(p.stats.cow_forks, 0, "unique pages never fork");
+        t.release_all(&mut p);
+        assert_eq!(p.live_pages(), 0, "release_all drops every ref");
+    }
+
+    #[test]
+    fn cow_fork_on_shared_page_write() {
+        let mut p = pool(16);
+        let mut a = KvPageTable::new(4);
+        a.prepare_write(&mut p, 0, 4);
+        // b shares a's page 0 (what a prefix hit does)
+        let mut b = KvPageTable::new(4);
+        b.slots.push(a.slots[0].clone());
+        p.retain(b.slots[0].id);
+        assert_eq!(p.refcount(a.slots[0].id), 2);
+
+        // writing through b must fork, not mutate the shared page
+        let shared_id = b.slots[0].id;
+        b.prepare_write(&mut p, 2, 4);
+        assert_ne!(b.slots[0].id, shared_id, "writer got a fresh id");
+        assert_eq!(p.refcount(shared_id), 1, "a keeps the original");
+        assert_eq!(p.stats.cow_forks, 1);
+        // data copy is lazy: both slots still share the Arc until a
+        // row write goes through as_f32_mut
+        b.slots[0].kc[0].as_f32_mut().unwrap()[0] = 9.0;
+        assert_eq!(a.slots[0].kc[0].as_f32().unwrap()[0], 0.0,
+                   "fork write never leaks into the shared page");
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.live_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_insert_lookup_roundtrip_and_cap_floor() {
+        let mut p = pool(16);
+        let prompt: Vec<i32> = (0..10).collect(); // 2 full pages + tail
+        let mut t = KvPageTable::new(4);
+        t.prepare_write(&mut p, 0, 10);
+        t.slots[0].kc[0].as_f32_mut().unwrap()[0] = 7.5;
+        p.insert_prefix(&prompt, &t);
+        assert_eq!(p.cached_pages(), 2, "only full pages cached");
+
+        // full match capped at prompt_len - 1 = 9 -> 2 pages
+        let hit = p.lookup_prefix(&prompt, prompt.len() - 1);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(hit[0].kc[0].as_f32().unwrap()[0], 7.5,
+                   "reused page carries the cached KV rows");
+        assert_eq!(p.refcount(hit[0].id), 3, "table + cache + hit");
+        // cap floor: max_tokens 7 -> only 1 full page reusable
+        let part = p.lookup_prefix(&prompt, 7);
+        assert_eq!(part.len(), 1);
+        // diverging second page stops the chain after page 0
+        let mut other = prompt.clone();
+        other[5] ^= 1;
+        let div = p.lookup_prefix(&other, other.len() - 1);
+        assert_eq!(div.len(), 1);
+        assert_eq!(p.stats.prefix_lookups, 3);
+        assert_eq!(p.stats.prefix_hits, 3);
+        assert_eq!(p.stats.prefix_reused_tokens, (2 + 1 + 1) * 4);
+
+        // a cold prompt misses outright
+        let cold: Vec<i32> = (50..60).collect();
+        assert!(p.lookup_prefix(&cold, 9).is_empty());
+        assert_eq!(p.stats.prefix_hits, 3, "miss is not a hit");
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_and_cascades() {
+        let mut p = pool(2); // cache holds at most 2 pages
+        let mut t1 = KvPageTable::new(4);
+        let c: Vec<i32> = (0..8).collect(); // 2 full pages, one chain
+        t1.prepare_write(&mut p, 0, 8);
+        p.insert_prefix(&c, &t1);
+        assert_eq!(p.cached_pages(), 2);
+
+        // inserting a second 2-page chain overflows the cap; the cold
+        // chain is dropped whole (evicting either of its links removes
+        // the other — the root by cascade, the leaf by a second round)
+        let mut t2 = KvPageTable::new(4);
+        let d: Vec<i32> = (100..108).collect();
+        t2.prepare_write(&mut p, 0, 8);
+        p.insert_prefix(&d, &t2);
+        assert_eq!(p.cached_pages(), 2);
+        assert_eq!(p.stats.evicted_pages, 2);
+        assert!(p.lookup_prefix(&c, 7).is_empty(),
+                "evicted chain no longer matches");
+        assert_eq!(p.lookup_prefix(&d, 7).len(), 1);
+
+        // releasing the tables leaves the cache pins + the hit's ref
+        t1.release_all(&mut p);
+        t2.release_all(&mut p);
+        assert_eq!(p.live_pages(), 2, "only d's cached pages stay live");
+    }
+}

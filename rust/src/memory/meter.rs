@@ -7,10 +7,14 @@
 
 use std::fmt;
 
+/// A gauge update pushed simulated memory over the device's VRAM.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct OomError {
+    /// Total bytes the run needed at the failing update.
     pub needed: u64,
+    /// The device's VRAM budget.
     pub vram: u64,
+    /// Which gauge tripped the check (e.g. `"kv cache"`).
     pub component: &'static str,
 }
 
@@ -28,6 +32,7 @@ impl fmt::Display for OomError {
 
 impl std::error::Error for OomError {}
 
+/// Per-component memory gauges with a running peak and OOM checks.
 #[derive(Debug, Clone)]
 pub struct MemoryMeter {
     vram: u64,
@@ -40,9 +45,13 @@ pub struct MemoryMeter {
     kv: u64,
     experts: u64,
     peak: u64,
+    /// Running peak of the KV gauge alone — the paged-vs-contiguous
+    /// comparison number (total `peak` folds in expert churn).
+    peak_kv: u64,
 }
 
 impl MemoryMeter {
+    /// A meter for a device with `vram` bytes; all gauges start empty.
     pub fn new(vram: u64) -> Self {
         MemoryMeter {
             vram,
@@ -52,6 +61,7 @@ impl MemoryMeter {
             kv: 0,
             experts: 0,
             peak: 0,
+            peak_kv: 0,
         }
     }
 
@@ -69,23 +79,29 @@ impl MemoryMeter {
         }
     }
 
+    /// Gauge: run-resident weights (non-MoE + shared experts).
     pub fn set_fixed(&mut self, bytes: u64) -> Result<(), OomError> {
         self.fixed = bytes;
         self.check("resident weights")
     }
 
+    /// Gauge: the on-GPU expert predictor.
     pub fn set_predictor(&mut self, bytes: u64) -> Result<(), OomError> {
         self.predictor = bytes;
         self.check("predictor")
     }
 
+    /// Gauge: activation workspace.
     pub fn set_activations(&mut self, bytes: u64) -> Result<(), OomError> {
         self.activations = bytes;
         self.check("activations")
     }
 
+    /// Gauge: the KV cache — written context on the contiguous path,
+    /// allocated pages (`KvPagePool::gauge_bytes`) on the paged path.
     pub fn set_kv(&mut self, bytes: u64) -> Result<(), OomError> {
         self.kv = bytes;
+        self.peak_kv = self.peak_kv.max(bytes);
         self.check("kv cache")
     }
 
@@ -96,14 +112,22 @@ impl MemoryMeter {
         self.check("expert cache")
     }
 
+    /// Highest total the gauges ever reached (Table II's peak column).
     pub fn peak_bytes(&self) -> u64 {
         self.peak
     }
 
+    /// Highest value the KV gauge alone ever reached.
+    pub fn peak_kv_bytes(&self) -> u64 {
+        self.peak_kv
+    }
+
+    /// Current total across every gauge.
     pub fn current_bytes(&self) -> u64 {
         self.total()
     }
 
+    /// The device's VRAM budget.
     pub fn vram(&self) -> u64 {
         self.vram
     }

@@ -1,12 +1,18 @@
 //! Memory hierarchy: the CPU expert cache (host pool holding every
 //! expert's weights), the GPU expert cache (bounded per-layer slots the
-//! scheduling policies manage), and the memory meter that produces
-//! Table II's peak-usage rows and OOM verdicts.
+//! scheduling policies manage), the paged KV cache (refcounted pages
+//! with cross-request prefix sharing), and the memory meter that
+//! produces Table II's peak-usage rows and OOM verdicts.
+
+#![warn(missing_docs)]
 
 mod device_cache;
 mod host_pool;
+mod kv_pager;
 mod meter;
 
 pub use device_cache::{CachedExpert, DeviceExpertCache};
 pub use host_pool::{CachedTensors, ExpertKey, HostPool, LayerNonMoe, NonMoeWeights, Weight};
+pub use kv_pager::{KvPagePool, KvPageTable, KvPagerStats, PageSlot,
+                   DEFAULT_PREFIX_CACHE_PAGES};
 pub use meter::{MemoryMeter, OomError};

@@ -130,6 +130,40 @@ pub struct Summary {
     /// Degradation counters (fault injection, deadlines, shedding);
     /// all zero in a fault-free run with no deadline/shedding knobs.
     pub robustness: Robustness,
+    /// Paged-KV counters (page allocations, prefix-cache reuse); all
+    /// zero on the contiguous path (`--kv-page` off).
+    pub kv_paging: KvPagingSummary,
+}
+
+/// Paged-KV counters attached to a [`Summary`]: how many KV pages the
+/// run allocated and how much written context the prefix cache let new
+/// requests reuse instead of re-prefilling. Every field is 0 on the
+/// legacy contiguous path — pinned by the paged-KV bit-identity test.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPagingSummary {
+    /// KV pages allocated over the run (fresh + COW forks).
+    pub kv_pages_allocated: u64,
+    /// Pages mapped into a request's table from the prefix cache
+    /// instead of being prefilled (summed over all hits).
+    pub kv_pages_shared: u64,
+    /// Prefix-cache probes at admission (one per request when the
+    /// cache is on).
+    pub prefix_lookups: u64,
+    /// Probes that matched at least one full cached page.
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via reused pages.
+    pub prefix_reused_tokens: u64,
+}
+
+impl KvPagingSummary {
+    /// Fraction of prefix-cache probes that hit (0.0 with no probes).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
 }
 
 /// Robustness counters attached to a [`Summary`]: how much the run
@@ -172,6 +206,12 @@ impl Summary {
     /// Attach the run's degradation counters.
     pub fn with_robustness(mut self, r: Robustness) -> Self {
         self.robustness = r;
+        self
+    }
+
+    /// Attach the run's paged-KV counters.
+    pub fn with_kv_paging(mut self, k: KvPagingSummary) -> Self {
+        self.kv_paging = k;
         self
     }
 }
@@ -223,6 +263,7 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
         p95_itl: percentile(&itl, 95.0),
         prefill_chunks: 0,
         robustness: Robustness::default(),
+        kv_paging: KvPagingSummary::default(),
     }
 }
 
@@ -447,6 +488,19 @@ mod tests {
                              degraded_acquires: 6 };
         let s = s.with_robustness(r);
         assert_eq!(s.robustness, r);
+    }
+
+    #[test]
+    fn kv_paging_counters_attach_and_default_to_zero() {
+        let s = summarize(&[], 0.0);
+        assert_eq!(s.kv_paging, KvPagingSummary::default());
+        assert_eq!(s.kv_paging.prefix_hit_rate(), 0.0);
+        let k = KvPagingSummary { kv_pages_allocated: 9, kv_pages_shared: 4,
+                                  prefix_lookups: 8, prefix_hits: 2,
+                                  prefix_reused_tokens: 64 };
+        let s = s.with_kv_paging(k);
+        assert_eq!(s.kv_paging, k);
+        assert!((s.kv_paging.prefix_hit_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]

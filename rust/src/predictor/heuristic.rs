@@ -8,6 +8,7 @@
 
 use super::{top_k, Matrices};
 
+/// Which statistic the heuristic scores experts by.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HeuristicKind {
     /// score_j = P_l(j) — popularity only.
@@ -17,6 +18,8 @@ pub enum HeuristicKind {
     PopularityAffinity,
 }
 
+/// Statistics-only expert predictor (no learned weights): scores each
+/// candidate by trace statistics and takes the top-k.
 #[derive(Debug)]
 pub struct HeuristicPredictor {
     kind: HeuristicKind,
@@ -24,10 +27,12 @@ pub struct HeuristicPredictor {
 }
 
 impl HeuristicPredictor {
+    /// A predictor of the given kind selecting `top_k` experts.
     pub fn new(kind: HeuristicKind, top_k: usize) -> Self {
         HeuristicPredictor { kind, top_k }
     }
 
+    /// The full popularity × affinity variant (MIF's mechanism).
     pub fn popularity_affinity(top_k: usize) -> Self {
         Self::new(HeuristicKind::PopularityAffinity, top_k)
     }

@@ -8,9 +8,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Manifest;
 
+/// The offline-trained popularity / affinity statistics (Eq. 2–3).
 #[derive(Debug, Clone)]
 pub struct Matrices {
+    /// Number of MoE layers L.
     pub n_layers: usize,
+    /// Number of routed experts per layer E.
     pub n_experts: usize,
     popularity: Vec<f32>,
     affinity: Vec<f32>,
@@ -26,6 +29,8 @@ fn read_f32(path: &Path) -> Result<Vec<f32>> {
 }
 
 impl Matrices {
+    /// Load both matrices from the artifact paths named by the
+    /// manifest, validating sizes against `(L, E)`.
     pub fn load(man: &Manifest) -> Result<Self> {
         let (l, e) = (man.sim.n_layers, man.sim.n_experts);
         let popularity = read_f32(&man.resolve(&man.predictor.popularity))?;

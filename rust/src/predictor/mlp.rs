@@ -10,6 +10,8 @@ use anyhow::{ensure, Result};
 use crate::config::Manifest;
 use crate::runtime::{Executable, Runtime, Tensor};
 
+/// The deployed ExpertMLP: runs the AOT-lowered predictor module and
+/// turns its sigmoid probabilities into a top-k expert set.
 pub struct MlpPredictor {
     exe: Arc<Executable>,
     input_dim: usize,
@@ -18,6 +20,7 @@ pub struct MlpPredictor {
 }
 
 impl MlpPredictor {
+    /// Load the predictor HLO named by the manifest onto the runtime.
     pub fn load(rt: &Runtime, man: &Manifest) -> Result<Self> {
         let exe = rt.load(&man.resolve(&man.predictor.hlo))?;
         Ok(MlpPredictor {

@@ -5,6 +5,8 @@
 //! popularity×affinity heuristic fallback, and the Experts Tracer for
 //! online trace collection.
 
+#![warn(missing_docs)]
+
 mod heuristic;
 mod matrices;
 mod mlp;

@@ -10,6 +10,8 @@ use crate::config::Manifest;
 
 use super::Matrices;
 
+/// Builds the ExpertMLP input vector from the current decode step's
+/// activation path (paper Fig. 3, Eq. 4–5).
 #[derive(Debug)]
 pub struct StateConstructor {
     n_layers: usize,
@@ -21,6 +23,8 @@ pub struct StateConstructor {
 }
 
 impl StateConstructor {
+    /// A constructor sized from the manifest's model and predictor
+    /// dimensions, with empty history.
     pub fn new(man: &Manifest) -> Self {
         StateConstructor {
             n_layers: man.sim.n_layers,
@@ -46,6 +50,7 @@ impl StateConstructor {
         self.history.clear();
     }
 
+    /// The recorded per-layer selections of the current decode step.
     pub fn history(&self) -> &[Vec<usize>] {
         &self.history
     }

@@ -7,10 +7,14 @@
 /// `steps[t][l]` = sorted expert indices at layer `l`, decode step `t`.
 #[derive(Debug, Clone)]
 pub struct Episode {
+    /// Workload dataset the request came from.
     pub dataset: String,
+    /// `steps[t][l]` = sorted expert indices at layer `l`, step `t`.
     pub steps: Vec<Vec<Vec<usize>>>,
 }
 
+/// Collects activation episodes during serving and aggregates them
+/// into the popularity / affinity statistics of Fig. 2.
 #[derive(Debug, Default)]
 pub struct Tracer {
     episodes: Vec<Episode>,
@@ -18,10 +22,12 @@ pub struct Tracer {
 }
 
 impl Tracer {
+    /// An empty tracer (no episode in progress).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Start recording a new episode for `dataset`.
     pub fn begin_episode(&mut self, dataset: &str) {
         self.current = Some(Episode { dataset: dataset.to_string(),
                                       steps: Vec::new() });
@@ -34,6 +40,7 @@ impl Tracer {
         }
     }
 
+    /// Finish the in-progress episode (dropped if it recorded nothing).
     pub fn end_episode(&mut self) {
         if let Some(ep) = self.current.take() {
             if !ep.steps.is_empty() {
@@ -42,6 +49,7 @@ impl Tracer {
         }
     }
 
+    /// All completed episodes, in collection order.
     pub fn episodes(&self) -> &[Episode] {
         &self.episodes
     }

@@ -255,7 +255,14 @@ fn embed(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
 /// The KV caches are taken by ownership transfer and mutated in
 /// place: T rows of D floats written per call, never a cache clone
 /// (unless the caller kept a borrowed handle, which copy-on-writes).
+///
+/// **Paged layout**: when arg 7 is a rank-0 i32 scalar instead of the
+/// rank-3 K cache, the call is dispatched to [`attention_paged`] —
+/// the KV rows arrive as a list of fixed-size pages (see its docs).
 fn attention(args: &mut [ArgRef<'_>], decode: bool) -> Result<Vec<Tensor>> {
+    if arg_tensor(args, 7, "kc")?.shape().is_empty() {
+        return attention_paged(args, decode);
+    }
     // Take KV ownership first (mutable slot access), then read the
     // borrowed args.
     let mut kc_t = take_arg(args, 7, "kc")?;
@@ -367,6 +374,172 @@ fn attention(args: &mut [ArgRef<'_>], decode: bool) -> Result<Vec<Tensor>> {
     Ok(vec![Tensor::f32(out, vec![t, d]), kc_t, vc_t])
 }
 
+/// Paged attention core — the page-table view of [`attention`].
+///
+/// args: `h (T,D)`, `scalar`, `ln (D,)`, `wq wk wv wo (D,D)`,
+/// `page_tokens` (rank-0 i32, the dispatch marker), `write_start`
+/// (rank-0 i32: prefill = the chunk's first absolute position, decode
+/// = pos), `n_pages` (rank-0 i32, P), then P key pages and P value
+/// pages, each `(page_tokens, NH, HD)`. Pages before
+/// `write_start / page_tokens` are read-only (shared prefix or
+/// earlier chunks) and may be passed borrowed; pages from that index
+/// on are written in place and should be passed `ArgRef::Own`.
+/// Outputs: `[h_out]` followed by the owned key pages then the owned
+/// value pages, in page order.
+///
+/// Bit-identity with the contiguous kernel: the score loop runs over
+/// the page capacity `P * page_tokens` instead of `kv_len`, but every
+/// extra slot is masked to `-1e9`, whose `exp` underflows to exactly
+/// `+0.0` in f32 — the softmax sum and every visible weight are
+/// bit-identical, and the weighted-V loop skips zero weights.
+fn attention_paged(args: &mut [ArgRef<'_>], decode: bool)
+                   -> Result<Vec<Tensor>> {
+    let pt =
+        arg_tensor(args, 7, "page_tokens")?.scalar_i32_value()? as usize;
+    let write_start =
+        arg_tensor(args, 8, "write_start")?.scalar_i32_value()? as usize;
+    let np = arg_tensor(args, 9, "n_pages")?.scalar_i32_value()? as usize;
+    if pt == 0 || np == 0 {
+        bail!("paged attention needs page_tokens > 0 and n_pages > 0");
+    }
+    if args.len() != 10 + 2 * np {
+        bail!("paged attention takes 10 + 2*{np} args, got {}", args.len());
+    }
+    let wp = write_start / pt;
+    if wp >= np {
+        bail!("write page {wp} out of {np} pages");
+    }
+    // Take the writable tail pages by ownership first (mutable slot
+    // access), then read the borrowed args.
+    let mut kc_own: Vec<Tensor> = (wp..np)
+        .map(|p| take_arg(args, 10 + p, "kc page"))
+        .collect::<Result<_>>()?;
+    let mut vc_own: Vec<Tensor> = (wp..np)
+        .map(|p| take_arg(args, 10 + np + p, "vc page"))
+        .collect::<Result<_>>()?;
+    let (h, hs) = f32_arg(args, 0, "h")?;
+    let scalar = arg_tensor(args, 1, "scalar")?.scalar_i32_value()? as usize;
+    let (ln, _) = f32_arg(args, 2, "ln")?;
+    let wq = view(args, 3, "wq")?;
+    let wk = view(args, 4, "wk")?;
+    let wv = view(args, 5, "wv")?;
+    let wo = view(args, 6, "wo")?;
+    let (t, d) = (hs[0], hs[1]);
+    let ks: Vec<usize> = kc_own[0].shape().to_vec();
+    if ks.len() != 3 || ks[0] != pt {
+        bail!("kv page must be rank-3 ({pt}, n_heads, head_dim), got {ks:?}");
+    }
+    let (n_heads, hd) = (ks[1], ks[2]);
+    if n_heads * hd != d {
+        bail!("kv page shape {ks:?} inconsistent with d_model {d}");
+    }
+    let cap = np * pt;
+    let (pos0, valid_bound) = if decode {
+        (scalar, scalar + 1)
+    } else {
+        (write_start, scalar)
+    };
+    if pos0 + t > cap {
+        bail!("kv write rows {pos0}..{} out of paged range {cap}", pos0 + t);
+    }
+
+    let hn = rms_norm(h, t, d, ln);
+    let q = mm(&hn, t, &wq, "attn wq")?;
+    let k_new = mm(&hn, t, &wk, "attn wk")?;
+    let v_new = mm(&hn, t, &wv, "attn wv")?;
+    put_buf(hn);
+
+    // In-place KV row writes into the owned tail pages.
+    for i in 0..t {
+        let p = pos0 + i;
+        let page = p / pt;
+        if page < wp {
+            bail!("kv write into read-only page {page} (write starts at \
+                   page {wp})");
+        }
+        let row = p % pt;
+        kc_own[page - wp].as_f32_mut()?[row * d..(row + 1) * d]
+            .copy_from_slice(&k_new[i * d..(i + 1) * d]);
+        vc_own[page - wp].as_f32_mut()?[row * d..(row + 1) * d]
+            .copy_from_slice(&v_new[i * d..(i + 1) * d]);
+    }
+    put_buf(k_new);
+    put_buf(v_new);
+
+    // Page read views: borrowed prefix pages + the owned tail.
+    let mut kpages: Vec<&[f32]> = Vec::with_capacity(np);
+    let mut vpages: Vec<&[f32]> = Vec::with_capacity(np);
+    for p in 0..np {
+        if p < wp {
+            let kt = arg_tensor(args, 10 + p, "kc page")?;
+            let vt = arg_tensor(args, 10 + np + p, "vc page")?;
+            if kt.shape() != ks.as_slice() || vt.shape() != ks.as_slice() {
+                bail!("page {p} shape {:?}/{:?} != {ks:?}",
+                      kt.shape(), vt.shape());
+            }
+            kpages.push(kt.as_f32()?);
+            vpages.push(vt.as_f32()?);
+        } else {
+            if vc_own[p - wp].shape() != ks.as_slice() {
+                bail!("v page {p} shape {:?} != k page shape {ks:?}",
+                      vc_own[p - wp].shape());
+            }
+            kpages.push(kc_own[p - wp].as_f32()?);
+            vpages.push(vc_own[p - wp].as_f32()?);
+        }
+    }
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att_out = take_buf(t * d);
+    let mut scores = take_buf(cap);
+    for qi in 0..t {
+        let q_abs = pos0 + qi;
+        for head in 0..n_heads {
+            let qrow = &q[qi * d + head * hd..qi * d + (head + 1) * hd];
+            for kp in 0..cap {
+                let masked = kp > q_abs || kp >= valid_bound;
+                scores[kp] = if masked {
+                    -1e9
+                } else {
+                    let (pg, r) = (kpages[kp / pt], kp % pt);
+                    let krow = &pg[r * d + head * hd..r * d + (head + 1) * hd];
+                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
+                        * scale
+                };
+            }
+            softmax_row(&mut scores);
+            let orow =
+                &mut att_out[qi * d + head * hd..qi * d + (head + 1) * hd];
+            for (kp, &w) in scores.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let (pg, r) = (vpages[kp / pt], kp % pt);
+                let vrow = &pg[r * d + head * hd..r * d + (head + 1) * hd];
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += w * v;
+                }
+            }
+        }
+    }
+    put_buf(q);
+    put_buf(scores);
+
+    let proj = mm(&att_out, t, &wo, "attn wo")?;
+    put_buf(att_out);
+    let mut out = take_buf(t * d);
+    out.copy_from_slice(h);
+    for (o, p) in out.iter_mut().zip(&proj) {
+        *o += p;
+    }
+    put_buf(proj);
+    let mut outs = Vec::with_capacity(1 + 2 * (np - wp));
+    outs.push(Tensor::f32(out, vec![t, d]));
+    outs.extend(kc_own);
+    outs.extend(vc_own);
+    Ok(outs)
+}
+
 /// The batched halves of decode attention: the Q/K/V/O projections run
 /// as one GEMM each over the stacked `(B, D)` batch matrix, around the
 /// per-request [`attn_core`]. Two call shapes, told apart by arg count:
@@ -431,7 +604,13 @@ fn attn_proj_batch(args: &[ArgRef<'_>]) -> Result<Vec<Tensor>> {
 /// fused `attn_decode` path), and runs the masked score + weighted-V
 /// loop over this request's cache. No projections and no residual —
 /// those are the batched [`attn_proj_batch`] passes.
+///
+/// **Paged layout**: when arg 5 is a rank-0 i32 scalar instead of the
+/// rank-3 K cache, the call is dispatched to [`attn_core_paged`].
 fn attn_core(args: &mut [ArgRef<'_>]) -> Result<Vec<Tensor>> {
+    if arg_tensor(args, 5, "kc")?.shape().is_empty() {
+        return attn_core_paged(args);
+    }
     let mut kc_t = take_arg(args, 5, "kc")?;
     let mut vc_t = take_arg(args, 6, "vc")?;
     let (q, qs) = f32_arg(args, 0, "q")?;
@@ -507,6 +686,122 @@ fn attn_core(args: &mut [ArgRef<'_>]) -> Result<Vec<Tensor>> {
         }
     }
     put_buf(scores);
+    Ok(vec![Tensor::f32(att_out, vec![1, d]), kc_t, vc_t])
+}
+
+/// Paged attention core for batched decode — the page-table view of
+/// [`attn_core`].
+///
+/// args: `q k v (B,D)`, `row` scalar, `pos` scalar, `page_tokens`
+/// (rank-0 i32, the dispatch marker), `n_pages` (rank-0 i32, P), then
+/// P key pages and P value pages `(page_tokens, NH, HD)`. A decode
+/// step writes exactly one row at `pos`, which always lands in the
+/// *last* page — that page pair should be passed `ArgRef::Own`; all
+/// earlier pages are read-only. Outputs: `[att (1,D), kc_tail,
+/// vc_tail]` (the mutated last page pair). Bit-identity with the
+/// contiguous kernel follows the same masked-softmax argument as
+/// [`attention_paged`].
+fn attn_core_paged(args: &mut [ArgRef<'_>]) -> Result<Vec<Tensor>> {
+    let pt =
+        arg_tensor(args, 5, "page_tokens")?.scalar_i32_value()? as usize;
+    let np = arg_tensor(args, 6, "n_pages")?.scalar_i32_value()? as usize;
+    if pt == 0 || np == 0 {
+        bail!("paged attn_core needs page_tokens > 0 and n_pages > 0");
+    }
+    if args.len() != 7 + 2 * np {
+        bail!("paged attn_core takes 7 + 2*{np} args, got {}", args.len());
+    }
+    let pos = arg_tensor(args, 4, "pos")?.scalar_i32_value()? as usize;
+    let wp = pos / pt;
+    if wp != np - 1 {
+        bail!("decode write page {wp} must be the last of {np} pages");
+    }
+    let mut kc_t = take_arg(args, 7 + np - 1, "kc tail page")?;
+    let mut vc_t = take_arg(args, 7 + 2 * np - 1, "vc tail page")?;
+    let (q, qs) = f32_arg(args, 0, "q")?;
+    let (kn, kns) = f32_arg(args, 1, "k")?;
+    let (vn, vns) = f32_arg(args, 2, "v")?;
+    let row = arg_tensor(args, 3, "row")?.scalar_i32_value()? as usize;
+    if qs.len() != 2 {
+        bail!("attn_core q must be rank-2 (B, D), got {qs:?}");
+    }
+    if kns != qs || vns != qs {
+        bail!("attn_core k/v shapes {kns:?}/{vns:?} != q shape {qs:?}");
+    }
+    let (b, d) = (qs[0], qs[1]);
+    if row >= b {
+        bail!("attn_core row {row} out of batch {b}");
+    }
+    let ks: Vec<usize> = kc_t.shape().to_vec();
+    if ks.len() != 3 || ks[0] != pt {
+        bail!("kv page must be rank-3 ({pt}, n_heads, head_dim), got {ks:?}");
+    }
+    let (n_heads, hd) = (ks[1], ks[2]);
+    if n_heads * hd != d {
+        bail!("kv page shape {ks:?} inconsistent with d_model {d}");
+    }
+    if vc_t.shape() != ks.as_slice() {
+        bail!("v page shape {:?} != k page shape {ks:?}", vc_t.shape());
+    }
+
+    // In-place KV row write into the tail page.
+    {
+        let r = pos % pt;
+        kc_t.as_f32_mut()?[r * d..(r + 1) * d]
+            .copy_from_slice(&kn[row * d..(row + 1) * d]);
+        vc_t.as_f32_mut()?[r * d..(r + 1) * d]
+            .copy_from_slice(&vn[row * d..(row + 1) * d]);
+    }
+
+    let mut kpages: Vec<&[f32]> = Vec::with_capacity(np);
+    let mut vpages: Vec<&[f32]> = Vec::with_capacity(np);
+    for p in 0..np - 1 {
+        let kt = arg_tensor(args, 7 + p, "kc page")?;
+        let vt = arg_tensor(args, 7 + np + p, "vc page")?;
+        if kt.shape() != ks.as_slice() || vt.shape() != ks.as_slice() {
+            bail!("page {p} shape {:?}/{:?} != {ks:?}",
+                  kt.shape(), vt.shape());
+        }
+        kpages.push(kt.as_f32()?);
+        vpages.push(vt.as_f32()?);
+    }
+    kpages.push(kc_t.as_f32()?);
+    vpages.push(vc_t.as_f32()?);
+
+    let cap = np * pt;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let valid_bound = pos + 1;
+    let mut att_out = take_buf(d);
+    let mut scores = take_buf(cap);
+    for head in 0..n_heads {
+        let qrow = &q[row * d + head * hd..row * d + (head + 1) * hd];
+        for kp in 0..cap {
+            let masked = kp > pos || kp >= valid_bound;
+            scores[kp] = if masked {
+                -1e9
+            } else {
+                let (pg, r) = (kpages[kp / pt], kp % pt);
+                let krow = &pg[r * d + head * hd..r * d + (head + 1) * hd];
+                qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
+                    * scale
+            };
+        }
+        softmax_row(&mut scores);
+        let orow = &mut att_out[head * hd..(head + 1) * hd];
+        for (kp, &w) in scores.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let (pg, r) = (vpages[kp / pt], kp % pt);
+            let vrow = &pg[r * d + head * hd..r * d + (head + 1) * hd];
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+    put_buf(scores);
+    drop(kpages);
+    drop(vpages);
     Ok(vec![Tensor::f32(att_out, vec![1, d]), kc_t, vc_t])
 }
 
@@ -902,5 +1197,162 @@ mod tests {
         assert_eq!(&kc2[..d], &[0.0, 0.0]);
         let hn = rms_norm(h.as_f32().unwrap(), 1, d, ln.as_f32().unwrap());
         assert!((kc2[d] - hn[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paged_prefill_attention_matches_contiguous() {
+        // A 4-token prefill through 2-token pages — run as two chunks,
+        // the second reading page 0 *borrowed* (the shared-prefix
+        // shape) — must reproduce the monolithic contiguous pass bit
+        // for bit, even though the paged capacity (4) differs from
+        // the contiguous kv_len (8): the extra contiguous slots are
+        // masked to -1e9 and contribute exactly +0.0 after softmax.
+        let d = 4;
+        let kvs = [8usize, 2, 2];
+        let mk = |salt: usize, n: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i * 29 + salt * 13) % 11) as f32 * 0.2 - 1.0)
+                .collect()
+        };
+        let h = Tensor::f32(mk(1, 4 * d), vec![4, d]);
+        let ln = Tensor::f32(vec![1.0, 0.5, 2.0, 1.5], vec![d]);
+        let wq = Tensor::f32(mk(2, d * d), vec![d, d]);
+        let wk = Tensor::f32(mk(3, d * d), vec![d, d]);
+        let wv = Tensor::f32(mk(4, d * d), vec![d, d]);
+        let wo = Tensor::f32(mk(5, d * d), vec![d, d]);
+
+        let valid = Tensor::scalar_i32(4);
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&valid), ArgRef::T(&ln),
+            ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv), ArgRef::T(&wo),
+            ArgRef::Own(Tensor::zeros(&kvs)), ArgRef::Own(Tensor::zeros(&kvs)),
+        ];
+        let full = attention(&mut args, false).unwrap();
+
+        let pt = Tensor::scalar_i32(2);
+        let (s0, s1, s2, s4) = (Tensor::scalar_i32(0), Tensor::scalar_i32(1),
+                                Tensor::scalar_i32(2), Tensor::scalar_i32(4));
+        let pshape = [2usize, 2, 2];
+        // chunk 1: tokens 0..2 at write_start 0, one owned page
+        let hc1 = Tensor::f32(
+            [h.row(0).unwrap(), h.row(1).unwrap()].concat(), vec![2, d]);
+        let mut args = [
+            ArgRef::T(&hc1), ArgRef::T(&s2),
+            ArgRef::T(&ln), ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv),
+            ArgRef::T(&wo), ArgRef::T(&pt), ArgRef::T(&s0),
+            ArgRef::T(&s1),
+            ArgRef::Own(Tensor::zeros(&pshape)),
+            ArgRef::Own(Tensor::zeros(&pshape)),
+        ];
+        let c1 = attention(&mut args, false).unwrap();
+        let (h1, kp0, vp0) = (&c1[0], &c1[1], &c1[2]);
+
+        // chunk 2: tokens 2..4 at write_start 2, page 0 borrowed
+        let hc2 = Tensor::f32(
+            [h.row(2).unwrap(), h.row(3).unwrap()].concat(), vec![2, d]);
+        let mut args = [
+            ArgRef::T(&hc2), ArgRef::T(&s4),
+            ArgRef::T(&ln), ArgRef::T(&wq), ArgRef::T(&wk), ArgRef::T(&wv),
+            ArgRef::T(&wo), ArgRef::T(&pt), ArgRef::T(&s2),
+            ArgRef::T(&s2),
+            ArgRef::T(kp0), ArgRef::Own(Tensor::zeros(&pshape)),
+            ArgRef::T(vp0), ArgRef::Own(Tensor::zeros(&pshape)),
+        ];
+        let c2 = attention(&mut args, false).unwrap();
+        let (h2, kp1, vp1) = (&c2[0], &c2[1], &c2[2]);
+
+        for (i, hp) in [(0usize, h1), (1, h1), (2, h2), (3, h2)]
+            .into_iter()
+            .enumerate()
+        {
+            assert_eq!(hp.row(i % 2).unwrap(), full[0].row(i).unwrap(),
+                       "row {i} diverged from the contiguous prefill");
+        }
+        // page rows == contiguous cache rows (flat (pt*NH*HD) strides)
+        let want_k = full[1].as_f32().unwrap();
+        let want_v = full[2].as_f32().unwrap();
+        for (pi, (kp, vp)) in [(0usize, (kp0, vp0)), (1, (kp1, vp1))]
+            .into_iter()
+            .enumerate()
+        {
+            assert_eq!(kp.as_f32().unwrap(),
+                       &want_k[pi * 2 * d..(pi + 1) * 2 * d],
+                       "k page {pi} diverged");
+            assert_eq!(vp.as_f32().unwrap(),
+                       &want_v[pi * 2 * d..(pi + 1) * 2 * d],
+                       "v page {pi} diverged");
+        }
+    }
+
+    #[test]
+    fn paged_attn_core_matches_contiguous() {
+        // Batched-decode core at pos 5 through 2-token pages (3 pages,
+        // last owned) vs the contiguous (6,2,2) cache: identical
+        // attention output and identical tail-page rows.
+        let d = 4;
+        let mk = |salt: usize, n: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i * 31 + salt * 17) % 13) as f32 * 0.1 - 0.6)
+                .collect()
+        };
+        let q = Tensor::f32(mk(1, 2 * d), vec![2, d]);
+        let k = Tensor::f32(mk(2, 2 * d), vec![2, d]);
+        let v = Tensor::f32(mk(3, 2 * d), vec![2, d]);
+        let row = Tensor::scalar_i32(1);
+        let pos = Tensor::scalar_i32(5);
+        let kc_flat = mk(6, 6 * d);
+        let vc_flat = mk(7, 6 * d);
+        let kc = Tensor::f32(kc_flat.clone(), vec![6, 2, 2]);
+        let vc = Tensor::f32(vc_flat.clone(), vec![6, 2, 2]);
+        let mut args = [
+            ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v), ArgRef::T(&row),
+            ArgRef::T(&pos), ArgRef::Own(kc), ArgRef::Own(vc),
+        ];
+        let want = attn_core(&mut args).unwrap();
+
+        let page = |flat: &[f32], pi: usize| {
+            Tensor::f32(flat[pi * 2 * d..(pi + 1) * 2 * d].to_vec(),
+                        vec![2, 2, 2])
+        };
+        let (kp0, kp1) = (page(&kc_flat, 0), page(&kc_flat, 1));
+        let (vp0, vp1) = (page(&vc_flat, 0), page(&vc_flat, 1));
+        let pt = Tensor::scalar_i32(2);
+        let np = Tensor::scalar_i32(3);
+        let mut args = [
+            ArgRef::T(&q), ArgRef::T(&k), ArgRef::T(&v), ArgRef::T(&row),
+            ArgRef::T(&pos), ArgRef::T(&pt), ArgRef::T(&np),
+            ArgRef::T(&kp0), ArgRef::T(&kp1),
+            ArgRef::Own(page(&kc_flat, 2)),
+            ArgRef::T(&vp0), ArgRef::T(&vp1),
+            ArgRef::Own(page(&vc_flat, 2)),
+        ];
+        let got = attn_core(&mut args).unwrap();
+        assert_eq!(got[0], want[0], "paged att output diverged");
+        // tail page rows == contiguous cache rows 4..6
+        assert_eq!(got[1].as_f32().unwrap(),
+                   &want[1].as_f32().unwrap()[4 * d..6 * d],
+                   "k tail page diverged");
+        assert_eq!(got[2].as_f32().unwrap(),
+                   &want[2].as_f32().unwrap()[4 * d..6 * d],
+                   "v tail page diverged");
+    }
+
+    #[test]
+    fn paged_write_into_read_only_page_is_rejected() {
+        let d = 2;
+        let h = Tensor::f32(vec![0.1, 0.2], vec![1, d]);
+        let ln = Tensor::f32(vec![1.0, 1.0], vec![d]);
+        let id = Tensor::f32(vec![1.0, 0.0, 0.0, 1.0], vec![d, d]);
+        let pshape = [2usize, 1, d];
+        // write_start 2 (page 1) but only 1 page passed
+        let mut args = [
+            ArgRef::T(&h), ArgRef::T(&Tensor::scalar_i32(3)),
+            ArgRef::T(&ln), ArgRef::T(&id), ArgRef::T(&id), ArgRef::T(&id),
+            ArgRef::T(&id), ArgRef::T(&Tensor::scalar_i32(2)),
+            ArgRef::T(&Tensor::scalar_i32(2)),
+            ArgRef::T(&Tensor::scalar_i32(1)),
+            ArgRef::Own(Tensor::zeros(&pshape)),
+            ArgRef::Own(Tensor::zeros(&pshape)),
+        ];
+        let err = attention(&mut args, false).unwrap_err();
+        assert!(format!("{err:?}").contains("write page"));
     }
 }

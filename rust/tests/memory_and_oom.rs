@@ -118,6 +118,43 @@ fn mif_oom_when_vram_insufficient() {
 }
 
 #[test]
+fn paged_kv_peak_below_preallocated_window() {
+    // A short prompt + short decode touches a handful of pages; the
+    // contiguous design point preallocates the full `kv_len` window.
+    // The paged gauge must charge only the allocated pages — strictly
+    // below the analytic window cost for the same request.
+    let e = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();
+    let mut reqs = generate_requests(&e.man, "squad", 1, 9);
+    reqs[0].n_decode = 2;
+
+    let mut paged = ServeOptions::new(PolicyKind::DuoServe,
+                                      DeviceProfile::a6000());
+    paged.kv_page = Some(2);
+    let out = e.serve(&reqs, &paged).unwrap();
+    assert!(out.oom.is_none());
+    assert!(out.peak_kv_bytes > 0, "paged KV gauge never moved");
+
+    let cost = duoserve::simx::CostModel::new(
+        &e.man, DeviceProfile::a6000());
+    let window = cost.kv_bytes(e.man.paper.n_layers, e.man.sim.kv_len);
+    assert!(out.peak_kv_bytes < window,
+            "paged peak {} must undercut the preallocated window {}",
+            out.peak_kv_bytes, window);
+
+    // and it may exceed the written-context charge of the contiguous
+    // gauge by at most one page per request (allocation granularity)
+    let contig = ServeOptions::new(PolicyKind::DuoServe,
+                                   DeviceProfile::a6000());
+    let base = e.serve(&reqs, &contig).unwrap();
+    assert!(base.oom.is_none());
+    let page_bytes = cost.kv_bytes(e.man.paper.n_layers, 2);
+    assert!(out.peak_kv_bytes <= base.peak_kv_bytes + page_bytes,
+            "paged peak {} exceeds contiguous peak {} by more than one \
+             page {}",
+            out.peak_kv_bytes, base.peak_kv_bytes, page_bytes);
+}
+
+#[test]
 fn kv_cache_grows_with_decode() {
     // Longer outputs -> more KV bytes -> higher peak.
     let e = Engine::load(&artifacts_dir(), "mixtral-tiny").unwrap();

@@ -1,0 +1,179 @@
+//! Paged-KV regression suite (`--kv-page` / `--prefix-cache`):
+//!
+//! * with a page covering the whole KV window the paged path is
+//!   **bit-identical** to the legacy contiguous path — tokens, routing,
+//!   makespan and the expert ledger;
+//! * small pages still generate identical tokens and routing (masked
+//!   score entries contribute exact zeros);
+//! * a warm shared-prefix request produces the same tokens as its cold
+//!   run while strictly beating it on TTFT and prefilled chunks
+//!   (O(suffix) prefill);
+//! * completion and hard-deadline cancellation release every page
+//!   reference (no leaks with the prefix cache off);
+//! * an append into a shared page forks it (COW) instead of mutating
+//!   the other holder's KV.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions};
+use duoserve::memory::{KvPagePool, KvPageTable};
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn opts(kv_page: Option<usize>) -> ServeOptions {
+    let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                  DeviceProfile::a6000());
+    o.kv_page = kv_page;
+    o
+}
+
+/// Decode routing paths, comparable across runs.
+fn routes(out: &duoserve::coordinator::ServeOutcome)
+          -> Vec<Vec<Vec<Vec<usize>>>> {
+    out.episodes.iter().map(|ep| ep.steps.clone()).collect()
+}
+
+#[test]
+fn window_sized_page_bit_identical_to_contiguous() {
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 3, 11);
+    let base = e.serve(&reqs, &opts(None)).unwrap();
+    let paged = e.serve(&reqs, &opts(Some(e.man.sim.kv_len))).unwrap();
+    assert!(base.oom.is_none() && paged.oom.is_none());
+    assert_eq!(base.tokens, paged.tokens, "tokens must be bit-identical");
+    assert_eq!(routes(&base), routes(&paged), "routing must match");
+    assert_eq!(base.summary.makespan, paged.summary.makespan,
+               "virtual-time schedule must be unchanged");
+    assert_eq!(base.expert_stats.hits, paged.expert_stats.hits);
+    assert_eq!(base.expert_stats.misses, paged.expert_stats.misses);
+    assert!(paged.summary.kv_paging.kv_pages_allocated > 0,
+            "the paged path must actually have run");
+    assert_eq!(base.summary.kv_paging,
+               duoserve::metrics::KvPagingSummary::default(),
+               "the contiguous path reports no paging counters");
+}
+
+#[test]
+fn small_pages_generate_identical_tokens_and_routing() {
+    let e = engine();
+    let reqs = generate_requests(&e.man, "orca", 2, 7);
+    let base = e.serve(&reqs, &opts(None)).unwrap();
+    let paged = e.serve(&reqs, &opts(Some(2))).unwrap();
+    assert!(base.oom.is_none() && paged.oom.is_none());
+    assert_eq!(base.tokens, paged.tokens);
+    assert_eq!(routes(&base), routes(&paged));
+    // spanning pages means strictly more pages than requests
+    assert!(paged.summary.kv_paging.kv_pages_allocated
+            > reqs.len() as u64);
+}
+
+#[test]
+fn warm_shared_prefix_same_tokens_lower_ttft_fewer_chunks() {
+    let e = engine();
+    let mut reqs = generate_requests(&e.man, "squad", 1, 7);
+    assert!(reqs[0].prompt.len() >= 3,
+            "need at least one full reusable page before the last token");
+    let mut twin = reqs[0].clone();
+    twin.req_id = 1;
+    reqs.push(twin);
+
+    let run = |prefix_cache: bool| {
+        let mut o = opts(Some(2));
+        o.prefill_chunk = Some(2);
+        o.prefix_cache = prefix_cache;
+        e.serve(&reqs, &o).unwrap()
+    };
+    let cold = run(false);
+    let warm = run(true);
+    assert!(cold.oom.is_none() && warm.oom.is_none());
+
+    // reused prefix KV is bit-identical to recomputing it
+    assert_eq!(cold.tokens, warm.tokens,
+               "prefix reuse must not change generated tokens");
+
+    let k = &warm.summary.kv_paging;
+    assert_eq!(k.prefix_lookups, 2, "both admissions probe the cache");
+    assert_eq!(k.prefix_hits, 1, "the twin hits the first prompt's pages");
+    assert!(k.kv_pages_shared > 0);
+    assert!(k.prefix_reused_tokens > 0);
+    assert_eq!(cold.summary.kv_paging.prefix_lookups, 0,
+               "cache off: no lookups");
+
+    // O(suffix) prefill: strictly faster first token, strictly fewer
+    // prefilled chunks, at equal output tokens
+    assert_eq!(cold.metrics[1].tokens_out, warm.metrics[1].tokens_out);
+    assert!(warm.metrics[1].ttft < cold.metrics[1].ttft,
+            "warm TTFT {} must beat cold TTFT {}",
+            warm.metrics[1].ttft, cold.metrics[1].ttft);
+    assert!(warm.summary.prefill_chunks < cold.summary.prefill_chunks,
+            "warm run must prefill fewer chunks ({} !< {})",
+            warm.summary.prefill_chunks, cold.summary.prefill_chunks);
+}
+
+#[test]
+fn continuous_completion_releases_every_page() {
+    let e = engine();
+    let mut reqs = generate_requests(&e.man, "orca", 4, 13);
+    assign_arrivals(&mut reqs,
+                    &ArrivalProcess::Poisson { rate: 3.0, seed: 5 });
+    let mut o = opts(Some(2));
+    o.prefill_chunk = Some(2);
+    let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+    let out = e.serve_continuous(&reqs, &o, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert!(out.summary.kv_paging.kv_pages_allocated > 0);
+    assert_eq!(out.kv_pages_live, 0,
+               "completed requests must release all page references");
+}
+
+#[test]
+fn hard_deadline_cancellation_releases_every_page() {
+    let e = engine();
+    let mut reqs = generate_requests(&e.man, "squad", 4, 13);
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let o = opts(Some(2));
+    // calibrate the deadline off a solo run so queued requests blow it
+    let scale = e.serve(&reqs[..1], &o).unwrap().metrics[0].e2e;
+    let ccfg = ContinuousConfig {
+        max_in_flight: 2,
+        queue_capacity: 64,
+        hard_deadline: 1.5 * scale,
+        ..ContinuousConfig::default()
+    };
+    let out = e.serve_continuous(&reqs, &o, &ccfg).unwrap();
+    assert!(out.oom.is_none());
+    assert!(out.cancelled > 0, "late in-flight requests must cancel");
+    assert_eq!(out.kv_pages_live, 0,
+               "cancelled requests must release all page references");
+}
+
+#[test]
+fn shared_page_append_forks_instead_of_mutating() {
+    // Direct pager exercise of the COW contract the serving path is
+    // designed never to hit (its shared pages sit before the write
+    // cursor): writing into a page another holder shares must fork.
+    let mut pool = KvPagePool::new(4, 2, 1, 2, 100, 8);
+    let mut a = KvPageTable::new(4);
+    a.prepare_write(&mut pool, 0, 4);
+    let mut b = KvPageTable::new(4);
+    b.slots.push(a.slots[0].clone());
+    pool.retain(b.slots[0].id);
+    let shared = b.slots[0].id;
+
+    b.prepare_write(&mut pool, 3, 4); // diverging append into the page
+    assert_ne!(b.slots[0].id, shared, "writer must take a fresh page id");
+    assert_eq!(pool.stats.cow_forks, 1);
+    assert_eq!(pool.refcount(shared), 1, "the other holder keeps its page");
+    b.slots[0].kc[0].as_f32_mut().unwrap()[0] = 3.25;
+    assert_eq!(a.slots[0].kc[0].as_f32().unwrap()[0], 0.0,
+               "divergent write must never leak into the shared page");
+
+    a.release_all(&mut pool);
+    b.release_all(&mut pool);
+    assert_eq!(pool.live_pages(), 0, "all references returned");
+}

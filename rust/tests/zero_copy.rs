@@ -51,4 +51,29 @@ fn serving_performs_zero_kv_cache_deep_copies() {
         "continuous serve deep-copied {} tensors ({} elements) at the \
          literal boundary",
         copy_stats::deep_copies(), copy_stats::deep_copy_elems());
+
+    // paged KV + prefix cache: the page-sharing path (Arc-backed page
+    // clones, full-page-only reuse) must also be zero-copy — shared
+    // pages sit strictly before the write cursor, so no COW fork and
+    // no deep copy may fire even when a request decodes on top of
+    // pages another request wrote
+    let mut reqs = generate_requests(&engine.man, "squad", 1, 17);
+    let mut twin = reqs[0].clone();
+    twin.req_id = 1;
+    reqs.push(twin);
+    let mut opts =
+        ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000());
+    opts.kv_page = Some(2);
+    opts.prefill_chunk = Some(2);
+    opts.prefix_cache = true;
+    copy_stats::reset();
+    let out = engine.serve(&reqs, &opts).unwrap();
+    assert!(out.oom.is_none());
+    assert_eq!(out.summary.kv_paging.prefix_hits, 1,
+               "the twin request must reuse the first prompt's pages");
+    assert_eq!(
+        copy_stats::deep_copies(), 0,
+        "page-sharing serve deep-copied {} tensors ({} elements); \
+         prefix reuse must stay zero-copy",
+        copy_stats::deep_copies(), copy_stats::deep_copy_elems());
 }
