@@ -28,7 +28,9 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use duoserve::config::{DeviceProfile, LinkKind, PolicyKind};
-use duoserve::coordinator::{Engine, ServeOptions, SimCtx};
+use duoserve::coordinator::{ClassPolicy, ContinuousConfig,
+                            ContinuousScheduler, Decision, Engine,
+                            ServeOptions, SimCtx};
 use duoserve::experts::{ExpertProvider, Placement, ShardedExpertProvider,
                         StagedExpertProvider, StagingMode};
 use duoserve::faults::{FaultPlan, FaultState, FetchFail, LinkSel, Window};
@@ -38,7 +40,7 @@ use duoserve::simx::{CostModel, Streams};
 use duoserve::predictor::{top_k, StateConstructor};
 use duoserve::runtime::{kernels, ArgRef, Tensor};
 use duoserve::util::Json;
-use duoserve::workload::generate_requests;
+use duoserve::workload::{generate_requests, PriorityClass};
 
 struct Stat {
     name: String,
@@ -470,6 +472,57 @@ fn main() -> anyhow::Result<()> {
                 p95_us: us,
             });
         }
+    }
+
+    // --- QoS classes: preemptive reorder + chunk autotune --------------
+    // preempt_reorder: one interactive admission displacing four batch
+    // requests' pending prefill chunks in the class-aware scheduler —
+    // the queue pop, sorted deque insert, and one Preempted event per
+    // victim (scheduler construction included; the reorder itself is
+    // the hot part).
+    {
+        let arrivals = vec![0.0, 0.0, 0.0, 0.0, 0.5];
+        let mut classes = vec![PriorityClass::Batch; 5];
+        classes[4] = PriorityClass::Interactive;
+        let ccfg = ContinuousConfig {
+            max_in_flight: 8,
+            queue_capacity: 8,
+            classes: Some(ClassPolicy::default()),
+            ..ContinuousConfig::default()
+        };
+        bench(&mut stats, "preempt_reorder", 10_000, || {
+            let mut s = ContinuousScheduler::with_classes(&arrivals,
+                                                          &classes, &ccfg);
+            for _ in 0..4 {
+                match s.next_decision(0.0) {
+                    Decision::AdmitPrefill(r) => s.chunk_done(r, 0.0),
+                    d => panic!("unexpected decision {d:?}"),
+                }
+            }
+            match s.next_decision(0.5) {
+                Decision::AdmitPrefill(4) => {}
+                d => panic!("unexpected decision {d:?}"),
+            }
+        });
+    }
+
+    // --- chunk autotune: a small continuous serve with ------------------
+    // `--prefill-chunk auto`, so the row tracks the per-chunk budget
+    // recomputation (measured decode-step cost / measured per-token
+    // prefill cost) riding the serving loop across commits.
+    {
+        let mut reqs = generate_requests(&man, "squad", 2, 9);
+        for r in reqs.iter_mut() {
+            r.n_decode = 4;
+        }
+        let ccfg = ContinuousConfig { max_in_flight: 2, queue_capacity: 8,
+                                      ..ContinuousConfig::default() };
+        let mut o = ServeOptions::new(PolicyKind::DuoServe,
+                                      DeviceProfile::a6000());
+        o.prefill_chunk_auto = true;
+        bench(&mut stats, "chunk_autotune_probe", 10, || {
+            let _ = engine.serve_continuous(&reqs, &o, &ccfg).unwrap();
+        });
     }
 
     // --- full engine steps --------------------------------------------

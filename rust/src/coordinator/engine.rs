@@ -90,6 +90,12 @@ pub struct ServeOptions {
     /// prompts; a chunk covering the whole prompt is bit-identical to
     /// the monolithic pass.
     pub prefill_chunk: Option<usize>,
+    /// `--prefill-chunk auto`: autotune the chunk budget from the
+    /// live run's measured virtual costs (target: one chunk ≈ one
+    /// decode step) instead of a fixed token count, so the PR 5 stall
+    /// bound holds as the decode batch shifts. Overrides
+    /// `prefill_chunk` when true.
+    pub prefill_chunk_auto: bool,
     /// Shard the expert caches across this many simulated devices
     /// behind a [`ShardedExpertProvider`] (`--shards`). `None` — the
     /// default — keeps the unsharded single-device provider exactly as
@@ -141,6 +147,7 @@ impl ServeOptions {
             expert_fanout: Self::fanout_default(
                 std::env::var("DUOSERVE_EXPERT_FANOUT").ok().as_deref()),
             prefill_chunk: None,
+            prefill_chunk_auto: false,
             kv_page: None,
             prefix_cache: false,
             shards: None,
@@ -711,7 +718,10 @@ impl Engine {
         let mut sess = ServeSession::open(self, requests, opts, false);
         let arrival_times: Vec<f64> =
             requests.iter().map(|r| r.arrival).collect();
-        let mut sched = ContinuousScheduler::new(&arrival_times, ccfg);
+        let classes: Vec<crate::workload::PriorityClass> =
+            requests.iter().map(|r| r.class).collect();
+        let mut sched =
+            ContinuousScheduler::with_classes(&arrival_times, &classes, ccfg);
         check!(sess, Some(&sched), sess.reserve_fixed());
 
         let mut now = 0.0f64;

@@ -28,5 +28,5 @@ pub use duoserve::DuoServePolicy;
 pub use engine::{Ablation, Engine, ServeOptions, ServeOutcome};
 pub use policy::{Policy, SimCtx};
 pub use session::DecodeStepBench;
-pub use scheduler::{BatchComposer, ContinuousConfig, ContinuousScheduler,
-                    Decision, RequestQueue, ServerEvent};
+pub use scheduler::{BatchComposer, ClassPolicy, ContinuousConfig,
+                    ContinuousScheduler, Decision, RequestQueue, ServerEvent};

@@ -20,6 +20,20 @@
 //!   a [`ServerEvent`] — the virtual-time schedule the determinism
 //!   tests freeze.
 //!
+//! **Priority classes.** With [`ContinuousConfig::classes`] set, the
+//! single FIFO admission queue splits into one queue per
+//! [`PriorityClass`] (interactive / standard / batch) drained by
+//! smooth weighted round-robin; an admission whose class outranks a
+//! pending-chunk request reorders the pending-chunk FIFO ahead of it
+//! (a deterministic queue move recorded as [`ServerEvent::Preempted`]
+//! — completed chunks and KV are never touched); and the overload
+//! valves turn class-aware — shedding evicts the newest queued
+//! request of the *lowest* tier below the arrival instead of the
+//! arrival itself, and the expiry sweep drains batch before standard
+//! before interactive. With `classes: None` (the default) none of
+//! these code paths run: the schedule is bit-identical to the
+//! class-blind scheduler.
+//!
 //! **Chunked prefill protocol.** When `--prefill-chunk` splits
 //! prefills, an admitted request sits in the scheduler's
 //! *pending-chunk* set until its last chunk completes. The engine runs
@@ -39,7 +53,7 @@
 
 use std::collections::VecDeque;
 
-use crate::workload::Request;
+use crate::workload::{PriorityClass, Request};
 
 /// FIFO admission queue with a bounded depth (backpressure).
 #[derive(Debug)]
@@ -84,6 +98,11 @@ impl<T> RequestQueue<T> {
     /// Requests dropped because the queue was full.
     pub fn rejected(&self) -> u64 {
         self.rejected
+    }
+
+    /// Maximum entries the queue admits.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Keep only the queued entries satisfying `f` (deadline sweeps).
@@ -161,6 +180,11 @@ pub struct ContinuousConfig {
     /// (sustained overload), keeping queue delay — and thus surviving
     /// requests' TTFT — bounded. `0` disables (default).
     pub shed_threshold: usize,
+    /// Per-class scheduling policy. `None` (the default) runs the
+    /// class-blind scheduler bit-identically; `Some` splits admission
+    /// into per-class weighted queues with preemptive prefill
+    /// reordering and class-ordered degradation (see the module docs).
+    pub classes: Option<ClassPolicy>,
 }
 
 impl Default for ContinuousConfig {
@@ -172,7 +196,27 @@ impl Default for ContinuousConfig {
             queue_deadline: 0.0,
             hard_deadline: 0.0,
             shed_threshold: 0,
+            classes: None,
         }
+    }
+}
+
+/// Class-aware scheduling knobs (active when
+/// [`ContinuousConfig::classes`] is `Some`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassPolicy {
+    /// Smooth weighted-round-robin dequeue weights, indexed by
+    /// [`PriorityClass::index`] (interactive, standard, batch). A
+    /// zero-weight class is only dequeued when every other queue is
+    /// empty. The sum must be positive.
+    pub weights: [u64; 3],
+}
+
+impl Default for ClassPolicy {
+    fn default() -> Self {
+        // 4:2:1 — interactive drains ~2x standard, ~4x batch, while
+        // every non-empty class still makes progress (no starvation).
+        ClassPolicy { weights: [4, 2, 1] }
     }
 }
 
@@ -206,6 +250,11 @@ pub enum ServerEvent {
     /// mapped from cached KV pages, so the request's chunked-prefill
     /// cursor starts past them (only the suffix is prefilled).
     PrefixHit { req: usize, tokens: usize, at: f64 },
+    /// `req`'s remaining prefill chunks were deferred behind the
+    /// newly admitted higher-priority request `by` (a pending-chunk
+    /// FIFO reorder — completed chunks and KV are untouched). Only
+    /// emitted with priority classes active.
+    Preempted { req: usize, by: usize, at: f64 },
 }
 
 /// What the engine should do next.
@@ -251,12 +300,49 @@ pub struct ContinuousScheduler {
     shed_threshold: usize,
     expired: u64,
     shed: u64,
+    /// Request i's QoS tier (all `Standard` when classes are off).
+    class_of: Vec<PriorityClass>,
+    /// Per-class admission queues (used *instead of* `queue` when
+    /// classes are active), indexed by `PriorityClass::index`.
+    class_queues: [VecDeque<usize>; 3],
+    /// Smooth-WRR running credit per class.
+    wrr_credit: [i64; 3],
+    weights: [u64; 3],
+    classes_on: bool,
+    /// Capacity rejections on the class-queue path (the class-blind
+    /// path counts them inside `queue`).
+    class_rejected: u64,
+    preempted: u64,
+    expired_c: [u64; 3],
+    shed_c: [u64; 3],
+    cancelled_c: [u64; 3],
+    preempted_c: [u64; 3],
 }
 
 impl ContinuousScheduler {
-    /// `arrivals[i]` is request i's arrival instant.
+    /// `arrivals[i]` is request i's arrival instant. Class-blind: all
+    /// requests are `Standard` and `cfg.classes` is ignored unless you
+    /// construct via [`ContinuousScheduler::with_classes`].
     pub fn new(arrival_times: &[f64], cfg: &ContinuousConfig) -> Self {
+        let classes = vec![PriorityClass::default(); arrival_times.len()];
+        Self::with_classes(arrival_times, &classes, cfg)
+    }
+
+    /// `arrivals[i]` is request i's arrival instant, `classes[i]` its
+    /// QoS tier. The tiers only influence scheduling when
+    /// `cfg.classes` is `Some`; otherwise they are carried through to
+    /// the per-class counters but the schedule is the class-blind one.
+    pub fn with_classes(arrival_times: &[f64], classes: &[PriorityClass],
+                        cfg: &ContinuousConfig) -> Self {
         assert!(cfg.max_in_flight >= 1, "max_in_flight must be >= 1");
+        assert_eq!(arrival_times.len(), classes.len(),
+                   "one class per arrival");
+        let classes_on = cfg.classes.is_some();
+        let weights = cfg.classes.unwrap_or_default().weights;
+        if classes_on {
+            assert!(weights.iter().sum::<u64>() > 0,
+                    "class weights must sum to > 0");
+        }
         let mut arrivals: Vec<(f64, usize)> = arrival_times
             .iter()
             .cloned()
@@ -280,6 +366,17 @@ impl ContinuousScheduler {
             shed_threshold: cfg.shed_threshold,
             expired: 0,
             shed: 0,
+            class_of: classes.to_vec(),
+            class_queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            wrr_credit: [0; 3],
+            weights,
+            classes_on,
+            class_rejected: 0,
+            preempted: 0,
+            expired_c: [0; 3],
+            shed_c: [0; 3],
+            cancelled_c: [0; 3],
+            preempted_c: [0; 3],
         }
     }
 
@@ -287,43 +384,166 @@ impl ContinuousScheduler {
     /// With load shedding on, arrivals hitting an over-threshold queue
     /// are dropped at the door (counted separately from capacity
     /// rejections — shedding is a policy choice, not backpressure).
+    /// With classes active, shedding is class-aware: if a queued
+    /// request of a *lower* tier than the arrival exists, the newest
+    /// such request is shed in its place and the arrival is admitted
+    /// (batch is evicted before standard before interactive); only
+    /// when the arrival is itself the lowest tier present is it shed
+    /// at the door. Each request is shed XOR expired XOR rejected —
+    /// never counted twice (a shed victim has left the queue before
+    /// any expiry sweep can see it).
     fn pump_arrivals(&mut self, now: f64) {
         while let Some(&(t, idx)) = self.arrivals.get(self.next_arrival) {
             if t > now {
                 break;
             }
             self.next_arrival += 1;
-            if self.shed_threshold > 0 && self.queue.len() >= self.shed_threshold {
-                self.shed += 1;
-                self.events.push(ServerEvent::Shed { req: idx, at: t });
-            } else if self.queue.push(idx) {
-                self.events.push(ServerEvent::Arrival { req: idx, at: t });
-            } else {
+            if !self.classes_on {
+                if self.shed_threshold > 0
+                    && self.queue.len() >= self.shed_threshold
+                {
+                    self.shed += 1;
+                    self.events.push(ServerEvent::Shed { req: idx, at: t });
+                } else if self.queue.push(idx) {
+                    self.events.push(ServerEvent::Arrival { req: idx, at: t });
+                } else {
+                    self.events.push(ServerEvent::Rejected { req: idx, at: t });
+                }
+                continue;
+            }
+            let c = self.class_of[idx].index();
+            let queued = self.queued();
+            if self.shed_threshold > 0 && queued >= self.shed_threshold {
+                // Prefer a lower-tier victim over the arrival itself.
+                let victim_class = (c + 1..3)
+                    .rev()
+                    .find(|&k| !self.class_queues[k].is_empty());
+                match victim_class {
+                    Some(k) => {
+                        let victim =
+                            self.class_queues[k].pop_back().unwrap();
+                        self.shed += 1;
+                        self.shed_c[k] += 1;
+                        self.events
+                            .push(ServerEvent::Shed { req: victim, at: t });
+                    }
+                    None => {
+                        self.shed += 1;
+                        self.shed_c[c] += 1;
+                        self.events
+                            .push(ServerEvent::Shed { req: idx, at: t });
+                        continue;
+                    }
+                }
+            }
+            if self.queued() >= self.queue.capacity() {
+                self.class_rejected += 1;
                 self.events.push(ServerEvent::Rejected { req: idx, at: t });
+            } else {
+                self.class_queues[c].push_back(idx);
+                self.events.push(ServerEvent::Arrival { req: idx, at: t });
             }
         }
     }
 
     /// Sweep queued requests past the queue deadline (before any
     /// admission at `now`): they leave the queue counted but unserved.
+    /// With classes active the sweep drains the batch queue first,
+    /// then standard, then interactive — degradation reaches the
+    /// latency-sensitive tier last.
     fn sweep_expired(&mut self, now: f64) {
         if self.queue_deadline <= 0.0 {
             return;
         }
         let deadline = self.queue_deadline;
         let arrival_of = &self.arrival_of;
-        let mut gone: Vec<usize> = Vec::new();
-        self.queue.retain(|&idx| {
-            if now > arrival_of[idx] + deadline {
-                gone.push(idx);
-                false
-            } else {
-                true
+        if !self.classes_on {
+            let mut gone: Vec<usize> = Vec::new();
+            self.queue.retain(|&idx| {
+                if now > arrival_of[idx] + deadline {
+                    gone.push(idx);
+                    false
+                } else {
+                    true
+                }
+            });
+            for idx in gone {
+                self.expired += 1;
+                self.events.push(ServerEvent::Expired { req: idx, at: now });
             }
-        });
-        for idx in gone {
-            self.expired += 1;
-            self.events.push(ServerEvent::Expired { req: idx, at: now });
+            return;
+        }
+        for k in (0..3).rev() {
+            let mut gone: Vec<usize> = Vec::new();
+            self.class_queues[k].retain(|&idx| {
+                if now > arrival_of[idx] + deadline {
+                    gone.push(idx);
+                    false
+                } else {
+                    true
+                }
+            });
+            for idx in gone {
+                self.expired += 1;
+                self.expired_c[k] += 1;
+                self.events.push(ServerEvent::Expired { req: idx, at: now });
+            }
+        }
+    }
+
+    /// Dequeue the next request for admission: plain FIFO when classes
+    /// are off; smooth weighted round-robin over the non-empty class
+    /// queues when they are on (credit += weight each round, the
+    /// highest-credit class is picked — ties favour the more urgent
+    /// tier — and pays the round's total back).
+    fn pop_queued(&mut self) -> Option<usize> {
+        if !self.classes_on {
+            return self.queue.pop();
+        }
+        let nonempty: Vec<usize> =
+            (0..3).filter(|&k| !self.class_queues[k].is_empty()).collect();
+        let mut round = 0i64;
+        for &k in &nonempty {
+            self.wrr_credit[k] += self.weights[k] as i64;
+            round += self.weights[k] as i64;
+        }
+        let mut best = *nonempty.first()?;
+        for &k in &nonempty[1..] {
+            if self.wrr_credit[k] > self.wrr_credit[best] {
+                best = k;
+            }
+        }
+        self.wrr_credit[best] -= round;
+        self.class_queues[best].pop_front()
+    }
+
+    /// Slot `idx` into the pending-chunk FIFO. With classes active the
+    /// FIFO is kept sorted by tier (stable within a tier): an arrival
+    /// outranking pending-chunk requests is inserted ahead of them,
+    /// deferring their remaining chunks — recorded as one
+    /// [`ServerEvent::Preempted`] per displaced request. Completed
+    /// chunks (and their KV) are never undone.
+    fn enqueue_prefilling(&mut self, idx: usize, now: f64) {
+        if !self.classes_on {
+            self.prefilling.push_back(idx);
+            self.events.push(ServerEvent::PrefillStart { req: idx, at: now });
+            return;
+        }
+        let c = self.class_of[idx].index();
+        let pos = self
+            .prefilling
+            .iter()
+            .position(|&r| self.class_of[r].index() > c)
+            .unwrap_or(self.prefilling.len());
+        let displaced: Vec<usize> =
+            self.prefilling.iter().skip(pos).copied().collect();
+        self.prefilling.insert(pos, idx);
+        self.events.push(ServerEvent::PrefillStart { req: idx, at: now });
+        for r in displaced {
+            self.preempted += 1;
+            self.preempted_c[self.class_of[r].index()] += 1;
+            self.events
+                .push(ServerEvent::Preempted { req: r, by: idx, at: now });
         }
     }
 
@@ -345,6 +565,9 @@ impl ContinuousScheduler {
         self.running.retain(|idx| !late(idx));
         self.prefilling.retain(|idx| !late(idx));
         for &idx in &gone {
+            if self.classes_on {
+                self.cancelled_c[self.class_of[idx].index()] += 1;
+            }
             self.events.push(ServerEvent::Cancelled { req: idx, at: now });
         }
         gone
@@ -372,9 +595,8 @@ impl ContinuousScheduler {
         if !owed_decode
             && self.running.len() + self.prefilling.len() < self.max_in_flight
         {
-            if let Some(idx) = self.queue.pop() {
-                self.prefilling.push_back(idx);
-                self.events.push(ServerEvent::PrefillStart { req: idx, at: now });
+            if let Some(idx) = self.pop_queued() {
+                self.enqueue_prefilling(idx, now);
                 self.just_chunked = true;
                 return Decision::AdmitPrefill(idx);
             }
@@ -441,7 +663,11 @@ impl ContinuousScheduler {
 
     /// Arrivals dropped at the admission queue.
     pub fn rejected(&self) -> u64 {
-        self.queue.rejected()
+        if self.classes_on {
+            self.class_rejected
+        } else {
+            self.queue.rejected()
+        }
     }
 
     /// Queued requests swept past their queue deadline.
@@ -456,7 +682,45 @@ impl ContinuousScheduler {
 
     /// Requests admitted but still waiting for a slot.
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        if self.classes_on {
+            self.class_queues.iter().map(|q| q.len()).sum()
+        } else {
+            self.queue.len()
+        }
+    }
+
+    /// Whether class-aware scheduling is active
+    /// (`ContinuousConfig::classes` was `Some`).
+    pub fn classes_active(&self) -> bool {
+        self.classes_on
+    }
+
+    /// Pending-chunk deferrals behind higher-priority admissions
+    /// (always 0 with classes off).
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// Expired requests per class (indexed by `PriorityClass::index`);
+    /// all zero with classes off.
+    pub fn expired_by_class(&self) -> [u64; 3] {
+        self.expired_c
+    }
+
+    /// Shed requests per class; all zero with classes off.
+    pub fn shed_by_class(&self) -> [u64; 3] {
+        self.shed_c
+    }
+
+    /// Cancelled requests per class; all zero with classes off.
+    pub fn cancelled_by_class(&self) -> [u64; 3] {
+        self.cancelled_c
+    }
+
+    /// Preemptions suffered per class (the tier whose chunks were
+    /// deferred); all zero with classes off.
+    pub fn preempted_by_class(&self) -> [u64; 3] {
+        self.preempted_c
     }
 
     /// The recorded virtual-time schedule.
@@ -482,6 +746,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             n_decode: 4,
             arrival: 0.0,
+            class: Default::default(),
         }
     }
 
@@ -720,6 +985,270 @@ mod tests {
         assert!(s.events().contains(
             &ServerEvent::Cancelled { req: 0, at: 2.0 }));
         assert_eq!(s.next_decision(2.0), Decision::AdmitPrefill(2));
+    }
+
+    // -----------------------------------------------------------------
+    // priority classes
+    // -----------------------------------------------------------------
+
+    const I: PriorityClass = PriorityClass::Interactive;
+    const S: PriorityClass = PriorityClass::Standard;
+    const B: PriorityClass = PriorityClass::Batch;
+
+    fn classed(cfg: ContinuousConfig) -> ContinuousConfig {
+        ContinuousConfig { classes: Some(ClassPolicy::default()), ..cfg }
+    }
+
+    #[test]
+    fn single_class_run_is_bit_identical_to_class_blind() {
+        // The dedicated scheduler-level parity check: with every
+        // request in one tier, the class-aware machinery (WRR over one
+        // queue, preemption that never fires, class-aware shedding
+        // with no lower tier to evict) must reproduce the class-blind
+        // schedule event for event and counter for counter — across
+        // admission, chunking, shedding, expiry and idling.
+        let arrivals = [0.0, 0.0, 0.0, 0.0, 0.0, 2.5];
+        let cfg_blind = ContinuousConfig {
+            queue_deadline: 0.15,
+            shed_threshold: 2,
+            ..cfg(1, 2)
+        };
+        let cfg_classed = classed(cfg_blind.clone());
+        let mut blind = ContinuousScheduler::new(&arrivals, &cfg_blind);
+        let mut aware = ContinuousScheduler::with_classes(
+            &arrivals, &[S; 6], &cfg_classed);
+        let script = |s: &mut ContinuousScheduler| -> Vec<Decision> {
+            let mut ds = Vec::new();
+            let mut now = 0.0;
+            loop {
+                let d = s.next_decision(now);
+                ds.push(d.clone());
+                match d {
+                    Decision::AdmitPrefill(r) => {
+                        s.chunk_done(r, now + 0.05);
+                        now += 0.05;
+                    }
+                    Decision::PrefillChunk(r) => {
+                        s.prefill_done(r, now + 0.05);
+                        now += 0.05;
+                    }
+                    Decision::DecodeStep => {
+                        now += 0.1;
+                        let done: Vec<usize> = s.running().to_vec();
+                        for r in done {
+                            s.retire(r, now);
+                        }
+                    }
+                    Decision::IdleUntil(t) => now = t,
+                    Decision::Finished => break ds,
+                }
+            }
+        };
+        assert_eq!(script(&mut blind), script(&mut aware));
+        assert_eq!(blind.events(), aware.events());
+        assert_eq!(blind.rejected(), aware.rejected());
+        assert_eq!(blind.expired(), aware.expired());
+        assert_eq!(blind.shed(), aware.shed());
+        // the scenario really exercised the valves
+        assert_eq!(blind.shed(), 3);
+        assert_eq!(blind.expired(), 1);
+        assert_eq!(aware.preempted(), 0);
+    }
+
+    #[test]
+    fn weighted_dequeue_interleaves_classes_without_starvation() {
+        // 6 interactive + 6 batch queued simultaneously against a
+        // 4:2:1 WRR: interactive drains ~4x faster but batch is never
+        // starved. Smooth WRR with weights {4, 1} yields I I B I I
+        // per 5-admission cycle.
+        let classes = [I, I, I, I, I, I, B, B, B, B, B, B];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0; 12], &classes, &classed(cfg(12, 64)));
+        let mut order = Vec::new();
+        for _ in 0..12 {
+            match s.next_decision(0.0) {
+                Decision::AdmitPrefill(r) => {
+                    order.push(classes[r]);
+                    s.prefill_done(r, 0.0);
+                }
+                d => panic!("expected admission, got {d:?}"),
+            }
+        }
+        assert_eq!(order[..5], [I, I, B, I, I]);
+        // every class fully drains
+        assert_eq!(order.iter().filter(|c| **c == B).count(), 6);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn zero_weight_class_drains_only_when_alone() {
+        let classes = [B, B, I];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0; 3], &classes,
+            &ContinuousConfig {
+                classes: Some(ClassPolicy { weights: [1, 1, 0] }),
+                ..cfg(3, 8)
+            });
+        let mut order = Vec::new();
+        for _ in 0..3 {
+            match s.next_decision(0.0) {
+                Decision::AdmitPrefill(r) => {
+                    order.push(classes[r]);
+                    s.prefill_done(r, 0.0);
+                }
+                d => panic!("expected admission, got {d:?}"),
+            }
+        }
+        // interactive first; zero-weight batch only once nothing else
+        // is queued
+        assert_eq!(order, vec![I, B, B]);
+    }
+
+    #[test]
+    fn interactive_admission_preempts_pending_batch_chunks() {
+        // Batch requests 0 and 1 are mid-chunked-prefill when
+        // interactive request 2 arrives: its admission jumps the
+        // pending-chunk FIFO ahead of both — recorded as one Preempted
+        // per displaced request, never touching their completed
+        // chunks — and its remaining chunks run first. The batch FIFO
+        // then resumes in its original order.
+        let classes = [B, B, I];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0, 0.0, 0.5], &classes, &classed(cfg(3, 8)));
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.chunk_done(0, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(1));
+        s.chunk_done(1, 0.2);
+        // interactive arrival: admitted AND moved ahead of both
+        // pending batch prefills
+        assert_eq!(s.next_decision(0.5), Decision::AdmitPrefill(2));
+        s.chunk_done(2, 0.6);
+        assert_eq!(s.preempted(), 2);
+        assert_eq!(s.preempted_by_class(), [0, 0, 2]);
+        assert!(s.events().contains(
+            &ServerEvent::Preempted { req: 0, by: 2, at: 0.5 }));
+        assert!(s.events().contains(
+            &ServerEvent::Preempted { req: 1, by: 2, at: 0.5 }));
+        // the interactive request's remaining chunks run first
+        assert_eq!(s.next_decision(0.6), Decision::PrefillChunk(2));
+        s.prefill_done(2, 0.7);
+        // decode batch owed one step after the chunk, then the batch
+        // FIFO resumes in its original order
+        assert_eq!(s.next_decision(0.7), Decision::DecodeStep);
+        assert_eq!(s.next_decision(0.8), Decision::PrefillChunk(0));
+    }
+
+    #[test]
+    fn shedding_evicts_lowest_class_before_the_arrival() {
+        // Queue holds [batch, batch] at the shed threshold when an
+        // interactive request arrives: the newest batch request is
+        // shed in its place. A batch arrival against the same queue is
+        // shed at the door (no lower tier to evict).
+        let classes = [S, B, B, I, B];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0, 0.1, 0.2, 0.5, 0.6], &classes,
+            &ContinuousConfig { shed_threshold: 2, ..classed(cfg(1, 64)) });
+        // t=0: standard 0 takes the only slot
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(0));
+        s.prefill_done(0, 0.05);
+        // batch 1+2 queue up below the threshold
+        assert_eq!(s.next_decision(0.3), Decision::DecodeStep);
+        assert_eq!(s.queued(), 2);
+        // t=0.5: interactive 3 arrives at threshold -> batch 2 (the
+        // newest lower-tier entry) is shed, 3 is admitted to the queue
+        // t=0.6: batch 4 arrives at threshold -> shed at the door
+        assert_eq!(s.next_decision(0.6), Decision::DecodeStep);
+        assert_eq!(s.shed(), 2);
+        assert_eq!(s.shed_by_class(), [0, 0, 2]);
+        assert!(s.events().contains(
+            &ServerEvent::Shed { req: 2, at: 0.5 }));
+        assert!(s.events().contains(
+            &ServerEvent::Shed { req: 4, at: 0.6 }));
+        assert!(s.events().contains(
+            &ServerEvent::Arrival { req: 3, at: 0.5 }));
+        // the queue kept the interactive request (admitted first) and
+        // the oldest batch request
+        s.retire(0, 1.0);
+        assert_eq!(s.next_decision(1.0), Decision::AdmitPrefill(3));
+        assert_eq!(s.queued(), 1);
+    }
+
+    #[test]
+    fn expiry_sweeps_batch_before_standard_before_interactive() {
+        // The interactive request wins the WRR admission; the three
+        // requests left queued all blow the deadline together, and the
+        // sweep drains batch -> standard -> interactive.
+        let classes = [S, B, I, S];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0, 0.0, 0.0, 0.0], &classes,
+            &ContinuousConfig { queue_deadline: 1.0, ..classed(cfg(1, 8)) });
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(2));
+        s.prefill_done(2, 0.1);
+        assert_eq!(s.next_decision(5.0), Decision::DecodeStep);
+        let expired: Vec<usize> = s
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                ServerEvent::Expired { req, .. } => Some(*req),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(expired, vec![1, 0, 3]);
+        assert_eq!(s.expired_by_class(), [0, 2, 1]);
+    }
+
+    #[test]
+    fn hard_deadline_counts_cancels_per_class() {
+        let classes = [B, I];
+        let mut s = ContinuousScheduler::with_classes(
+            &[0.0, 0.0], &classes,
+            &ContinuousConfig { hard_deadline: 1.0, ..classed(cfg(2, 8)) });
+        // interactive 1 outranks batch 0 at admission
+        assert_eq!(s.next_decision(0.0), Decision::AdmitPrefill(1));
+        s.prefill_done(1, 0.1);
+        assert_eq!(s.next_decision(0.1), Decision::AdmitPrefill(0));
+        s.chunk_done(0, 0.2);
+        let mut gone = s.sweep_cancelled(2.0);
+        gone.sort_unstable();
+        assert_eq!(gone, vec![0, 1]);
+        assert_eq!(s.cancelled_by_class(), [1, 0, 1]);
+    }
+
+    #[test]
+    fn stale_shed_eligible_arrivals_count_exactly_once() {
+        // PR 7 valve-interaction audit (class-blind path): an arrival
+        // that is simultaneously shed-eligible (queue at threshold)
+        // and past the queue deadline must be counted exactly once,
+        // with deterministic precedence — shedding fires at the door,
+        // before the request ever enters the queue, so the expiry
+        // sweep (which only sees *queued* entries) can never also
+        // count it. Conversely a request that entered the queue can
+        // only expire, never be shed. Pumping a long-stale backlog in
+        // one call exercises both paths in the same decision.
+        let mut s = ContinuousScheduler::new(
+            &[0.0, 0.0, 0.0],
+            &ContinuousConfig { queue_deadline: 1.0, shed_threshold: 2,
+                                ..cfg(1, 8) });
+        // First decision happens long past every deadline: requests 0
+        // and 1 enter the queue (then immediately expire); request 2
+        // hits the threshold and is shed at the door.
+        assert_eq!(s.next_decision(5.0), Decision::Finished);
+        assert_eq!(s.shed(), 1);
+        assert_eq!(s.expired(), 2);
+        assert_eq!(s.rejected(), 0);
+        // exactly-once accounting: each request appears in exactly one
+        // terminal drop event
+        let mut drops = [0usize; 3];
+        for e in s.events() {
+            match e {
+                ServerEvent::Shed { req, .. }
+                | ServerEvent::Expired { req, .. }
+                | ServerEvent::Rejected { req, .. } => drops[*req] += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(drops, [1, 1, 1]);
+        assert_eq!(s.shed() + s.expired() + s.rejected(), 3);
     }
 
     #[test]

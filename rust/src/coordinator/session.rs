@@ -41,7 +41,7 @@ use crate::metrics::{summarize, RequestMetrics};
 use crate::predictor::StateConstructor;
 use crate::runtime::{ArgRef, Literal, Tensor};
 use crate::simx::{CostModel, StreamId, Streams};
-use crate::workload::Request;
+use crate::workload::{PriorityClass, Request};
 
 use super::engine::{Ablation, Engine, ServeOptions, ServeOutcome};
 use super::policy::{Policy, SimCtx};
@@ -118,6 +118,9 @@ pub(crate) struct ReqState {
     /// event (per-request step-latency bookkeeping in continuous
     /// mode, where requests join mid-stream).
     pub last_event_t: f64,
+    /// QoS latency tier (copied from the request; `Standard` when
+    /// priority classes are disabled).
+    pub class: PriorityClass,
 }
 
 impl ReqState {
@@ -165,6 +168,7 @@ impl ReqState {
             queue_delay: 0.0,
             served: false,
             last_event_t: 0.0,
+            class: r.class,
         }
     }
 }
@@ -411,6 +415,18 @@ pub(crate) struct ServeSession<'e> {
     /// Prompt-token budget of one prefill chunk (`None` = the whole
     /// prompt in one monolithic pass, the pre-chunking path verbatim).
     prefill_chunk: Option<usize>,
+    /// `--prefill-chunk auto`: derive the chunk budget from measured
+    /// virtual costs (one chunk ≈ one decode step) instead of a fixed
+    /// token count. Overrides `prefill_chunk` when set.
+    chunk_auto: bool,
+    /// Virtual time spent inside auto-measured prefill chunks
+    /// (autotune numerator for the per-token prefill cost).
+    prefill_time: f64,
+    /// Prompt tokens processed by auto-measured prefill chunks.
+    prefill_tokens: u64,
+    /// Decode steps executed (autotune denominator for the mean
+    /// decode-step cost).
+    decode_steps: u64,
     /// Paged KV allocator (`--kv-page`): `Some` routes every KV
     /// access through per-request page tables; `None` keeps the
     /// contiguous per-request window tensors verbatim.
@@ -491,6 +507,10 @@ impl<'e> ServeSession<'e> {
             expert_fanout: opts.expert_fanout,
             // A zero budget means "no chunking" (CLI convenience).
             prefill_chunk: opts.prefill_chunk.filter(|&c| c > 0),
+            chunk_auto: opts.prefill_chunk_auto,
+            prefill_time: 0.0,
+            prefill_tokens: 0,
+            decode_steps: 0,
             pager,
             prefix_cache: opts.prefix_cache,
             prefill_chunks: 0,
@@ -643,6 +663,27 @@ impl<'e> ServeSession<'e> {
     pub fn prefill_step(&mut self, ridx: usize, start_at: f64)
                         -> Result<SimResult<PrefillProgress>> {
         self.sync_faults(start_at);
+        if self.chunk_auto {
+            // Autotuned chunking: pick this chunk's budget from the
+            // measured virtual costs so one chunk costs about one
+            // decode step, and fold the chunk's own cost back into
+            // the estimate. The measurement anchors at where the
+            // compute stream actually starts, not at `start_at`, so
+            // queueing never inflates the per-token cost.
+            let budget = self.auto_chunk_budget();
+            let t0 = self.streams.free_at(StreamId::Compute).max(start_at);
+            let before = self.states[ridx].prefill_pos;
+            let res = self.prefill_chunked(ridx, start_at, budget)?;
+            if let Ok(p) = &res {
+                let end = match *p {
+                    PrefillProgress::Done(t) | PrefillProgress::Pending(t) => t,
+                };
+                self.prefill_time += end - t0;
+                self.prefill_tokens +=
+                    (self.states[ridx].prefill_pos - before) as u64;
+            }
+            return Ok(res);
+        }
         // The paged path always routes through the chunked driver —
         // an unbounded budget runs the whole (remaining) prompt as one
         // chunk, which PR 5 pinned bit-identical to the monolithic
@@ -657,6 +698,25 @@ impl<'e> ServeSession<'e> {
                                      budget.unwrap_or(usize::MAX))
             }
         }
+    }
+
+    /// Prompt-token budget for the next autotuned prefill chunk:
+    /// mean decode-step cost / mean per-prefill-token cost, so a chunk
+    /// delays a waiting decode batch by about one step regardless of
+    /// batch size or prompt mix. Before both costs have been measured
+    /// (cold start) a fixed bootstrap budget applies.
+    fn auto_chunk_budget(&self) -> usize {
+        /// First-chunk budget before any cost measurement exists.
+        const BOOTSTRAP_CHUNK: usize = 32;
+        if self.decode_steps == 0 || self.prefill_tokens == 0 {
+            return BOOTSTRAP_CHUNK;
+        }
+        let step = self.decode_time / self.decode_steps as f64;
+        let per_tok = self.prefill_time / self.prefill_tokens as f64;
+        if !(step > 0.0) || !(per_tok > 0.0) {
+            return BOOTSTRAP_CHUNK;
+        }
+        ((step / per_tok) as usize).max(1)
     }
 
     /// Monolithic prefill of one request: embed -> L x (attention,
@@ -1024,8 +1084,8 @@ impl<'e> ServeSession<'e> {
         self.sync_faults(t_sync);
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, ablation, force_rowwise,
-                   expert_fanout, decode_time, decode_tokens, pager,
-                   faults, fault_state, .. } = self;
+                   expert_fanout, decode_time, decode_tokens, decode_steps,
+                   pager, faults, fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -1253,6 +1313,7 @@ impl<'e> ServeSession<'e> {
                                 cost.head_compute(b, PAPER_VOCAB), "lm-head");
         *decode_time += t_end - t_step_begin;
         *decode_tokens += b as u64;
+        *decode_steps += 1;
         Ok(Ok(t_end))
     }
 
@@ -1320,6 +1381,7 @@ impl<'e> ServeSession<'e> {
                 step_latencies: s.step_latencies.clone(),
                 arrival: s.arrival,
                 queue_delay: s.queue_delay,
+                class: s.class,
             })
             .collect();
         let makespan = self.streams.sync_all();
@@ -1337,6 +1399,20 @@ impl<'e> ServeSession<'e> {
                 steps: s.all_paths.clone(),
             })
             .collect();
+        let mut by_class = [crate::metrics::ClassRobustness::default(); 3];
+        if let Some(s) = sched {
+            let (e, sh, ca, pr) = (s.expired_by_class(), s.shed_by_class(),
+                                   s.cancelled_by_class(),
+                                   s.preempted_by_class());
+            for k in 0..3 {
+                by_class[k] = crate::metrics::ClassRobustness {
+                    expired: e[k],
+                    shed: sh[k],
+                    cancelled: ca[k],
+                    preempted: pr[k],
+                };
+            }
+        }
         let robustness = crate::metrics::Robustness {
             expired: sched.map(|s| s.expired()).unwrap_or(0),
             shed: sched.map(|s| s.shed()).unwrap_or(0),
@@ -1344,6 +1420,8 @@ impl<'e> ServeSession<'e> {
             fetch_retries: stats.fetch_retries,
             failover_fetches: stats.failover_fetches,
             degraded_acquires: stats.degraded_acquires,
+            preempted: sched.map(|s| s.preempted()).unwrap_or(0),
+            by_class,
         };
         let kv_paging = self
             .pager
@@ -1356,11 +1434,17 @@ impl<'e> ServeSession<'e> {
                 prefix_reused_tokens: p.stats.prefix_reused_tokens,
             })
             .unwrap_or_default();
+        // Per-class latency splits only exist when priority classes
+        // are active — `None` keeps class-blind output byte-identical.
+        let class_latency = sched
+            .filter(|s| s.classes_active())
+            .map(|_| crate::metrics::class_latency(&metrics));
         let summary = summarize(&metrics, makespan)
             .with_decode_throughput(self.decode_tokens, self.decode_time)
             .with_prefill_chunks(self.prefill_chunks)
             .with_robustness(robustness)
-            .with_kv_paging(kv_paging);
+            .with_kv_paging(kv_paging)
+            .with_class_latency(class_latency);
         if oom.is_some() {
             metrics.clear();
         }

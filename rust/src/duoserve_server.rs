@@ -6,6 +6,8 @@
 //! engine executes AOT artifacts only.
 //!
 //! Request:  {"prompt": [1,2,3], "n_decode": 8, "dataset": "squad"}
+//!           (optional "class": "interactive" | "standard" | "batch" —
+//!            the request's QoS tier; defaults to "standard")
 //! Response: {"req_id": 0, "tokens": [...], "ttft": 0.12, "e2e": 0.51}
 //!
 //! Malformed lines are answered in-band with a one-line JSON error
@@ -24,10 +26,22 @@ use anyhow::Result;
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Engine, ServeOptions};
 use duoserve::util::Json;
-use duoserve::workload::Request;
+use duoserve::workload::{PriorityClass, Request};
 
 fn parse_request(line: &str, id: usize) -> Result<Request> {
     let j = Json::parse(line)?;
+    // Optional QoS tier: an unknown name is a malformed request (it
+    // gets the in-band error line), not silently "standard".
+    let class = match j.opt("class") {
+        None => PriorityClass::default(),
+        Some(c) => {
+            let name = c.as_str()?;
+            PriorityClass::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown class {name:?} \
+                                 (interactive|standard|batch)")
+            })?
+        }
+    };
     Ok(Request {
         req_id: id,
         dataset: j
@@ -38,6 +52,7 @@ fn parse_request(line: &str, id: usize) -> Result<Request> {
         prompt: j.get("prompt")?.i32_vec()?,
         n_decode: j.get("n_decode")?.as_usize()?,
         arrival: 0.0,
+        class,
     })
 }
 
@@ -119,4 +134,29 @@ pub fn serve_stdin(artifacts: &Path, model: &str, policy: PolicyKind,
     }
     let _ = reader.join();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_reads_optional_class() {
+        let r = parse_request(
+            r#"{"prompt": [1,2], "n_decode": 3}"#, 0).unwrap();
+        assert_eq!(r.class, PriorityClass::Standard);
+        let r = parse_request(
+            r#"{"prompt": [1], "n_decode": 1, "class": "interactive"}"#, 1)
+            .unwrap();
+        assert_eq!(r.class, PriorityClass::Interactive);
+    }
+
+    #[test]
+    fn parse_request_rejects_unknown_class() {
+        let err = parse_request(
+            r#"{"prompt": [1], "n_decode": 1, "class": "bulk"}"#, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown class"), "{err}");
+    }
 }

@@ -12,11 +12,14 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{Ablation, ContinuousConfig, Engine, ServeOptions};
+use duoserve::coordinator::{Ablation, ClassPolicy, ContinuousConfig, Engine,
+                            ServeOptions};
 use duoserve::experts::{ExpertStats, Placement};
-use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment, SloSpec, Table};
+use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment,
+                        slo_attainment_for_class, SloSpec, Table};
 use duoserve::util::args::Args;
-use duoserve::workload::{assign_arrivals, generate_requests, ArrivalProcess};
+use duoserve::workload::{assign_arrivals, assign_classes, generate_requests,
+                         ArrivalProcess, PriorityClass};
 
 
 mod duoserve_server;
@@ -33,10 +36,12 @@ COMMANDS:
                 --ablation none|no-overlap|no-predictor
                 (no-overlap: single-stream schedule + synchronous
                  expert provider, no prefetch-worker thread)
-                --prefill-chunk T  (split each prompt into T-token
+                --prefill-chunk T|auto  (split each prompt into T-token
                  prefill chunks; 0 = whole prompt at once, the default.
                  In continuous mode chunks interleave with decode
-                 steps, bounding decoder stalls to chunk-sized units)
+                 steps, bounding decoder stalls to chunk-sized units;
+                 auto sizes each chunk from the measured decode-step
+                 cost so one chunk costs about one decode step)
                 --kv-page N  (page the KV cache in N-token pages from
                  a shared refcounted pool; 0 = the legacy contiguous
                  per-request tensors, the default — bit-identical)
@@ -63,6 +68,14 @@ COMMANDS:
                   arrival+SECS and release their KV; 0 = never)
                  --shed-above N  (shed new arrivals while the queue
                   holds >= N requests; 0 = never)
+                 --class-mix a,b,c  (weighted interactive,standard,batch
+                  priority-class assignment; absent = classes off, the
+                  class-blind scheduler verbatim. Classes dequeue by
+                  weighted priority, interactive arrivals preempt lower
+                  tiers' pending prefill chunks, and overload valves
+                  shed/expire batch before standard before interactive)
+                 --slo-ttft-class a,b,c --slo-e2e-class a,b,c
+                  (per-class SLO thresholds, seconds; needs --class-mix)
                  --slo-ttft SECS --slo-e2e SECS)
   compare       --model M --device D --dataset DS --requests N --seed S
   trace         --model M --dataset DS --requests N --seed S
@@ -102,13 +115,96 @@ fn ablation(name: &str) -> Result<Option<Ablation>> {
 }
 
 /// `--prefill-chunk` parsing: 0 (the default) keeps the monolithic
-/// whole-prompt prefill.
-fn prefill_chunk(args: &duoserve::util::args::Args)
-                 -> Result<Option<usize>> {
-    Ok(match args.usize("prefill-chunk", 0)? {
+/// whole-prompt prefill; a token count turns on fixed-size chunking;
+/// `auto` (continuous mode only) autotunes the budget from the live
+/// run's measured virtual costs. Returns `(fixed_budget, auto)`.
+fn prefill_chunk(args: &Args) -> Result<(Option<usize>, bool)> {
+    let v = args.str("prefill-chunk", "0");
+    if v == "auto" {
+        return Ok((None, true));
+    }
+    let n: usize = v.parse().map_err(|_| {
+        anyhow::anyhow!("--prefill-chunk expects a token count or \
+                         \"auto\", got {v:?}")
+    })?;
+    Ok((match n {
         0 => None,
         n => Some(n),
-    })
+    }, false))
+}
+
+/// `--class-mix a,b,c` parsing: three comma-separated relative weights
+/// (interactive,standard,batch) — each non-negative and finite, with a
+/// positive sum. Flag absent (`None`) keeps priority classes off: the
+/// class-blind scheduler runs verbatim.
+fn class_mix(args: &Args) -> Result<Option<[f64; 3]>> {
+    let v = args.str("class-mix", "");
+    if v.is_empty() {
+        return Ok(None);
+    }
+    let parts: Vec<&str> = v.split(',').collect();
+    if parts.len() != 3 {
+        bail!("--class-mix expects three comma-separated weights \
+               interactive,standard,batch, got {v:?}");
+    }
+    let mut mix = [0.0f64; 3];
+    for (slot, p) in mix.iter_mut().zip(&parts) {
+        let w: f64 = p.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--class-mix weight {p:?} is not a number")
+        })?;
+        if !w.is_finite() || w < 0.0 {
+            bail!("--class-mix weights must be non-negative and finite, \
+                   got {p:?}");
+        }
+        *slot = w;
+    }
+    if mix.iter().sum::<f64>() <= 0.0 {
+        bail!("--class-mix weights must have a positive sum, got {v:?}");
+    }
+    Ok(Some(mix))
+}
+
+/// `--slo-ttft-class` / `--slo-e2e-class` parsing: three positive
+/// comma-separated per-class thresholds in virtual seconds
+/// (interactive,standard,batch).
+fn slo_class_triple(args: &Args, key: &str) -> Result<Option<[f64; 3]>> {
+    let v = args.str(key, "");
+    if v.is_empty() {
+        return Ok(None);
+    }
+    let parts: Vec<&str> = v.split(',').collect();
+    if parts.len() != 3 {
+        bail!("--{key} expects three comma-separated thresholds \
+               interactive,standard,batch, got {v:?}");
+    }
+    let mut out = [0.0f64; 3];
+    for (slot, p) in out.iter_mut().zip(&parts) {
+        let t: f64 = p.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--{key} threshold {p:?} is not a number")
+        })?;
+        if !t.is_finite() || t <= 0.0 {
+            bail!("--{key} thresholds must be positive, got {p:?}");
+        }
+        *slot = t;
+    }
+    Ok(Some(out))
+}
+
+/// Reject priority-class flags outside continuous mode: phase-bulk
+/// serving has no admission queue, so classes cannot change anything
+/// there — silently ignoring them would hide the mistake.
+fn reject_class_flags_outside_continuous(args: &Args) -> Result<()> {
+    for key in ["class-mix", "slo-ttft-class", "slo-e2e-class"] {
+        if !args.str(key, "").is_empty() {
+            bail!("--{key} requires --mode continuous (phase-bulk \
+                   serving has no admission queue to prioritize)");
+        }
+    }
+    if args.str("prefill-chunk", "0") == "auto" {
+        bail!("--prefill-chunk auto requires --mode continuous (the \
+               autotune targets the live decode batch's step time)");
+    }
+    Ok(())
 }
 
 /// `--kv-page N` parsing: 0 (the default) keeps the legacy contiguous
@@ -194,6 +290,30 @@ fn print_kv_paging(k: &duoserve::metrics::KvPagingSummary) {
     );
 }
 
+/// Per-class latency/degradation report lines, printed only when
+/// priority classes were active (`class_latency` is `None` otherwise)
+/// so class-blind output stays byte-identical.
+fn print_class_report(s: &duoserve::metrics::Summary) {
+    let Some(classes) = &s.class_latency else { return };
+    for (i, c) in classes.iter().enumerate() {
+        let b = &s.robustness.by_class[i];
+        println!(
+            "class {}: n={} p50-ttft={} p95-ttft={} p50-itl={} p95-itl={} \
+             preempted={} shed={} expired={} cancelled={}",
+            PriorityClass::ALL[i].label(),
+            c.n_requests,
+            fmt_secs(c.p50_ttft),
+            fmt_secs(c.p95_ttft),
+            fmt_secs(c.p50_itl),
+            fmt_secs(c.p95_itl),
+            b.preempted,
+            b.shed,
+            b.expired,
+            b.cancelled,
+        );
+    }
+}
+
 /// Per-shard hit-rate / balance report lines (sharded runs only).
 fn print_shard_report(stats: &[ExpertStats], resident: &[usize],
                       balance: f64) {
@@ -219,7 +339,7 @@ const KNOWN_OPTS: &[&str] = &[
     "device", "mode", "batch", "ablation", "prefill-chunk", "shards",
     "placement", "rate", "max-in-flight", "queue-cap", "decode-priority",
     "slo-ttft", "slo-e2e", "faults", "queue-deadline", "hard-deadline",
-    "shed-above", "kv-page",
+    "shed-above", "kv-page", "class-mix", "slo-ttft-class", "slo-e2e-class",
 ];
 
 fn main() {
@@ -259,6 +379,18 @@ fn run() -> Result<()> {
                 ArrivalProcess::Closed
             };
             assign_arrivals(&mut reqs, &process);
+            let mix = class_mix(&args)?;
+            let slo_ttft_c = slo_class_triple(&args, "slo-ttft-class")?;
+            let slo_e2e_c = slo_class_triple(&args, "slo-e2e-class")?;
+            if (slo_ttft_c.is_some() || slo_e2e_c.is_some()) && mix.is_none()
+            {
+                bail!("--slo-ttft-class/--slo-e2e-class require \
+                       --class-mix (per-class SLOs need priority \
+                       classes on)");
+            }
+            if let Some(m) = mix {
+                assign_classes(&mut reqs, m, seed);
+            }
             let ccfg = ContinuousConfig {
                 max_in_flight: args.usize("max-in-flight", 4)?,
                 queue_capacity: args.usize("queue-cap", 64)?,
@@ -267,10 +399,13 @@ fn run() -> Result<()> {
                 queue_deadline: args.f64("queue-deadline", 0.0)?,
                 hard_deadline: args.f64("hard-deadline", 0.0)?,
                 shed_threshold: args.usize("shed-above", 0)?,
+                classes: mix.map(|_| ClassPolicy::default()),
             };
             let mut opts = ServeOptions::new(pol, dev);
             opts.ablation = ablation(&args.str("ablation", "none"))?;
-            opts.prefill_chunk = prefill_chunk(&args)?;
+            let (chunk, chunk_auto) = prefill_chunk(&args)?;
+            opts.prefill_chunk = chunk;
+            opts.prefill_chunk_auto = chunk_auto;
             opts.faults = faults(&args)?;
             let (kv_page, prefix_cache) = kv_paging_opts(&args)?;
             opts.kv_page = kv_page;
@@ -313,6 +448,7 @@ fn run() -> Result<()> {
             );
             print_robustness(&s.robustness);
             print_kv_paging(&s.kv_paging);
+            print_class_report(s);
             print_shard_report(&out.shard_stats, &out.shard_resident,
                                out.shard_balance);
             let slo_ttft = args.f64("slo-ttft", 0.0)?;
@@ -330,9 +466,27 @@ fn run() -> Result<()> {
                     rep.joint_attainment * 100.0,
                 );
             }
+            if let (Some(tt), Some(ee)) = (slo_ttft_c, slo_e2e_c) {
+                for (i, c) in PriorityClass::ALL.iter().enumerate() {
+                    let spec = SloSpec { ttft: tt[i], e2e: ee[i] };
+                    let rep =
+                        slo_attainment_for_class(&out.metrics, &spec, *c);
+                    println!(
+                        "SLO[{}]: ttft<={}: {:.1}%  e2e<={}: {:.1}%  \
+                         joint: {:.1}%",
+                        c.label(),
+                        fmt_secs(spec.ttft),
+                        rep.ttft_attainment * 100.0,
+                        fmt_secs(spec.e2e),
+                        rep.e2e_attainment * 100.0,
+                        rep.joint_attainment * 100.0,
+                    );
+                }
+            }
             Ok(())
         }
         "run" => {
+            reject_class_flags_outside_continuous(&args)?;
             let pol = policy(&args.str("policy", "duoserve"))?;
             let dev = device(&args.str("device", "a5000"))?;
             let batch = args.usize("batch", 1)?;
@@ -341,7 +495,8 @@ fn run() -> Result<()> {
             let mut opts = ServeOptions::new(pol, dev);
             opts.record_streams = args.flag("trace-streams");
             opts.ablation = ablation(&args.str("ablation", "none"))?;
-            opts.prefill_chunk = prefill_chunk(&args)?;
+            let (chunk, _) = prefill_chunk(&args)?;
+            opts.prefill_chunk = chunk;
             opts.faults = faults(&args)?;
             let (kv_page, prefix_cache) = kv_paging_opts(&args)?;
             opts.kv_page = kv_page;
@@ -532,5 +687,81 @@ fn run() -> Result<()> {
         other => {
             bail!("unknown command {other:?}\n\n{USAGE}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()),
+                    &["trace-streams", "all", "prefix-cache"])
+            .unwrap()
+    }
+
+    #[test]
+    fn class_mix_parses_and_defaults_off() {
+        assert_eq!(class_mix(&args(&[])).unwrap(), None);
+        assert_eq!(class_mix(&args(&["--class-mix", "1,2,3"])).unwrap(),
+                   Some([1.0, 2.0, 3.0]));
+        assert_eq!(class_mix(&args(&["--class-mix", "0, 0.5 ,0"])).unwrap(),
+                   Some([0.0, 0.5, 0.0]));
+    }
+
+    #[test]
+    fn class_mix_rejects_malformed_weights() {
+        for bad in ["1,2", "1,2,3,4", "1,x,3", "-1,2,3", "0,0,0",
+                    "inf,1,1", "nan,1,1"] {
+            let err = class_mix(&args(&["--class-mix", bad]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--class-mix"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn slo_class_triples_reject_non_positive() {
+        let ok = slo_class_triple(&args(&["--slo-ttft-class", "0.5,1,2"]),
+                                  "slo-ttft-class")
+            .unwrap();
+        assert_eq!(ok, Some([0.5, 1.0, 2.0]));
+        for bad in ["0,1,2", "-0.5,1,2", "1,2", "a,b,c", "inf,1,1"] {
+            let err = slo_class_triple(
+                &args(&["--slo-e2e-class", bad]), "slo-e2e-class")
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--slo-e2e-class"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_accepts_auto_and_counts() {
+        assert_eq!(prefill_chunk(&args(&[])).unwrap(), (None, false));
+        assert_eq!(prefill_chunk(&args(&["--prefill-chunk", "0"])).unwrap(),
+                   (None, false));
+        assert_eq!(prefill_chunk(&args(&["--prefill-chunk", "64"])).unwrap(),
+                   (Some(64), false));
+        assert_eq!(prefill_chunk(&args(&["--prefill-chunk", "auto"]))
+                       .unwrap(),
+                   (None, true));
+        assert!(prefill_chunk(&args(&["--prefill-chunk", "fast"])).is_err());
+    }
+
+    #[test]
+    fn class_flags_bail_outside_continuous_mode() {
+        for conflict in [["--class-mix", "1,1,1"],
+                         ["--slo-ttft-class", "1,2,3"],
+                         ["--slo-e2e-class", "1,2,3"],
+                         ["--prefill-chunk", "auto"]] {
+            let err = reject_class_flags_outside_continuous(&args(&conflict))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("continuous"), "{conflict:?}: {err}");
+        }
+        reject_class_flags_outside_continuous(
+            &args(&["--prefill-chunk", "32"]))
+            .unwrap();
+        reject_class_flags_outside_continuous(&args(&[])).unwrap();
     }
 }

@@ -7,6 +7,8 @@
 // here from `experts/`: every public metrics item must carry rustdoc.
 #![warn(missing_docs)]
 
+use crate::workload::PriorityClass;
+
 /// Outcome of serving one request under one policy.
 ///
 /// In the continuous serving mode, `ttft` and `e2e` are measured from
@@ -33,6 +35,9 @@ pub struct RequestMetrics {
     pub arrival: f64,
     /// Admission-queue wait: prefill issue instant minus arrival.
     pub queue_delay: f64,
+    /// QoS latency tier the request was served under (`Standard`
+    /// whenever priority classes are disabled).
+    pub class: PriorityClass,
 }
 
 /// Predictor accuracy counters (Table III's two metrics).
@@ -133,6 +138,53 @@ pub struct Summary {
     /// Paged-KV counters (page allocations, prefix-cache reuse); all
     /// zero on the contiguous path (`--kv-page` off).
     pub kv_paging: KvPagingSummary,
+    /// Per-class latency tails, indexed by [`PriorityClass::index`];
+    /// `None` whenever priority classes are disabled, so class-blind
+    /// output is unchanged.
+    pub class_latency: Option<[ClassLatency; 3]>,
+}
+
+/// Latency tails of one QoS class (attached to a [`Summary`] when
+/// priority classes are active; computed by [`class_latency`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassLatency {
+    /// Served requests in this class.
+    pub n_requests: usize,
+    /// Median time to first token within the class.
+    pub p50_ttft: f64,
+    /// p95 time to first token within the class.
+    pub p95_ttft: f64,
+    /// Median inter-token latency pooled over the class's decode steps.
+    pub p50_itl: f64,
+    /// p95 inter-token latency pooled over the class's decode steps.
+    pub p95_itl: f64,
+}
+
+/// Per-class latency tails over a served request set, indexed by
+/// [`PriorityClass::index`] (interactive, standard, batch). A class
+/// with no served requests reports all-zero tails.
+pub fn class_latency(reqs: &[RequestMetrics]) -> [ClassLatency; 3] {
+    let mut out = [ClassLatency::default(); 3];
+    for (i, slot) in out.iter_mut().enumerate() {
+        let class = PriorityClass::ALL[i];
+        let of: Vec<&RequestMetrics> =
+            reqs.iter().filter(|r| r.class == class).collect();
+        let mut ttft: Vec<f64> = of.iter().map(|r| r.ttft).collect();
+        ttft.sort_by(|a, b| a.total_cmp(b));
+        let mut itl: Vec<f64> = of
+            .iter()
+            .flat_map(|r| r.step_latencies.iter().copied())
+            .collect();
+        itl.sort_by(|a, b| a.total_cmp(b));
+        *slot = ClassLatency {
+            n_requests: of.len(),
+            p50_ttft: percentile(&ttft, 50.0),
+            p95_ttft: percentile(&ttft, 95.0),
+            p50_itl: percentile(&itl, 50.0),
+            p95_itl: percentile(&itl, 95.0),
+        };
+    }
+    out
 }
 
 /// Paged-KV counters attached to a [`Summary`]: how many KV pages the
@@ -185,6 +237,31 @@ pub struct Robustness {
     /// Acquires degraded to the synchronous path (poisoned staging
     /// lock or stalled prefetch worker).
     pub degraded_acquires: u64,
+    /// Pending-prefill-chunk deferrals: times a queued-behind request's
+    /// remaining chunks were pushed behind a higher-priority admission
+    /// (always 0 with priority classes off).
+    pub preempted: u64,
+    /// Per-class degradation splits, indexed by
+    /// [`PriorityClass::index`]; all zero with priority classes off,
+    /// so the class-blind `Robustness` default is unchanged.
+    pub by_class: [ClassRobustness; 3],
+}
+
+/// One QoS class's share of the degradation counters (the class-aware
+/// scheduler sheds/expires batch before standard before interactive,
+/// which these tallies make visible).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassRobustness {
+    /// Queued requests of this class swept past the queue deadline.
+    pub expired: u64,
+    /// Arrivals of this class dropped by load shedding.
+    pub shed: u64,
+    /// In-flight requests of this class cancelled past the hard
+    /// deadline.
+    pub cancelled: u64,
+    /// Times this class's pending prefill chunks were deferred behind
+    /// a higher-priority admission.
+    pub preempted: u64,
 }
 
 impl Summary {
@@ -212,6 +289,13 @@ impl Summary {
     /// Attach the run's paged-KV counters.
     pub fn with_kv_paging(mut self, k: KvPagingSummary) -> Self {
         self.kv_paging = k;
+        self
+    }
+
+    /// Attach per-class latency tails (`None` when classes are off).
+    pub fn with_class_latency(mut self,
+                              c: Option<[ClassLatency; 3]>) -> Self {
+        self.class_latency = c;
         self
     }
 }
@@ -264,6 +348,7 @@ pub fn summarize(reqs: &[RequestMetrics], makespan: f64) -> Summary {
         prefill_chunks: 0,
         robustness: Robustness::default(),
         kv_paging: KvPagingSummary::default(),
+        class_latency: None,
     }
 }
 
@@ -320,6 +405,17 @@ pub fn slo_attainment(reqs: &[RequestMetrics], spec: &SloSpec) -> SloReport {
         e2e_attainment: ok_e2e as f64 / n as f64,
         joint_attainment: ok_both as f64 / n as f64,
     }
+}
+
+/// SLO attainment of one QoS class within a served request set: the
+/// per-class view the class-aware scheduler is judged by (interactive
+/// attainment must survive a batch flood).
+pub fn slo_attainment_for_class(reqs: &[RequestMetrics],
+                                spec: &SloSpec,
+                                class: PriorityClass) -> SloReport {
+    let of: Vec<RequestMetrics> =
+        reqs.iter().filter(|r| r.class == class).cloned().collect();
+    slo_attainment(&of, spec)
 }
 
 /// Fixed-width text table writer for the figure benches.
@@ -433,6 +529,7 @@ mod tests {
             step_latencies: vec![],
             arrival: 0.0,
             queue_delay: 0.0,
+            class: Default::default(),
         };
         let reqs = vec![mk(0.5, 2.0), mk(1.5, 2.0), mk(0.5, 9.0), mk(2.0, 9.0)];
         let rep = slo_attainment(&reqs, &SloSpec { ttft: 1.0, e2e: 3.0 });
@@ -455,6 +552,7 @@ mod tests {
             step_latencies: steps,
             arrival: 0.0,
             queue_delay: 0.0,
+            class: Default::default(),
         };
         // 10 steps total: nine 10ms steps and one 500ms stall.
         let mut a = vec![0.01; 5];
@@ -485,9 +583,73 @@ mod tests {
         assert_eq!(s.robustness, Robustness::default());
         let r = Robustness { expired: 1, shed: 2, cancelled: 3,
                              fetch_retries: 4, failover_fetches: 5,
-                             degraded_acquires: 6 };
+                             degraded_acquires: 6, preempted: 7,
+                             by_class: [ClassRobustness::default(); 3] };
         let s = s.with_robustness(r);
         assert_eq!(s.robustness, r);
+    }
+
+    #[test]
+    fn class_latency_splits_by_class_and_attaches() {
+        let mk = |ttft: f64, steps: Vec<f64>, class: PriorityClass| {
+            RequestMetrics {
+                req_id: 0,
+                ttft,
+                e2e: ttft + 1.0,
+                tokens_out: steps.len() + 1,
+                prompt_len: 4,
+                step_latencies: steps,
+                arrival: 0.0,
+                queue_delay: 0.0,
+                class,
+            }
+        };
+        let reqs = vec![
+            mk(0.1, vec![0.01, 0.01], PriorityClass::Interactive),
+            mk(0.2, vec![0.02], PriorityClass::Interactive),
+            mk(5.0, vec![0.5, 0.5], PriorityClass::Batch),
+        ];
+        let by = class_latency(&reqs);
+        assert_eq!(by[PriorityClass::Interactive.index()].n_requests, 2);
+        assert_eq!(by[PriorityClass::Standard.index()].n_requests, 0);
+        assert_eq!(by[PriorityClass::Standard.index()].p95_ttft, 0.0);
+        assert!((by[PriorityClass::Interactive.index()].p95_ttft - 0.2)
+                    .abs() < 1e-12);
+        assert!((by[PriorityClass::Batch.index()].p95_itl - 0.5)
+                    .abs() < 1e-12);
+        // Class-blind summaries carry no class block at all.
+        let s = summarize(&reqs, 1.0);
+        assert_eq!(s.class_latency, None);
+        let s = s.with_class_latency(Some(by));
+        assert_eq!(s.class_latency, Some(by));
+    }
+
+    #[test]
+    fn slo_attainment_for_class_filters() {
+        let mk = |ttft: f64, class: PriorityClass| RequestMetrics {
+            req_id: 0,
+            ttft,
+            e2e: 0.5,
+            tokens_out: 1,
+            prompt_len: 1,
+            step_latencies: vec![],
+            arrival: 0.0,
+            queue_delay: 0.0,
+            class,
+        };
+        let reqs = vec![
+            mk(0.1, PriorityClass::Interactive),
+            mk(9.0, PriorityClass::Batch),
+            mk(9.0, PriorityClass::Batch),
+        ];
+        let spec = SloSpec { ttft: 1.0, e2e: 1.0 };
+        let i = slo_attainment_for_class(&reqs, &spec,
+                                         PriorityClass::Interactive);
+        let b = slo_attainment_for_class(&reqs, &spec, PriorityClass::Batch);
+        assert_eq!(i.n_requests, 1);
+        assert!((i.ttft_attainment - 1.0).abs() < 1e-12);
+        assert_eq!(b.n_requests, 2);
+        assert!((b.ttft_attainment - 0.0).abs() < 1e-12);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use super::{Literal, Tensor};
 /// A loaded component executable.
 pub struct Executable {
     kind: ComponentKind,
+    /// Component name (the artifact file stem), used in error context.
     pub name: String,
 }
 
@@ -35,8 +36,16 @@ pub struct Executable {
 /// per-request KV caches: a decode step writes one KV row per layer
 /// instead of cloning the whole cache through the boundary.
 pub enum ArgRef<'a> {
+    /// Borrowed host tensor.
     T(&'a Tensor),
-    WT { t: &'a Tensor, bt: &'a Tensor },
+    /// Borrowed static rank-2 weight with its load-time transpose.
+    WT {
+        /// The row-major `(k, n)` weight.
+        t: &'a Tensor,
+        /// Its `(n, k)` transpose (blocked-kernel layout).
+        bt: &'a Tensor,
+    },
+    /// Owned literal moved into the executable (in-place KV path).
     Own(Literal),
 }
 
@@ -123,10 +132,13 @@ fn parse_spec(text: &str) -> Result<ComponentKind> {
 }
 
 impl Runtime {
+    /// The native CPU runtime with an empty component cache.
     pub fn cpu() -> Result<Self> {
         Ok(Runtime { cache: Arc::new(Mutex::new(HashMap::new())) })
     }
 
+    /// Backend identifier (always `"native-cpu"` here; a PJRT-backed
+    /// runtime would report its platform instead).
     pub fn platform(&self) -> String {
         "native-cpu".to_string()
     }

@@ -248,10 +248,13 @@ pub struct Scratch {
 const SCRATCH_POOL_CAP: usize = 64;
 
 impl Scratch {
+    /// An empty pool (buffers accumulate as they are retired).
     pub fn new() -> Self {
         Scratch { pool: Vec::new() }
     }
 
+    /// A zero-filled buffer of `len` elements, reusing a retired
+    /// buffer's allocation when one is pooled.
     pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
         let mut v = self.pool.pop().unwrap_or_default();
         v.clear();
@@ -259,6 +262,7 @@ impl Scratch {
         v
     }
 
+    /// Retire a buffer back to the pool (dropped past the pool cap).
     pub fn put(&mut self, v: Vec<f32>) {
         if self.pool.len() < SCRATCH_POOL_CAP && v.capacity() > 0 {
             self.pool.push(v);

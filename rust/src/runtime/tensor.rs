@@ -49,16 +49,31 @@ pub mod copy_stats {
         DEEP_COPY_ELEMS.load(Ordering::Relaxed)
     }
 
+    /// Zero both counters (call before the measured region).
     pub fn reset() {
         DEEP_COPIES.store(0, Ordering::Relaxed);
         DEEP_COPY_ELEMS.store(0, Ordering::Relaxed);
     }
 }
 
+/// Host tensor: `Arc`-shared element storage plus a shape (see the
+/// module docs for the copy-on-write contract).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
-    F32 { data: Arc<Vec<f32>>, shape: Vec<usize> },
-    I32 { data: Arc<Vec<i32>>, shape: Vec<usize> },
+    /// f32 elements (activations, weights, KV rows).
+    F32 {
+        /// Row-major element storage, shared across handles.
+        data: Arc<Vec<f32>>,
+        /// Dimension sizes (empty = scalar).
+        shape: Vec<usize>,
+    },
+    /// i32 elements (token ids, indices).
+    I32 {
+        /// Row-major element storage, shared across handles.
+        data: Arc<Vec<i32>>,
+        /// Dimension sizes (empty = scalar).
+        shape: Vec<usize>,
+    },
 }
 
 /// The empty tensor: what `std::mem::take` leaves behind when the
@@ -70,20 +85,24 @@ impl Default for Tensor {
 }
 
 impl Tensor {
+    /// An f32 tensor from row-major data and a shape.
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor::F32 { data: Arc::new(data), shape }
     }
 
+    /// An i32 tensor from row-major data and a shape.
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor::I32 { data: Arc::new(data), shape }
     }
 
+    /// A rank-0 i32 tensor holding `v`.
     pub fn scalar_i32(v: i32) -> Self {
         Tensor::I32 { data: Arc::new(vec![v]), shape: vec![] }
     }
 
+    /// An all-zero f32 tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor::F32 {
             data: Arc::new(vec![0.0; shape.iter().product()]),
@@ -91,12 +110,14 @@ impl Tensor {
         }
     }
 
+    /// Dimension sizes (empty slice = scalar).
     pub fn shape(&self) -> &[usize] {
         match self {
             Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32 { data, .. } => data.len(),
@@ -104,10 +125,12 @@ impl Tensor {
         }
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow the elements of an f32 tensor.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data.as_slice()),
@@ -129,6 +152,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the elements of an i32 tensor.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data.as_slice()),

@@ -5,10 +5,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// Parsed command line: `--key value` options, bare `--flag`s, and
+/// everything else in order.
 #[derive(Debug, Default)]
 pub struct Args {
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option arguments, in the order given.
     pub positional: Vec<String>,
 }
 
@@ -39,10 +42,12 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// String option value, or `default` when absent.
     pub fn str(&self, name: &str, default: &str) -> String {
         self.opts
             .get(name)
@@ -50,6 +55,7 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Integer option value, or `default` when absent.
     pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.opts.get(name) {
             Some(v) => v
@@ -59,6 +65,7 @@ impl Args {
         }
     }
 
+    /// u64 option value (seeds), or `default` when absent.
     pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.opts.get(name) {
             Some(v) => v
@@ -68,6 +75,7 @@ impl Args {
         }
     }
 
+    /// Float option value, or `default` when absent.
     pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.opts.get(name) {
             Some(v) => v
@@ -77,6 +85,7 @@ impl Args {
         }
     }
 
+    /// Required option value (error naming the flag when absent).
     pub fn require(&self, name: &str) -> Result<&str> {
         match self.opts.get(name) {
             Some(v) => Ok(v),

@@ -8,17 +8,26 @@ use std::fmt;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value (numbers are f64, objects are ordered maps so
+/// serialization is deterministic).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted by key).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse one complete JSON document (trailing input is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -32,6 +41,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------
 
+    /// Required object member (error if absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -41,6 +51,7 @@ impl Json {
         }
     }
 
+    /// Optional object member (`None` when absent or not an object).
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +59,7 @@ impl Json {
         }
     }
 
+    /// The value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -55,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -62,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -70,6 +84,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// The value as a non-negative integer (u64).
     pub fn as_u64(&self) -> Result<u64> {
         let n = self.as_f64()?;
         if n < 0.0 {
@@ -78,6 +93,7 @@ impl Json {
         Ok(n as u64)
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -85,6 +101,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -97,6 +114,7 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// Array of i32 (token-id lists in requests and goldens).
     pub fn i32_vec(&self) -> Result<Vec<i32>> {
         self.as_arr()?
             .iter()

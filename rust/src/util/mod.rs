@@ -4,6 +4,11 @@
 //! in-tree subset under `vendor/anyhow`, and serde/rand/clap
 //! equivalents live here.)
 
+// Enforced documentation island (ROADMAP maintenance item), extended
+// here from `experts/` and `coordinator/`: every public item in the
+// substrate helpers must carry rustdoc.
+#![warn(missing_docs)]
+
 pub mod args;
 pub mod json;
 pub mod math;

@@ -1,6 +1,7 @@
 //! Deterministic seeded RNG: splitmix64-seeded xoshiro256++ — fast,
 //! well-distributed, reproducible across platforms (no libc rand).
 
+/// Deterministic xoshiro256++ generator (see module docs).
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
@@ -15,6 +16,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Expand a 64-bit seed into the full generator state (splitmix64).
     pub fn seed_from(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -27,6 +29,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
             .wrapping_add(self.s[3])
@@ -67,6 +70,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// True with probability `p`.
     pub fn bool_with(&mut self, p: f64) -> bool {
         self.f64() < p
     }

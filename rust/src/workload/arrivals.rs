@@ -105,6 +105,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             n_decode: 4,
             arrival: -1.0,
+            class: Default::default(),
         }
     }
 

@@ -18,6 +18,82 @@ pub const N_CLUSTERS: usize = 8;
 /// Must match `python/compile/workload.py::TOPIC_PURITY`.
 pub const TOPIC_PURITY: f64 = 0.8;
 
+/// QoS latency tier of a request. Ordered by urgency: `Interactive`
+/// requests carry the tightest SLOs (chat turns), `Standard` is the
+/// default tier, `Batch` is throughput traffic with no latency
+/// expectation. The class-aware continuous scheduler dequeues by
+/// weighted priority, preempts lower tiers' pending prefill chunks,
+/// and sheds/expires the lowest tier first under overload.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PriorityClass {
+    /// Latency-critical tier (tightest SLOs, preempts lower tiers).
+    Interactive,
+    /// The default tier — also what every request gets when priority
+    /// classes are disabled entirely.
+    #[default]
+    Standard,
+    /// Throughput tier: first victim of shedding/expiry, never
+    /// preempts anyone.
+    Batch,
+}
+
+impl PriorityClass {
+    /// All classes, in urgency order (index == `self.index()`).
+    pub const ALL: [PriorityClass; 3] = [
+        PriorityClass::Interactive,
+        PriorityClass::Standard,
+        PriorityClass::Batch,
+    ];
+
+    /// Dense index for per-class tables: 0 = interactive, 1 =
+    /// standard, 2 = batch. Lower index = more urgent.
+    pub fn index(self) -> usize {
+        match self {
+            PriorityClass::Interactive => 0,
+            PriorityClass::Standard => 1,
+            PriorityClass::Batch => 2,
+        }
+    }
+
+    /// Lower-case wire/CLI name of the class.
+    pub fn label(self) -> &'static str {
+        match self {
+            PriorityClass::Interactive => "interactive",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire/CLI class name (`interactive | standard | batch`).
+    pub fn by_name(name: &str) -> Option<PriorityClass> {
+        PriorityClass::ALL.iter().copied().find(|c| c.label() == name)
+    }
+}
+
+/// Stamp a seeded weighted class mix onto a request slice:
+/// `mix = [interactive, standard, batch]` relative weights (must be
+/// non-negative with a positive sum). The draw is keyed off `seed`
+/// only — the same seed and mix reproduce the same assignment for any
+/// arrival process.
+pub fn assign_classes(reqs: &mut [Request], mix: [f64; 3], seed: u64) {
+    assert!(mix.iter().all(|w| *w >= 0.0 && w.is_finite()),
+            "class-mix weights must be non-negative");
+    let total: f64 = mix.iter().sum();
+    assert!(total > 0.0, "class-mix weights must sum to > 0");
+    let mut rng = Rng::seed_from(seed ^ 0xC1A5_55E5);
+    for r in reqs.iter_mut() {
+        let mut u = rng.f64() * total;
+        r.class = PriorityClass::Batch;
+        for (c, w) in PriorityClass::ALL.iter().zip(mix) {
+            if u < w {
+                r.class = *c;
+                break;
+            }
+            u -= w;
+        }
+    }
+}
+
 /// One synthetic serving request: a clustered prompt plus the decode
 /// budget and (for continuous mode) an arrival instant.
 #[derive(Debug, Clone)]
@@ -34,6 +110,9 @@ pub struct Request {
     pub n_decode: usize,
     /// Virtual arrival time (0 for closed-loop benchmarks).
     pub arrival: f64,
+    /// QoS latency tier (`Standard` unless a class mix or trace field
+    /// assigns one).
+    pub class: PriorityClass,
 }
 
 fn prompt_range(dataset: &str, max_seq: usize) -> (usize, usize) {
@@ -86,6 +165,7 @@ pub fn generate_requests(man: &Manifest, dataset: &str, n_requests: usize,
                 prompt: sample_tokens(man, cluster, plen, &mut rng),
                 n_decode: decode_len(dataset, man.sim.max_decode, &mut rng),
                 arrival: 0.0,
+                class: PriorityClass::default(),
             }
         })
         .collect()
@@ -162,5 +242,50 @@ mod tests {
     fn unknown_dataset_panics() {
         let m = man();
         generate_requests(&m, "imagenet", 1, 0);
+    }
+
+    #[test]
+    fn class_names_round_trip() {
+        for c in PriorityClass::ALL {
+            assert_eq!(PriorityClass::by_name(c.label()), Some(c));
+            assert_eq!(PriorityClass::ALL[c.index()], c);
+        }
+        assert_eq!(PriorityClass::by_name("bulk"), None);
+        assert_eq!(PriorityClass::default(), PriorityClass::Standard);
+    }
+
+    #[test]
+    fn class_mix_is_seeded_and_tracks_weights() {
+        let m = man();
+        let mut a = generate_requests(&m, "squad", 300, 5);
+        let mut b = generate_requests(&m, "squad", 300, 5);
+        assert!(a.iter().all(|r| r.class == PriorityClass::Standard));
+        assign_classes(&mut a, [1.0, 1.0, 2.0], 9);
+        assign_classes(&mut b, [1.0, 1.0, 2.0], 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.class, y.class);
+        }
+        let count = |v: &[Request], c: PriorityClass| {
+            v.iter().filter(|r| r.class == c).count()
+        };
+        let batch = count(&a, PriorityClass::Batch);
+        let inter = count(&a, PriorityClass::Interactive);
+        assert!(batch > inter, "2x weight should dominate: {batch} vs {inter}");
+        assert!(inter > 0 && count(&a, PriorityClass::Standard) > 0);
+    }
+
+    #[test]
+    fn class_mix_zero_weight_excludes_class() {
+        let m = man();
+        let mut a = generate_requests(&m, "orca", 100, 3);
+        assign_classes(&mut a, [0.0, 0.0, 1.0], 1);
+        assert!(a.iter().all(|r| r.class == PriorityClass::Batch));
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to > 0")]
+    fn class_mix_rejects_zero_sum() {
+        let mut a: Vec<Request> = Vec::new();
+        assign_classes(&mut a, [0.0, 0.0, 0.0], 1);
     }
 }

@@ -123,6 +123,7 @@ fn batched_decode_matches_frozen_goldens() {
             prompt: g.get("prompt").unwrap().i32_vec().unwrap(),
             n_decode: g.get("n_decode").unwrap().as_usize().unwrap(),
             arrival: 0.0,
+            class: Default::default(),
         };
         let out =
             e.serve(std::slice::from_ref(&req), &opts(false, true)).unwrap();

@@ -34,6 +34,7 @@ fn golden_request(g: &Json, id: usize) -> Request {
         prompt: g.get("prompt").unwrap().i32_vec().unwrap(),
         n_decode: g.get("n_decode").unwrap().as_usize().unwrap(),
         arrival: 0.0,
+        class: Default::default(),
     }
 }
 

@@ -1,0 +1,202 @@
+//! Engine-level tests of the QoS priority-class machinery: the
+//! no-classes default (and an all-one-class run) must stay
+//! bit-identical to the class-blind scheduler, the class-aware
+//! overload valves must split their counts into the right per-class
+//! slots, and an interactive admission must preempt a batch request's
+//! pending prefill chunks at the serving-loop level — never changing
+//! any request's tokens.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ClassPolicy, ContinuousConfig, Engine,
+                            ServeOptions, ServeOutcome, ServerEvent};
+use duoserve::metrics::ClassRobustness;
+use duoserve::workload::{assign_arrivals, generate_requests,
+                         ArrivalProcess, PriorityClass, Request};
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+fn short_requests(engine: &Engine, n: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = generate_requests(&engine.man, "squad", n, seed);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.n_decode = 3 + (i % 3);
+    }
+    reqs
+}
+
+fn opts() -> ServeOptions {
+    ServeOptions::new(PolicyKind::DuoServe, DeviceProfile::a6000())
+}
+
+/// Everything in two outcomes that the "classes off/all-one-class must
+/// be bit-identical" acceptance criterion covers: the event schedule,
+/// the tokens, every per-request metric, and every ledger counter.
+fn assert_bit_identical(blind: &ServeOutcome, classed: &ServeOutcome) {
+    assert!(blind.oom.is_none() && classed.oom.is_none());
+    assert_eq!(blind.events, classed.events,
+               "classes reordered the event schedule");
+    assert_eq!(blind.tokens, classed.tokens,
+               "classes changed the function");
+    assert_eq!(format!("{:?}", blind.metrics),
+               format!("{:?}", classed.metrics),
+               "per-request metrics diverged");
+    // ExpertStats carries no PartialEq (it is a live ledger, not a
+    // value type); its Debug form covers every counter.
+    assert_eq!(format!("{:?}", blind.expert_stats),
+               format!("{:?}", classed.expert_stats),
+               "expert-path accounting diverged");
+    assert_eq!(blind.rejected, classed.rejected);
+    assert_eq!(blind.expired, classed.expired);
+    assert_eq!(blind.shed, classed.shed);
+    assert_eq!(blind.cancelled, classed.cancelled);
+    assert_eq!(blind.summary.robustness.preempted, 0);
+    assert_eq!(classed.summary.robustness.preempted, 0,
+               "a single-class run has nothing to preempt");
+    // The aggregate Summary must agree except for the two class-only
+    // attachments (the per-class splits and latency tails).
+    let mut norm = classed.summary.clone();
+    norm.class_latency = None;
+    norm.robustness.by_class = Default::default();
+    assert_eq!(format!("{:?}", blind.summary), format!("{norm:?}"),
+               "summary diverged beyond the class-only attachments");
+}
+
+#[test]
+fn classed_all_standard_run_matches_class_blind_bit_for_bit() {
+    // The dedicated default-parity check: the same open-loop workload
+    // served with `classes: None` and with classes *on* but every
+    // request Standard (one non-empty queue makes weighted round-robin
+    // degenerate to FIFO) must produce the identical run.
+    let e = engine();
+    let mk = || {
+        let mut reqs = short_requests(&e, 6, 17);
+        assign_arrivals(&mut reqs,
+                        &ArrivalProcess::Poisson { rate: 3.0, seed: 9 });
+        reqs
+    };
+    let base = ContinuousConfig { max_in_flight: 2, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+    let classed_cfg = ContinuousConfig { classes: Some(ClassPolicy::default()),
+                                         ..base.clone() };
+    let blind = e.serve_continuous(&mk(), &opts(), &base).unwrap();
+    let classed = e.serve_continuous(&mk(), &opts(), &classed_cfg).unwrap();
+    assert_bit_identical(&blind, &classed);
+
+    // The blind run attaches no per-class data at all; the classed run
+    // reports its (degenerate, all-Standard) split.
+    assert!(blind.summary.class_latency.is_none());
+    assert_eq!(blind.summary.robustness.by_class,
+               [ClassRobustness::default(); 3]);
+    let cl = classed.summary.class_latency
+        .expect("classes on: per-class latency tails must be attached");
+    assert_eq!(cl[0].n_requests, 0);
+    assert_eq!(cl[1].n_requests, classed.metrics.len());
+    assert_eq!(cl[2].n_requests, 0);
+}
+
+#[test]
+fn class_aware_valves_stay_bit_identical_and_count_in_the_standard_slot() {
+    // Same parity under active overload valves: an 8-request burst
+    // into a shed threshold of 3 and a (virtually) immediate queue
+    // deadline sheds and expires identically with classes on — and the
+    // classed run books every degradation count in the Standard slot.
+    let e = engine();
+    let mk = || {
+        let mut reqs = short_requests(&e, 8, 23);
+        assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+        reqs
+    };
+    let base = ContinuousConfig { max_in_flight: 1, queue_capacity: 8,
+                                  shed_threshold: 3, queue_deadline: 1e-3,
+                                  ..ContinuousConfig::default() };
+    let classed_cfg = ContinuousConfig { classes: Some(ClassPolicy::default()),
+                                         ..base.clone() };
+    let blind = e.serve_continuous(&mk(), &opts(), &base).unwrap();
+    let classed = e.serve_continuous(&mk(), &opts(), &classed_cfg).unwrap();
+    assert_bit_identical(&blind, &classed);
+    assert!(classed.shed > 0, "burst never tripped the shed valve");
+    assert!(classed.expired > 0, "deadline never expired a queued request");
+
+    assert_eq!(blind.summary.robustness.by_class,
+               [ClassRobustness::default(); 3]);
+    let by_class = classed.summary.robustness.by_class;
+    assert_eq!(by_class[0], ClassRobustness::default());
+    assert_eq!(by_class[2], ClassRobustness::default());
+    assert_eq!(by_class[1],
+               ClassRobustness { expired: classed.expired,
+                                 shed: classed.shed,
+                                 cancelled: classed.cancelled,
+                                 preempted: 0 },
+               "all-Standard degradation must land in the Standard slot");
+}
+
+#[test]
+fn interactive_admission_preempts_batch_prefill_at_engine_level() {
+    // A batch request with a near-max prompt is mid-chunked-prefill
+    // when an interactive request arrives: the serving loop must
+    // reorder the pending chunks (one Preempted event, batch victim),
+    // finish the interactive prefill first, and still emit exactly the
+    // tokens a class-blind run produces.
+    let e = engine();
+    let mut reqs = short_requests(&e, 2, 41);
+    while reqs[0].prompt.len() < e.man.sim.max_seq - 4 {
+        let t = reqs[0].prompt[reqs[0].prompt.len() % 5];
+        reqs[0].prompt.push(t);
+    }
+    reqs[0].n_decode = 4;
+    reqs[0].class = PriorityClass::Batch;
+    reqs[1].prompt.truncate(8);
+    reqs[1].n_decode = 6;
+    reqs[1].class = PriorityClass::Interactive;
+
+    // Place the interactive arrival squarely inside the batch prefill
+    // (chunking can only lengthen it relative to the solo probe).
+    let probe = e.serve(&reqs[..1], &opts()).unwrap();
+    assert!(probe.oom.is_none());
+    reqs[0].arrival = 0.0;
+    reqs[1].arrival = probe.metrics[0].ttft * 0.5;
+
+    let mut o = opts();
+    o.prefill_chunk = Some(4);
+    let base = ContinuousConfig { max_in_flight: 2, queue_capacity: 8,
+                                  ..ContinuousConfig::default() };
+    let classed_cfg = ContinuousConfig { classes: Some(ClassPolicy::default()),
+                                         ..base.clone() };
+    let blind = e.serve_continuous(&reqs, &o, &base).unwrap();
+    let classed = e.serve_continuous(&reqs, &o, &classed_cfg).unwrap();
+    assert!(blind.oom.is_none() && classed.oom.is_none());
+    assert_eq!(blind.tokens, classed.tokens,
+               "preemption must never change the tokens");
+
+    // The reorder happened, was recorded, and was counted to the
+    // batch victim's slot.
+    assert!(classed.events.iter().any(|ev| matches!(
+                ev, ServerEvent::Preempted { req: 0, by: 1, .. })),
+            "no Preempted event for the deferred batch prefill");
+    let rb = &classed.summary.robustness;
+    assert_eq!(rb.preempted, 1);
+    assert_eq!(rb.by_class[2].preempted, 1, "victim is the batch class");
+    assert_eq!(rb.by_class[0].preempted, 0);
+    assert_eq!(blind.summary.robustness.preempted, 0);
+
+    // The interactive prefill finishes first despite arriving second
+    // (in the blind run the batch prompt's chunks drain first).
+    let done_at = |out: &ServeOutcome, want: usize| -> usize {
+        out.events.iter().position(|ev| matches!(
+            ev, ServerEvent::PrefillDone { req, .. } if *req == want))
+            .expect("missing PrefillDone")
+    };
+    assert!(done_at(&classed, 1) < done_at(&classed, 0),
+            "interactive prefill should complete before the batch one");
+    assert!(done_at(&blind, 0) < done_at(&blind, 1),
+            "class-blind FIFO should finish the batch prefill first");
+
+    // Both requests served; the per-class tails cover one request each.
+    let cl = classed.summary.class_latency.expect("classes were on");
+    assert_eq!(cl[0].n_requests, 1);
+    assert_eq!(cl[1].n_requests, 0);
+    assert_eq!(cl[2].n_requests, 1);
+    assert!(cl[0].p95_ttft > 0.0 && cl[2].p95_ttft > 0.0);
+}

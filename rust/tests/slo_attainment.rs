@@ -5,12 +5,13 @@
 //! with real queueing).
 
 use duoserve::config::{DeviceProfile, PolicyKind};
-use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
-                            ServeOutcome};
+use duoserve::coordinator::{ClassPolicy, ContinuousConfig, Engine,
+                            ServeOptions, ServeOutcome, ServerEvent};
 use duoserve::experts::{Placement, StagingMode};
-use duoserve::metrics::{slo_attainment, SloReport, SloSpec};
+use duoserve::metrics::{slo_attainment, slo_attainment_for_class, SloReport,
+                        SloSpec};
 use duoserve::workload::{assign_arrivals, generate_requests,
-                         ArrivalProcess, Request};
+                         ArrivalProcess, PriorityClass, Request};
 
 const N_REQS: usize = 8;
 
@@ -225,6 +226,164 @@ fn replicate_hot_sharding_raises_aggregate_hit_rate_under_burst() {
     // The single-device run reports the degenerate shard view.
     assert_eq!(flat.shard_stats.len(), 1);
     assert_eq!(flat.shard_balance, 1.0);
+}
+
+#[test]
+fn classes_keep_interactive_ttft_attainment_alive_under_batch_flood() {
+    // The PR's headline QoS claim: a t=0 flood of batch requests ahead
+    // of a few interactive ones starves interactive TTFT under the
+    // class-blind FIFO, while weighted per-class queues pull the
+    // interactive requests to the front — strictly better interactive
+    // attainment against the same SLO, same tokens.
+    let e = engine();
+    let mut reqs = generate_requests(&e.man, "squad", 13, 77);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.n_decode = 3 + (i % 3);
+        r.class = if i < 10 { PriorityClass::Batch }
+                  else { PriorityClass::Interactive };
+    }
+    assign_arrivals(&mut reqs, &ArrivalProcess::Closed);
+    let base = ContinuousConfig { max_in_flight: 1, queue_capacity: 16,
+                                  ..ContinuousConfig::default() };
+    let classed_cfg = ContinuousConfig {
+        classes: Some(ClassPolicy::default()),
+        ..base.clone()
+    };
+    let opts = ServeOptions::new(PolicyKind::DuoServe,
+                                 DeviceProfile::a6000());
+    let blind = e.serve_continuous(&reqs, &opts, &base).unwrap();
+    let classed = e.serve_continuous(&reqs, &opts, &classed_cfg).unwrap();
+    assert!(blind.oom.is_none() && classed.oom.is_none());
+    assert_eq!(blind.tokens, classed.tokens,
+               "class scheduling must never change the tokens");
+    assert_eq!(blind.metrics.len(), reqs.len());
+    assert_eq!(classed.metrics.len(), reqs.len());
+
+    let interactive_ttfts = |out: &ServeOutcome| -> Vec<f64> {
+        out.metrics
+            .iter()
+            .filter(|m| m.class == PriorityClass::Interactive)
+            .map(|m| m.ttft)
+            .collect()
+    };
+    let worst_classed = interactive_ttfts(&classed)
+        .into_iter().fold(0.0, f64::max);
+    let best_blind = interactive_ttfts(&blind)
+        .into_iter().fold(f64::INFINITY, f64::min);
+    // FIFO serves all ten batch prompts first; the weighted queues
+    // admit every interactive request within the first few slots — the
+    // two TTFT ranges must not even overlap.
+    assert!(worst_classed < best_blind,
+            "classed worst interactive TTFT {worst_classed} should beat \
+             the blind best {best_blind}");
+
+    // An SLO straddling the gap: interactive attainment goes from
+    // total miss to total attainment; batch keeps paying its own way.
+    let spec = SloSpec { ttft: (worst_classed + best_blind) / 2.0,
+                         e2e: f64::INFINITY };
+    let a_classed =
+        slo_attainment_for_class(&classed.metrics, &spec,
+                                 PriorityClass::Interactive);
+    let a_blind =
+        slo_attainment_for_class(&blind.metrics, &spec,
+                                 PriorityClass::Interactive);
+    assert_eq!(a_classed.n_requests, 3);
+    assert_eq!(a_blind.n_requests, 3);
+    assert!(a_classed.ttft_attainment > a_blind.ttft_attainment,
+            "classes must strictly beat the class-blind run: {} !> {}",
+            a_classed.ttft_attainment, a_blind.ttft_attainment);
+    assert!((a_classed.ttft_attainment - 1.0).abs() < 1e-12);
+    assert!(a_blind.ttft_attainment < 1e-12);
+    // Per-class tails are attached and ordered the same way.
+    let cl = classed.summary.class_latency.expect("classes were on");
+    assert_eq!(cl[0].n_requests, 3);
+    assert_eq!(cl[2].n_requests, 10);
+    assert!(cl[0].p95_ttft < cl[2].p95_ttft,
+            "interactive p95 TTFT should undercut batch under the flood");
+}
+
+#[test]
+fn auto_chunk_keeps_the_stall_bound_under_a_shifting_decode_batch() {
+    // `--prefill-chunk auto` sizes chunks from the measured decode
+    // step cost, so a long prompt landing on a live (and growing)
+    // decode batch still stalls each decoder by roughly one step — and
+    // the event schedule keeps the chunked-prefill protocol's bound of
+    // at most one pending chunk per decode window.
+    let e = engine();
+    let mut reqs = requests(&e);
+    reqs.truncate(3);
+    reqs[0].prompt.truncate(8);
+    reqs[0].n_decode = 24;
+    while reqs[1].prompt.len() < e.man.sim.max_seq - 4 {
+        let t = reqs[1].prompt[reqs[1].prompt.len() % 5];
+        reqs[1].prompt.push(t);
+    }
+    reqs[1].n_decode = 4;
+    reqs[2].prompt.truncate(8);
+    reqs[2].n_decode = 12;
+    let opts = ServeOptions::new(PolicyKind::DuoServe,
+                                 DeviceProfile::a6000());
+    let probe = e.serve(&reqs[..1], &opts).unwrap();
+    assert!(probe.oom.is_none());
+    let (ttft0, e2e0) = (probe.metrics[0].ttft, probe.metrics[0].e2e);
+    reqs[0].arrival = 0.0;
+    // Request 2 joins the decode batch early; the long prompt then
+    // lands on a *two*-request batch mid-decode.
+    reqs[2].arrival = ttft0 * 1.1;
+    reqs[1].arrival = (ttft0 + e2e0) / 2.0;
+
+    let ccfg = ContinuousConfig { max_in_flight: 4, queue_capacity: 8,
+                                  ..ContinuousConfig::default() };
+    let mono = e.serve_continuous(&reqs, &opts, &ccfg).unwrap();
+    let mut auto_opts = opts.clone();
+    auto_opts.prefill_chunk_auto = true;
+    let auto = e.serve_continuous(&reqs, &auto_opts, &ccfg).unwrap();
+    assert!(mono.oom.is_none() && auto.oom.is_none());
+    assert_eq!(mono.tokens, auto.tokens,
+               "chunk autotuning must never change the tokens");
+
+    // The autotuner actually split the long prefill, and the stalled
+    // decoder's worst inter-token latency shrank for it.
+    assert!(auto.summary.prefill_chunks > mono.summary.prefill_chunks,
+            "auto chunking never split a prefill");
+    let max_itl = |out: &ServeOutcome| -> f64 {
+        out.metrics
+            .iter()
+            .find(|m| m.req_id == 0)
+            .unwrap()
+            .step_latencies
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+    };
+    assert!(max_itl(&auto) < max_itl(&mono),
+            "auto chunking did not shrink the stalled decoder's worst \
+             ITL: {} !< {}", max_itl(&auto), max_itl(&mono));
+
+    // Event-level stall bound: once decoding has begun, every window
+    // between consecutive decode steps holds at most one pending
+    // prefill chunk.
+    let mut seen_step = false;
+    let mut chunks_in_window = 0usize;
+    let mut total_chunks = 0usize;
+    for ev in &auto.events {
+        match ev {
+            ServerEvent::StepDone { .. } => {
+                seen_step = true;
+                chunks_in_window = 0;
+            }
+            ServerEvent::PrefillChunk { .. } => {
+                total_chunks += 1;
+                if seen_step {
+                    chunks_in_window += 1;
+                    assert!(chunks_in_window <= 1,
+                            "two pending chunks ran between decode steps");
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(total_chunks > 0, "no pending chunks were ever recorded");
 }
 
 #[test]
