@@ -34,7 +34,8 @@ use duoserve::coordinator::{ClassPolicy, ContinuousConfig,
 use duoserve::experts::{ExpertProvider, Placement, ShardedExpertProvider,
                         StagedExpertProvider, StagingMode};
 use duoserve::faults::{FaultPlan, FaultState, FetchFail, LinkSel, Window};
-use duoserve::memory::{DeviceExpertCache, ExpertKey, MemoryMeter};
+use duoserve::memory::{CachePolicy, DeviceExpertCache, ExpertKey,
+                       MemoryMeter};
 use duoserve::metrics::percentile;
 use duoserve::simx::{CostModel, Streams};
 use duoserve::predictor::{top_k, StateConstructor};
@@ -405,6 +406,38 @@ fn main() -> anyhow::Result<()> {
     bench(&mut stats, "top-k (E=128, k=8)", 10_000, || {
         let _ = top_k(&scores, 8);
     });
+
+    // --- eviction policy: hit path + cache-size sweep ------------------
+    // cache_hit_path_{lru,value}: a resident-key touch under each
+    // policy — what the value credit's extra bookkeeping (touch
+    // counter, promotion flag) adds to the residency hot path.
+    // cache_sweep_{small,large}_{lru,value}: an insert-or-touch loop
+    // over a working set of twice the capacity, at 2 and 32 slots —
+    // the eviction-decision cost (LRU's recency minimum vs Value's
+    // per-candidate credit scan) as the victim set grows.
+    for policy in [CachePolicy::Lru, CachePolicy::Value] {
+        let mut c = DeviceExpertCache::with_policy(2, 0, policy, 1);
+        c.insert(ExpertKey::routed(0, 0), 0.0, 0.0);
+        let mut i = 0usize;
+        bench(&mut stats, &format!("cache_hit_path_{}", policy.name()),
+              10_000, || {
+                  let _ = c.touch(ExpertKey::routed(0, 0), i as f64);
+                  i += 1;
+              });
+        for (label, cap) in [("small", 2usize), ("large", 32)] {
+            let mut c = DeviceExpertCache::with_policy(cap, 0, policy, 1);
+            let mut i = 0usize;
+            bench(&mut stats,
+                  &format!("cache_sweep_{label}_{}", policy.name()),
+                  10_000, || {
+                      let key = ExpertKey::routed(0, i % (cap * 2));
+                      if c.touch(key, i as f64).is_none() {
+                          c.insert(key, i as f64, i as f64);
+                      }
+                      i += 1;
+                  });
+        }
+    }
 
     // --- decode step: one GEMM per layer vs row-at-a-time -------------
     // Each row is one full lockstep decode iteration over b prefilled

@@ -17,6 +17,7 @@
 //!
 //! Everything is keyed by the config seed and the in-tree RNG, so
 //! artifacts are reproducible byte-for-byte.
+#![warn(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -52,17 +53,30 @@ pub const COMPONENTS_VERSION: u64 = 3;
 // model zoo (mirrors python/compile/configs.py)
 // ---------------------------------------------------------------------
 
+/// Executable-model dimensions: the shape of the weights the native
+/// runtime actually multiplies (deliberately tiny — function, not
+/// scale; the paper-scale dims live in [`PaperSpec`]).
 #[derive(Debug, Clone)]
 pub struct SimSpec {
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Hidden (residual-stream) width.
     pub d_model: usize,
+    /// Expert FFN inner width.
     pub d_ff: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts selected per token per layer.
     pub top_k: usize,
+    /// Always-active shared experts per layer.
     pub n_shared: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Longest supported prompt (tokens).
     pub max_seq: usize,
+    /// Longest supported decode run (tokens).
     pub max_decode: usize,
 }
 
@@ -75,16 +89,28 @@ impl SimSpec {
     }
 }
 
+/// Paper-scale model dimensions (Table I): what the virtual-time cost
+/// model charges for — transfer sizes and memory footprints are
+/// computed from these, never from the tiny executable dims.
 #[derive(Debug, Clone)]
 pub struct PaperSpec {
+    /// Transformer layer count at paper scale.
     pub n_layers: usize,
+    /// Hidden width at paper scale.
     pub d_model: usize,
+    /// Expert FFN inner width at paper scale.
     pub d_ff: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts selected per token per layer.
     pub top_k: usize,
+    /// Always-active shared experts per layer.
     pub n_shared: usize,
+    /// Bytes per parameter under the deployed quantisation.
     pub bytes_per_param: f64,
+    /// Total parameter count (billions).
     pub total_params_b: f64,
+    /// Activated parameters per token (billions).
     pub active_params_b: f64,
 }
 
@@ -103,17 +129,29 @@ impl PaperSpec {
     }
 }
 
+/// One zoo entry: everything `generate` needs to build a model's
+/// artifact tree reproducibly.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Zoo name (`--model` value and artifact directory name).
     pub name: &'static str,
+    /// Executable-model dimensions.
     pub sim: SimSpec,
+    /// Paper-scale cost-model dimensions.
     pub paper: PaperSpec,
+    /// Token-count buckets the expert executable is specialised for.
     pub expert_buckets: Vec<usize>,
+    /// Inter-layer gate-column correlation (`rho` in
+    /// `rho * parent + noise`; drives Fig. 2's affinity structure).
     pub gate_affinity_rho: f64,
+    /// Strength of the Zipf-ish popularity skew on gate columns.
     pub gate_popularity_scale: f64,
+    /// RNG seed for every synthetic weight in the tree.
     pub seed: u64,
 }
 
+/// The model zoo (mirrors `python/compile/configs.py`): one tiny
+/// executable-dims + paper-dims spec per supported `--model` name.
 pub fn zoo() -> Vec<ModelSpec> {
     let mixtral_paper = PaperSpec {
         n_layers: 32, d_model: 4096, d_ff: 14336, n_experts: 8, top_k: 2,
@@ -201,6 +239,7 @@ pub fn zoo() -> Vec<ModelSpec> {
     ]
 }
 
+/// Look up one model's [`ModelSpec`] by zoo name.
 pub fn spec(model: &str) -> Result<ModelSpec> {
     zoo().into_iter()
         .find(|m| m.name == model)

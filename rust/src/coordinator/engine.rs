@@ -27,7 +27,8 @@ use crate::config::{DeviceProfile, Manifest, PolicyKind, SystemConfig};
 use crate::experts::{ExpertProvider, ExpertStats, Placement,
                      ShardedExpertProvider, StagedExpertProvider,
                      StagingMode};
-use crate::memory::{DeviceExpertCache, ExpertKey, HostPool, OomError};
+use crate::memory::{CachePolicy, DeviceExpertCache, ExpertKey, HostPool,
+                    OomError};
 use crate::metrics::{PredictorAccuracy, RequestMetrics, Summary};
 use crate::predictor::{Episode, Matrices, MlpPredictor, StateConstructor};
 use crate::runtime::{ArgRef, Executable, Runtime, Tensor};
@@ -130,6 +131,19 @@ pub struct ServeOptions {
     /// schedule — tokens stay bit-identical under any plan. `None`
     /// (the default) runs zero fault code.
     pub faults: Option<crate::faults::FaultPlan>,
+    /// Device expert-cache eviction policy (`--cache-policy`):
+    /// [`CachePolicy::Lru`] — the default, bit-identical to the
+    /// pre-policy cache — or [`CachePolicy::Value`], the
+    /// bytes-normalized value-credit watermark policy. Policies move
+    /// only virtual time; tokens are identical across them.
+    pub cache_policy: CachePolicy,
+    /// Decode prefetch horizon (`--prefetch-horizon N`, 1..=3): how
+    /// many layers ahead the predictor hints the staging worker.
+    /// Horizon 1 — the default, bit-identical to the pre-horizon
+    /// engine — hints only the critical-path layer l+1; 2 and 3 add
+    /// speculative l+2 / l+3 hints with confidence-decayed priority
+    /// that never delay or evict critical-path staging.
+    pub prefetch_horizon: usize,
 }
 
 impl ServeOptions {
@@ -154,6 +168,8 @@ impl ServeOptions {
             placement: Placement::Partition,
             staging_fault: false,
             faults: None,
+            cache_policy: CachePolicy::Lru,
+            prefetch_horizon: 1,
         }
     }
 
@@ -350,14 +366,18 @@ impl Engine {
         self.man.paper.n_layers as f64 / self.man.sim.n_layers as f64
     }
 
-    fn make_cache(&self, kind: PolicyKind, sys: &SystemConfig)
+    fn make_cache(&self, kind: PolicyKind, sys: &SystemConfig,
+                  policy: CachePolicy, expert_bytes: u64)
                   -> DeviceExpertCache {
         let k = self.man.sim.top_k;
         let e = self.man.sim.n_experts;
+        let mk = |cap, window| {
+            DeviceExpertCache::with_policy(cap, window, policy, expert_bytes)
+        };
         match kind {
-            PolicyKind::DuoServe => DeviceExpertCache::new(k, 2),
-            PolicyKind::Odf => DeviceExpertCache::new(k, 1),
-            PolicyKind::Lfp => DeviceExpertCache::new(e, 2),
+            PolicyKind::DuoServe => mk(k, 2),
+            PolicyKind::Odf => mk(k, 1),
+            PolicyKind::Lfp => mk(e, 2),
             PolicyKind::Mif => {
                 // Trace-priority cache: sized to hold the prefetched
                 // trace prediction (2k) plus corrections — 2k for small
@@ -371,7 +391,7 @@ impl Engine {
                 } else {
                     (sys.mif_cache_topk_multiple * k).min(e)
                 };
-                DeviceExpertCache::new(cap, 0)
+                mk(cap, 0)
             }
         }
     }
@@ -419,8 +439,9 @@ impl Engine {
         let poison = opts.staging_fault
             || matches!(&opts.faults, Some(f) if f.worker_poison);
         let mk_shard = || {
-            let p = StagedExpertProvider::new(self.host.clone(),
-                                              self.make_cache(kind, sys),
+            let cache = self.make_cache(kind, sys, opts.cache_policy,
+                                        expert_bytes);
+            let p = StagedExpertProvider::new(self.host.clone(), cache,
                                               expert_bytes, staging);
             if poison {
                 p.poison_staging_for_test();

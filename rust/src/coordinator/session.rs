@@ -32,8 +32,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::SimDims;
-use crate::experts::ExpertProvider;
+use crate::config::{LinkKind, SimDims};
+use crate::experts::{ExpertProvider, N_HORIZONS};
 use crate::faults::{FaultPlan, FaultState};
 use crate::memory::{ExpertKey, KvPagePool, KvPageTable, MemoryMeter,
                     OomError, DEFAULT_PREFIX_CACHE_PAGES};
@@ -97,9 +97,13 @@ pub(crate) struct ReqState {
     pub tokens: Vec<i32>,
     pub done: bool,
     pub state_con: StateConstructor,
-    /// DuoServe's live prediction per layer (accuracy bookkeeping):
-    /// pending[l] = predicted set for layer l of the current step.
-    pub pending_pred: Vec<Option<Vec<usize>>>,
+    /// DuoServe's live predictions per layer and prefetch horizon
+    /// (accuracy bookkeeping): pending[l][h] = the set predicted for
+    /// layer l from h+1 layers back in the current step. Horizon 0 is
+    /// the critical-path l+1 prediction (the only slot used at the
+    /// default `--prefetch-horizon 1`); 1/2 hold the speculative
+    /// l+2 / l+3 predictions, scored on their own ledger rows.
+    pub pending_pred: Vec<[Option<Vec<usize>>; N_HORIZONS]>,
     pub ttft: f64,
     pub e2e: f64,
     pub step_latencies: Vec<f64>,
@@ -158,7 +162,7 @@ impl ReqState {
             tokens: Vec::new(),
             done: false,
             state_con: StateConstructor::new(&engine.man),
-            pending_pred: vec![None; sim.n_layers],
+            pending_pred: vec![Default::default(); sim.n_layers],
             ttft: 0.0,
             e2e: 0.0,
             step_latencies: Vec::new(),
@@ -412,6 +416,11 @@ pub(crate) struct ServeSession<'e> {
     force_rowwise: bool,
     /// Concurrent expert-group execution inside one MoE layer.
     expert_fanout: bool,
+    /// Decode prefetch depth in layers (`--prefetch-horizon`, clamped
+    /// to 1..=[`N_HORIZONS`]). 1 hints only the critical-path l+1 set
+    /// (the pre-horizon engine verbatim); 2/3 add speculative l+2 /
+    /// l+3 hints staged at lower priority off the critical path.
+    prefetch_horizon: usize,
     /// Prompt-token budget of one prefill chunk (`None` = the whole
     /// prompt in one monolithic pass, the pre-chunking path verbatim).
     prefill_chunk: Option<usize>,
@@ -505,6 +514,7 @@ impl<'e> ServeSession<'e> {
             record_streams: opts.record_streams,
             force_rowwise: opts.force_rowwise,
             expert_fanout: opts.expert_fanout,
+            prefetch_horizon: opts.prefetch_horizon.clamp(1, N_HORIZONS),
             // A zero budget means "no chunking" (CLI convenience).
             prefill_chunk: opts.prefill_chunk.filter(|&c| c > 0),
             chunk_auto: opts.prefill_chunk_auto,
@@ -1084,8 +1094,9 @@ impl<'e> ServeSession<'e> {
         self.sync_faults(t_sync);
         let Self { engine, sim, streams, provider, meter, cost, policy,
                    states, expert_bytes, ablation, force_rowwise,
-                   expert_fanout, decode_time, decode_tokens, decode_steps,
-                   pager, faults, fault_state, .. } = self;
+                   expert_fanout, prefetch_horizon, decode_time,
+                   decode_tokens, decode_steps, pager, faults,
+                   fault_state, .. } = self;
         let engine: &Engine = *engine;
         let provider: &mut dyn ExpertProvider = provider.as_mut();
         let policy: &mut dyn Policy = policy.as_mut();
@@ -1093,6 +1104,7 @@ impl<'e> ServeSession<'e> {
         let ablation = *ablation;
         let force_rowwise = *force_rowwise;
         let expert_fanout = *expert_fanout;
+        let prefetch_horizon = *prefetch_horizon;
 
         let b = active.len();
         let t_step_begin = streams.free_at(StreamId::Compute);
@@ -1175,11 +1187,14 @@ impl<'e> ServeSession<'e> {
             }
             for (bi, &r) in active.iter().enumerate() {
                 let st = &mut states[r];
-                // accuracy: compare DuoServe's live prediction (if
-                // any) against the gate's actual selection —
-                // accounted centrally in the provider's ledger.
-                if let Some(pred) = st.pending_pred[l].take() {
-                    provider.observe_prediction(&pred, &sel[bi]);
+                // accuracy: compare DuoServe's live predictions (if
+                // any) against the gate's actual selection, each on
+                // its own horizon's ledger row — horizon 0 also feeds
+                // the historical aggregate, deeper horizons never do.
+                for h in 0..N_HORIZONS {
+                    if let Some(pred) = st.pending_pred[l][h].take() {
+                        provider.observe_prediction_at(h, &pred, &sel[bi]);
+                    }
                 }
                 st.state_con.record(l, &sel[bi]);
                 st.step_path.push(sel[bi].clone());
@@ -1194,6 +1209,8 @@ impl<'e> ServeSession<'e> {
                 // pending_pred bookkeeping, while the policy owns cx.
                 let mut predictions: Vec<(usize, usize, Vec<usize>)> =
                     Vec::new();
+                let n_layers = sim.n_layers;
+                let n_experts = sim.n_experts;
                 let t_moe = {
                     let states_ref: Vec<&StateConstructor> = active
                         .iter()
@@ -1201,7 +1218,14 @@ impl<'e> ServeSession<'e> {
                         .collect();
                     let heuristic = crate::predictor::HeuristicPredictor::
                         popularity_affinity(sim.top_k);
-                    let mut predict = |target: usize| -> Vec<usize> {
+                    // The prediction kernel takes the accumulator as a
+                    // parameter (instead of capturing it) so the
+                    // deep-horizon extension below can reuse it after
+                    // the policy's `predict` hook is dropped.
+                    let predict_into =
+                        |target: usize,
+                         predictions: &mut Vec<(usize, usize, Vec<usize>)>|
+                         -> Vec<usize> {
                         let start = predictions.len();
                         for (bi, sc) in states_ref.iter().enumerate() {
                             let p = if ablation == Some(Ablation::NoPredictor) {
@@ -1225,47 +1249,102 @@ impl<'e> ServeSession<'e> {
                         crate::util::math::sorted_union(
                             predictions[start..].iter()
                                 .map(|(_, _, p)| p.as_slice()),
-                            sim.n_experts)
+                            n_experts)
                     };
-                    let mut cx = SimCtx {
-                        streams: &mut *streams,
-                        provider: &mut *provider,
-                        meter: &mut *meter,
-                        cost,
-                        expert_bytes,
-                        n_layers: sim.n_layers,
-                        n_experts: sim.n_experts,
-                        top_k: sim.top_k,
-                        faults: faults.as_ref(),
-                        fault_state: &mut *fault_state,
+                    let t = {
+                        let mut predict = |target: usize| {
+                            predict_into(target, &mut predictions)
+                        };
+                        let mut cx = SimCtx {
+                            streams: &mut *streams,
+                            provider: &mut *provider,
+                            meter: &mut *meter,
+                            cost,
+                            expert_bytes,
+                            n_layers,
+                            n_experts,
+                            top_k: sim.top_k,
+                            faults: faults.as_ref(),
+                            fault_state: &mut *fault_state,
+                        };
+                        match policy.decode_moe(&mut cx, l, &groups,
+                                                t_layer_start, t_gate,
+                                                &mut predict) {
+                            Ok(t) => t,
+                            Err(oom) => return Ok(Err(oom)),
+                        }
                     };
-                    match policy.decode_moe(&mut cx, l, &groups,
-                                            t_layer_start, t_gate,
-                                            &mut predict) {
-                        Ok(t) => t,
-                        Err(oom) => return Ok(Err(oom)),
+                    // Deep-horizon speculation (`--prefetch-horizon`
+                    // 2/3): extend the same per-request predictor to
+                    // layers l+2 / l+3 — but only when the policy
+                    // actually predicted this step, so non-predictor
+                    // policies keep their hint stream unchanged at any
+                    // horizon. At the default horizon 1 this loop body
+                    // never runs.
+                    if !predictions.is_empty() {
+                        for h in 1..prefetch_horizon {
+                            let target = l + 1 + h;
+                            if target < n_layers {
+                                predict_into(target, &mut predictions);
+                            }
+                        }
                     }
+                    t
                 };
                 // Predictor-driven stage-ahead: hand the predicted
                 // next-layer experts (plus the always-needed shared
                 // experts, predicted or not) to the prefetch worker
                 // while this layer's bookkeeping continues. Dedup by
                 // sort (ExpertKey is Ord) instead of a contains scan.
-                let mut hint: Vec<ExpertKey> = Vec::new();
+                // Hints are split per horizon: index 0 (layer l+1) is
+                // the critical-path hint, built and issued exactly as
+                // before; deeper indices collect the speculative l+2 /
+                // l+3 sets.
+                let mut hints: Vec<Vec<ExpertKey>> =
+                    vec![Vec::new(); prefetch_horizon];
                 for (bi, target, p) in predictions {
+                    let h = target.saturating_sub(l + 1)
+                        .min(prefetch_horizon - 1);
                     for &e in &p {
-                        hint.push(ExpertKey::routed(target, e));
+                        hints[h].push(ExpertKey::routed(target, e));
                     }
-                    states[active[bi]].pending_pred[target] = Some(p);
+                    states[active[bi]].pending_pred[target][h] = Some(p);
                 }
-                hint.sort_unstable();
-                hint.dedup();
-                if l + 1 < sim.n_layers {
+                for hint in hints.iter_mut() {
+                    hint.sort_unstable();
+                    hint.dedup();
+                }
+                if l + 1 < n_layers {
                     for s in 0..sim.n_shared {
-                        hint.push(ExpertKey::shared(l + 1, s));
+                        hints[0].push(ExpertKey::shared(l + 1, s));
                     }
-                    if !hint.is_empty() {
-                        provider.prefetch(&hint);
+                    if !hints[0].is_empty() {
+                        provider.prefetch(&hints[0]);
+                    }
+                }
+                // Speculative staging for the deep horizons: hint the
+                // worker at decayed priority and virtually admit
+                // non-resident keys through the speculative path —
+                // free slots or other speculative entries only, never
+                // displacing critical-path residency, and off the Comm
+                // stream so speculation cannot delay a real fetch. A
+                // horizon-h hint that is empty (the predictor returned
+                // nothing) is skipped entirely.
+                for (h, hint) in hints.iter_mut().enumerate().skip(1) {
+                    let target = l + 1 + h;
+                    if hint.is_empty() || target >= n_layers {
+                        continue;
+                    }
+                    for s in 0..sim.n_shared {
+                        hint.push(ExpertKey::shared(target, s));
+                    }
+                    provider.prefetch_at(hint, h);
+                    let ready =
+                        t_moe + cost.expert_transfer(LinkKind::Pinned);
+                    for &key in hint.iter() {
+                        if !provider.contains(key) {
+                            provider.admit_speculative(key, ready, t_moe);
+                        }
                     }
                 }
                 t_moe
@@ -1355,7 +1434,7 @@ impl<'e> ServeSession<'e> {
             let path = std::mem::take(&mut st.step_path);
             st.all_paths.push(path);
             st.state_con.clear();
-            st.pending_pred.iter_mut().for_each(|p| *p = None);
+            st.pending_pred.iter_mut().for_each(|p| *p = Default::default());
             if st.tokens.len() >= st.n_decode || st.pos >= kv_len {
                 st.done = true;
             }
@@ -1550,7 +1629,7 @@ impl DecodeStepBench<'_> {
             st.tokens.truncate(self.saved_tokens[i]);
             st.step_path.clear();
             st.state_con.clear();
-            st.pending_pred.iter_mut().for_each(|p| *p = None);
+            st.pending_pred.iter_mut().for_each(|p| *p = Default::default());
         }
         Ok(())
     }

@@ -6,6 +6,11 @@
 
 use crate::metrics::PredictorAccuracy;
 
+/// Number of prefetch horizons the ledger tracks separately: index 0
+/// is the critical-path layer-(l+1) horizon, indices 1 and 2 are the
+/// speculative l+2 / l+3 horizons.
+pub const N_HORIZONS: usize = 3;
+
 /// Snapshot of the provider's accounting (also the live ledger type:
 /// the provider mutates one of these in place).
 #[derive(Debug, Clone, Copy, Default)]
@@ -42,6 +47,17 @@ pub struct ExpertStats {
     pub failover_fetches: u64,
     /// Online decode-predictor accuracy (Table III's counters).
     pub accuracy: PredictorAccuracy,
+    /// Prefetch hints split by horizon (index 0 = layer l+1 critical
+    /// path, 1 = l+2, 2 = l+3). Sums to `prefetch_hints` — the
+    /// aggregate keeps its pre-horizon meaning.
+    pub horizon_hints: [u64; N_HORIZONS],
+    /// Staged-table acquire hits split by the horizon the winning hint
+    /// was charged to. Sums to `staged_acquires`.
+    pub horizon_staged_hits: [u64; N_HORIZONS],
+    /// Predictor accuracy split by prediction horizon, so the
+    /// confidence-decay schedule is measurable (accuracy at l+1 should
+    /// dominate l+3). Index 0 merges to `accuracy` at default knobs.
+    pub horizon_accuracy: [PredictorAccuracy; N_HORIZONS],
 }
 
 impl ExpertStats {
@@ -79,6 +95,11 @@ impl ExpertStats {
         self.fetch_retries += other.fetch_retries;
         self.failover_fetches += other.failover_fetches;
         self.accuracy.merge(&other.accuracy);
+        for h in 0..N_HORIZONS {
+            self.horizon_hints[h] += other.horizon_hints[h];
+            self.horizon_staged_hits[h] += other.horizon_staged_hits[h];
+            self.horizon_accuracy[h].merge(&other.horizon_accuracy[h]);
+        }
     }
 }
 
@@ -125,6 +146,9 @@ mod tests {
             ..Default::default()
         };
         a.accuracy.observe(&[1], &[1]);
+        a.horizon_hints = [1, 2, 3];
+        a.horizon_staged_hits = [4, 5, 6];
+        a.horizon_accuracy[0].observe(&[1], &[1]);
         let mut b = ExpertStats {
             hits: 10, misses: 20, bytes_fetched: 30, staged_acquires: 40,
             sync_acquires: 50, prefetch_hints: 60, staging_poisoned: 70,
@@ -132,6 +156,10 @@ mod tests {
             ..Default::default()
         };
         b.accuracy.observe(&[2], &[3]);
+        b.horizon_hints = [10, 20, 30];
+        b.horizon_staged_hits = [40, 50, 60];
+        b.horizon_accuracy[0].observe(&[2], &[3]);
+        b.horizon_accuracy[2].observe(&[4], &[4]);
         a.absorb(&b);
         assert_eq!(a.hits, 11);
         assert_eq!(a.misses, 22);
@@ -145,6 +173,13 @@ mod tests {
         assert_eq!(a.failover_fetches, 110);
         assert_eq!(a.accuracy.total, 2);
         assert_eq!(a.accuracy.exact, 1);
+        assert_eq!(a.horizon_hints, [11, 22, 33]);
+        assert_eq!(a.horizon_staged_hits, [44, 55, 66]);
+        assert_eq!(a.horizon_accuracy[0].total, 2);
+        assert_eq!(a.horizon_accuracy[0].exact, 1);
+        assert_eq!(a.horizon_accuracy[1].total, 0);
+        assert_eq!(a.horizon_accuracy[2].total, 1);
+        assert_eq!(a.horizon_accuracy[2].exact, 1);
     }
 
     #[test]

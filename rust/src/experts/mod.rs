@@ -38,7 +38,7 @@ mod provider;
 mod sharded;
 mod worker;
 
-pub use ledger::{shard_balance, ExpertStats};
+pub use ledger::{shard_balance, ExpertStats, N_HORIZONS};
 pub use provider::StagedExpertProvider;
 pub use sharded::{Placement, ShardedExpertProvider};
 pub use worker::{PrefetchWorker, StagedLookup};
@@ -65,6 +65,16 @@ pub trait ExpertProvider: Send {
     /// threaded provider stages them on its worker; a sync provider
     /// ignores hints.
     fn prefetch(&mut self, keys: &[ExpertKey]);
+
+    /// Hint experts at an explicit prefetch horizon (0 = the
+    /// critical-path layer-l+1 set; 1/2 = the speculative l+2 / l+3
+    /// sets, staged at lower priority and charged to their own ledger
+    /// row). The default forwards to [`Self::prefetch`] so horizon-0
+    /// hints through either entry point are identical; providers that
+    /// track horizons override it.
+    fn prefetch_at(&mut self, keys: &[ExpertKey], _horizon: usize) {
+        self.prefetch(keys);
+    }
 
     /// The weight tensors of one expert — staged if the worker already
     /// delivered them, otherwise read synchronously. Always the host
@@ -96,6 +106,19 @@ pub trait ExpertProvider: Send {
     /// transferred bytes centrally.
     fn admit(&mut self, key: ExpertKey, ready_at: f64, now: f64);
 
+    /// Admit a *speculatively* prefetched expert (deep horizon). The
+    /// cache may only place it in a free slot or displace another
+    /// speculative entry — never a critical-path one — and may drop it
+    /// under the `Value` policy's admission watermark. Returns whether
+    /// the entry is resident afterwards; bytes are counted only when
+    /// it is. The default treats the admission as critical (providers
+    /// without speculative residency semantics).
+    fn admit_speculative(&mut self, key: ExpertKey, ready_at: f64,
+                         now: f64) -> bool {
+        self.admit(key, ready_at, now);
+        true
+    }
+
     /// Experts currently resident in the simulated cache. A sharded
     /// provider reports its most-loaded shard (each simulated device
     /// has its own VRAM budget, so the busiest shard is the binding
@@ -108,6 +131,16 @@ pub trait ExpertProvider: Send {
 
     /// Record one online predictor observation (Table III counters).
     fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]);
+
+    /// Record one predictor observation at an explicit horizon:
+    /// horizon 0 also feeds the aggregate `accuracy` (so default runs
+    /// keep their historical counters), deeper horizons only their own
+    /// per-horizon row. The default ignores the horizon and records
+    /// the aggregate observation.
+    fn observe_prediction_at(&mut self, _horizon: usize,
+                             predicted: &[usize], actual: &[usize]) {
+        self.observe_prediction(predicted, actual);
+    }
 
     /// Snapshot of the centralized accounting (aggregated over shards
     /// for a sharded provider).

@@ -110,9 +110,24 @@ impl StagedExpertProvider {
 
 impl ExpertProvider for StagedExpertProvider {
     fn prefetch(&mut self, keys: &[ExpertKey]) {
+        self.prefetch_at(keys, 0);
+    }
+
+    fn prefetch_at(&mut self, keys: &[ExpertKey], horizon: usize) {
         if let Some(w) = &self.worker {
             self.stats.prefetch_hints += keys.len() as u64;
-            w.stage(keys.to_vec());
+            let h = horizon.min(crate::experts::N_HORIZONS - 1);
+            self.stats.horizon_hints[h] += keys.len() as u64;
+            if horizon > 0 {
+                // Deep-horizon gating signal: resident hinted experts
+                // gain confidence-decayed credit (Value policy only;
+                // inert under Lru).
+                let weight = crate::predictor::horizon_confidence(horizon);
+                for &key in keys {
+                    self.cache.note_signal(key, weight);
+                }
+            }
+            w.stage_at(keys.to_vec(), horizon);
         }
     }
 
@@ -125,8 +140,10 @@ impl ExpertProvider for StagedExpertProvider {
                 self.stats.degraded_acquires += 1;
             } else {
                 match w.staged_lookup(key) {
-                    StagedLookup::Hit(t) => {
+                    StagedLookup::Hit(t, h) => {
                         self.stats.staged_acquires += 1;
+                        let h = h.min(crate::experts::N_HORIZONS - 1);
+                        self.stats.horizon_staged_hits[h] += 1;
                         return Ok(t);
                     }
                     StagedLookup::Miss => {}
@@ -168,6 +185,15 @@ impl ExpertProvider for StagedExpertProvider {
         self.cache.insert(key, ready_at, now);
     }
 
+    fn admit_speculative(&mut self, key: ExpertKey, ready_at: f64,
+                         now: f64) -> bool {
+        let admitted = self.cache.insert_speculative(key, ready_at, now);
+        if admitted {
+            self.stats.bytes_fetched += self.expert_bytes;
+        }
+        admitted
+    }
+
     fn resident_count(&self) -> usize {
         self.cache.resident_count()
     }
@@ -177,7 +203,18 @@ impl ExpertProvider for StagedExpertProvider {
     }
 
     fn observe_prediction(&mut self, predicted: &[usize], actual: &[usize]) {
-        self.stats.accuracy.observe(predicted, actual);
+        self.observe_prediction_at(0, predicted, actual);
+    }
+
+    fn observe_prediction_at(&mut self, horizon: usize, predicted: &[usize],
+                             actual: &[usize]) {
+        let h = horizon.min(crate::experts::N_HORIZONS - 1);
+        self.stats.horizon_accuracy[h].observe(predicted, actual);
+        if h == 0 {
+            // Horizon 0 *is* the historical aggregate: default runs
+            // (horizon 1) keep their pre-horizon accuracy counters.
+            self.stats.accuracy.observe(predicted, actual);
+        }
     }
 
     fn stats(&self) -> ExpertStats {
@@ -242,5 +279,38 @@ mod tests {
         p.observe_prediction(&[3, 4], &[1, 2]); // miss
         let a = p.stats().accuracy;
         assert_eq!((a.exact, a.at_least_half, a.total), (1, 1, 2));
+        // the un-horizoned entry point is horizon 0 by definition
+        let h0 = p.stats().horizon_accuracy[0];
+        assert_eq!((h0.exact, h0.total), (1, 2));
+    }
+
+    #[test]
+    fn horizon_zero_feeds_the_aggregate_and_deeper_horizons_do_not() {
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(1, 0), 1);
+        p.observe_prediction_at(0, &[1], &[1]);
+        p.observe_prediction_at(1, &[2], &[3]);
+        p.observe_prediction_at(2, &[4], &[4]);
+        let s = p.stats();
+        assert_eq!(s.accuracy.total, 1,
+                   "deep horizons must not pollute the aggregate");
+        assert_eq!(s.accuracy.exact, 1);
+        assert_eq!(s.horizon_accuracy[0].total, 1);
+        assert_eq!(s.horizon_accuracy[1].total, 1);
+        assert_eq!(s.horizon_accuracy[1].exact, 0);
+        assert_eq!(s.horizon_accuracy[2].exact, 1);
+    }
+
+    #[test]
+    fn speculative_admit_counts_bytes_only_when_resident() {
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::new(1, 0), 64);
+        p.admit(ExpertKey::routed(0, 1), 1.0, 1.0); // critical fill
+        // layer full of critical entries: the speculative admit drops
+        assert!(!p.admit_speculative(ExpertKey::routed(0, 2), 2.0, 2.0));
+        assert_eq!(p.stats().bytes_fetched, 64,
+                   "a dropped speculative admit must not count bytes");
+        assert!(p.admit_speculative(ExpertKey::routed(1, 0), 3.0, 3.0));
+        assert_eq!(p.stats().bytes_fetched, 128);
     }
 }

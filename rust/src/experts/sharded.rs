@@ -151,6 +151,10 @@ impl ShardedExpertProvider {
 
 impl ExpertProvider for ShardedExpertProvider {
     fn prefetch(&mut self, keys: &[ExpertKey]) {
+        self.prefetch_at(keys, 0);
+    }
+
+    fn prefetch_at(&mut self, keys: &[ExpertKey], horizon: usize) {
         let n = self.shards.len();
         let mut groups: Vec<Vec<ExpertKey>> = vec![Vec::new(); n];
         for &k in keys {
@@ -158,7 +162,7 @@ impl ExpertProvider for ShardedExpertProvider {
         }
         for (i, g) in groups.into_iter().enumerate() {
             if !g.is_empty() {
-                self.shards[i].prefetch(&g);
+                self.shards[i].prefetch_at(&g, horizon);
             }
         }
     }
@@ -202,6 +206,33 @@ impl ExpertProvider for ShardedExpertProvider {
         }
     }
 
+    fn admit_speculative(&mut self, key: ExpertKey, ready_at: f64,
+                         now: f64) -> bool {
+        // Mirrors `admit`'s routing, through each shard's speculative
+        // admission (failover accounting included); a replicated key
+        // is resident if any shard accepted its copy.
+        let dst = self.route(key);
+        if self.replicated(key) {
+            let any_live = self.down.iter().any(|&d| !d);
+            let mut admitted = false;
+            for i in 0..self.shards.len() {
+                if any_live && self.down[i] {
+                    continue;
+                }
+                admitted |=
+                    self.shards[i].admit_speculative(key, ready_at, now);
+            }
+            admitted
+        } else {
+            let admitted =
+                self.shards[dst].admit_speculative(key, ready_at, now);
+            if admitted && dst != self.home(key) {
+                self.shards[dst].note_failover();
+            }
+            admitted
+        }
+    }
+
     fn resident_count(&self) -> usize {
         // The busiest device is the binding VRAM constraint (every
         // shard has its own budget of the same size) — see the trait
@@ -221,6 +252,11 @@ impl ExpertProvider for ShardedExpertProvider {
         // The decode predictor is one engine-side component, not a
         // per-device one: its accuracy ledger lives on shard 0.
         self.shards[0].observe_prediction(predicted, actual);
+    }
+
+    fn observe_prediction_at(&mut self, horizon: usize, predicted: &[usize],
+                             actual: &[usize]) {
+        self.shards[0].observe_prediction_at(horizon, predicted, actual);
     }
 
     fn stats(&self) -> ExpertStats {

@@ -27,18 +27,27 @@
 //! to the synchronous host-pool path — tokens still complete
 //! bit-identically because staging never changes which bytes are read.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::memory::{CachedTensors, ExpertKey, HostPool};
 
+/// The staged table: delivered tensors plus the prefetch horizon the
+/// entry is charged to (0 = critical-path layer l+1; 1/2 = the
+/// speculative l+2 / l+3 horizons). A key re-hinted at a nearer
+/// horizon keeps its tensors and upgrades the tag (cross-horizon
+/// dedup: staged once, charged to the nearest horizon that asked).
+type StagedTable = HashMap<ExpertKey, (Arc<CachedTensors>, usize)>;
+
 /// Outcome of probing the staged table for one expert's tensors.
 #[derive(Debug)]
 pub enum StagedLookup {
-    /// The worker already delivered this expert's tensors.
-    Hit(Arc<CachedTensors>),
+    /// The worker already delivered this expert's tensors; the second
+    /// field is the horizon the entry is charged to (see
+    /// [`crate::experts::ExpertStats::horizon_staged_hits`]).
+    Hit(Arc<CachedTensors>, usize),
     /// Not staged (yet): the caller reads the host pool synchronously.
     Miss,
     /// The staged table's lock is poisoned (a staging-path thread
@@ -50,12 +59,17 @@ pub enum StagedLookup {
 }
 
 enum Msg {
-    /// Resolve these keys from the host pool into the staged table.
-    Stage(Vec<ExpertKey>),
+    /// Resolve these keys from the host pool into the staged table,
+    /// charged to the given horizon. Horizon 0 is critical-path work
+    /// the worker runs immediately; deeper horizons are parked in a
+    /// speculative backlog and only run while the channel is idle, so
+    /// speculation can never delay critical-path staging.
+    Stage(Vec<ExpertKey>, usize),
     /// Drop staged entries of layers below `layer`.
     RetireBelow(usize),
-    /// Ack once every previously queued message has been processed
-    /// (tests and benches synchronise on this).
+    /// Ack once every previously queued message — including the
+    /// speculative backlog — has been processed (tests and benches
+    /// synchronise on this).
     Sync(Sender<()>),
     Quit,
 }
@@ -63,7 +77,7 @@ enum Msg {
 /// Background staging thread + shared staged table (see module docs).
 pub struct PrefetchWorker {
     tx: Sender<Msg>,
-    staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>>,
+    staged: Arc<Mutex<StagedTable>>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -71,42 +85,77 @@ impl PrefetchWorker {
     /// Spawn the staging thread over this host pool. The worker joins
     /// on drop.
     pub fn spawn(pool: Arc<HostPool>) -> Self {
-        let staged: Arc<Mutex<HashMap<ExpertKey, Arc<CachedTensors>>>> =
+        let staged: Arc<Mutex<StagedTable>> =
             Arc::new(Mutex::new(HashMap::new()));
         let (tx, rx) = channel::<Msg>();
         let table = staged.clone();
         let handle = std::thread::Builder::new()
             .name("expert-prefetch".into())
             .spawn(move || {
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Stage(keys) => {
-                            // One lock to drop already-staged keys
-                            // (per-chunk prefill re-hints the same
-                            // layer sets every chunk), then resolve
-                            // the misses outside the lock and publish
-                            // each as soon as it is ready. A poisoned
-                            // table means staging is dead: skip the
-                            // hint rather than panic the worker too.
-                            let missing: Vec<ExpertKey> = match table
-                                .lock()
-                            {
-                                Ok(t) => keys
-                                    .into_iter()
-                                    .filter(|k| !t.contains_key(k))
-                                    .collect(),
-                                Err(_) => continue,
-                            };
-                            for key in missing {
-                                // Missing keys are simply not staged;
-                                // acquire falls back to the sync path
-                                // and surfaces the error there.
-                                if let Ok(w) = pool.expert_tensors(key) {
-                                    if let Ok(mut t) = table.lock() {
-                                        t.insert(key, w);
-                                    }
+                // Deep-horizon hints wait here; they run only while
+                // the channel is idle, so critical-path (horizon-0)
+                // staging is never queued behind speculation.
+                let mut backlog: VecDeque<(Vec<ExpertKey>, usize)> =
+                    VecDeque::new();
+                let stage_keys = |keys: Vec<ExpertKey>, horizon: usize| {
+                    // One lock to drop already-staged keys (per-chunk
+                    // prefill re-hints the same layer sets every
+                    // chunk; deep horizons re-hint what l+1 already
+                    // staged) — a nearer re-hint upgrades the
+                    // horizon tag in place. Misses are resolved
+                    // outside the lock and published as each is
+                    // ready. A poisoned table means staging is dead:
+                    // skip the hint rather than panic the worker too.
+                    let missing: Vec<ExpertKey> = match table.lock() {
+                        Ok(mut t) => keys
+                            .into_iter()
+                            .filter(|k| match t.get_mut(k) {
+                                Some(entry) => {
+                                    entry.1 = entry.1.min(horizon);
+                                    false
                                 }
+                                None => true,
+                            })
+                            .collect(),
+                        Err(_) => return,
+                    };
+                    for key in missing {
+                        // Missing keys are simply not staged; acquire
+                        // falls back to the sync path and surfaces
+                        // the error there.
+                        if let Ok(w) = pool.expert_tensors(key) {
+                            if let Ok(mut t) = table.lock() {
+                                let e = t
+                                    .entry(key)
+                                    .or_insert((w, horizon));
+                                e.1 = e.1.min(horizon);
                             }
+                        }
+                    }
+                };
+                loop {
+                    // Drain queued messages first; touch the backlog
+                    // only when the channel is empty.
+                    let msg = match rx.try_recv() {
+                        Ok(m) => m,
+                        Err(TryRecvError::Empty) => {
+                            if let Some((keys, h)) = backlog.pop_front() {
+                                stage_keys(keys, h);
+                                continue;
+                            }
+                            match rx.recv() {
+                                Ok(m) => m,
+                                Err(_) => break,
+                            }
+                        }
+                        Err(TryRecvError::Disconnected) => break,
+                    };
+                    match msg {
+                        Msg::Stage(keys, horizon) if horizon > 0 => {
+                            backlog.push_back((keys, horizon));
+                        }
+                        Msg::Stage(keys, horizon) => {
+                            stage_keys(keys, horizon);
                         }
                         Msg::RetireBelow(layer) => {
                             if let Ok(mut t) = table.lock() {
@@ -114,6 +163,13 @@ impl PrefetchWorker {
                             }
                         }
                         Msg::Sync(ack) => {
+                            // Flush the speculative backlog before
+                            // acking so `drain()` still means "every
+                            // hint is staged".
+                            while let Some((keys, h)) = backlog.pop_front()
+                            {
+                                stage_keys(keys, h);
+                            }
                             let _ = ack.send(());
                         }
                         Msg::Quit => break,
@@ -124,9 +180,17 @@ impl PrefetchWorker {
         PrefetchWorker { tx, staged, handle: Some(handle) }
     }
 
-    /// Hint: these experts are likely needed soon.
+    /// Hint: these experts are likely needed soon (critical-path
+    /// horizon 0 — the layer-l+1 staging the serving loop depends on).
     pub fn stage(&self, keys: Vec<ExpertKey>) {
-        let _ = self.tx.send(Msg::Stage(keys));
+        self.stage_at(keys, 0);
+    }
+
+    /// Hint at an explicit prefetch horizon: 0 stages immediately
+    /// (critical path), deeper horizons are parked in the speculative
+    /// backlog and staged only while no newer hints are queued.
+    pub fn stage_at(&self, keys: Vec<ExpertKey>, horizon: usize) {
+        let _ = self.tx.send(Msg::Stage(keys, horizon));
     }
 
     /// Drop staged entries of layers below `layer` (bounds the staged
@@ -149,7 +213,7 @@ impl PrefetchWorker {
     pub fn staged_lookup(&self, key: ExpertKey) -> StagedLookup {
         match self.staged.lock() {
             Ok(t) => match t.get(&key) {
-                Some(w) => StagedLookup::Hit(w.clone()),
+                Some((w, h)) => StagedLookup::Hit(w.clone(), *h),
                 None => StagedLookup::Miss,
             },
             Err(_) => StagedLookup::Poisoned,
@@ -160,7 +224,16 @@ impl PrefetchWorker {
     /// A poisoned table reads as "nothing staged".
     pub fn staged_get(&self, key: ExpertKey) -> Option<Arc<CachedTensors>> {
         match self.staged_lookup(key) {
-            StagedLookup::Hit(w) => Some(w),
+            StagedLookup::Hit(w, _) => Some(w),
+            StagedLookup::Miss | StagedLookup::Poisoned => None,
+        }
+    }
+
+    /// The horizon a staged entry is charged to (`None` if not staged
+    /// or the table is poisoned).
+    pub fn staged_horizon(&self, key: ExpertKey) -> Option<usize> {
+        match self.staged_lookup(key) {
+            StagedLookup::Hit(_, h) => Some(h),
             StagedLookup::Miss | StagedLookup::Poisoned => None,
         }
     }
@@ -192,5 +265,66 @@ impl Drop for PrefetchWorker {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+    use crate::runtime::Runtime;
+
+    fn pool() -> Arc<HostPool> {
+        let dir = crate::testkit::ensure_tiny();
+        let man = Manifest::load(&dir, "mixtral-tiny").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        Arc::new(HostPool::load(&man, &rt).unwrap())
+    }
+
+    #[test]
+    fn cross_horizon_rehint_stages_once_charged_to_the_nearer_horizon() {
+        // The latent dedup gap: a key hinted speculatively at l+3 and
+        // again on the critical path at l+1 must resolve the host
+        // pool once (same Arc) and be charged to the nearer horizon —
+        // and a later, farther re-hint must never downgrade the tag.
+        let w = PrefetchWorker::spawn(pool());
+        let key = ExpertKey::routed(1, 0);
+        w.stage_at(vec![key], 2);
+        w.drain();
+        assert_eq!(w.staged_len(), 1);
+        assert_eq!(w.staged_horizon(key), Some(2));
+        let first = w.staged_get(key).expect("speculative hint not staged");
+
+        w.stage_at(vec![key], 0);
+        w.drain();
+        assert_eq!(w.staged_len(), 1, "re-hint must not stage a copy");
+        assert_eq!(w.staged_horizon(key), Some(0),
+                   "critical re-hint must upgrade the charged horizon");
+        let second = w.staged_get(key).unwrap();
+        assert!(Arc::ptr_eq(&first, &second),
+                "re-hint delivered a diverging copy");
+
+        w.stage_at(vec![key], 2);
+        w.drain();
+        assert_eq!(w.staged_horizon(key), Some(0),
+                   "a farther re-hint must never downgrade the horizon");
+    }
+
+    #[test]
+    fn speculative_backlog_flushes_on_drain() {
+        // Deep-horizon hints are parked until the channel is idle, but
+        // drain() must still mean "everything staged".
+        let w = PrefetchWorker::spawn(pool());
+        let k0 = ExpertKey::routed(0, 0);
+        let k1 = ExpertKey::routed(1, 1);
+        let k2 = ExpertKey::routed(2, 1);
+        w.stage_at(vec![k1], 1);
+        w.stage_at(vec![k2], 2);
+        w.stage(vec![k0]);
+        w.drain();
+        assert_eq!(w.staged_len(), 3);
+        assert_eq!(w.staged_horizon(k0), Some(0));
+        assert_eq!(w.staged_horizon(k1), Some(1));
+        assert_eq!(w.staged_horizon(k2), Some(2));
     }
 }

@@ -14,7 +14,8 @@ use anyhow::{bail, Result};
 use duoserve::config::{DeviceProfile, PolicyKind};
 use duoserve::coordinator::{Ablation, ClassPolicy, ContinuousConfig, Engine,
                             ServeOptions};
-use duoserve::experts::{ExpertStats, Placement};
+use duoserve::experts::{ExpertStats, Placement, N_HORIZONS};
+use duoserve::memory::CachePolicy;
 use duoserve::metrics::{fmt_gb, fmt_secs, slo_attainment,
                         slo_attainment_for_class, SloSpec, Table};
 use duoserve::util::args::Args;
@@ -54,6 +55,14 @@ COMMANDS:
                 --placement partition|replicate-hot  (replicate-hot
                  broadcasts each layer's hottest experts to every
                  shard so peer fetches hit a local replica)
+                --cache-policy lru|value  (device expert-cache
+                 eviction: lru = pure recency, the default,
+                 bit-identical to the pre-policy cache; value =
+                 bytes-normalized value-credit watermark retention)
+                --prefetch-horizon N  (decode predictor lookahead in
+                 layers, 1..=3; 1 = critical-path l+1 hints only, the
+                 default. 2/3 add confidence-decayed speculative hints
+                 for l+2/l+3, staged off the critical path)
                 --faults SPEC  (seeded fault injection, e.g.
                  \"seed:7,shard-down:1@2-6,fetch-fail:0.2@0-inf\";
                  none = disabled, the default. Faults perturb the
@@ -244,6 +253,37 @@ fn faults(args: &Args) -> Result<Option<duoserve::faults::FaultPlan>> {
     duoserve::faults::FaultPlan::parse(&args.str("faults", "none"))
 }
 
+/// `--cache-policy lru|value` parsing: `lru` (the default) keeps the
+/// pre-policy device expert cache bit-identical; `value` turns on the
+/// bytes-normalized value-credit watermark eviction policy.
+fn cache_policy(args: &Args) -> Result<CachePolicy> {
+    let v = args.str("cache-policy", "lru");
+    CachePolicy::by_name(&v).ok_or_else(|| {
+        anyhow::anyhow!("unknown cache-policy {v:?} (lru|value)")
+    })
+}
+
+/// `--prefetch-horizon N` parsing: decode predictor lookahead in
+/// layers, 1..=3. 1 (the default) hints only the critical-path l+1
+/// set — the pre-horizon engine verbatim.
+fn prefetch_horizon(args: &Args) -> Result<usize> {
+    let n = args.usize("prefetch-horizon", 1)?;
+    if !(1..=N_HORIZONS).contains(&n) {
+        bail!("--prefetch-horizon must be in 1..={N_HORIZONS} (got {n})");
+    }
+    Ok(n)
+}
+
+/// Cache-knob report line, printed only when either knob is
+/// non-default so default output stays byte-identical.
+fn print_cache_knobs(opts: &ServeOptions) {
+    if opts.cache_policy == CachePolicy::Lru && opts.prefetch_horizon <= 1 {
+        return;
+    }
+    println!("cache: policy={} horizon={}", opts.cache_policy.name(),
+             opts.prefetch_horizon);
+}
+
 /// `--shards N --placement P` parsing: N == 1 keeps the legacy
 /// unsharded provider (`None`); N == 0 is rejected as malformed.
 fn sharding(args: &Args) -> Result<(Option<usize>, Placement)> {
@@ -340,6 +380,7 @@ const KNOWN_OPTS: &[&str] = &[
     "placement", "rate", "max-in-flight", "queue-cap", "decode-priority",
     "slo-ttft", "slo-e2e", "faults", "queue-deadline", "hard-deadline",
     "shed-above", "kv-page", "class-mix", "slo-ttft-class", "slo-e2e-class",
+    "cache-policy", "prefetch-horizon",
 ];
 
 fn main() {
@@ -413,6 +454,8 @@ fn run() -> Result<()> {
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
+            opts.cache_policy = cache_policy(&args)?;
+            opts.prefetch_horizon = prefetch_horizon(&args)?;
             let out = engine.serve_continuous(&reqs, &opts, &ccfg)?;
             if let Some(oom) = out.oom {
                 println!("{}: {oom}", pol.label());
@@ -446,6 +489,7 @@ fn run() -> Result<()> {
                 s.decode_tokens_per_sec,
                 s.prefill_chunks,
             );
+            print_cache_knobs(&opts);
             print_robustness(&s.robustness);
             print_kv_paging(&s.kv_paging);
             print_class_report(s);
@@ -504,6 +548,8 @@ fn run() -> Result<()> {
             let (shards, placement) = sharding(&args)?;
             opts.shards = shards;
             opts.placement = placement;
+            opts.cache_policy = cache_policy(&args)?;
+            opts.prefetch_horizon = prefetch_horizon(&args)?;
             let mut t = Table::new(&["req", "prompt", "tokens", "ttft", "e2e"]);
             let mut robust = duoserve::metrics::Robustness::default();
             let mut kv_paging = duoserve::metrics::KvPagingSummary::default();
@@ -580,6 +626,7 @@ fn run() -> Result<()> {
                 fmt_secs(makespan),
                 decode_tps,
             );
+            print_cache_knobs(&opts);
             print_robustness(&robust);
             print_kv_paging(&kv_paging);
             print_shard_report(&shard_stats, &shard_resident, shard_balance);
@@ -746,6 +793,33 @@ mod tests {
                        .unwrap(),
                    (None, true));
         assert!(prefill_chunk(&args(&["--prefill-chunk", "fast"])).is_err());
+    }
+
+    #[test]
+    fn cache_policy_parses_and_defaults_lru() {
+        assert_eq!(cache_policy(&args(&[])).unwrap(), CachePolicy::Lru);
+        assert_eq!(cache_policy(&args(&["--cache-policy", "lru"])).unwrap(),
+                   CachePolicy::Lru);
+        assert_eq!(cache_policy(&args(&["--cache-policy", "value"])).unwrap(),
+                   CachePolicy::Value);
+        let err = cache_policy(&args(&["--cache-policy", "mru"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cache-policy"), "{err}");
+    }
+
+    #[test]
+    fn prefetch_horizon_parses_and_bounds() {
+        assert_eq!(prefetch_horizon(&args(&[])).unwrap(), 1);
+        for h in 1..=N_HORIZONS {
+            let v = h.to_string();
+            assert_eq!(prefetch_horizon(
+                &args(&["--prefetch-horizon", &v])).unwrap(), h);
+        }
+        for bad in ["0", "4", "x"] {
+            assert!(prefetch_horizon(
+                &args(&["--prefetch-horizon", bad])).is_err(), "{bad}");
+        }
     }
 
     #[test]

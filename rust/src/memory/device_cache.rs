@@ -17,15 +17,63 @@
 //! in the provider's ledger, not here, so the two serving modes can
 //! never count differently.
 //!
-//! Eviction is fully deterministic: LRU by `last_used`, with exact
-//! timestamp ties broken by the lower `ExpertKey` (and the lower layer
-//! index for window eviction). Virtual times repeat across layers, so
-//! without the tie-break the victim would depend on `HashMap`
-//! iteration order — nondeterministic across processes.
+//! Eviction is fully deterministic: LRU by `last_used` (or, under
+//! [`CachePolicy::Value`], minimum value credit), with exact ties
+//! broken by the lower `ExpertKey` (and the lower layer index for
+//! window eviction). Virtual times repeat across layers, so without
+//! the tie-break the victim would depend on `HashMap` iteration order
+//! — nondeterministic across processes.
+//!
+//! Speculative entries (deep-horizon prefetch, admitted through
+//! [`DeviceExpertCache::insert_speculative`]) are second-class under
+//! *every* policy: they may only displace other speculative entries,
+//! and a speculative admission that would require evicting any
+//! critical-path entry is dropped instead.
 
 use std::collections::HashMap;
 
 use crate::memory::ExpertKey;
+
+/// Eviction policy for the device expert cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    /// Pure recency: evict the least-recently-used entry. The default,
+    /// bit-identical to the pre-policy cache.
+    #[default]
+    Lru,
+    /// Bytes-normalized value credit: blend predictor signal scores
+    /// and touch counts with recency into a credit per byte, evict the
+    /// lowest-credit entry, and gate speculative admission on a
+    /// dynamic watermark that rises under eviction pressure.
+    Value,
+}
+
+impl CachePolicy {
+    /// Parse a `--cache-policy` CLI value (`lru` | `value`).
+    pub fn by_name(name: &str) -> Option<CachePolicy> {
+        match name {
+            "lru" => Some(CachePolicy::Lru),
+            "value" => Some(CachePolicy::Value),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of the policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Value => "value",
+        }
+    }
+}
+
+/// Multiplicative watermark decay applied when an insert lands in a
+/// free slot (capacity slack: speculative admission loosens).
+const WATERMARK_DECAY: f64 = 0.95;
+
+/// Exponential blend factor for predictor signal scores: each new
+/// signal halves the weight of the accumulated history.
+const SCORE_BLEND: f64 = 0.5;
 
 /// One resident cache entry: the virtual-time metadata of a fetched
 /// expert (the weight bytes themselves live in the host pool).
@@ -36,6 +84,15 @@ pub struct CachedExpert {
     pub ready_at: f64,
     /// Virtual time of the entry's most recent use — the LRU key.
     pub last_used: f64,
+    /// Whether the entry was admitted by deep-horizon speculative
+    /// prefetch and has not yet been used. Speculative entries never
+    /// displace critical-path ones; a touch promotes to critical.
+    pub speculative: bool,
+    /// Residency lookups that hit this entry (value-credit signal).
+    pub touches: u32,
+    /// Exponentially blended predictor signal score (value-credit
+    /// signal; only the `Value` policy reads it).
+    pub score: f64,
 }
 
 /// The GPU expert cache: bounded per-layer slots with LRU eviction and
@@ -47,18 +104,60 @@ pub struct DeviceExpertCache {
     /// Max number of distinct layers resident at once (0 = unlimited).
     layer_window: usize,
     slots: HashMap<ExpertKey, CachedExpert>,
+    policy: CachePolicy,
+    /// Per-entry size used to normalize value credit to credit/byte
+    /// (all experts share one shape, so this is a scalar).
+    entry_bytes: f64,
+    /// Dynamic admission watermark (`Value` policy only): rises to the
+    /// evicted credit under capacity pressure, decays on free-slot
+    /// inserts, and gates *speculative* admission only.
+    watermark: f64,
 }
 
 impl DeviceExpertCache {
     /// A cache with `per_layer_capacity` slots per layer and at most
     /// `layer_window` distinct resident layers (0 = unlimited).
+    /// Equivalent to [`Self::with_policy`] under [`CachePolicy::Lru`].
     pub fn new(per_layer_capacity: usize, layer_window: usize) -> Self {
+        Self::with_policy(per_layer_capacity, layer_window,
+                          CachePolicy::Lru, 1)
+    }
+
+    /// A cache with an explicit eviction policy and per-entry size
+    /// (bytes; normalizes the value credit — pass the model's
+    /// per-expert weight bytes, or any constant under `Lru`, where it
+    /// is ignored).
+    pub fn with_policy(per_layer_capacity: usize, layer_window: usize,
+                       policy: CachePolicy, entry_bytes: u64) -> Self {
         assert!(per_layer_capacity > 0, "cache capacity must be positive");
         DeviceExpertCache {
             per_layer_capacity,
             layer_window,
             slots: HashMap::new(),
+            policy,
+            entry_bytes: (entry_bytes as f64).max(1.0),
+            watermark: 0.0,
         }
+    }
+
+    /// The configured eviction policy.
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// Value credit per byte of one entry at virtual time `now`:
+    /// `(1 + ln(1 + touches) + score) / ((1 + age) * bytes)`. Higher
+    /// is more worth keeping; fresh untouched entries start at
+    /// `1 / bytes`.
+    fn credit(&self, slot: &CachedExpert, now: f64) -> f64 {
+        let age = (now - slot.last_used).max(0.0);
+        let value = 1.0 + (1.0 + f64::from(slot.touches)).ln() + slot.score;
+        value / ((1.0 + age) * self.entry_bytes)
+    }
+
+    /// The current speculative-admission watermark (`Value` policy).
+    pub fn watermark(&self) -> f64 {
+        self.watermark
     }
 
     /// Whether `key` is resident (no LRU refresh — use [`Self::touch`]
@@ -74,10 +173,28 @@ impl DeviceExpertCache {
         match self.slots.get_mut(&key) {
             Some(slot) => {
                 slot.last_used = now;
+                slot.touches = slot.touches.saturating_add(1);
+                slot.speculative = false; // used: promote to critical
                 Some(slot.ready_at)
             }
             None => None,
         }
+    }
+
+    /// Record a predictor gating signal for a resident entry: the
+    /// entry's score becomes `score * 0.5 + weight`. Feeds the `Value`
+    /// policy's credit; a no-op for non-resident keys (and inert under
+    /// `Lru`, which never reads scores).
+    pub fn note_signal(&mut self, key: ExpertKey, weight: f64) {
+        if let Some(slot) = self.slots.get_mut(&key) {
+            slot.score = slot.score * SCORE_BLEND + weight;
+        }
+    }
+
+    /// Whether a resident entry is still speculative (admitted by
+    /// deep-horizon prefetch, never used). `None` if not resident.
+    pub fn is_speculative(&self, key: ExpertKey) -> Option<bool> {
+        self.slots.get(&key).map(|s| s.speculative)
     }
 
     /// Read-only view of a resident entry's metadata (no LRU refresh).
@@ -102,27 +219,32 @@ impl DeviceExpertCache {
         let layer_count =
             self.slots.keys().filter(|k| k.layer == key.layer).count();
         if !self.slots.contains_key(&key) && layer_count >= self.per_layer_capacity {
-            if let Some(&victim) = self
-                .slots
-                .iter()
-                .filter(|(k, _)| k.layer == key.layer)
-                .min_by(|a, b| {
-                    a.1.last_used
-                        .total_cmp(&b.1.last_used)
-                        .then_with(|| a.0.cmp(b.0))
-                })
-                .map(|(k, _)| k)
-            {
+            if let Some(victim) = self.capacity_victim(key.layer, now, false) {
+                if self.policy == CachePolicy::Value {
+                    let c = self.credit(&self.slots[&victim], now);
+                    self.watermark = self.watermark.max(c);
+                }
                 self.slots.remove(&victim);
             }
+        } else if !self.slots.contains_key(&key)
+            && self.policy == CachePolicy::Value
+        {
+            self.watermark *= WATERMARK_DECAY; // slack: admission loosens
         }
         self.slots
             .entry(key)
             .and_modify(|slot| {
                 slot.ready_at = ready_at;
                 slot.last_used = slot.last_used.max(ready_at);
+                slot.speculative = false; // a critical fetch promotes
             })
-            .or_insert(CachedExpert { ready_at, last_used: now });
+            .or_insert(CachedExpert {
+                ready_at,
+                last_used: now,
+                speculative: false,
+                touches: 0,
+                score: 0.0,
+            });
 
         if self.layer_window > 0 {
             loop {
@@ -145,6 +267,101 @@ impl DeviceExpertCache {
                 self.evict_layer(victim_layer);
             }
         }
+    }
+
+    /// Deterministic eviction victim within `layer`: LRU by
+    /// `last_used` (Lru) or minimum value credit at `now` (Value),
+    /// exact ties to the lower key. With `speculative_only`, only
+    /// speculative entries are candidates (the speculative-admission
+    /// path must never displace a critical entry).
+    fn capacity_victim(&self, layer: usize, now: f64,
+                       speculative_only: bool) -> Option<ExpertKey> {
+        let rank = |slot: &CachedExpert| -> f64 {
+            match self.policy {
+                CachePolicy::Lru => slot.last_used,
+                CachePolicy::Value => self.credit(slot, now),
+            }
+        };
+        self.slots
+            .iter()
+            .filter(|(k, s)| {
+                k.layer == layer && (!speculative_only || s.speculative)
+            })
+            .min_by(|a, b| {
+                rank(a.1).total_cmp(&rank(b.1)).then_with(|| a.0.cmp(b.0))
+            })
+            .map(|(k, _)| *k)
+    }
+
+    /// Admit a speculatively prefetched expert (deep horizon): fills a
+    /// free slot, or displaces only *speculative* entries — if making
+    /// room would evict any critical-path entry (slot or whole layer),
+    /// the admission is dropped instead. Under the `Value` policy a
+    /// fresh entry's credit must also clear the dynamic watermark.
+    /// Returns whether the entry is resident afterwards.
+    pub fn insert_speculative(&mut self, key: ExpertKey, ready_at: f64,
+                              now: f64) -> bool {
+        if self.slots.contains_key(&key) {
+            return true; // already resident; never perturb the entry
+        }
+        if self.policy == CachePolicy::Value {
+            let fresh = 1.0 / self.entry_bytes; // untouched, age 0
+            if fresh < self.watermark {
+                return false;
+            }
+        }
+        // Window pre-check: admitting a new layer may only push out
+        // layers that are themselves fully speculative.
+        let mut layers: Vec<usize> =
+            self.slots.keys().map(|k| k.layer).collect();
+        layers.sort_unstable();
+        layers.dedup();
+        if self.layer_window > 0 && !layers.contains(&key.layer)
+            && layers.len() >= self.layer_window
+        {
+            let need = layers.len() + 1 - self.layer_window;
+            let mut eligible: Vec<usize> = layers
+                .into_iter()
+                .filter(|&l| self.layer_fully_speculative(l))
+                .collect();
+            if eligible.len() < need {
+                return false;
+            }
+            eligible.sort_by(|&a, &b| {
+                self.layer_last_used(a)
+                    .total_cmp(&self.layer_last_used(b))
+                    .then_with(|| a.cmp(&b))
+            });
+            for l in eligible.into_iter().take(need) {
+                self.evict_layer(l);
+            }
+        }
+        let layer_count =
+            self.slots.keys().filter(|k| k.layer == key.layer).count();
+        if layer_count >= self.per_layer_capacity {
+            match self.capacity_victim(key.layer, now, true) {
+                Some(victim) => {
+                    self.slots.remove(&victim);
+                }
+                None => return false, // only critical entries: drop
+            }
+        }
+        self.slots.insert(key, CachedExpert {
+            ready_at,
+            last_used: now,
+            speculative: true,
+            touches: 0,
+            score: 0.0,
+        });
+        true
+    }
+
+    /// Whether every resident entry of `layer` is speculative.
+    fn layer_fully_speculative(&self, layer: usize) -> bool {
+        self.slots
+            .iter()
+            .filter(|(k, _)| k.layer == layer)
+            .all(|(_, s)| s.speculative)
     }
 
     fn layer_last_used(&self, layer: usize) -> f64 {
@@ -319,6 +536,138 @@ mod tests {
         c.insert(ExpertKey::routed(0, 3), 7.0, 7.0);
         assert!(c.contains(ExpertKey::routed(0, 1)));
         assert!(!c.contains(ExpertKey::routed(0, 2)));
+    }
+
+    #[test]
+    fn value_policy_retains_touched_entry_over_recent_one_shot() {
+        // The A/B the policy exists for: a hot (repeatedly touched)
+        // entry vs a slightly more recent one-shot. LRU would evict
+        // the hot entry; value credit keeps it.
+        let mk = |policy| {
+            let mut c = DeviceExpertCache::with_policy(2, 0, policy, 1);
+            c.insert(ExpertKey::routed(0, 1), 1.0, 1.0); // hot
+            c.insert(ExpertKey::routed(0, 2), 2.0, 2.0); // one-shot
+            for t in 0..3 {
+                c.touch(ExpertKey::routed(0, 1), 3.0 + t as f64);
+            }
+            // one-shot refreshed last: most recent by LRU rules
+            c.touch(ExpertKey::routed(0, 2), 5.5);
+            c.insert(ExpertKey::routed(0, 3), 6.0, 6.0);
+            c
+        };
+        let lru = mk(CachePolicy::Lru);
+        assert!(!lru.contains(ExpertKey::routed(0, 1)),
+                "LRU must evict the less recently used hot entry");
+        assert!(lru.contains(ExpertKey::routed(0, 2)));
+        let val = mk(CachePolicy::Value);
+        assert!(val.contains(ExpertKey::routed(0, 1)),
+                "value credit must keep the repeatedly touched entry");
+        assert!(!val.contains(ExpertKey::routed(0, 2)));
+    }
+
+    #[test]
+    fn predictor_signal_raises_value_credit_but_not_lru_order() {
+        // A strong gating signal protects an otherwise-LRU-victim
+        // entry under Value; under Lru the score is inert.
+        let mk = |policy| {
+            let mut c = DeviceExpertCache::with_policy(2, 0, policy, 1);
+            c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+            c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
+            c.note_signal(ExpertKey::routed(0, 1), 4.0);
+            c.insert(ExpertKey::routed(0, 3), 3.0, 3.0);
+            c
+        };
+        let lru = mk(CachePolicy::Lru);
+        assert!(!lru.contains(ExpertKey::routed(0, 1)),
+                "scores must not leak into LRU eviction");
+        let val = mk(CachePolicy::Value);
+        assert!(val.contains(ExpertKey::routed(0, 1)));
+        assert!(!val.contains(ExpertKey::routed(0, 2)));
+    }
+
+    #[test]
+    fn speculative_insert_never_evicts_critical_entries() {
+        for policy in [CachePolicy::Lru, CachePolicy::Value] {
+            let mut c = DeviceExpertCache::with_policy(2, 0, policy, 1);
+            c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+            c.insert(ExpertKey::routed(0, 2), 2.0, 2.0);
+            assert!(!c.insert_speculative(ExpertKey::routed(0, 3), 3.0, 3.0),
+                    "{policy:?}: full-of-critical layer must drop the \
+                     speculative insert");
+            assert_eq!(c.resident_in_layer(0), vec![1, 2]);
+        }
+    }
+
+    #[test]
+    fn speculative_insert_displaces_only_speculative_entries() {
+        for policy in [CachePolicy::Lru, CachePolicy::Value] {
+            let mut c = DeviceExpertCache::with_policy(2, 0, policy, 1);
+            c.insert(ExpertKey::routed(0, 1), 1.0, 1.0); // critical
+            assert!(c.insert_speculative(ExpertKey::routed(0, 2), 2.0, 2.0));
+            assert_eq!(c.is_speculative(ExpertKey::routed(0, 2)),
+                       Some(true));
+            // layer full: the speculative entry is the only candidate
+            assert!(c.insert_speculative(ExpertKey::routed(0, 3), 3.0, 3.0));
+            assert!(c.contains(ExpertKey::routed(0, 1)),
+                    "{policy:?}: critical entry displaced");
+            assert!(!c.contains(ExpertKey::routed(0, 2)));
+            assert!(c.contains(ExpertKey::routed(0, 3)));
+        }
+    }
+
+    #[test]
+    fn touch_promotes_speculative_to_critical() {
+        let mut c = DeviceExpertCache::new(1, 0);
+        assert!(c.insert_speculative(ExpertKey::routed(0, 1), 1.0, 1.0));
+        c.touch(ExpertKey::routed(0, 1), 2.0);
+        assert_eq!(c.is_speculative(ExpertKey::routed(0, 1)), Some(false));
+        // promoted: a later speculative insert can no longer displace it
+        assert!(!c.insert_speculative(ExpertKey::routed(0, 2), 3.0, 3.0));
+        assert!(c.contains(ExpertKey::routed(0, 1)));
+    }
+
+    #[test]
+    fn speculative_window_pressure_drops_the_insert() {
+        // Window of 1 held by a critical layer: a speculative insert
+        // into another layer may not push the critical layer out, so
+        // the insert itself is dropped.
+        let mut c = DeviceExpertCache::new(2, 1);
+        c.insert(ExpertKey::routed(0, 1), 1.0, 1.0);
+        assert!(!c.insert_speculative(ExpertKey::routed(1, 0), 2.0, 2.0));
+        assert!(c.contains(ExpertKey::routed(0, 1)));
+        assert_eq!(c.resident_count(), 1);
+        // ... but a fully speculative layer is fair game.
+        let mut c = DeviceExpertCache::new(2, 1);
+        assert!(c.insert_speculative(ExpertKey::routed(0, 1), 1.0, 1.0));
+        assert!(c.insert_speculative(ExpertKey::routed(1, 0), 2.0, 2.0));
+        assert!(!c.contains(ExpertKey::routed(0, 1)));
+        assert!(c.contains(ExpertKey::routed(1, 0)));
+    }
+
+    #[test]
+    fn value_watermark_rises_under_pressure_and_gates_speculation() {
+        let mut c = DeviceExpertCache::with_policy(1, 0,
+                                                   CachePolicy::Value, 1);
+        assert_eq!(c.watermark(), 0.0);
+        c.insert(ExpertKey::routed(0, 1), 0.0, 0.0);
+        for t in 1..=5 {
+            c.touch(ExpertKey::routed(0, 1), t as f64);
+        }
+        // capacity eviction of a high-credit entry raises the bar
+        c.insert(ExpertKey::routed(0, 2), 5.0, 5.0);
+        assert!(c.watermark() > 1.0,
+                "watermark {} should exceed a fresh entry's credit",
+                c.watermark());
+        // fresh speculative credit (1.0/bytes) is below the bar now,
+        // even into a free slot of another layer
+        assert!(!c.insert_speculative(ExpertKey::routed(1, 0), 6.0, 6.0));
+        // slack decays the watermark back toward open admission
+        for l in 1..200 {
+            c.insert(ExpertKey::routed(l, 0), l as f64, l as f64);
+        }
+        assert!(c.watermark() < 1.0);
+        assert!(c.insert_speculative(ExpertKey::routed(500, 0),
+                                     201.0, 201.0));
     }
 
     #[test]

@@ -11,7 +11,7 @@ mod host_pool;
 mod kv_pager;
 mod meter;
 
-pub use device_cache::{CachedExpert, DeviceExpertCache};
+pub use device_cache::{CachePolicy, CachedExpert, DeviceExpertCache};
 pub use host_pool::{CachedTensors, ExpertKey, HostPool, LayerNonMoe, NonMoeWeights, Weight};
 pub use kv_pager::{KvPagePool, KvPageTable, KvPagerStats, PageSlot,
                    DEFAULT_PREFIX_CACHE_PAGES};

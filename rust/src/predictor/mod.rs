@@ -24,3 +24,26 @@ pub use tracer::{Episode, Tracer};
 /// because routing/prediction callers have always imported it from the
 /// predictor stack.
 pub use crate::util::math::top_k;
+
+/// Confidence weight of a prediction made `horizon` layers ahead:
+/// halves per extra layer (1.0 at the critical-path l+1 horizon, 0.5
+/// at l+2, 0.25 at l+3 — accuracy compounds per hop, so the decay is
+/// geometric). Deep-horizon prefetch hints carry this as the gating
+/// signal blended into the `Value` cache policy's credit, and it
+/// orders speculative staging priority behind critical-path work.
+pub fn horizon_confidence(horizon: usize) -> f64 {
+    0.5f64.powi(horizon as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::horizon_confidence;
+
+    #[test]
+    fn confidence_decays_geometrically_from_one() {
+        assert_eq!(horizon_confidence(0), 1.0);
+        assert_eq!(horizon_confidence(1), 0.5);
+        assert_eq!(horizon_confidence(2), 0.25);
+        assert!(horizon_confidence(1) > horizon_confidence(2));
+    }
+}

@@ -1,0 +1,371 @@
+//! Policy-invariance suite for the cache-eviction policy and the
+//! multi-horizon prefetch knobs.
+//!
+//! The engine's function/time split means `--cache-policy` and
+//! `--prefetch-horizon` may only move *virtual time*: tokens and
+//! routing must be bit-identical across every knob combination, and
+//! the explicit defaults (`--cache-policy lru --prefetch-horizon 1`)
+//! must reproduce the legacy engine exactly — tokens, makespan,
+//! recorded stream events and every ledger counter, in both serving
+//! modes and under sharding.
+
+use duoserve::config::{DeviceProfile, PolicyKind};
+use duoserve::coordinator::{ContinuousConfig, Engine, ServeOptions,
+                            ServeOutcome};
+use duoserve::experts::{ExpertProvider, ExpertStats, StagedExpertProvider,
+                        StagingMode, N_HORIZONS};
+use duoserve::memory::{CachePolicy, DeviceExpertCache, ExpertKey};
+use duoserve::workload::generate_requests;
+
+fn engine() -> Engine {
+    let dir = duoserve::testkit::ensure_tiny();
+    Engine::load(&dir, "mixtral-tiny").unwrap()
+}
+
+/// Every ledger counter — legacy and per-horizon — field by field.
+fn assert_stats_eq(a: &ExpertStats, b: &ExpertStats, what: &str) {
+    assert_eq!(a.hits, b.hits, "{what}: hits diverged");
+    assert_eq!(a.misses, b.misses, "{what}: misses diverged");
+    assert_eq!(a.bytes_fetched, b.bytes_fetched,
+               "{what}: transferred bytes diverged");
+    assert_eq!(a.staged_acquires, b.staged_acquires,
+               "{what}: staged acquires diverged");
+    assert_eq!(a.sync_acquires, b.sync_acquires,
+               "{what}: sync acquires diverged");
+    assert_eq!(a.prefetch_hints, b.prefetch_hints,
+               "{what}: prefetch hints diverged");
+    assert_eq!(a.staging_poisoned, b.staging_poisoned,
+               "{what}: poisoned-lock counts diverged");
+    assert_eq!(a.degraded_acquires, b.degraded_acquires,
+               "{what}: degraded acquires diverged");
+    assert_eq!(a.fetch_retries, b.fetch_retries,
+               "{what}: fetch retries diverged");
+    assert_eq!(a.failover_fetches, b.failover_fetches,
+               "{what}: failover fetches diverged");
+    assert_eq!((a.accuracy.exact, a.accuracy.at_least_half,
+                a.accuracy.total),
+               (b.accuracy.exact, b.accuracy.at_least_half,
+                b.accuracy.total),
+               "{what}: aggregate accuracy diverged");
+    assert_eq!(a.horizon_hints, b.horizon_hints,
+               "{what}: per-horizon hints diverged");
+    assert_eq!(a.horizon_staged_hits, b.horizon_staged_hits,
+               "{what}: per-horizon staged hits diverged");
+    for h in 0..N_HORIZONS {
+        assert_eq!((a.horizon_accuracy[h].exact,
+                    a.horizon_accuracy[h].at_least_half,
+                    a.horizon_accuracy[h].total),
+                   (b.horizon_accuracy[h].exact,
+                    b.horizon_accuracy[h].at_least_half,
+                    b.horizon_accuracy[h].total),
+                   "{what}: horizon-{h} accuracy diverged");
+    }
+}
+
+/// The structural ledger identities every run must satisfy: the
+/// per-horizon rows partition their aggregates exactly (no hint or
+/// staged hit is double-counted), and horizon 0 *is* the historical
+/// accuracy aggregate.
+fn assert_horizon_identities(s: &ExpertStats, what: &str) {
+    assert_eq!(s.horizon_hints.iter().sum::<u64>(), s.prefetch_hints,
+               "{what}: horizon hints must sum to the aggregate");
+    assert_eq!(s.horizon_staged_hits.iter().sum::<u64>(),
+               s.staged_acquires,
+               "{what}: horizon staged hits must sum to the aggregate");
+    assert_eq!((s.horizon_accuracy[0].exact,
+                s.horizon_accuracy[0].at_least_half,
+                s.horizon_accuracy[0].total),
+               (s.accuracy.exact, s.accuracy.at_least_half,
+                s.accuracy.total),
+               "{what}: horizon-0 accuracy must equal the aggregate");
+}
+
+fn tokens_and_routing(out: &ServeOutcome) -> (Vec<Vec<i32>>,
+                                              Vec<Vec<Vec<Vec<usize>>>>) {
+    let paths = out.episodes.iter().map(|e| e.steps.clone()).collect();
+    (out.tokens.clone(), paths)
+}
+
+#[test]
+fn tokens_and_routing_are_invariant_across_policy_and_horizon() {
+    // The knob matrix: every (policy, horizon) combination over
+    // multiple serve configurations must produce the bit-identical
+    // token streams and routing paths of the default run, and end
+    // within the simulated cache's capacity envelope.
+    let e = engine();
+    let cap = e.man.sim.top_k; // DuoServe per-layer slots
+    for (dataset, n, seed) in [("squad", 3, 11u64), ("orca", 2, 47u64)] {
+        let reqs = generate_requests(&e.man, dataset, n, seed);
+        let base_opts = ServeOptions::new(PolicyKind::DuoServe,
+                                          DeviceProfile::a6000());
+        let base = e.serve(&reqs, &base_opts).unwrap();
+        assert!(base.oom.is_none());
+        let want = tokens_and_routing(&base);
+        for policy in [CachePolicy::Lru, CachePolicy::Value] {
+            for horizon in 1..=N_HORIZONS {
+                let mut opts = ServeOptions::new(PolicyKind::DuoServe,
+                                                 DeviceProfile::a6000());
+                opts.cache_policy = policy;
+                opts.prefetch_horizon = horizon;
+                let out = e.serve(&reqs, &opts).unwrap();
+                let what = format!(
+                    "{dataset}/seed{seed} policy={} horizon={horizon}",
+                    policy.name());
+                assert!(out.oom.is_none(), "{what}: unexpected OOM");
+                assert_eq!(tokens_and_routing(&out), want,
+                           "{what}: tokens or routing diverged");
+                // Occupancy can never exceed the provisioned capacity:
+                // per-layer slots times the 2-layer residency window.
+                for (i, &r) in out.shard_resident.iter().enumerate() {
+                    assert!(r <= cap * 2,
+                            "{what}: shard {i} resident {r} > {}",
+                            cap * 2);
+                }
+                assert_horizon_identities(&out.expert_stats, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn explicit_default_knobs_pin_the_legacy_behaviour_exactly() {
+    // Regression pin: spelling out `--cache-policy lru
+    // --prefetch-horizon 1` must be byte-identical to not passing the
+    // flags at all — tokens, makespan, recorded stream events and
+    // every ledger counter. Sync staging keeps the staged/sync
+    // acquire split deterministic so the comparison can be complete.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 3, 13);
+    let mut implicit = ServeOptions::new(PolicyKind::DuoServe,
+                                         DeviceProfile::a6000());
+    implicit.staging = StagingMode::Sync;
+    implicit.record_streams = true;
+    assert_eq!(implicit.cache_policy, CachePolicy::Lru,
+               "lru must be the default policy");
+    assert_eq!(implicit.prefetch_horizon, 1,
+               "horizon 1 must be the default");
+    let mut explicit = implicit.clone();
+    explicit.cache_policy = CachePolicy::Lru;
+    explicit.prefetch_horizon = 1;
+
+    let a = e.serve(&reqs, &implicit).unwrap();
+    let b = e.serve(&reqs, &explicit).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(tokens_and_routing(&a), tokens_and_routing(&b),
+               "explicit defaults changed tokens or routing");
+    assert_eq!(a.summary.makespan, b.summary.makespan,
+               "explicit defaults leaked into virtual time");
+    assert_eq!(a.peak_bytes, b.peak_bytes);
+    assert_stats_eq(&a.expert_stats, &b.expert_stats, "phase-bulk pin");
+    // The recorded virtual-time schedules agree event by event.
+    let ops = |o: &ServeOutcome| -> Vec<(String, String, u64, u64)> {
+        o.stream_trace.as_ref().unwrap().iter()
+            .map(|r| (format!("{:?}", r.stream), r.label.clone(),
+                      r.start.to_bits(), r.end.to_bits()))
+            .collect()
+    };
+    assert_eq!(ops(&a), ops(&b), "stream events diverged");
+
+    // At default knobs the deep-horizon rows must be silent: the
+    // critical path carries everything, exactly as before the knobs
+    // existed.
+    let s = a.expert_stats;
+    assert_eq!(s.horizon_hints, [s.prefetch_hints, 0, 0]);
+    assert_eq!(s.horizon_staged_hits, [s.staged_acquires, 0, 0]);
+    assert_eq!(s.horizon_accuracy[1].total, 0);
+    assert_eq!(s.horizon_accuracy[2].total, 0);
+    assert_horizon_identities(&s, "defaults");
+}
+
+#[test]
+fn explicit_defaults_pin_continuous_mode_and_sharding() {
+    // The same pin through the continuous serving loop and through a
+    // 3-shard provider: flag spelling can never matter.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "orca", 3, 19);
+    let mut implicit = ServeOptions::new(PolicyKind::DuoServe,
+                                         DeviceProfile::a6000());
+    implicit.staging = StagingMode::Sync;
+    let mut explicit = implicit.clone();
+    explicit.cache_policy = CachePolicy::Lru;
+    explicit.prefetch_horizon = 1;
+
+    let ccfg = ContinuousConfig {
+        max_in_flight: reqs.len(),
+        queue_capacity: reqs.len() + 4,
+        ..ContinuousConfig::default()
+    };
+    let a = e.serve_continuous(&reqs, &implicit, &ccfg).unwrap();
+    let b = e.serve_continuous(&reqs, &explicit, &ccfg).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "continuous tokens diverged");
+    assert_eq!(a.summary.makespan, b.summary.makespan);
+    assert_stats_eq(&a.expert_stats, &b.expert_stats, "continuous pin");
+
+    let mut sharded_implicit = implicit.clone();
+    sharded_implicit.shards = Some(3);
+    let mut sharded_explicit = explicit.clone();
+    sharded_explicit.shards = Some(3);
+    let sa = e.serve(&reqs, &sharded_implicit).unwrap();
+    let sb = e.serve(&reqs, &sharded_explicit).unwrap();
+    assert!(sa.oom.is_none() && sb.oom.is_none());
+    assert_eq!(sa.tokens, sb.tokens, "sharded tokens diverged");
+    assert_eq!(sa.summary.makespan, sb.summary.makespan);
+    assert_stats_eq(&sa.expert_stats, &sb.expert_stats, "3-shard pin");
+    assert_eq!(sa.shard_stats.len(), 3);
+    for (i, (x, y)) in sa.shard_stats.iter().zip(&sb.shard_stats)
+        .enumerate() {
+        assert_stats_eq(x, y, &format!("shard {i} pin"));
+        assert_horizon_identities(x, &format!("shard {i}"));
+    }
+    assert_horizon_identities(&sa.expert_stats, "3-shard aggregate");
+}
+
+#[test]
+fn deep_horizons_charge_their_own_ledger_rows() {
+    // A horizon-3 run: every hint and staged hit still lands on
+    // exactly one horizon row (the identities), tokens match the
+    // default run, and — when the predictor artifact is present — the
+    // speculative rows actually see traffic and score observations.
+    let e = engine();
+    let reqs = generate_requests(&e.man, "squad", 2, 31);
+    let base = ServeOptions::new(PolicyKind::DuoServe,
+                                 DeviceProfile::a6000());
+    let mut deep = base.clone();
+    deep.prefetch_horizon = 3;
+    let a = e.serve(&reqs, &base).unwrap();
+    let b = e.serve(&reqs, &deep).unwrap();
+    assert!(a.oom.is_none() && b.oom.is_none());
+    assert_eq!(a.tokens, b.tokens, "horizon depth changed tokens");
+    let s = b.expert_stats;
+    assert_horizon_identities(&s, "horizon 3");
+    // mixtral-tiny has 4 sim layers, so l=0 predicts l+2 and l+3:
+    // the deep accuracy rows must have been scored.
+    assert!(s.horizon_accuracy[1].total > 0,
+            "no l+2 predictions were scored");
+    assert!(s.horizon_accuracy[2].total > 0,
+            "no l+3 predictions were scored");
+    // Deep observations never pollute the aggregate: the h0 row and
+    // the aggregate stay the default run's accuracy exactly.
+    assert_eq!(s.accuracy.total, a.expert_stats.accuracy.total,
+               "deep horizons polluted the aggregate accuracy");
+    if e.has_mlp() {
+        assert!(s.horizon_hints[1] > 0,
+                "predictor present but no l+2 hints were charged");
+    }
+}
+
+#[test]
+fn every_touch_is_a_hit_or_a_miss_under_both_policies() {
+    // Randomized residency traffic through the production provider:
+    // the ledger's touch accounting must be exhaustive and exclusive
+    // (`touches() == hits + misses` == the number of touch calls),
+    // and occupancy stays within capacity, under both policies.
+    for policy in [CachePolicy::Lru, CachePolicy::Value] {
+        let cap = 3;
+        let layers = 4;
+        let mut p = StagedExpertProvider::detached(
+            DeviceExpertCache::with_policy(cap, 0, policy, 64), 64);
+        let mut rng = 0xD1CE_5EEDu64 ^ policy as u64;
+        let mut touches = 0u64;
+        for step in 0..400 {
+            rng = rng.wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let layer = (rng >> 33) as usize % layers;
+            let expert = (rng >> 13) as usize % 8;
+            let key = ExpertKey::routed(layer, expert);
+            let now = step as f64;
+            let ready = p.touch(key, now);
+            touches += 1;
+            if ready.is_none() {
+                if rng & 1 == 0 {
+                    p.admit(key, now + 1.0, now);
+                } else {
+                    p.admit_speculative(key, now + 1.0, now);
+                }
+            }
+            assert!(p.resident_count() <= cap * layers,
+                    "policy {} overflowed capacity", policy.name());
+        }
+        let s = p.stats();
+        assert_eq!(s.hits + s.misses, touches,
+                   "policy {}: touch accounting is not exhaustive",
+                   policy.name());
+        assert_eq!(s.touches(), touches);
+    }
+}
+
+#[test]
+fn speculative_staging_never_evicts_critical_entries_randomized() {
+    // Randomized interleaving of critical admits and speculative
+    // admits: at every step, each critical entry that was resident
+    // before a speculative insert must still be resident after it —
+    // under both policies. (Speculation is second-class by contract.)
+    for policy in [CachePolicy::Lru, CachePolicy::Value] {
+        let cap = 2;
+        let layers = 3;
+        let mut cache = DeviceExpertCache::with_policy(cap, 0, policy, 1);
+        let mut rng = 0xFACE_0FFu64 ^ policy as u64;
+        for step in 0..300 {
+            rng = rng.wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let layer = (rng >> 33) as usize % layers;
+            let expert = (rng >> 13) as usize % 6;
+            let key = ExpertKey::routed(layer, expert);
+            let now = step as f64;
+            if rng & 3 == 0 {
+                // Critical-path admission (may evict anything).
+                cache.insert(key, now + 1.0, now);
+            } else {
+                // Speculative admission: snapshot the resident
+                // critical set first, then require it untouched.
+                let critical: Vec<ExpertKey> = (0..layers)
+                    .flat_map(|l| (0..6).map(move |e| {
+                        ExpertKey::routed(l, e)
+                    }))
+                    .filter(|&k| cache.is_speculative(k) == Some(false))
+                    .collect();
+                cache.insert_speculative(key, now + 1.0, now);
+                for k in critical {
+                    assert!(cache.contains(k),
+                            "policy {}: speculative insert of {key:?} \
+                             evicted critical {k:?}", policy.name());
+                }
+            }
+            assert!(cache.resident_count() <= cap * layers);
+        }
+    }
+}
+
+#[test]
+fn horizon_accuracy_rows_order_by_construction() {
+    // Deterministic accuracy ordering: feed the ledger a trace where
+    // near predictions are right more often than far ones and assert
+    // the per-horizon rows preserve the ordering — the property the
+    // confidence-decay schedule (0.5^h) encodes.
+    let mut p = StagedExpertProvider::detached(
+        DeviceExpertCache::new(1, 0), 1);
+    for i in 0..8usize {
+        // horizon 0: right 6/8; horizon 2: right 2/8
+        let actual = [i % 4, 4 + i % 4];
+        let near = if i < 6 { actual } else { [7, 7] };
+        let far = if i < 2 { actual } else { [7, 7] };
+        p.observe_prediction_at(0, &near, &actual);
+        p.observe_prediction_at(2, &far, &actual);
+    }
+    let s = p.stats();
+    assert_eq!(s.horizon_accuracy[0].total, 8);
+    assert_eq!(s.horizon_accuracy[2].total, 8);
+    let rate = |a: &duoserve::metrics::PredictorAccuracy| {
+        a.at_least_half as f64 / a.total as f64
+    };
+    assert!(rate(&s.horizon_accuracy[0]) >= rate(&s.horizon_accuracy[2]),
+            "near-horizon accuracy must dominate the far horizon");
+    assert_eq!(s.horizon_accuracy[0].exact, 6);
+    assert_eq!(s.horizon_accuracy[2].exact, 2);
+    // the confidence-decay schedule itself is monotone
+    for h in 1..N_HORIZONS {
+        assert!(duoserve::predictor::horizon_confidence(h)
+                < duoserve::predictor::horizon_confidence(h - 1));
+    }
+}
